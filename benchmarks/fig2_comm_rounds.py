@@ -1,0 +1,98 @@
+"""Paper Fig. 2 reproduction: convergence vs COMMUNICATION ROUNDS.
+
+Trains the paper's shallow NN on the synthetic 20-hospital EHR cohort with
+the paper's hyperparameters (m=20, Q=100 for FD variants, alpha=0.02/sqrt r,
+hospital graph) and reports, per algorithm, the loss / stationarity /
+consensus trajectories indexed by communication rounds.
+
+The paper's qualitative claims validated here:
+  1. FD-DSGD / FD-DSGT converge ~Q x faster per communication round;
+  2. DSGT reaches a smaller optimality gap than DSGD (non-IID data);
+  3. all four reach comparable loss at a matched ITERATION budget.
+"""
+
+from __future__ import annotations
+
+import json
+from typing import Dict
+
+import jax
+import numpy as np
+
+from repro.configs import FLRunConfig
+from repro.data.ehr import generate_ehr_cohort, make_node_batcher
+from repro.models.mlp import mlp_accuracy, mlp_init, mlp_loss
+from repro.training.trainer import train_decentralized
+
+ALGOS = {
+    "DSGD": ("dsgd", 1),
+    "DSGT": ("dsgt", 1),
+    "FD-DSGD (Q=100)": ("dsgd", 100),
+    "FD-DSGT (Q=100)": ("dsgt", 100),
+}
+
+
+def run(iterations: int = 3000, m: int = 20, seed: int = 0, log: bool = True) -> Dict:
+    data = generate_ehr_cohort(seed=seed)
+    xall = np.concatenate(data.features)
+    yall = np.concatenate(data.labels)
+    results = {}
+    for name, (algo, q) in ALGOS.items():
+        run_cfg = FLRunConfig(
+            algorithm=algo, q=q, topology="hospital20", n_nodes=20,
+            batch_per_node=m, alpha0=0.02, schedule="inv_sqrt", seed=seed,
+        )
+        res = train_decentralized(
+            mlp_loss, mlp_init(jax.random.key(seed)), run_cfg,
+            make_node_batcher(data, m=m, seed=seed + 1),
+            rounds=max(1, iterations // q),
+        )
+        h = res.history
+        import jax.numpy as jnp
+
+        acc = float(mlp_accuracy(res.consensus, jnp.asarray(xall), jnp.asarray(yall)))
+        results[name] = {
+            "comm_rounds": h.column("comm_rounds").tolist(),
+            "loss": h.column("loss").tolist(),
+            "grad_norm_sq": h.column("grad_norm_sq").tolist(),
+            "consensus_err": h.column("consensus_err").tolist(),
+            "iterations": int(h.last()["iteration"]),
+            "final_loss": h.last()["loss"],
+            "final_acc": acc,
+        }
+        if log:
+            print(
+                f"  {name:18s} comm_rounds={int(h.last()['comm_rounds']):5d} "
+                f"iters={results[name]['iterations']:5d} "
+                f"loss={results[name]['final_loss']:.4f} acc={acc:.3f}"
+            )
+    return results
+
+
+def comm_rounds_to_loss(res: Dict, target: float) -> Dict[str, float]:
+    out = {}
+    for name, r in res.items():
+        rounds = np.asarray(r["comm_rounds"])
+        losses = np.asarray(r["loss"])
+        hit = np.nonzero(losses <= target)[0]
+        out[name] = float(rounds[hit[0]]) if len(hit) else float("inf")
+    return out
+
+
+def main(iterations: int = 3000) -> Dict:
+    print("Fig. 2 reproduction (synthetic cohort, paper hyperparameters):")
+    res = run(iterations=iterations)
+    target = 1.10 * max(res["DSGT"]["final_loss"], res["DSGD"]["final_loss"])
+    to_target = comm_rounds_to_loss(res, target)
+    print(f"  comm rounds to reach loss<={target:.4f}: "
+          + ", ".join(f"{k}={v:.0f}" for k, v in to_target.items()))
+    speedup = to_target["DSGT"] / max(to_target["FD-DSGT (Q=100)"], 1.0)
+    print(f"  FD-DSGT communication saving vs DSGT: {speedup:.0f}x")
+    res["_derived"] = {"comm_rounds_to_target": to_target, "fd_dsgt_saving": speedup}
+    return res
+
+
+if __name__ == "__main__":
+    out = main()
+    with open("experiments/fig2_results.json", "w") as f:
+        json.dump(out, f)

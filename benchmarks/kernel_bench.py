@@ -1,0 +1,108 @@
+"""Kernel micro-benchmarks: wall time of the jnp reference paths on host +
+interpret-mode correctness spot checks.
+
+NOTE (honest measurement): this container is CPU-only; Pallas interpret
+mode executes the kernel body in Python and its wall time says nothing
+about TPU performance. What we CAN measure here is (a) the pure-jnp
+chunked/associative formulations that the kernels tile (their relative
+scaling with sequence length validates the algorithmic complexity), and
+(b) per-call overhead of the naive references they replace. TPU speedups
+must come from the roofline analysis, not these timings.
+"""
+
+from __future__ import annotations
+
+import time
+from typing import Callable, Dict, List
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def _time(fn: Callable, *args, reps: int = 5) -> float:
+    out = fn(*args)
+    jax.block_until_ready(out)
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / reps * 1e6  # us
+
+
+def bench_attention() -> List[Dict]:
+    from repro.models.attention import _sdpa
+
+    rows = []
+    rng = np.random.default_rng(0)
+    for seq in (256, 512, 1024):
+        q = jnp.asarray(rng.normal(size=(1, seq, 4, 64)), jnp.float32)
+        full = jax.jit(lambda q: _sdpa(q, q, q, causal=True, window=0))
+        win = jax.jit(lambda q: _sdpa(q, q, q, causal=True, window=128))
+        rows.append({
+            "name": f"attention_ref_s{seq}",
+            "us_full": _time(full, q),
+            "us_window128": _time(win, q),
+        })
+    return rows
+
+
+def bench_wkv6() -> List[Dict]:
+    from repro.kernels.rwkv6_scan.ref import wkv6_ref
+    from repro.models.rwkv6 import wkv6_chunked
+
+    rows = []
+    rng = np.random.default_rng(1)
+    for seq in (256, 1024):
+        bh, hd = 2, 64
+        r, k, v = (jnp.asarray(rng.normal(size=(bh, seq, hd)), jnp.float32) for _ in range(3))
+        lw = -jnp.exp(jnp.asarray(rng.normal(size=(bh, seq, hd)), jnp.float32) - 1)
+        u = jnp.asarray(rng.normal(size=(bh, hd)), jnp.float32)
+        s0 = jnp.zeros((bh, hd, hd))
+        naive = jax.jit(lambda *a: wkv6_ref(*a))
+        r4, k4, v4, lw4 = (a[:, :, None] for a in (r, k, v, lw))
+        chunked = jax.jit(
+            lambda r4, k4, v4, lw4, u, s0: wkv6_chunked(r4, k4, v4, lw4, u[:1], s0[:, None], chunk=64)
+        )
+        rows.append({
+            "name": f"wkv6_s{seq}",
+            "us_naive_scan": _time(naive, r, k, v, lw, u, s0),
+            "us_chunked": _time(chunked, r4, k4, v4, lw4, u, s0),
+        })
+    return rows
+
+
+def bench_rglru() -> List[Dict]:
+    from repro.kernels.rglru_scan.ref import rglru_ref
+    from repro.models.rglru import rglru_scan_assoc
+
+    rows = []
+    rng = np.random.default_rng(2)
+    for seq in (256, 1024, 4096):
+        b, w = 2, 256
+        la = -jnp.exp(jnp.asarray(rng.normal(size=(b, seq, w)), jnp.float32))
+        bb = jnp.asarray(rng.normal(size=(b, seq, w)), jnp.float32)
+        h0 = jnp.zeros((b, w))
+        naive = jax.jit(lambda *a: rglru_ref(*a))
+        assoc = jax.jit(lambda *a: rglru_scan_assoc(*a))
+        rows.append({
+            "name": f"rglru_s{seq}",
+            "us_naive_scan": _time(naive, la, bb, h0),
+            "us_assoc_scan": _time(assoc, la, bb, h0),
+        })
+    return rows
+
+
+def main() -> List[Dict]:
+    all_rows = []
+    for fn in (bench_attention, bench_wkv6, bench_rglru):
+        rows = fn()
+        all_rows.extend(rows)
+        for r in rows:
+            extras = {k: v for k, v in r.items() if k != "name"}
+            print(f"  {r['name']:22s} " + "  ".join(f"{k}={v:10.1f}" for k, v in extras.items()))
+    return all_rows
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,150 @@
+"""Roofline analysis over the dry-run records (deliverable (g)).
+
+Per (arch x shape) on the single-pod mesh, derive the three roofline terms
+from the while-aware HLO accounting of the compiled dry-run:
+
+    compute    = HLO_FLOPs      / (chips x 197e12 FLOP/s)     [per device]
+    memory     = HLO_bytes      / (chips x 819e9  B/s)
+    collective = collective_B   / (chips x 50e9   B/s/link)
+
+(dry-run records store PER-DEVICE quantities already -- the SPMD
+partitioner emitted per-device programs -- so `chips` division is implicit
+and the terms below use the per-device numbers directly.)
+
+Also reports MODEL_FLOPS = 6*N*D (N = params, active for MoE; D = tokens)
+and the usefulness ratio MODEL_FLOPS / HLO_FLOPs_global, flagging remat /
+redundancy waste, plus the dominant term and a one-line lever.
+
+Usage: PYTHONPATH=src python -m benchmarks.roofline [--mesh single] [--json]
+"""
+
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+from typing import Dict, List, Optional
+
+PEAK_FLOPS = 197e12
+HBM_BW = 819e9
+ICI_BW = 50e9
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+DRYRUN_DIR = os.path.join(REPO, "experiments", "dryrun")
+
+SHAPE_TOKENS = {
+    "train_4k": (4096, 256),
+    "prefill_32k": (32768, 32),
+    "decode_32k": (1, 128),  # one new token per request
+    "long_500k": (1, 1),
+}
+
+
+def load_records(mesh: str = "single", suffix: str = "") -> List[Dict]:
+    """Baseline records are exactly {arch}_{shape}_{mesh}{suffix}.json;
+    §Perf variant records (suffixes _blocked/_wire-*/_podq*/_q*/_dsgd) are
+    loaded explicitly by passing their suffix."""
+    from benchmarks.run_dryruns import ARCHS, SHAPE_NAMES
+
+    recs = []
+    for arch in ARCHS:
+        for shape in SHAPE_NAMES:
+            path = os.path.join(DRYRUN_DIR, f"{arch}_{shape}_{mesh}{suffix}.json")
+            if os.path.exists(path):
+                with open(path) as f:
+                    recs.append(json.load(f))
+    return recs
+
+
+def roofline_row(rec: Dict) -> Optional[Dict]:
+    if rec.get("status") != "ok":
+        return {
+            "arch": rec["arch"], "shape": rec["shape"], "status": rec["status"],
+            "reason": rec.get("reason", ""),
+        }
+    t_compute = rec["flops"] / PEAK_FLOPS
+    t_memory = rec["traffic_bytes"] / HBM_BW
+    t_coll = rec["collectives"]["total_bytes"] / ICI_BW
+    # cross-node share (the FL / paper-relevant link), when recorded
+    cross = rec["collectives"].get("cross_node_bytes")
+    t_cross = (cross / ICI_BW) if cross is not None else None
+    terms = {"compute": t_compute, "memory": t_memory, "collective": t_coll}
+    dominant = max(terms, key=terms.get)
+
+    seq, batch = SHAPE_TOKENS[rec["shape"]]
+    tokens_global = seq * batch
+    if rec["kind"] == "train" and rec.get("q"):
+        tokens_global *= rec["q"]
+    if rec["arch"] == "whisper-medium" and rec["kind"] != "train":
+        # whisper prefill prompts are capped at 448 decoder tokens
+        tokens_global = min(seq, 448) * batch
+    n_active = rec.get("active_params") or rec.get("model_params") or 0
+    model_flops_global = 6.0 * n_active * tokens_global if rec["kind"] == "train" else 2.0 * n_active * tokens_global
+    hlo_global = rec["flops"] * rec["n_chips"]
+    ratio = model_flops_global / hlo_global if hlo_global else 0.0
+
+    levers = {
+        "compute": "raise per-chip utilization: bigger per-node batch or lower remat recompute",
+        "memory": "cut HBM traffic: fused (flash) attention, chunked loss, bf16 activations",
+        "collective": "cut wire bytes: larger Q, bf16 gossip wire, hierarchical pod gossip",
+    }
+    return {
+        "arch": rec["arch"],
+        "shape": rec["shape"],
+        "status": "ok",
+        "kind": rec["kind"],
+        "t_compute_s": t_compute,
+        "t_memory_s": t_memory,
+        "t_collective_s": t_coll,
+        "t_cross_node_s": t_cross,
+        "dominant": dominant,
+        "bound_fraction": terms[dominant] / (sum(terms.values()) + 1e-30),
+        "model_flops_global": model_flops_global,
+        "hlo_flops_global": hlo_global,
+        "useful_ratio": ratio,
+        "lever": levers[dominant],
+        "memory_temp_bytes": rec["memory"]["temp_bytes"],
+        "memory_arg_bytes": rec["memory"]["argument_bytes"],
+    }
+
+
+def format_table(rows: List[Dict]) -> str:
+    hdr = (
+        f"{'arch':26s} {'shape':12s} {'compute(s)':>11s} {'memory(s)':>11s} "
+        f"{'collect(s)':>11s} {'dominant':>10s} {'useful':>7s}"
+    )
+    lines = [hdr, "-" * len(hdr)]
+    for r in rows:
+        if r.get("status") != "ok":
+            lines.append(f"{r['arch']:26s} {r['shape']:12s} {'SKIP: ' + r.get('reason', '')[:60]}")
+            continue
+        lines.append(
+            f"{r['arch']:26s} {r['shape']:12s} {r['t_compute_s']:11.4f} "
+            f"{r['t_memory_s']:11.4f} {r['t_collective_s']:11.4f} "
+            f"{r['dominant']:>10s} {r['useful_ratio']:7.3f}"
+        )
+    return "\n".join(lines)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--mesh", default="single")
+    ap.add_argument("--json", action="store_true")
+    args = ap.parse_args()
+    rows = [roofline_row(r) for r in load_records(args.mesh)]
+    rows = [r for r in rows if r]
+    if args.json:
+        print(json.dumps(rows, indent=2))
+    else:
+        print(format_table(rows))
+        oks = [r for r in rows if r.get("status") == "ok"]
+        if oks:
+            worst = min(oks, key=lambda r: r["useful_ratio"])
+            collbound = max(oks, key=lambda r: r["t_collective_s"])
+            print(f"\nworst useful-ratio: {worst['arch']} x {worst['shape']} ({worst['useful_ratio']:.3f})")
+            print(f"most collective-bound: {collbound['arch']} x {collbound['shape']} ({collbound['t_collective_s']:.3f}s)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,127 @@
+"""Benchmark harness -- one function per paper table/figure + system tables.
+
+  fig2            Fig. 2: convergence vs communication rounds (4 algorithms)
+  thm1            Theorem 1: linear speedup of DSGT in N
+  comm_bytes      communication bytes/iteration table (ring FD vs baselines)
+  kernels         kernel-formulation micro-timings (host jnp paths)
+  roofline        3-term roofline over the dry-run records (if present)
+
+Prints ``name,us_per_call,derived`` CSV lines at the end, one per table.
+Run: PYTHONPATH=src python -m benchmarks.run [--fast]
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+import time
+from typing import Dict, List
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def _timed(fn, *args, **kw):
+    t0 = time.perf_counter()
+    out = fn(*args, **kw)
+    return out, (time.perf_counter() - t0) * 1e6
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--fast", action="store_true", help="reduced iteration counts")
+    args = ap.parse_args()
+
+    os.makedirs(os.path.join(REPO, "experiments"), exist_ok=True)
+    csv_rows: List[Dict] = []
+
+    # --- Fig. 2: communication-round convergence --------------------------
+    from benchmarks import fig2_comm_rounds
+
+    iters = 600 if args.fast else 3000
+    print(f"\n=== fig2_comm_rounds (iterations={iters}) ===")
+    fig2, us = _timed(fig2_comm_rounds.main, iterations=iters)
+    with open(os.path.join(REPO, "experiments", "fig2_results.json"), "w") as f:
+        json.dump(fig2, f)
+    csv_rows.append({
+        "name": "fig2_comm_rounds", "us_per_call": us,
+        "derived": f"fd_dsgt_comm_saving={fig2['_derived']['fd_dsgt_saving']:.0f}x",
+    })
+
+    # --- Theorem 1: linear speedup ----------------------------------------
+    from benchmarks import thm1_speedup
+
+    steps = 150 if args.fast else 400
+    print(f"\n=== thm1_speedup (T={steps}) ===")
+    thm1, us = _timed(thm1_speedup.main, t_steps=steps, seeds=2 if args.fast else 3)
+    with open(os.path.join(REPO, "experiments", "thm1_results.json"), "w") as f:
+        json.dump(thm1, f)
+    csv_rows.append({
+        "name": "thm1_linear_speedup", "us_per_call": us,
+        "derived": f"ratio_4_8={thm1['ratio_4_8']:.2f};ratio_8_16={thm1['ratio_8_16']:.2f}",
+    })
+
+    # --- communication bytes ----------------------------------------------
+    from benchmarks import comm_bytes
+
+    print("\n=== comm_bytes ===")
+    cb, us = _timed(comm_bytes.main)
+    with open(os.path.join(REPO, "experiments", "comm_bytes.json"), "w") as f:
+        json.dump(cb, f, indent=2)
+    q100 = [r for r in cb["rows"] if "Q=100 (paper)" in r["strategy"]][0]
+    csv_rows.append({
+        "name": "comm_bytes_table", "us_per_call": us,
+        "derived": f"fd_q100_vs_centralized={q100['ratio_vs_centralized']:.5f}x",
+    })
+
+    # --- kernel micro-timings ----------------------------------------------
+    from benchmarks import kernel_bench
+
+    print("\n=== kernel_bench ===")
+    kb, us = _timed(kernel_bench.main)
+    csv_rows.append({"name": "kernel_bench", "us_per_call": us, "derived": f"rows={len(kb)}"})
+
+    # --- beyond-paper ablations ---------------------------------------------
+    from benchmarks import ablations
+
+    print("\n=== ablations (topology spectral gap, client drift vs Q) ===")
+    ab, us = _timed(ablations.main)
+    with open(os.path.join(REPO, "experiments", "ablations.json"), "w") as f:
+        json.dump(ab, f, indent=2)
+    csv_rows.append({
+        "name": "ablations", "us_per_call": us,
+        "derived": (
+            f"dsgd_ring_vs_complete_consensus="
+            f"{ab['topology']['ring']['dsgd_consensus']/ab['topology']['complete']['dsgd_consensus']:.1f}x;"
+            f"q60_drift_penalty_het8={ab['drift']['8.0']['q60_penalty']:.1f}x"
+        ),
+    })
+
+    # --- roofline (requires dry-run records) -------------------------------
+    from benchmarks import roofline
+
+    print("\n=== roofline (single-pod dry-run records) ===")
+    recs = roofline.load_records("single")
+    if recs:
+        rows = [roofline.roofline_row(r) for r in recs]
+        print(roofline.format_table([r for r in rows if r]))
+        oks = [r for r in rows if r and r.get("status") == "ok"]
+        dom = {}
+        for r in oks:
+            dom[r["dominant"]] = dom.get(r["dominant"], 0) + 1
+        csv_rows.append({
+            "name": "roofline", "us_per_call": 0.0,
+            "derived": f"pairs={len(oks)};dominant=" + "/".join(f"{k}:{v}" for k, v in sorted(dom.items())),
+        })
+    else:
+        print("  (no dry-run records; run benchmarks/run_dryruns.py first)")
+
+    # --- CSV ----------------------------------------------------------------
+    print("\nname,us_per_call,derived")
+    for r in csv_rows:
+        print(f"{r['name']},{r['us_per_call']:.0f},{r['derived']}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,90 @@
+"""End-to-end driver: train a ~100M-parameter decoder with FD-DSGT for a
+few hundred steps (deliverable (b): the end-to-end training example).
+
+The model is a 100M-class llama-family config (d=512, 8 layers, 32k vocab)
+trained across 4 FL nodes on a ring with Q=5 local steps per round. On the
+single CPU core of this container a full run (--rounds 60 == 300 steps)
+takes a while; --rounds 10 gives a quick demonstration. Loss on the
+structured synthetic token stream drops measurably within the run; metrics
+land in experiments/train_100m_metrics.csv and a checkpoint is written.
+
+  PYTHONPATH=src python examples/train_100m.py --rounds 60
+"""
+
+import argparse
+import csv
+import dataclasses
+import os
+import time
+
+import jax
+
+from repro.configs import FLRunConfig
+from repro.configs.base import ModelConfig
+from repro.data.tokens import make_fl_token_batches
+from repro.models import build_model
+from repro.training.checkpoint import save_fl_state
+from repro.training.trainer import train_decentralized
+
+
+def model_100m() -> ModelConfig:
+    return ModelConfig(
+        name="llama-100m",
+        family="dense",
+        n_layers=8,
+        d_model=512,
+        n_heads=8,
+        n_kv_heads=4,
+        d_ff=1536,
+        vocab_size=32000,
+        head_dim=64,
+        source="100M-class llama-family config (this repo)",
+    )
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--rounds", type=int, default=60)
+    ap.add_argument("--q", type=int, default=5)
+    ap.add_argument("--nodes", type=int, default=4)
+    ap.add_argument("--batch-per-node", type=int, default=1)
+    ap.add_argument("--seq-len", type=int, default=128)
+    ap.add_argument("--alpha0", type=float, default=0.4)
+    ap.add_argument("--ckpt", default="experiments/ckpt_100m")
+    args = ap.parse_args()
+
+    cfg = model_100m()
+    bundle = build_model(cfg)
+    n_params = cfg.param_count()
+    print(f"model: {cfg.name} ({n_params/1e6:.1f}M params), "
+          f"{args.nodes} nodes x Q={args.q}, {args.rounds} rounds "
+          f"= {args.rounds*args.q} training steps")
+
+    run = FLRunConfig(algorithm="dsgt", q=args.q, topology="ring",
+                      n_nodes=args.nodes, batch_per_node=args.batch_per_node,
+                      alpha0=args.alpha0, schedule="constant")
+    stream = make_fl_token_batches(cfg.vocab_size, args.nodes,
+                                   args.batch_per_node, args.seq_len, q=1, seed=0)
+    step_batches = ({k: v[0] for k, v in b.items()} for b in stream)
+
+    t0 = time.time()
+    result = train_decentralized(
+        bundle.loss_fn, bundle.init_fn(jax.random.key(0)), run,
+        step_batches, rounds=args.rounds, log_every=2,
+    )
+    dt = time.time() - t0
+    rows = result.history.rows()
+    os.makedirs("experiments", exist_ok=True)
+    with open("experiments/train_100m_metrics.csv", "w", newline="") as f:
+        w = csv.DictWriter(f, fieldnames=sorted(rows[0]))
+        w.writeheader()
+        w.writerows(rows)
+    save_fl_state(args.ckpt, result.state, extra={"arch": cfg.name})
+    print(f"\nloss {rows[0]['loss']:.3f} -> {rows[-1]['loss']:.3f} "
+          f"({int(rows[-1]['iteration'])} steps, {dt/60:.1f} min, "
+          f"{dt/max(1,int(rows[-1]['iteration'])):.1f}s/step)")
+    print(f"metrics -> experiments/train_100m_metrics.csv; ckpt -> {args.ckpt}")
+
+
+if __name__ == "__main__":
+    main()

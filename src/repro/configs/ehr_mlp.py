@@ -1,0 +1,20 @@
+"""The paper's own experimental model: shallow NN over 42 EHR features,
+20 hospitals, AD vs MCI classification (Section 3)."""
+
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="ehr-mlp",
+    family="mlp",
+    n_layers=2,
+    d_model=42,  # feature dim ("problem dimension of 42")
+    n_heads=0,
+    n_kv_heads=0,
+    d_ff=32,  # hidden width
+    vocab_size=2,  # AD vs MCI
+    source="this paper, Section 3",
+)
+
+
+def smoke_config() -> ModelConfig:
+    return CONFIG  # already CPU-scale

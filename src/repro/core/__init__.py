@@ -1,0 +1,67 @@
+"""Core library: the paper's contribution — fully decentralized federated
+learning (DSGD / DSGT with Q local steps) over an explicit node graph.
+
+Public API:
+    topology  — graphs + mixing matrices (Assumption 1 machinery)
+    mixing    — gossip backends (dense-W simulated, ppermute mesh, all-gather)
+    fl        — FLState + DSGD/DSGT/FD round builders + baselines
+    schedules — alpha^r schedules (paper's 0.02/sqrt(r), Theorem 1 rate, ...)
+"""
+
+from repro.core.compression import (
+    init_compression_state,
+    make_compressed_dense_gossip,
+    quantize_int8,
+)
+from repro.core.fl import FLConfig, FLState, consensus_params, init_fl_state, make_fl_round
+from repro.core.mixing import (
+    make_allgather_gossip,
+    make_dense_gossip,
+    make_mean_consensus,
+    make_mesh_gossip,
+    mesh_gossip_dense_equivalent,
+)
+from repro.core.topology import (
+    Graph,
+    check_assumption1,
+    complete_graph,
+    erdos_renyi_graph,
+    hospital20_graph,
+    metropolis_weights,
+    mixing_matrix,
+    ring_graph,
+    spectral_gap,
+    star_graph,
+    torus_graph,
+    uniform_neighbor_weights,
+)
+from repro.core import schedules
+
+__all__ = [
+    "init_compression_state",
+    "make_compressed_dense_gossip",
+    "quantize_int8",
+    "FLConfig",
+    "FLState",
+    "consensus_params",
+    "init_fl_state",
+    "make_fl_round",
+    "make_allgather_gossip",
+    "make_dense_gossip",
+    "make_mean_consensus",
+    "make_mesh_gossip",
+    "mesh_gossip_dense_equivalent",
+    "Graph",
+    "check_assumption1",
+    "complete_graph",
+    "erdos_renyi_graph",
+    "hospital20_graph",
+    "metropolis_weights",
+    "mixing_matrix",
+    "ring_graph",
+    "spectral_gap",
+    "star_graph",
+    "torus_graph",
+    "uniform_neighbor_weights",
+    "schedules",
+]

@@ -1,0 +1,74 @@
+"""Learning-rate schedules.
+
+The paper's experiments use alpha^r = 0.02 / sqrt(r) and Theorem 1 assumes
+alpha^r ~ O(sqrt(N / r)). Schedules are functions of the *global iteration
+counter* r (1-indexed, as in the paper) returning a float32 scalar, and are
+safe to call with traced integers inside jit/scan.
+"""
+
+from __future__ import annotations
+
+from typing import Callable
+
+import jax.numpy as jnp
+
+Schedule = Callable[[jnp.ndarray], jnp.ndarray]
+
+__all__ = [
+    "inv_sqrt",
+    "paper_schedule",
+    "theorem1_schedule",
+    "constant",
+    "cosine",
+    "warmup_linear",
+]
+
+
+def inv_sqrt(alpha0: float) -> Schedule:
+    """alpha^r = alpha0 / sqrt(r), r >= 1."""
+
+    def f(step: jnp.ndarray) -> jnp.ndarray:
+        r = jnp.maximum(step, 1).astype(jnp.float32)
+        return jnp.float32(alpha0) / jnp.sqrt(r)
+
+    return f
+
+
+def paper_schedule() -> Schedule:
+    """The paper's exact experimental schedule: 0.02 / sqrt(r)."""
+    return inv_sqrt(0.02)
+
+
+def theorem1_schedule(n_nodes: int, c: float = 0.02) -> Schedule:
+    """alpha^r = c * sqrt(N / r) -- the Theorem 1 rate showing linear
+    speedup in N."""
+
+    def f(step: jnp.ndarray) -> jnp.ndarray:
+        r = jnp.maximum(step, 1).astype(jnp.float32)
+        return jnp.float32(c) * jnp.sqrt(jnp.float32(n_nodes) / r)
+
+    return f
+
+
+def constant(alpha: float) -> Schedule:
+    return lambda step: jnp.float32(alpha)
+
+
+def cosine(alpha0: float, total_steps: int, alpha_min: float = 0.0) -> Schedule:
+    def f(step: jnp.ndarray) -> jnp.ndarray:
+        t = jnp.clip(step.astype(jnp.float32) / float(total_steps), 0.0, 1.0)
+        return jnp.float32(alpha_min) + 0.5 * jnp.float32(alpha0 - alpha_min) * (
+            1.0 + jnp.cos(jnp.pi * t)
+        )
+
+    return f
+
+
+def warmup_linear(alpha0: float, warmup: int, total_steps: int) -> Schedule:
+    def f(step: jnp.ndarray) -> jnp.ndarray:
+        s = step.astype(jnp.float32)
+        wu = s / jnp.maximum(1.0, float(warmup))
+        decay = (float(total_steps) - s) / jnp.maximum(1.0, float(total_steps - warmup))
+        return jnp.float32(alpha0) * jnp.clip(jnp.minimum(wu, decay), 0.0, 1.0)
+
+    return f

@@ -1,0 +1,16 @@
+"""Data substrate: synthetic EHR cohort (paper Section 2.1 statistics),
+LM token pipeline, and non-IID partitioners."""
+
+from repro.data.ehr import EHRDataset, generate_ehr_cohort, make_node_batcher
+from repro.data.tokens import TokenStream, make_fl_token_batches
+from repro.data.partition import dirichlet_partition, label_shift_stats
+
+__all__ = [
+    "EHRDataset",
+    "generate_ehr_cohort",
+    "make_node_batcher",
+    "TokenStream",
+    "make_fl_token_batches",
+    "dirichlet_partition",
+    "label_shift_stats",
+]

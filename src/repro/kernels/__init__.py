@@ -1,0 +1,6 @@
+"""Pallas TPU kernels for the framework's compute hot-spots.
+
+Each kernel package ships: <name>.py (pl.pallas_call + BlockSpec tiling),
+ops.py (jit'd model-layout wrapper, auto interpret off-TPU), ref.py
+(pure-jnp oracle used by the allclose test sweeps).
+"""

@@ -1,0 +1,4 @@
+from repro.kernels.decode_attention import ops, ref
+from repro.kernels.decode_attention.decode_attention import decode_attention_bhd
+
+__all__ = ["ops", "ref", "decode_attention_bhd"]

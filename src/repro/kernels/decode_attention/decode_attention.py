@@ -1,0 +1,137 @@
+"""Single-token decode attention against a KV cache -- Pallas TPU.
+
+The decode-shape hot-spot (decode_32k / long_500k): one query row per
+(batch x head) attends over a cache of up to seq_len keys, with a
+validity horizon (contiguous cache: slots <= pos; ring buffer: all slots
+once full). Memory-bound by nature -- the kernel's job is to stream K/V
+through VMEM exactly once with fp32 online softmax, instead of
+materializing (B, H, 1, C) scores + probs in HBM.
+
+Grid = (batch*q_heads, cache_blocks); the cache-block axis is TPU's
+sequential minor loop carrying (acc, m, l) scratch. GQA via K/V
+index_map, like the prefill flash kernel. Padding rows of the final
+cache block are masked via the validity horizon.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+NEG_INF = float("-inf")
+
+__all__ = ["decode_attention_bhd"]
+
+
+def _kernel(
+    q_ref,
+    k_ref,
+    v_ref,
+    nvalid_ref,
+    o_ref,
+    acc_ref,
+    m_ref,
+    l_ref,
+    *,
+    block_c: int,
+    n_c: int,
+    cache_len: int,
+    scale: float,
+):
+    cb = pl.program_id(1)
+
+    @pl.when(cb == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    q = q_ref[0].astype(jnp.float32)  # (1, hd)
+    k = k_ref[0].astype(jnp.float32)  # (bc, hd)
+    v = v_ref[0].astype(jnp.float32)
+    n_valid = nvalid_ref[0]
+
+    cpos = cb * block_c + jax.lax.iota(jnp.int32, block_c)
+    live = cpos < jnp.minimum(n_valid, cache_len)
+    kz = jnp.where(live[:, None], k, 0.0)
+    vz = jnp.where(live[:, None], v, 0.0)
+
+    s = (q @ kz.T)[0] * scale  # (bc,)
+    s = jnp.where(live, s, NEG_INF)
+
+    m_prev = m_ref[0]
+    m_new = jnp.maximum(m_prev, jnp.max(s))
+    safe_m = jnp.where(jnp.isfinite(m_new), m_new, 0.0)
+    p = jnp.where(live, jnp.exp(s - safe_m), 0.0)  # (bc,)
+    corr = jnp.where(jnp.isfinite(m_prev), jnp.exp(m_prev - safe_m), 0.0)
+    l_ref[0] = corr * l_ref[0] + jnp.sum(p)
+    acc_ref[...] = corr * acc_ref[...] + (p[None, :] @ vz)
+    m_ref[0] = m_new
+
+    @pl.when(cb == n_c - 1)
+    def _final():
+        l = l_ref[0]
+        o_ref[0] = (acc_ref[...] / jnp.where(l > 0.0, l, 1.0)).astype(o_ref.dtype)
+
+
+def decode_attention_bhd(
+    q: jnp.ndarray,
+    k: jnp.ndarray,
+    v: jnp.ndarray,
+    n_valid: jnp.ndarray,
+    *,
+    n_q_heads: int = 1,
+    n_kv_heads: int = 1,
+    block_c: int = 256,
+    interpret: bool = False,
+) -> jnp.ndarray:
+    """q: (B*H, 1, hd); k, v: (B*K, C, hd); n_valid: (B,) int32 populated
+    slots per batch row. Returns (B*H, 1, hd)."""
+    bh, _, hd = q.shape
+    bkv, cache_len, _ = k.shape
+    group = n_q_heads // n_kv_heads
+    b = bh // n_q_heads
+    block_c = min(block_c, cache_len)
+    n_c = pl.cdiv(cache_len, block_c)
+
+    def q_map(i, cb):
+        return (i, 0, 0)
+
+    def kv_map(i, cb):
+        batch = i // n_q_heads
+        h = i % n_q_heads
+        return (batch * n_kv_heads + h // group, cb, 0)
+
+    def nv_map(i, cb):
+        return (i // n_q_heads,)
+
+    kernel = functools.partial(
+        _kernel, block_c=block_c, n_c=n_c, cache_len=cache_len, scale=hd**-0.5
+    )
+    return pl.pallas_call(
+        kernel,
+        grid=(bh, n_c),
+        in_specs=[
+            pl.BlockSpec((1, 1, hd), q_map),
+            pl.BlockSpec((1, block_c, hd), kv_map),
+            pl.BlockSpec((1, block_c, hd), kv_map),
+            pl.BlockSpec((1,), nv_map),
+        ],
+        out_specs=pl.BlockSpec((1, 1, hd), q_map),
+        out_shape=jax.ShapeDtypeStruct(q.shape, q.dtype),
+        scratch_shapes=[
+            _vmem((1, hd), jnp.float32),
+            _vmem((1,), jnp.float32),
+            _vmem((1,), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v, n_valid)
+
+
+def _vmem(shape, dtype):
+    from jax.experimental.pallas import tpu as pltpu
+
+    return pltpu.VMEM(shape, dtype)

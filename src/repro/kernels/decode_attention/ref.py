@@ -1,0 +1,33 @@
+"""Pure-jnp oracle for decode attention."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["decode_attention_ref"]
+
+
+def decode_attention_ref(
+    q: jnp.ndarray,
+    k: jnp.ndarray,
+    v: jnp.ndarray,
+    n_valid: jnp.ndarray,
+    *,
+    n_q_heads: int = 1,
+    n_kv_heads: int = 1,
+) -> jnp.ndarray:
+    """Same contract as decode_attention_bhd; materialized fp32 softmax."""
+    bh, _, hd = q.shape
+    b = bh // n_q_heads
+    group = n_q_heads // n_kv_heads
+    cache_len = k.shape[1]
+    kk = jnp.repeat(k.reshape(b, n_kv_heads, cache_len, hd), group, axis=1).reshape(bh, cache_len, hd)
+    vv = jnp.repeat(v.reshape(b, n_kv_heads, cache_len, hd), group, axis=1).reshape(bh, cache_len, hd)
+    s = jnp.einsum("nqd,ncd->nqc", q.astype(jnp.float32), kk.astype(jnp.float32))
+    s = s / jnp.sqrt(jnp.float32(hd))
+    valid = jnp.arange(cache_len)[None] < jnp.repeat(n_valid, n_q_heads)[:, None]
+    s = jnp.where(valid[:, None, :], s, -jnp.inf)
+    p = jax.nn.softmax(s, axis=-1)
+    p = jnp.where(jnp.isnan(p), 0.0, p)
+    return jnp.einsum("nqc,ncd->nqd", p, vv.astype(jnp.float32)).astype(q.dtype)

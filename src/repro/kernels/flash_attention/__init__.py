@@ -1,0 +1,4 @@
+from repro.kernels.flash_attention import ops, ref
+from repro.kernels.flash_attention.flash_attention import flash_attention_bhsd
+
+__all__ = ["ops", "ref", "flash_attention_bhsd"]

@@ -1,0 +1,180 @@
+"""Fused flash attention (causal / sliding-window, GQA) -- Pallas TPU.
+
+TPU-native adaptation of the flash-attention online-softmax algorithm:
+
+  * grid = (batch*q_heads, q_blocks, kv_blocks); the LAST grid dimension is
+    TPU's sequential minor loop, so fp32 accumulators (acc, row-max m,
+    row-sum l) live in VMEM scratch and persist across kv blocks;
+  * BlockSpec tiles (block_q x head_dim) / (block_k x head_dim) are chosen
+    MXU-aligned (multiples of 128 where head_dim allows);
+  * GQA is handled in the K/V index_map (q-head -> kv-head), so grouped
+    K/V are streamed HBM->VMEM once per group, never materialized repeated;
+  * fully-masked kv blocks (above the causal diagonal / outside the
+    window) are skipped with pl.when -- the causal schedule does ~half the
+    work, the windowed schedule O(window/seq).
+
+Accumulation is fp32 regardless of input dtype.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+NEG_INF = float("-inf")
+
+__all__ = ["flash_attention_bhsd"]
+
+
+def _kernel(
+    q_ref,
+    k_ref,
+    v_ref,
+    o_ref,
+    acc_ref,
+    m_ref,
+    l_ref,
+    *,
+    block_q: int,
+    block_k: int,
+    n_k: int,
+    seq_q: int,
+    seq_k: int,
+    causal: bool,
+    window: int,
+    scale: float,
+):
+    jq = pl.program_id(1)
+    kb = pl.program_id(2)
+
+    @pl.when(kb == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    q_lo = jq * block_q
+    k_lo = kb * block_k
+    # static-shape positions, dynamic offsets
+    qpos = q_lo + jax.lax.iota(jnp.int32, block_q)
+    kpos = k_lo + jax.lax.iota(jnp.int32, block_k)
+
+    # block-level skip: entirely above the diagonal or left of the window
+    live = jnp.bool_(True)
+    if causal:
+        live = jnp.logical_and(live, k_lo <= q_lo + block_q - 1)
+    if window:
+        live = jnp.logical_and(live, k_lo + block_k - 1 > q_lo - window)
+
+    @pl.when(live)
+    def _compute():
+        q = q_ref[0].astype(jnp.float32)  # (bq, hd)
+        k = k_ref[0].astype(jnp.float32)  # (bk, hd)
+        v = v_ref[0].astype(jnp.float32)
+        # zero padded tail rows: p is 0 there but 0 * garbage = NaN in p @ v
+        kv_valid = (kpos < seq_k)[:, None]
+        k = jnp.where(kv_valid, k, 0.0)
+        v = jnp.where(kv_valid, v, 0.0)
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+        ) * scale  # (bq, bk)
+        mask = jnp.ones((block_q, block_k), jnp.bool_)
+        if causal:
+            mask &= kpos[None, :] <= qpos[:, None]
+        if window:
+            mask &= kpos[None, :] > qpos[:, None] - window
+        # tail guards (seq not divisible by block)
+        mask &= (qpos[:, None] < seq_q) & (kpos[None, :] < seq_k)
+        s = jnp.where(mask, s, NEG_INF)
+
+        m_prev = m_ref[...]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1))
+        # rows with no live key yet keep m = -inf; guard exp args
+        safe_m = jnp.where(jnp.isfinite(m_new), m_new, 0.0)
+        p = jnp.exp(jnp.where(mask, s - safe_m[:, None], NEG_INF))
+        corr = jnp.where(jnp.isfinite(m_prev), jnp.exp(m_prev - safe_m), 0.0)
+        l_ref[...] = corr * l_ref[...] + jnp.sum(p, axis=-1)
+        acc_ref[...] = corr[:, None] * acc_ref[...] + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
+        )
+        m_ref[...] = m_new
+
+    @pl.when(kb == n_k - 1)
+    def _finalize():
+        l = l_ref[...]
+        denom = jnp.where(l > 0.0, l, 1.0)
+        o_ref[0] = (acc_ref[...] / denom[:, None]).astype(o_ref.dtype)
+
+
+def flash_attention_bhsd(
+    q: jnp.ndarray,
+    k: jnp.ndarray,
+    v: jnp.ndarray,
+    *,
+    causal: bool = True,
+    window: int = 0,
+    n_q_heads: int = 1,
+    n_kv_heads: int = 1,
+    block_q: int = 128,
+    block_k: int = 128,
+    interpret: bool = False,
+) -> jnp.ndarray:
+    """q: (B*H, Sq, hd); k, v: (B*K, Sk, hd) with H = G*K. Returns like q.
+
+    The (b, h) -> (b, h // G) mapping happens in the K/V index_map.
+    """
+    bh, seq_q, hd = q.shape
+    bkv, seq_k, _ = k.shape
+    group = n_q_heads // n_kv_heads
+    assert bh % n_q_heads == 0 and bkv % n_kv_heads == 0
+    block_q = min(block_q, seq_q)
+    block_k = min(block_k, seq_k)
+    n_q = pl.cdiv(seq_q, block_q)
+    n_k = pl.cdiv(seq_k, block_k)
+
+    def q_map(i, jq, kb):
+        return (i, jq, 0)
+
+    def kv_map(i, jq, kb):
+        b = i // n_q_heads
+        h = i % n_q_heads
+        return (b * n_kv_heads + h // group, kb, 0)
+
+    kernel = functools.partial(
+        _kernel,
+        block_q=block_q,
+        block_k=block_k,
+        n_k=n_k,
+        seq_q=seq_q,
+        seq_k=seq_k,
+        causal=causal,
+        window=window,
+        scale=hd**-0.5,
+    )
+    return pl.pallas_call(
+        kernel,
+        grid=(bh, n_q, n_k),
+        in_specs=[
+            pl.BlockSpec((1, block_q, hd), q_map),
+            pl.BlockSpec((1, block_k, hd), kv_map),
+            pl.BlockSpec((1, block_k, hd), kv_map),
+        ],
+        out_specs=pl.BlockSpec((1, block_q, hd), q_map),
+        out_shape=jax.ShapeDtypeStruct(q.shape, q.dtype),
+        scratch_shapes=[
+            _vmem((block_q, hd), jnp.float32),
+            _vmem((block_q,), jnp.float32),
+            _vmem((block_q,), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v)
+
+
+def _vmem(shape, dtype):
+    from jax.experimental.pallas import tpu as pltpu
+
+    return pltpu.VMEM(shape, dtype)

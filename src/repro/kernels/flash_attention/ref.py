@@ -1,0 +1,43 @@
+"""Pure-jnp oracle for the flash attention kernel."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["attention_ref_bhsd"]
+
+
+def attention_ref_bhsd(
+    q: jnp.ndarray,
+    k: jnp.ndarray,
+    v: jnp.ndarray,
+    *,
+    causal: bool = True,
+    window: int = 0,
+    n_q_heads: int = 1,
+    n_kv_heads: int = 1,
+) -> jnp.ndarray:
+    """Same contract as flash_attention_bhsd, materialized softmax in fp32."""
+    bh, sq, hd = q.shape
+    group = n_q_heads // n_kv_heads
+    b = bh // n_q_heads
+    # expand kv to q heads
+    kk = k.reshape(b, n_kv_heads, *k.shape[1:])
+    vv = v.reshape(b, n_kv_heads, *v.shape[1:])
+    kk = jnp.repeat(kk, group, axis=1).reshape(bh, *k.shape[1:])
+    vv = jnp.repeat(vv, group, axis=1).reshape(bh, *v.shape[1:])
+    s = jnp.einsum("nsd,ntd->nst", q.astype(jnp.float32), kk.astype(jnp.float32))
+    s = s / jnp.sqrt(jnp.float32(hd))
+    qpos = jnp.arange(sq)[:, None]
+    kpos = jnp.arange(k.shape[1])[None, :]
+    mask = jnp.ones_like(s, dtype=bool)
+    if causal:
+        mask &= kpos <= qpos
+    if window:
+        mask &= kpos > qpos - window
+    s = jnp.where(mask, s, -jnp.inf)
+    # fully-masked rows -> zero output (matches kernel's l==0 guard)
+    p = jax.nn.softmax(s, axis=-1)
+    p = jnp.where(jnp.isnan(p), 0.0, p)
+    return jnp.einsum("nst,ntd->nsd", p, vv.astype(jnp.float32)).astype(q.dtype)

@@ -1,0 +1,4 @@
+from repro.kernels.rglru_scan import ops, ref
+from repro.kernels.rglru_scan.rglru_scan import rglru_scan_pallas
+
+__all__ = ["ops", "ref", "rglru_scan_pallas"]

@@ -1,0 +1,21 @@
+"""Naive sequential oracle for the RG-LRU recurrence."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["rglru_ref"]
+
+
+def rglru_ref(log_a: jnp.ndarray, b: jnp.ndarray, h0: jnp.ndarray):
+    """h_t = exp(log_a_t) h_{t-1} + b_t. log_a/b: (B,S,W); h0: (B,W)."""
+
+    def step(h, xs):
+        la, bt = xs
+        h = jnp.exp(la) * h + bt
+        return h, h
+
+    xs = (jnp.moveaxis(log_a, 1, 0), jnp.moveaxis(b, 1, 0))
+    h_last, hs = jax.lax.scan(step, h0.astype(jnp.float32), xs)
+    return jnp.moveaxis(hs, 0, 1).astype(log_a.dtype), h_last

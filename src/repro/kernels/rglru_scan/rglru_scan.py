@@ -1,0 +1,95 @@
+"""RG-LRU gated linear recurrence h_t = a_t h_{t-1} + b_t -- Pallas.
+
+Grid = (batch, d_blocks, time_chunks); the time dimension is the
+sequential minor loop with the (block_d,) fp32 state carried in VMEM
+scratch. Within a chunk the recurrence is evaluated in CLOSED FORM via the
+per-channel transition matrix
+
+    M[t, a, c] = exp(L_t[c] - L_a[c])   for a <= t, else 0,
+    h_t = exp(L_t) h_in + sum_a M[t, a] b_a,
+
+where L_t = cumsum(log a). Every exponent is <= 0 (decays are in (0, 1]),
+so the formulation is unconditionally stable -- no renormalization pass.
+The M tensor is (chunk, chunk, block_d); with the default chunk=64,
+block_d=128 it occupies 2 MiB fp32 of VMEM, and the contraction is VPU
+multiply-adds (the recurrence has no MXU shape by nature).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+__all__ = ["rglru_scan_pallas"]
+
+
+def _kernel(la_ref, b_ref, h0_ref, y_ref, hlast_ref, h_ref, *, chunk, n_chunks):
+    c = pl.program_id(2)
+
+    @pl.when(c == 0)
+    def _init():
+        h_ref[...] = h0_ref[0].astype(jnp.float32)
+
+    la = la_ref[0].astype(jnp.float32)  # (C, bd), <= 0
+    b = b_ref[0].astype(jnp.float32)
+    h_in = h_ref[...]  # (bd,)
+
+    cum = jnp.cumsum(la, axis=0)  # L_t (C, bd), decreasing
+    # M[t, a, c] = exp(L_t - L_a) for a <= t (includes a == t: exp(0) = 1)
+    diff = cum[:, None, :] - cum[None, :, :]  # (C, C, bd)
+    t_idx = jax.lax.iota(jnp.int32, chunk)
+    tril = (t_idx[:, None] >= t_idx[None, :])[:, :, None]
+    m = jnp.where(tril, jnp.exp(jnp.where(tril, diff, 0.0)), 0.0)
+    h = jnp.exp(cum) * h_in[None, :] + jnp.einsum("tac,ac->tc", m, b)
+    y_ref[0] = h.astype(y_ref.dtype)
+    h_ref[...] = h[-1]
+
+    @pl.when(c == n_chunks - 1)
+    def _final():
+        hlast_ref[0] = h_ref[...]
+
+
+def rglru_scan_pallas(
+    log_a: jnp.ndarray,
+    b: jnp.ndarray,
+    h0: jnp.ndarray,
+    *,
+    block_d: int = 128,
+    chunk: int = 64,
+    interpret: bool = False,
+):
+    """log_a, b: (B, S, W) fp32; h0: (B, W). Returns (h (B,S,W), h_last)."""
+    bsz, s, w = log_a.shape
+    block_d = min(block_d, w)
+    chunk = min(chunk, s)
+    assert w % block_d == 0, (w, block_d)
+    assert s % chunk == 0, (s, chunk)
+    n_chunks = s // chunk
+    nd = w // block_d
+
+    seq_spec = pl.BlockSpec((1, chunk, block_d), lambda i, j, c: (i, c, j))
+    vec_spec = pl.BlockSpec((1, block_d), lambda i, j, c: (i, j))
+
+    kernel = functools.partial(_kernel, chunk=chunk, n_chunks=n_chunks)
+    h, h_last = pl.pallas_call(
+        kernel,
+        grid=(bsz, nd, n_chunks),
+        in_specs=[seq_spec, seq_spec, vec_spec],
+        out_specs=[seq_spec, vec_spec],
+        out_shape=[
+            jax.ShapeDtypeStruct((bsz, s, w), log_a.dtype),
+            jax.ShapeDtypeStruct((bsz, w), jnp.float32),
+        ],
+        scratch_shapes=[_vmem((block_d,), jnp.float32)],
+        interpret=interpret,
+    )(log_a, b, h0)
+    return h, h_last
+
+
+def _vmem(shape, dtype):
+    from jax.experimental.pallas import tpu as pltpu
+
+    return pltpu.VMEM(shape, dtype)

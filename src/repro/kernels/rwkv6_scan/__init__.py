@@ -1,0 +1,4 @@
+from repro.kernels.rwkv6_scan import ops, ref
+from repro.kernels.rwkv6_scan.rwkv6_scan import wkv6_chunked_pallas
+
+__all__ = ["ops", "ref", "wkv6_chunked_pallas"]

@@ -1,0 +1,34 @@
+"""Naive O(T) sequential oracle for the WKV-6 recurrence."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["wkv6_ref"]
+
+
+def wkv6_ref(
+    r: jnp.ndarray,
+    k: jnp.ndarray,
+    v: jnp.ndarray,
+    log_w: jnp.ndarray,
+    u: jnp.ndarray,
+    s0: jnp.ndarray,
+):
+    """r/k/v/log_w: (BH, S, hd) fp32; u: (BH, hd); s0: (BH, hd, hd).
+
+        y_t = r_t^T (S_{t-1} + diag(u) k_t v_t^T)
+        S_t = diag(w_t) S_{t-1} + k_t v_t^T
+    """
+
+    def step(s, xs):
+        rt, kt, vt, lwt = xs  # (BH, hd) each
+        kv = kt[..., :, None] * vt[..., None, :]  # (BH, hd, hd)
+        y = jnp.einsum("bi,bij->bj", rt, s + u[..., :, None] * kv)
+        s_new = jnp.exp(lwt)[..., :, None] * s + kv
+        return s_new, y
+
+    xs = tuple(jnp.moveaxis(a, 1, 0) for a in (r, k, v, log_w))
+    s_fin, ys = jax.lax.scan(step, s0.astype(jnp.float32), xs)
+    return jnp.moveaxis(ys, 0, 1).astype(r.dtype), s_fin

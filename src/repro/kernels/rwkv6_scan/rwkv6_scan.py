@@ -1,0 +1,120 @@
+"""Chunked WKV-6 recurrence (RWKV "Finch" data-dependent decay) -- Pallas.
+
+Per (batch x head) the recurrence over the 64x64 kv-state S is
+
+    y_t = r_t^T (S_{t-1} + diag(u) k_t v_t^T)
+    S_t = diag(w_t) S_{t-1} + k_t v_t^T
+
+TPU mapping: grid = (B*H, n_chunks); the chunk dimension is the sequential
+minor loop, the fp32 state S persists in a (64, 64) VMEM scratch across
+chunks. Within a chunk (C time steps) the work is three MXU-shaped
+einsums (C x C x 64) built from log-space decay ratios -- exactly the
+chunked form of models/rwkv6.wkv6_chunked, tiled so one chunk's operands
+(5 x C x 64 fp32) sit in VMEM.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+__all__ = ["wkv6_chunked_pallas"]
+
+
+def _kernel(r_ref, k_ref, v_ref, lw_ref, u_ref, s0_ref, y_ref, sout_ref, s_ref, *, chunk, n_chunks, head_size):
+    c = pl.program_id(1)
+
+    @pl.when(c == 0)
+    def _init():
+        s_ref[...] = s0_ref[0]
+
+    rc = r_ref[0].astype(jnp.float32)  # (C, hd)
+    kc = k_ref[0].astype(jnp.float32)
+    vc = v_ref[0].astype(jnp.float32)
+    lwc = lw_ref[0].astype(jnp.float32)  # log decay, <= 0
+    u = u_ref[0].astype(jnp.float32)  # (1, hd) -> broadcast
+    s_in = s_ref[...]
+
+    cum = jnp.cumsum(lwc, axis=0)  # inclusive
+    total = cum[-1]  # (hd,)
+    cum_excl = cum - lwc  # exclusive
+
+    r_dec = rc * jnp.exp(cum_excl)  # r_t * P_{t-1}; exp <= 1, stable
+    y_carry = jax.lax.dot_general(
+        r_dec, s_in, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
+    )  # (C, hd_v)
+
+    # intra-chunk attention-like term, PAIRWISE decay (exponents bounded by
+    # -lw_t; the factored e^{cum} * e^{-cum} form overflows at strong decay)
+    t_idx = jax.lax.iota(jnp.int32, chunk)
+    tri = t_idx[:, None] > t_idx[None, :]  # strict lower triangle (a < t)
+    diff = cum_excl[:, None, :] - cum[None, :, :]  # (t, a, hd)
+    decay = jnp.exp(jnp.where(tri[:, :, None], diff, 0.0))
+    att = jnp.sum(rc[:, None, :] * kc[None, :, :] * decay, axis=-1)  # (t, a)
+    att = jnp.where(tri, att, 0.0)
+    y_intra = jax.lax.dot_general(
+        att, vc, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
+    )
+
+    bonus = jnp.sum(rc * u * kc, axis=-1, keepdims=True)  # (C, 1)
+    y = y_carry + y_intra + bonus * vc
+    y_ref[0] = y.astype(y_ref.dtype)
+
+    # state update: S_out = e^total * S_in + sum_a (e^{total - cum_a} k_a) v_a^T
+    k_rem = kc * jnp.exp(total[None, :] - cum)
+    s_ref[...] = jnp.exp(total)[:, None] * s_in + jax.lax.dot_general(
+        k_rem, vc, (((0,), (0,)), ((), ())), preferred_element_type=jnp.float32
+    )
+
+    @pl.when(c == n_chunks - 1)
+    def _final():
+        sout_ref[0] = s_ref[...]
+
+
+def wkv6_chunked_pallas(
+    r: jnp.ndarray,
+    k: jnp.ndarray,
+    v: jnp.ndarray,
+    log_w: jnp.ndarray,
+    u: jnp.ndarray,
+    s0: jnp.ndarray,
+    *,
+    chunk: int = 64,
+    interpret: bool = False,
+):
+    """r/k/v/log_w: (BH, S, hd) fp32; u: (BH, hd); s0: (BH, hd, hd).
+
+    Returns (y (BH, S, hd), s_final (BH, hd, hd)). S must divide by chunk.
+    """
+    bh, s, hd = r.shape
+    assert s % chunk == 0, f"seq {s} % chunk {chunk}"
+    n_chunks = s // chunk
+
+    seq_spec = pl.BlockSpec((1, chunk, hd), lambda i, c: (i, c, 0))
+    head_spec = pl.BlockSpec((1, hd), lambda i, c: (i, 0))
+    state_spec = pl.BlockSpec((1, hd, hd), lambda i, c: (i, 0, 0))
+
+    kernel = functools.partial(_kernel, chunk=chunk, n_chunks=n_chunks, head_size=hd)
+    y, s_out = pl.pallas_call(
+        kernel,
+        grid=(bh, n_chunks),
+        in_specs=[seq_spec, seq_spec, seq_spec, seq_spec, head_spec, state_spec],
+        out_specs=[seq_spec, state_spec],
+        out_shape=[
+            jax.ShapeDtypeStruct((bh, s, hd), r.dtype),
+            jax.ShapeDtypeStruct((bh, hd, hd), jnp.float32),
+        ],
+        scratch_shapes=[_vmem((hd, hd), jnp.float32)],
+        interpret=interpret,
+    )(r, k, v, log_w, u, s0)
+    return y, s_out
+
+
+def _vmem(shape, dtype):
+    from jax.experimental.pallas import tpu as pltpu
+
+    return pltpu.VMEM(shape, dtype)

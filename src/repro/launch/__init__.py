@@ -1,0 +1,5 @@
+"""Launchers: production meshes, multi-pod dry-run, train/serve CLIs.
+
+NOTE: import repro.launch.dryrun only as __main__ (it forces 512 host
+devices before jax init). mesh/hlo_analysis are import-safe.
+"""

@@ -1,0 +1,332 @@
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) pair.
+
+Proves the distribution config is coherent without TPU hardware:
+  * 512 placeholder host devices stand in for 2 pods x 256 chips;
+  * every combination must .lower().compile() under its production
+    sharding; failures (sharding mismatch, unsupported collective) are
+    bugs in the system, not in the environment;
+  * memory_analysis() / cost_analysis() + the collective ops parsed from
+    the compiled HLO feed EXPERIMENTS.md (§Dry-run, §Roofline).
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch qwen2.5-32b \
+      --shape train_4k --mesh single --q 4 --out experiments/dryrun
+  (run_all: benchmarks/run_dryruns.py drives every pair with caching)
+"""
+
+# The VERY FIRST lines, before ANY other import: jax locks the device
+# count at first initialization.
+import os
+
+os.environ["XLA_FLAGS"] = (
+    "--xla_force_host_platform_device_count=512 "
+    + os.environ.get("XLA_FLAGS", "")
+)
+
+import argparse  # noqa: E402
+import json  # noqa: E402
+import re  # noqa: E402
+import time  # noqa: E402
+from typing import Any, Dict, Optional, Tuple  # noqa: E402
+
+import jax  # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+import numpy as np  # noqa: E402
+from jax.sharding import NamedSharding, PartitionSpec as P  # noqa: E402
+
+from repro.configs import (  # noqa: E402
+    SHAPES,
+    decode_sliding_override,
+    get_config,
+    serve_input_specs,
+    supports_shape,
+    train_input_specs,
+)
+from repro.core.fl import FLConfig, FLState, make_fl_round  # noqa: E402
+from repro.core.mixing import make_mesh_gossip  # noqa: E402
+from repro.core.schedules import inv_sqrt  # noqa: E402
+from repro.launch.hlo_analysis import analyze_hlo  # noqa: E402
+from repro.launch.mesh import HW, make_production_mesh, n_fl_nodes, node_axes  # noqa: E402
+from repro.models import build_model  # noqa: E402
+from repro.models.sharding import model_param_specs, node_stack_specs  # noqa: E402
+
+
+def _sds_tree(tree):
+    return jax.tree_util.tree_map(
+        lambda l: jax.ShapeDtypeStruct(l.shape, l.dtype), tree
+    )
+
+
+def _stack_nodes_sds(tree, n_nodes: int):
+    return jax.tree_util.tree_map(
+        lambda l: jax.ShapeDtypeStruct((n_nodes,) + l.shape, l.dtype), tree
+    )
+
+
+def build_train_lowering(arch: str, shape_name: str, mesh, q: int, algorithm: str = "dsgt",
+                         wire_dtype=None, pod_gossip_every: int = 1, impl: str = "ref",
+                         pad_heads: int = 0):
+    """Lower one FL round (Q local steps + gossip) for the given mesh."""
+    import dataclasses as _dc
+
+    cfg = get_config(arch)
+    if pad_heads:
+        cfg = _dc.replace(cfg, tp_head_pad=pad_heads)
+    bundle = build_model(cfg, impl=impl, remat=True)
+    shape = SHAPES[shape_name]
+    nodes = n_fl_nodes(mesh)
+    naxes = node_axes(mesh)
+
+    params_sds = jax.eval_shape(bundle.init_fn, jax.random.key(0))
+    stacked_sds = _stack_nodes_sds(params_sds, nodes)
+    pspecs = node_stack_specs(model_param_specs(params_sds), naxes)
+
+    fl_cfg = FLConfig(algorithm=algorithm, q=q, n_nodes=nodes)
+    # Hierarchical gossip (pod_gossip_every > 1): the driver alternates two
+    # jitted rounds; this lowering is the COMMON-CASE round whose gossip
+    # mixes only the intra-pod ("data") axis. The every-k-th full round is
+    # the pod_gossip_every == 1 lowering; amortized cost =
+    # ((k-1) * data_only + full) / k (EXPERIMENTS.md §Perf).
+    hier = pod_gossip_every > 1 and "pod" in naxes
+    gossip = make_mesh_gossip(
+        mesh, naxes, pspecs, wire_dtype=wire_dtype,
+        axes_subset=("data",) if hier else None,
+    )
+    round_fn = make_fl_round(bundle.loss_fn, gossip, inv_sqrt(0.02), fl_cfg)
+
+    if algorithm == "dsgt":
+        state_sds = FLState(
+            jax.ShapeDtypeStruct((), jnp.int32), stacked_sds, stacked_sds, stacked_sds
+        )
+        state_specs = FLState(P(), pspecs, pspecs, pspecs)
+    else:
+        state_sds = FLState(jax.ShapeDtypeStruct((), jnp.int32), stacked_sds, None, None)
+        state_specs = FLState(P(), pspecs, None, None)
+
+    batch_sds = train_input_specs(cfg, shape, nodes, q)
+    batch_specs = jax.tree_util.tree_map(
+        lambda l: P(None, naxes, *(None,) * (l.ndim - 2)), batch_sds
+    )
+
+    def shardings(spec_tree):
+        return jax.tree_util.tree_map(
+            lambda s: NamedSharding(mesh, s),
+            spec_tree,
+            is_leaf=lambda x: isinstance(x, P),
+        )
+
+    jitted = jax.jit(
+        round_fn, in_shardings=(shardings(state_specs), shardings(batch_specs))
+    )
+    return jitted, (state_sds, batch_sds), cfg
+
+
+def _serve_param_shardings(mesh, params_sds):
+    specs = model_param_specs(params_sds)
+    return jax.tree_util.tree_map(
+        lambda s: NamedSharding(mesh, s), specs, is_leaf=lambda x: isinstance(x, P)
+    )
+
+
+def build_prefill_lowering(arch: str, shape_name: str, mesh):
+    cfg = get_config(arch)
+    bundle = build_model(cfg, impl="ref", remat=False)
+    shape = SHAPES[shape_name]
+    naxes = node_axes(mesh)
+    params_sds = jax.eval_shape(bundle.init_fn, jax.random.key(0))
+    batch_sds = serve_input_specs(cfg, shape)
+    nodes = n_fl_nodes(mesh)
+    bdim = naxes if shape.global_batch % nodes == 0 else (
+        ("data",) if shape.global_batch % mesh.shape["data"] == 0 else None
+    )
+    batch_specs = jax.tree_util.tree_map(
+        lambda l: P(bdim, *(None,) * (l.ndim - 1)), batch_sds
+    )
+    jitted = jax.jit(
+        bundle.prefill_fn,
+        in_shardings=(
+            _serve_param_shardings(mesh, params_sds),
+            jax.tree_util.tree_map(
+                lambda s: NamedSharding(mesh, s), batch_specs,
+                is_leaf=lambda x: isinstance(x, P),
+            ),
+        ),
+    )
+    return jitted, (params_sds, batch_sds), cfg
+
+
+def _cache_specs(cache_sds, batch: int, naxes, divisible: bool):
+    """Shard the batch dim of every decode-cache leaf over the node axes."""
+
+    def f(l):
+        spec = [None] * l.ndim
+        if divisible:
+            for i, d in enumerate(l.shape):
+                if d == batch and i <= 1:
+                    spec[i] = naxes
+                    break
+        return P(*spec)
+
+    return jax.tree_util.tree_map(f, cache_sds)
+
+
+def build_decode_lowering(arch: str, shape_name: str, mesh):
+    cfg = get_config(arch)
+    bundle = build_model(cfg, impl="ref", remat=False)
+    shape = SHAPES[shape_name]
+    naxes = node_axes(mesh)
+    nodes = n_fl_nodes(mesh)
+    sliding = decode_sliding_override(cfg, shape)
+    b = shape.global_batch
+    params_sds = jax.eval_shape(bundle.init_fn, jax.random.key(0))
+    cache_sds = jax.eval_shape(
+        lambda: bundle.init_decode_state_fn(b, shape.seq_len, sliding_override=sliding)
+    )
+    divisible = b % nodes == 0
+    cache_specs = _cache_specs(cache_sds, b, naxes, divisible)
+    tok_sds = jax.ShapeDtypeStruct((b,), jnp.int32)
+    tok_spec = P(naxes) if divisible else P()
+
+    def step(params, tokens, caches):
+        return bundle.decode_fn(params, tokens, caches, sliding_override=sliding)
+
+    jitted = jax.jit(
+        step,
+        in_shardings=(
+            _serve_param_shardings(mesh, params_sds),
+            NamedSharding(mesh, tok_spec),
+            jax.tree_util.tree_map(
+                lambda s: NamedSharding(mesh, s), cache_specs,
+                is_leaf=lambda x: isinstance(x, P),
+            ),
+        ),
+    )
+    return jitted, (params_sds, tok_sds, cache_sds), cfg
+
+
+def run_pair(
+    arch: str,
+    shape_name: str,
+    mesh_kind: str,
+    q: int = 4,
+    algorithm: str = "dsgt",
+    wire_dtype: Optional[str] = None,
+    pod_gossip_every: int = 1,
+    remat: bool = True,
+    impl: str = "ref",
+    pad_heads: int = 0,
+) -> Dict[str, Any]:
+    """Lower + compile one pair; return the dry-run record."""
+    mesh = make_production_mesh(multi_pod=(mesh_kind == "multi"))
+    shape = SHAPES[shape_name]
+    cfg = get_config(arch)
+    if not supports_shape(cfg, shape):
+        return {
+            "arch": arch, "shape": shape_name, "mesh": mesh_kind,
+            "status": "skipped", "reason": "whisper x long_500k: enc-dec full-attention decoder (DESIGN.md §4)",
+        }
+    wd = jnp.dtype(wire_dtype) if wire_dtype else None
+    t0 = time.time()
+    with mesh:
+        if shape.kind == "train":
+            jitted, args, cfg = build_train_lowering(
+                arch, shape_name, mesh, q, algorithm, wd, pod_gossip_every, impl, pad_heads
+            )
+            lowered = jitted.lower(*args)
+        elif shape.kind == "prefill":
+            jitted, args, cfg = build_prefill_lowering(arch, shape_name, mesh)
+            lowered = jitted.lower(*args)
+        else:
+            jitted, args, cfg = build_decode_lowering(arch, shape_name, mesh)
+            lowered = jitted.lower(*args)
+        t_lower = time.time() - t0
+        compiled = lowered.compile()
+        t_compile = time.time() - t0 - t_lower
+
+    ca = compiled.cost_analysis() or {}
+    ma = compiled.memory_analysis()
+    # while-aware accounting (cost_analysis counts scan bodies once)
+    hlo = analyze_hlo(compiled.as_text())
+    n_chips = int(np.prod(list(mesh.shape.values())))
+    record = {
+        "arch": arch,
+        "shape": shape_name,
+        "mesh": mesh_kind,
+        "kind": shape.kind,
+        "status": "ok",
+        "q": q if shape.kind == "train" else None,
+        "algorithm": algorithm if shape.kind == "train" else None,
+        "impl": impl,
+        "wire_dtype": wire_dtype,
+        "pod_gossip_every": pod_gossip_every,
+        "n_chips": n_chips,
+        "n_nodes": n_fl_nodes(mesh),
+        "flops": float(hlo.flops),
+        "traffic_bytes": float(hlo.traffic_bytes),
+        "raw_cost_analysis": {
+            "flops": float(ca.get("flops", 0.0)),
+            "bytes_accessed": float(ca.get("bytes accessed", 0.0)),
+        },
+        "collectives": {
+            "per_kind": hlo.collectives,
+            "total_bytes": float(hlo.collective_bytes),
+            "cross_node_bytes": float(hlo.cross_node_bytes),
+            "cross_pod_bytes": float(hlo.cross_pod_bytes),
+        },
+        "memory": {
+            "argument_bytes": int(ma.argument_size_in_bytes),
+            "output_bytes": int(ma.output_size_in_bytes),
+            "temp_bytes": int(ma.temp_size_in_bytes),
+            "generated_code_bytes": int(ma.generated_code_size_in_bytes),
+        },
+        "model_params": cfg.param_count() if cfg.family != "mlp" else None,
+        "active_params": cfg.active_param_count() if cfg.family != "mlp" else None,
+        "lower_s": round(t_lower, 2),
+        "compile_s": round(t_compile, 2),
+    }
+    return record
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", required=True, choices=sorted(SHAPES))
+    ap.add_argument("--mesh", default="single", choices=("single", "multi"))
+    ap.add_argument("--q", type=int, default=4)
+    ap.add_argument("--algorithm", default="dsgt", choices=("dsgd", "dsgt"))
+    ap.add_argument("--wire-dtype", default=None)
+    ap.add_argument("--pod-gossip-every", type=int, default=1)
+    ap.add_argument("--impl", default="ref", choices=("ref", "blocked"))
+    ap.add_argument("--pad-heads", type=int, default=0,
+                    help="pad q heads to a multiple of this (16 = TP degree)")
+    ap.add_argument("--out", default=None, help="directory for the JSON record")
+    args = ap.parse_args()
+
+    rec = run_pair(
+        args.arch, args.shape, args.mesh, q=args.q, algorithm=args.algorithm,
+        wire_dtype=args.wire_dtype, pod_gossip_every=args.pod_gossip_every,
+        impl=args.impl, pad_heads=args.pad_heads,
+    )
+    print(json.dumps(rec, indent=2))
+    if args.out:
+        os.makedirs(args.out, exist_ok=True)
+        suffix = ""
+        if args.impl != "ref":
+            suffix += f"_{args.impl}"
+        if args.pad_heads:
+            suffix += f"_hpad{args.pad_heads}"
+        if args.wire_dtype:
+            suffix += f"_wire-{args.wire_dtype}"
+        if args.pod_gossip_every > 1:
+            suffix += f"_podq{args.pod_gossip_every}"
+        if args.q != 4 and args.shape in ("train_4k",):
+            suffix += f"_q{args.q}"
+        if args.algorithm != "dsgt":
+            suffix += f"_{args.algorithm}"
+        fname = f"{args.arch}_{args.shape}_{args.mesh}{suffix}.json"
+        with open(os.path.join(args.out, fname), "w") as f:
+            json.dump(rec, f, indent=2)
+
+
+if __name__ == "__main__":
+    main()

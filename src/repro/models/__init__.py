@@ -1,0 +1,11 @@
+"""Model substrate: composable decoder stacks in pure functional JAX.
+
+Families: dense (llama/phi/qwen-style GQA+RoPE+SwiGLU), moe (dbrx/llama4
+expert-parallel), ssm (RWKV-6), hybrid (RecurrentGemma RG-LRU + local
+attention), audio (whisper enc-dec, conv frontend stubbed), vlm (InternVL2
+LM backbone, ViT stubbed).
+"""
+
+from repro.models.model import build_model, ModelBundle
+
+__all__ = ["build_model", "ModelBundle"]

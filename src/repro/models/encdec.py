@@ -1,0 +1,275 @@
+"""Whisper-style encoder--decoder backbone [arXiv:2212.04356].
+
+Per the task spec the mel-spectrogram + conv feature extractor is a STUB:
+``input_specs()`` supplies precomputed frame embeddings (B, 1500, d_model);
+this module implements the transformer that consumes them.
+
+Encoder: learned positions, bidirectional attention, GELU MLP, pre-LN.
+Decoder: token + learned positional embeddings, causal self-attention,
+cross-attention over encoder output, GELU MLP. Whisper's published decoder
+context is 448; the generic decode_32k stress shape uses a 32k learned
+position table (recorded as an adaptation in DESIGN.md).
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import attention as attn
+from repro.models.layers import (
+    chunked_softmax_xent,
+    embed_init,
+    embed_lookup,
+    gelu_mlp,
+    gelu_mlp_init,
+    layernorm,
+    layernorm_init,
+    normal_init,
+    unembed_logits,
+)
+
+PyTree = Any
+
+__all__ = [
+    "encdec_init",
+    "encode",
+    "encdec_loss",
+    "encdec_prefill",
+    "encdec_decode_step",
+    "encdec_init_decode_state",
+    "DEC_POS_LEN",
+]
+
+DEC_POS_LEN = 32768  # decode_32k stress shape (whisper native: 448)
+
+
+def _enc_block_init(key, d: int, n_heads: int, d_ff: int, dt) -> Dict:
+    k1, k2 = jax.random.split(key)
+    hd = d // n_heads
+    return {
+        "ln1": layernorm_init(d, dt),
+        "attn": attn.attn_init(k1, d, n_heads, n_heads, hd, dt, qkv_bias=True),
+        "ln2": layernorm_init(d, dt),
+        "mlp": gelu_mlp_init(k2, d, d_ff, dt),
+    }
+
+
+def _dec_block_init(key, cfg: ModelConfig, dt) -> Dict:
+    k1, k2, k3 = jax.random.split(key, 3)
+    d = cfg.d_model
+    return {
+        "ln1": layernorm_init(d, dt),
+        "self_attn": attn.attn_init(
+            k1, d, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim, dt, qkv_bias=True
+        ),
+        "ln2": layernorm_init(d, dt),
+        "cross_attn": attn.cross_attn_init(k2, d, cfg.n_heads, cfg.head_dim, dt),
+        "ln3": layernorm_init(d, dt),
+        "mlp": gelu_mlp_init(k3, d, cfg.d_ff, dt),
+    }
+
+
+def encdec_init(cfg: ModelConfig, key) -> Dict:
+    assert cfg.encoder is not None
+    dt = jnp.dtype(cfg.param_dtype)
+    e = cfg.encoder
+    k_ep, k_eb, k_de, k_dp, k_db = jax.random.split(key, 5)
+    enc_keys = jax.random.split(k_eb, e.n_layers)
+    dec_keys = jax.random.split(k_db, cfg.n_layers)
+    return {
+        "enc": {
+            "pos": normal_init(k_ep, (e.seq_len, e.d_model), 0.02, dt),
+            "blocks": jax.vmap(
+                lambda k: _enc_block_init(k, e.d_model, e.n_heads, e.d_ff, dt)
+            )(enc_keys),
+            "final_ln": layernorm_init(e.d_model, dt),
+        },
+        "dec": {
+            "embed": embed_init(k_de, cfg.padded_vocab, cfg.d_model, dt),
+            "pos": normal_init(k_dp, (DEC_POS_LEN, cfg.d_model), 0.02, dt),
+            "blocks": jax.vmap(lambda k: _dec_block_init(k, cfg, dt))(dec_keys),
+            "final_ln": layernorm_init(cfg.d_model, dt),
+        },
+    }
+
+
+def encode(params: Dict, cfg: ModelConfig, frames: jnp.ndarray, impl: str = "ref") -> jnp.ndarray:
+    """frames: stubbed conv-frontend embeddings (B, T_enc, d)."""
+    cd = jnp.dtype(cfg.compute_dtype)
+    e = cfg.encoder
+    x = frames.astype(cd) + params["enc"]["pos"].astype(cd)[None, : frames.shape[1]]
+    b, t, _ = x.shape
+    positions = jnp.broadcast_to(jnp.arange(t, dtype=jnp.int32)[None], (b, t))
+
+    def body(h, blk):
+        a = attn.attn_apply(
+            blk["attn"],
+            layernorm(blk["ln1"], h, cfg.norm_eps),
+            positions,
+            n_heads=e.n_heads,
+            n_kv_heads=e.n_heads,
+            head_dim=e.d_model // e.n_heads,
+            rope_theta=None,
+            causal=False,
+            impl=impl,
+            compute_dtype=cd,
+        )
+        h = h + a
+        h = h + gelu_mlp(blk["mlp"], layernorm(blk["ln2"], h, cfg.norm_eps), cd)
+        return h, None
+
+    x, _ = jax.lax.scan(body, x, params["enc"]["blocks"])
+    return layernorm(params["enc"]["final_ln"], x, cfg.norm_eps)
+
+
+def _decode_hidden(
+    params: Dict,
+    cfg: ModelConfig,
+    tokens: jnp.ndarray,
+    enc_out: jnp.ndarray,
+    impl: str,
+    remat: bool,
+) -> jnp.ndarray:
+    cd = jnp.dtype(cfg.compute_dtype)
+    b, s = tokens.shape
+    x = embed_lookup(params["dec"]["embed"], tokens, cd)
+    x = x + params["dec"]["pos"].astype(cd)[None, :s]
+    positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32)[None], (b, s))
+
+    def body(h, blk):
+        a = attn.attn_apply(
+            blk["self_attn"],
+            layernorm(blk["ln1"], h, cfg.norm_eps),
+            positions,
+            n_heads=cfg.n_heads,
+            n_kv_heads=cfg.n_kv_heads,
+            head_dim=cfg.head_dim,
+            rope_theta=None,
+            causal=True,
+            impl=impl,
+            compute_dtype=cd,
+        )
+        h = h + a
+        kv = attn.precompute_cross_kv(
+            blk["cross_attn"], enc_out, cfg.n_heads, cfg.head_dim, cd
+        )
+        c = attn.cross_attn_apply(
+            blk["cross_attn"],
+            layernorm(blk["ln2"], h, cfg.norm_eps),
+            kv,
+            n_heads=cfg.n_heads,
+            head_dim=cfg.head_dim,
+            compute_dtype=cd,
+        )
+        h = h + c
+        h = h + gelu_mlp(blk["mlp"], layernorm(blk["ln3"], h, cfg.norm_eps), cd)
+        return h, None
+
+    if remat:
+        body = jax.checkpoint(body, prevent_cse=False)
+    x, _ = jax.lax.scan(body, x, params["dec"]["blocks"])
+    return layernorm(params["dec"]["final_ln"], x, cfg.norm_eps)
+
+
+def encdec_loss(
+    params: Dict, cfg: ModelConfig, batch: Dict, impl: str = "ref", remat: bool = True
+) -> jnp.ndarray:
+    """batch: {"frames": (B,T_enc,d_enc), "tokens": (B,S+1)}."""
+    enc_out = encode(params, cfg, batch["frames"], impl)
+    tokens = batch["tokens"]
+    h = _decode_hidden(params, cfg, tokens[:, :-1], enc_out, impl, remat)
+    return chunked_softmax_xent(
+        params["dec"]["embed"]["table"],
+        h,
+        tokens[:, 1:],
+        cfg.vocab_size,
+        compute_dtype=jnp.dtype(cfg.compute_dtype),
+    )
+
+
+def encdec_prefill(
+    params: Dict, cfg: ModelConfig, batch: Dict, impl: str = "ref"
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    enc_out = encode(params, cfg, batch["frames"], impl)
+    h = _decode_hidden(params, cfg, batch["tokens"], enc_out, impl, remat=False)
+    logits = unembed_logits(
+        params["dec"]["embed"]["table"], h[:, -1], jnp.dtype(cfg.compute_dtype)
+    )
+    return logits, enc_out
+
+
+def encdec_init_decode_state(
+    cfg: ModelConfig, batch: int, max_seq: int, cache_dtype=jnp.bfloat16
+) -> Dict:
+    """Self-attn KV caches (layer-stacked) + per-layer precomputed cross KV
+    placeholders (filled by the engine after encode())."""
+    e = cfg.encoder
+    kv = attn.init_kv_cache(batch, max_seq, cfg.n_kv_heads, cfg.head_dim, cache_dtype)
+    stacked = jax.tree_util.tree_map(
+        lambda a: jnp.zeros((cfg.n_layers,) + a.shape, a.dtype), kv
+    )
+    cross = jnp.zeros(
+        (cfg.n_layers, batch, e.seq_len, cfg.n_heads, cfg.head_dim), cache_dtype
+    )
+    return {"self": stacked, "cross_k": cross, "cross_v": cross}
+
+
+def encdec_fill_cross_kv(params: Dict, cfg: ModelConfig, enc_out: jnp.ndarray, state: Dict) -> Dict:
+    cd = jnp.dtype(cfg.compute_dtype)
+
+    def per_layer(blk):
+        k, v = attn.precompute_cross_kv(blk, enc_out, cfg.n_heads, cfg.head_dim, cd)
+        return k.astype(state["cross_k"].dtype), v.astype(state["cross_v"].dtype)
+
+    ks, vs = jax.vmap(per_layer)(
+        jax.tree_util.tree_map(lambda a: a, params["dec"]["blocks"]["cross_attn"])
+    )
+    return {**state, "cross_k": ks, "cross_v": vs}
+
+
+def encdec_decode_step(
+    params: Dict, cfg: ModelConfig, tokens: jnp.ndarray, state: Dict
+) -> Tuple[jnp.ndarray, Dict]:
+    """One decoder token against self-cache + cross KV. tokens: (B,)."""
+    cd = jnp.dtype(cfg.compute_dtype)
+    pos = state["self"]["pos"][0]
+    x = embed_lookup(params["dec"]["embed"], tokens[:, None], cd)
+    x = x + jax.lax.dynamic_slice_in_dim(
+        params["dec"]["pos"].astype(cd), pos, 1, axis=0
+    )[None]
+
+    def body(h, xs):
+        blk, self_cache, ck, cv = xs
+        a, self_cache = attn.attn_decode(
+            blk["self_attn"],
+            layernorm(blk["ln1"], h, cfg.norm_eps),
+            self_cache,
+            n_heads=cfg.n_heads,
+            n_kv_heads=cfg.n_kv_heads,
+            head_dim=cfg.head_dim,
+            rope_theta=None,
+            compute_dtype=cd,
+        )
+        h = h + a
+        c = attn.cross_attn_apply(
+            blk["cross_attn"],
+            layernorm(blk["ln2"], h, cfg.norm_eps),
+            (ck.astype(cd), cv.astype(cd)),
+            n_heads=cfg.n_heads,
+            head_dim=cfg.head_dim,
+            compute_dtype=cd,
+        )
+        h = h + c
+        h = h + gelu_mlp(blk["mlp"], layernorm(blk["ln3"], h, cfg.norm_eps), cd)
+        return h, self_cache
+
+    x, new_self = jax.lax.scan(
+        body, x, (params["dec"]["blocks"], state["self"], state["cross_k"], state["cross_v"])
+    )
+    x = layernorm(params["dec"]["final_ln"], x, cfg.norm_eps)
+    logits = unembed_logits(params["dec"]["embed"]["table"], x[:, 0], cd)
+    return logits, {**state, "self": new_self}

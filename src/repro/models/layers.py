@@ -1,0 +1,235 @@
+"""Primitive layers: norms, RoPE, MLPs, embeddings, chunked cross-entropy.
+
+All layers are pure functions over nested-dict parameter pytrees. Matmul
+inputs are cast to ``compute_dtype`` (bf16 on TPU) while parameters are
+stored in ``param_dtype`` (fp32 for the FL optimizer state); reductions
+(norm statistics, softmax, loss) run in fp32.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+PyTree = Any
+
+__all__ = [
+    "uniform_init",
+    "normal_init",
+    "dense_init",
+    "rmsnorm_init",
+    "rmsnorm",
+    "layernorm_init",
+    "layernorm",
+    "linear",
+    "swiglu_init",
+    "swiglu",
+    "gelu_mlp_init",
+    "gelu_mlp",
+    "rope_freqs",
+    "apply_rope",
+    "embed_init",
+    "embed_lookup",
+    "unembed_logits",
+    "chunked_softmax_xent",
+    "softmax_xent",
+]
+
+
+# ---------------------------------------------------------------------------
+# init helpers
+# ---------------------------------------------------------------------------
+
+
+def normal_init(key, shape, scale: float, dtype) -> jnp.ndarray:
+    return (scale * jax.random.normal(key, shape, jnp.float32)).astype(dtype)
+
+
+def uniform_init(key, shape, scale: float, dtype) -> jnp.ndarray:
+    return jax.random.uniform(key, shape, jnp.float32, -scale, scale).astype(dtype)
+
+
+def dense_init(key, d_in: int, d_out: int, dtype, bias: bool = False) -> Dict:
+    """Fan-in scaled normal init (1/sqrt(d_in)), the llama convention."""
+    p = {"w": normal_init(key, (d_in, d_out), d_in**-0.5, dtype)}
+    if bias:
+        p["b"] = jnp.zeros((d_out,), dtype)
+    return p
+
+
+def linear(p: Dict, x: jnp.ndarray, compute_dtype=jnp.bfloat16) -> jnp.ndarray:
+    y = x.astype(compute_dtype) @ p["w"].astype(compute_dtype)
+    if "b" in p:
+        y = y + p["b"].astype(compute_dtype)
+    return y
+
+
+# ---------------------------------------------------------------------------
+# norms
+# ---------------------------------------------------------------------------
+
+
+def rmsnorm_init(d: int, dtype) -> Dict:
+    return {"scale": jnp.ones((d,), dtype)}
+
+
+def rmsnorm(p: Dict, x: jnp.ndarray, eps: float = 1e-5) -> jnp.ndarray:
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    out = xf * jax.lax.rsqrt(var + eps) * p["scale"].astype(jnp.float32)
+    return out.astype(x.dtype)
+
+
+def layernorm_init(d: int, dtype) -> Dict:
+    return {"scale": jnp.ones((d,), dtype), "bias": jnp.zeros((d,), dtype)}
+
+
+def layernorm(p: Dict, x: jnp.ndarray, eps: float = 1e-5) -> jnp.ndarray:
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.var(xf, axis=-1, keepdims=True)
+    out = (xf - mu) * jax.lax.rsqrt(var + eps)
+    out = out * p["scale"].astype(jnp.float32) + p["bias"].astype(jnp.float32)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# MLPs
+# ---------------------------------------------------------------------------
+
+
+def swiglu_init(key, d: int, d_ff: int, dtype) -> Dict:
+    kg, ku, kd = jax.random.split(key, 3)
+    return {
+        "gate": dense_init(kg, d, d_ff, dtype),
+        "up": dense_init(ku, d, d_ff, dtype),
+        "down": dense_init(kd, d_ff, d, dtype),
+    }
+
+
+def swiglu(p: Dict, x: jnp.ndarray, compute_dtype=jnp.bfloat16) -> jnp.ndarray:
+    g = linear(p["gate"], x, compute_dtype)
+    u = linear(p["up"], x, compute_dtype)
+    return linear(p["down"], jax.nn.silu(g) * u, compute_dtype)
+
+
+def gelu_mlp_init(key, d: int, d_ff: int, dtype) -> Dict:
+    k1, k2 = jax.random.split(key)
+    return {
+        "up": dense_init(k1, d, d_ff, dtype, bias=True),
+        "down": dense_init(k2, d_ff, d, dtype, bias=True),
+    }
+
+
+def gelu_mlp(p: Dict, x: jnp.ndarray, compute_dtype=jnp.bfloat16) -> jnp.ndarray:
+    return linear(p["down"], jax.nn.gelu(linear(p["up"], x, compute_dtype)), compute_dtype)
+
+
+# ---------------------------------------------------------------------------
+# RoPE
+# ---------------------------------------------------------------------------
+
+
+def rope_freqs(head_dim: int, theta: float) -> jnp.ndarray:
+    """Inverse frequencies (head_dim/2,), fp32."""
+    return 1.0 / (
+        theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim)
+    )
+
+
+def apply_rope(
+    x: jnp.ndarray, positions: jnp.ndarray, theta: float
+) -> jnp.ndarray:
+    """Rotate (..., seq, heads, head_dim) by per-position angles.
+
+    positions: (..., seq) int32 absolute positions (supports KV-cache decode
+    by passing the absolute write position).
+    """
+    head_dim = x.shape[-1]
+    inv = rope_freqs(head_dim, theta)  # (hd/2,)
+    ang = positions.astype(jnp.float32)[..., None] * inv  # (..., seq, hd/2)
+    cos, sin = jnp.cos(ang), jnp.sin(ang)
+    cos = cos[..., None, :]  # broadcast over heads: (..., seq, 1, hd/2)
+    sin = sin[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# embeddings / logits / loss
+# ---------------------------------------------------------------------------
+
+
+def embed_init(key, vocab: int, d: int, dtype, scale: float = 0.02) -> Dict:
+    return {"table": normal_init(key, (vocab, d), scale, dtype)}
+
+
+def embed_lookup(p: Dict, tokens: jnp.ndarray, compute_dtype=jnp.bfloat16) -> jnp.ndarray:
+    return p["table"].astype(compute_dtype)[tokens]
+
+
+def unembed_logits(
+    table: jnp.ndarray, h: jnp.ndarray, compute_dtype=jnp.bfloat16
+) -> jnp.ndarray:
+    """h (..., d) @ table^T (v, d) -> (..., v)."""
+    return h.astype(compute_dtype) @ table.astype(compute_dtype).T
+
+
+def softmax_xent(
+    logits: jnp.ndarray, labels: jnp.ndarray, valid_vocab: Optional[int] = None
+) -> jnp.ndarray:
+    """Mean token cross-entropy, fp32. Padded vocab ids are masked out."""
+    lf = logits.astype(jnp.float32)
+    if valid_vocab is not None and valid_vocab < lf.shape[-1]:
+        mask = jnp.arange(lf.shape[-1]) < valid_vocab
+        lf = jnp.where(mask, lf, -1e30)
+    logz = jax.nn.logsumexp(lf, axis=-1)
+    gold = jnp.take_along_axis(lf, labels[..., None], axis=-1)[..., 0]
+    return jnp.mean(logz - gold)
+
+
+def chunked_softmax_xent(
+    table: jnp.ndarray,
+    h: jnp.ndarray,
+    labels: jnp.ndarray,
+    valid_vocab: int,
+    chunk: int = 512,
+    compute_dtype=jnp.bfloat16,
+) -> jnp.ndarray:
+    """Cross-entropy WITHOUT materializing (B, S, V) logits.
+
+    Scans over sequence chunks; peak logits memory is (B, chunk, V) --
+    ~2 orders of magnitude smaller at train_4k x 152k vocab. This is the
+    memory-term optimization used by the large-vocab configs.
+    """
+    b, s, d = h.shape
+    if s % chunk:
+        pad = chunk - s % chunk
+        h = jnp.pad(h, ((0, 0), (0, pad), (0, 0)))
+        labels = jnp.pad(labels, ((0, 0), (0, pad)), constant_values=-1)
+        s = s + pad
+    n_chunks = s // chunk
+    h = h.reshape(b, n_chunks, chunk, d).transpose(1, 0, 2, 3)
+    labels = labels.reshape(b, n_chunks, chunk).transpose(1, 0, 2)
+
+    def body(acc, xs):
+        hc, lc = xs
+        logits = unembed_logits(table, hc, compute_dtype).astype(jnp.float32)
+        vocab_iota = jnp.arange(logits.shape[-1])
+        logits = jnp.where(vocab_iota < valid_vocab, logits, -1e30)
+        logz = jax.nn.logsumexp(logits, axis=-1)
+        # gold logit via mask+sum instead of take_along_axis: with the
+        # vocab dim SHARDED a gather forces an all-gather of the full
+        # (B, chunk, V) logits; the masked sum reduces locally and
+        # all-reduces only (B, chunk) scalars.
+        onehot = (vocab_iota == lc[..., None]).astype(jnp.float32)
+        gold = jnp.sum(jnp.where(onehot > 0, logits, 0.0), axis=-1)
+        valid = (lc >= 0).astype(jnp.float32)
+        loss_sum, count = acc
+        return (loss_sum + jnp.sum((logz - gold) * valid), count + jnp.sum(valid)), None
+
+    (loss_sum, count), _ = jax.lax.scan(body, (jnp.float32(0.0), jnp.float32(0.0)), (h, labels))
+    return loss_sum / jnp.maximum(count, 1.0)

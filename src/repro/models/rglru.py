@@ -1,0 +1,120 @@
+"""RG-LRU recurrent block (RecurrentGemma / Griffin [arXiv:2402.19427]).
+
+Block structure (the "recurrent block" of Griffin):
+
+    x -> in_proj -> branch1 -> conv1d(width 4) -> RG-LRU -> *gelu(branch2) -> out_proj
+
+RG-LRU recurrence (per channel):
+
+    r_t = sigmoid(x_t W_a + b_a)          recurrence gate
+    i_t = sigmoid(x_t W_x + b_x)          input gate
+    log a_t = -c * softplus(lambda) * r_t (c = 8)
+    h_t = a_t h_{t-1} + sqrt(1 - a_t^2) * (i_t * x_t)
+
+The training/prefill path uses ``jax.lax.associative_scan`` (O(log T)
+parallel depth -- the TPU-friendly formulation); the naive scan oracle
+lives in kernels/rglru_scan/ref.py and the blocked Pallas kernel in
+kernels/rglru_scan/.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import dense_init, linear, normal_init
+
+PyTree = Any
+RGLRU_C = 8.0
+
+__all__ = ["rglru_block_init", "rglru_block_apply", "rglru_decode_state", "rglru_scan_assoc"]
+
+
+def rglru_block_init(key, d_model: int, width: int, conv_width: int, dtype) -> Dict:
+    ks = jax.random.split(key, 6)
+    # lambda init so that a^c = sigmoid(lambda)^c is spread in (0.9, 0.999)
+    lam = jax.random.uniform(ks[4], (width,), jnp.float32, 2.0, 6.0)
+    return {
+        "in_proj": dense_init(ks[0], d_model, 2 * width, dtype, bias=True),
+        "conv_w": normal_init(ks[1], (conv_width, width), conv_width**-0.5, dtype),
+        "conv_b": jnp.zeros((width,), dtype),
+        "gate_a": dense_init(ks[2], width, width, dtype, bias=True),
+        "gate_x": dense_init(ks[3], width, width, dtype, bias=True),
+        "lam": lam,
+        "out_proj": dense_init(ks[5], width, d_model, dtype, bias=True),
+    }
+
+
+def _causal_conv1d(
+    x: jnp.ndarray, w: jnp.ndarray, b: jnp.ndarray, state: jnp.ndarray
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Depthwise causal conv. x: (B,S,W); w: (K,W); state: (B,K-1,W) holds
+    the trailing inputs of the previous segment."""
+    k = w.shape[0]
+    xp = jnp.concatenate([state.astype(x.dtype), x], axis=1)  # (B, S+K-1, W)
+    out = sum(
+        xp[:, i : i + x.shape[1]] * w[i].astype(x.dtype) for i in range(k)
+    ) + b.astype(x.dtype)
+    return out, xp[:, -(k - 1) :].astype(state.dtype)
+
+
+def rglru_scan_assoc(
+    log_a: jnp.ndarray, bx: jnp.ndarray, h0: jnp.ndarray
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """h_t = a_t h_{t-1} + bx_t via associative_scan over the time axis.
+
+    log_a, bx: (B, S, W) fp32; h0: (B, W). Returns (h (B,S,W), h_last).
+    The initial state is folded in as a virtual step with a=1? No --
+    we prepend it as bx_0 scaled appropriately by composing after the scan:
+    h_t = (prod a_{1..t}) h0 + scan_t.
+    """
+
+    def combine(c1, c2):
+        la1, b1 = c1
+        la2, b2 = c2
+        return la1 + la2, jnp.exp(la2) * b1 + b2
+
+    la_cum, b_cum = jax.lax.associative_scan(combine, (log_a, bx), axis=1)
+    h = b_cum + jnp.exp(la_cum) * h0[:, None]
+    return h, h[:, -1]
+
+
+def rglru_block_apply(
+    p: Dict,
+    x: jnp.ndarray,
+    state: Dict,
+    compute_dtype=jnp.bfloat16,
+    impl: str = "ref",
+) -> Tuple[jnp.ndarray, Dict]:
+    """x: (B,S,d) -> (out (B,S,d), new_state {h, conv})."""
+    width = p["lam"].shape[0]
+    xw = linear(p["in_proj"], x, compute_dtype)
+    u, gate_branch = jnp.split(xw, 2, axis=-1)
+    u, conv_state = _causal_conv1d(u, p["conv_w"], p["conv_b"], state["conv"])
+
+    uf = u.astype(jnp.float32)
+    r = jax.nn.sigmoid(linear(p["gate_a"], u, compute_dtype).astype(jnp.float32))
+    i = jax.nn.sigmoid(linear(p["gate_x"], u, compute_dtype).astype(jnp.float32))
+    log_a = -RGLRU_C * jax.nn.softplus(p["lam"])[None, None] * r  # (B,S,W) <= 0
+    beta = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-12))
+    bx = beta * (i * uf)
+
+    if impl == "pallas":
+        from repro.kernels.rglru_scan import ops as rglru_ops
+
+        h, h_last = rglru_ops.rglru_scan(log_a, bx, state["h"])
+    else:
+        h, h_last = rglru_scan_assoc(log_a, bx, state["h"])
+
+    y = h.astype(compute_dtype) * jax.nn.gelu(gate_branch)
+    out = linear(p["out_proj"], y, compute_dtype)
+    return out, {"h": h_last, "conv": conv_state}
+
+
+def rglru_decode_state(batch: int, width: int, conv_width: int) -> Dict:
+    return {
+        "h": jnp.zeros((batch, width), jnp.float32),
+        "conv": jnp.zeros((batch, conv_width - 1, width), jnp.float32),
+    }

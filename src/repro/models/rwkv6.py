@@ -1,0 +1,195 @@
+"""RWKV-6 "Finch" block: token-shift time mixing with DATA-DEPENDENT decay.
+
+Per head (size 64) the WKV recurrence over kv-state S in R^{64x64} is
+
+    y_t = r_t^T (S_{t-1} + diag(u) k_t v_t^T)
+    S_t = diag(w_t) S_{t-1} + k_t v_t^T
+
+with per-channel decay w_t = exp(-exp(w0 + lora_w(x~_t))) in (0,1) -- the
+data dependence of w_t is the Finch contribution [arXiv:2404.05892].
+
+The training/prefill path here is the CHUNKED parallel form (log-space
+decay ratios; within-chunk attention-like einsums + cross-chunk carried
+state), which is both the TPU-friendly formulation and what the Pallas
+kernel (kernels/rwkv6_scan) tiles. The naive O(T) scan lives in
+kernels/rwkv6_scan/ref.py as the oracle.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import dense_init, linear, normal_init
+
+PyTree = Any
+HEAD_SIZE = 64
+
+__all__ = ["rwkv_block_init", "rwkv_time_mix", "rwkv_channel_mix", "rwkv_decode_states", "HEAD_SIZE"]
+
+
+def rwkv_block_init(key, d_model: int, d_ff: int, dtype) -> Dict:
+    if d_model % HEAD_SIZE:
+        raise ValueError(f"d_model={d_model} not a multiple of head size {HEAD_SIZE}")
+    n_heads = d_model // HEAD_SIZE
+    keys = jax.random.split(key, 12)
+    lora = 64  # decay LoRA width
+    return {
+        "time": {
+            # learned token-shift lerp coefficients per projection
+            "mu_r": jnp.full((d_model,), 0.5, dtype),
+            "mu_k": jnp.full((d_model,), 0.5, dtype),
+            "mu_v": jnp.full((d_model,), 0.5, dtype),
+            "mu_g": jnp.full((d_model,), 0.5, dtype),
+            "mu_w": jnp.full((d_model,), 0.5, dtype),
+            "wr": dense_init(keys[0], d_model, d_model, dtype),
+            "wk": dense_init(keys[1], d_model, d_model, dtype),
+            "wv": dense_init(keys[2], d_model, d_model, dtype),
+            "wg": dense_init(keys[3], d_model, d_model, dtype),
+            "wo": dense_init(keys[4], d_model, d_model, dtype),
+            # data-dependent decay: w0 + B_w tanh(A_w x~)
+            "w0": normal_init(keys[5], (d_model,), 0.3, jnp.float32) - 6.0,
+            "wa": dense_init(keys[6], d_model, lora, dtype),
+            "wb": dense_init(keys[7], lora, d_model, dtype),
+            "u": normal_init(keys[8], (n_heads, HEAD_SIZE), 0.3, jnp.float32),
+            "ln_scale": jnp.ones((n_heads, HEAD_SIZE), dtype),
+        },
+        "channel": {
+            "mu_k": jnp.full((d_model,), 0.5, dtype),
+            "wk": dense_init(keys[9], d_model, d_ff, dtype),
+            "wv": dense_init(keys[10], d_ff, d_model, dtype),
+        },
+    }
+
+
+def _token_shift(x: jnp.ndarray, prev: jnp.ndarray) -> jnp.ndarray:
+    """x_{t-1} with ``prev`` = last token of the previous segment (B, d)."""
+    return jnp.concatenate([prev[:, None], x[:, :-1]], axis=1)
+
+
+def _lerp(x: jnp.ndarray, xs: jnp.ndarray, mu: jnp.ndarray) -> jnp.ndarray:
+    return x + (xs - x) * mu.astype(x.dtype)
+
+
+def _group_norm(y: jnp.ndarray, scale: jnp.ndarray, eps: float = 1e-5) -> jnp.ndarray:
+    """Per-head RMS normalization of (B, S, H, hd)."""
+    yf = y.astype(jnp.float32)
+    var = jnp.mean(yf * yf, axis=-1, keepdims=True)
+    return (yf * jax.lax.rsqrt(var + eps) * scale.astype(jnp.float32)).astype(y.dtype)
+
+
+def wkv6_chunked(
+    r: jnp.ndarray,
+    k: jnp.ndarray,
+    v: jnp.ndarray,
+    log_w: jnp.ndarray,
+    u: jnp.ndarray,
+    s0: jnp.ndarray,
+    chunk: int = 64,
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Chunked WKV-6. r,k,v,log_w: (B,S,H,hd) fp32; u: (H,hd); s0: (B,H,hd,hd).
+
+    Returns (y (B,S,H,hd), s_final). log_w <= 0 (log of decay in (0,1]);
+    all decay ratios are exp of non-positive numbers -> numerically safe.
+    """
+    b, s, h, hd = r.shape
+    assert s % chunk == 0, f"seq {s} not divisible by chunk {chunk}"
+    n_ch = s // chunk
+    rs = r.reshape(b, n_ch, chunk, h, hd)
+    ks = k.reshape(b, n_ch, chunk, h, hd)
+    vs = v.reshape(b, n_ch, chunk, h, hd)
+    lw = log_w.reshape(b, n_ch, chunk, h, hd)
+
+    def per_chunk(s_in, xs):
+        rc, kc, vc, lwc = xs  # (B, C, H, hd)
+        cum = jnp.cumsum(lwc, axis=1)  # inclusive cumulative log decay
+        total = cum[:, -1]  # (B, H, hd)
+        # decay from chunk start to just BEFORE t: P_{t-1} (exclusive cumsum)
+        cum_excl = cum - lwc
+        # carry term: r_t . (P_{t-1} * S_in); exp(cum_excl) <= 1, stable
+        r_dec = rc * jnp.exp(cum_excl)
+        y_carry = jnp.einsum("bchi,bhij->bchj", r_dec, s_in)
+        # intra-chunk: A[t,a] = sum_i r_t[i] k_a[i] e^{cum_excl_t[i]-cum_a[i]}
+        # computed PAIRWISE (a < t => exponent <= -lw_t, bounded) -- the
+        # factored e^{cum}*e^{-cum} form overflows for strong decays.
+        tri = jnp.tril(jnp.ones((chunk, chunk), bool), k=-1)  # (t, a), a < t
+        diff = cum_excl[:, :, None] - cum[:, None]  # (B, t, a, H, hd)
+        decay = jnp.exp(jnp.where(tri[None, :, :, None, None], diff, 0.0))
+        att = jnp.einsum("bchi,bahi,bcahi->bhca", rc, kc, decay)
+        att = jnp.where(tri[None, None], att, 0.0)
+        y_intra = jnp.einsum("bhca,bahj->bchj", att, vc)
+        # current-token bonus: (r_t . (u*k_t)) v_t
+        bonus = jnp.einsum("bchi,bchi->bch", rc, u[None, None] * kc)
+        y_bonus = bonus[..., None] * vc
+        y = y_carry + y_intra + y_bonus
+        # state update: S_out = e^{total} * S_in + sum_a e^{total-cum_a} k_a v_a^T
+        k_rem = kc * jnp.exp(total[:, None] - cum)
+        s_out = jnp.exp(total)[..., None] * s_in + jnp.einsum(
+            "bahi,bahj->bhij", k_rem, vc
+        )
+        return s_out, y
+
+    xs = tuple(jnp.moveaxis(a, 1, 0) for a in (rs, ks, vs, lw))
+    s_fin, ys = jax.lax.scan(per_chunk, s0, xs)
+    y = jnp.moveaxis(ys, 0, 1).reshape(b, s, h, hd)
+    return y, s_fin
+
+
+def rwkv_time_mix(
+    p: Dict,
+    x: jnp.ndarray,
+    prev_x: jnp.ndarray,
+    s0: jnp.ndarray,
+    compute_dtype=jnp.bfloat16,
+    chunk: int = 64,
+    impl: str = "ref",
+) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """(out, new_prev_x, new_state). x: (B,S,d); prev_x: (B,d);
+    s0: (B,H,hd,hd) fp32."""
+    b, s, d = x.shape
+    h = d // HEAD_SIZE
+    xs = _token_shift(x, prev_x)
+    r = linear(p["wr"], _lerp(x, xs, p["mu_r"]), compute_dtype)
+    k = linear(p["wk"], _lerp(x, xs, p["mu_k"]), compute_dtype)
+    v = linear(p["wv"], _lerp(x, xs, p["mu_v"]), compute_dtype)
+    g = linear(p["wg"], _lerp(x, xs, p["mu_g"]), compute_dtype)
+    xw = _lerp(x, xs, p["mu_w"])
+    dd = linear({"w": p["wb"]["w"]}, jnp.tanh(linear(p["wa"], xw, compute_dtype)), compute_dtype)
+    log_w = -jnp.exp(
+        jnp.clip(p["w0"].astype(jnp.float32) + dd.astype(jnp.float32), -20.0, 10.0)
+    )  # (B,S,d), <= 0
+
+    shape4 = (b, s, h, HEAD_SIZE)
+    rf, kf, vf = (a.astype(jnp.float32).reshape(shape4) for a in (r, k, v))
+    lwf = log_w.reshape(shape4)
+    if s % chunk:
+        chunk = 1  # fallback for irregular lengths (decode, odd prefixes)
+    if impl == "pallas":
+        from repro.kernels.rwkv6_scan import ops as wkv_ops
+
+        y, s_fin = wkv_ops.wkv6(rf, kf, vf, lwf, p["u"].astype(jnp.float32), s0)
+    else:
+        y, s_fin = wkv6_chunked(rf, kf, vf, lwf, p["u"].astype(jnp.float32), s0, chunk=chunk)
+    y = _group_norm(y, p["ln_scale"]).reshape(b, s, d)
+    out = linear(p["wo"], y.astype(compute_dtype) * jax.nn.silu(g), compute_dtype)
+    return out, x[:, -1], s_fin
+
+
+def rwkv_channel_mix(
+    p: Dict, x: jnp.ndarray, prev_x: jnp.ndarray, compute_dtype=jnp.bfloat16
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    xs = _token_shift(x, prev_x)
+    kx = _lerp(x, xs, p["mu_k"])
+    hdn = jnp.square(jax.nn.relu(linear(p["wk"], kx, compute_dtype)))
+    return linear(p["wv"], hdn, compute_dtype), x[:, -1]
+
+
+def rwkv_decode_states(batch: int, d_model: int, dtype=jnp.float32) -> Dict:
+    h = d_model // HEAD_SIZE
+    return {
+        "tm_prev": jnp.zeros((batch, d_model), dtype),
+        "cm_prev": jnp.zeros((batch, d_model), dtype),
+        "s": jnp.zeros((batch, h, HEAD_SIZE, HEAD_SIZE), jnp.float32),
+    }

@@ -1,0 +1,108 @@
+"""Tensor-parallel PartitionSpec rules for model parameters.
+
+Megatron-style layout over the ``model`` mesh axis, applied to FUSED dims
+(always divisible by 16 for the assigned architectures -- see DESIGN.md §5):
+
+  embed/head tables (V, d)      -> P("model", None)        vocab-sharded
+  attn wq/wk/wv     (d, H*hd)   -> P(None, "model")        column-parallel
+  attn wo           (H*hd, d)   -> P("model", None)        row-parallel
+  mlp gate/up       (d, ff)     -> P(None, "model")
+  mlp down          (ff, d)     -> P("model", None)
+  moe experts       (E, d, ff)  -> P("model", None, None)  expert-parallel
+  rglru in_proj     (d, 2W)     -> P(None, "model")        etc.
+  norms, lerp coefficients, decay vectors -> replicated
+
+``stacked`` leaves (under a scanned "blocks" dict) get a leading None for
+the layer axis. ``node_stack_specs`` prepends the FL node axes for the
+node-stacked optimizer state.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Sequence, Tuple
+
+import jax
+from jax.sharding import PartitionSpec as P
+from jax.tree_util import DictKey, SequenceKey
+
+PyTree = Any
+
+__all__ = ["model_param_specs", "node_stack_specs", "batch_specs"]
+
+_COL = {"wq", "wk", "wv", "wg", "wr", "gate", "up", "in_proj", "gate_a", "gate_x"}
+_ROW = {"wo", "down", "out_proj"}
+
+
+def _leaf_spec(path: Tuple, leaf) -> P:
+    keys = [k.key for k in path if isinstance(k, DictKey)]
+    name = keys[-1] if keys else ""
+    parent = keys[-2] if len(keys) > 1 else ""
+    gparent = keys[-3] if len(keys) > 2 else ""
+    stacked = ("blocks" in keys and not any(isinstance(k, SequenceKey) for k in path)) or (
+        "pblocks" in keys  # pattern-period stacks: list index + layer-stacked leaves
+    )
+    nd = leaf.ndim - (1 if stacked else 0)
+
+    def wrap(*spec) -> P:
+        spec = tuple(spec) + (None,) * (nd - len(spec))
+        if stacked:
+            spec = (None,) + spec
+        return P(*spec)
+
+    # embedding / unembedding tables
+    if name == "table":
+        return wrap("model", None)
+    # learned positional tables / norms / scalars / gates' vectors
+    if name in ("pos", "scale", "bias", "w0", "u", "ln_scale", "lam", "conv_b") or name.startswith("mu_"):
+        return wrap(*([None] * nd))
+    # MoE expert stacks (E, d, ff) / (E, ff, d) and router
+    if parent == "moe" and name in ("gate", "up", "down"):
+        return wrap("model", None, None)
+    if parent == "router" or gparent == "router":
+        return wrap(*([None] * nd))
+    # dense kernels: match on the dict that OWNS the w/b leaf
+    owner = parent if name in ("w", "b") else name
+    # rwkv channel-mix down projection (ff -> d) is row-parallel, unlike
+    # the attention/time-mix "wv" which is column-parallel
+    if owner == "wv" and gparent == "channel":
+        owner = "down"
+    if owner in _COL:
+        if name == "b":
+            return wrap("model")
+        return wrap(None, "model")
+    if owner in _ROW:
+        if name == "b":
+            return wrap(*([None] * nd))
+        return wrap("model", None)
+    if owner == "conv_w":
+        return wrap(None, "model")
+    # rwkv decay lora (wa: d->64, wb: 64->d) and anything small: replicate
+    return wrap(*([None] * nd))
+
+
+def model_param_specs(params: PyTree) -> PyTree:
+    """PartitionSpec pytree (model/TP axes only) matching ``params``."""
+    return jax.tree_util.tree_map_with_path(_leaf_spec, params)
+
+
+def node_stack_specs(specs: PyTree, node_axes: Sequence[str]) -> PyTree:
+    """Prepend the FL node axes to every spec (node-stacked state layout)."""
+    na = tuple(node_axes)
+
+    def f(s: P) -> P:
+        return P(na, *tuple(s))
+
+    return jax.tree_util.tree_map(f, specs, is_leaf=lambda x: isinstance(x, P))
+
+
+def batch_specs(batch_tree: PyTree, node_axes: Sequence[str], leading_scan: bool = True) -> PyTree:
+    """Specs for FL batches: (Q, nodes, per_node, ...) -> P(None, nodes, ...)."""
+    na = tuple(node_axes)
+
+    def f(leaf) -> P:
+        extra = (None,) * (leaf.ndim - (2 if leading_scan else 1))
+        if leading_scan:
+            return P(None, na, *extra)
+        return P(na, *extra)
+
+    return jax.tree_util.tree_map(f, batch_tree)

@@ -1,0 +1,479 @@
+"""Decoder-stack assembly for all decoder-only families.
+
+Composition rules:
+  * homogeneous stacks (dense / moe / ssm) scan over layer-stacked params
+    (HLO size O(1) in depth -- essential for the 64-layer dry-runs) with an
+    optional remat (activation-checkpoint) policy;
+  * patterned stacks (hybrid: RecurrentGemma's recurrent/recurrent/local-
+    attention) unroll with per-layer param trees.
+
+Functions are pure; parameters are nested dicts. Each block kind implements
+(train, decode) pairs and a decode-state initializer. ``impl`` routes the
+attention / recurrence inner loops to "ref" (pure jnp) or Pallas kernels.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import attention as attn
+from repro.models import moe as moe_mod
+from repro.models import rglru as rglru_mod
+from repro.models import rwkv6 as rwkv_mod
+from repro.models.layers import (
+    chunked_softmax_xent,
+    embed_init,
+    embed_lookup,
+    rmsnorm,
+    rmsnorm_init,
+    swiglu,
+    swiglu_init,
+    unembed_logits,
+)
+
+PyTree = Any
+
+__all__ = [
+    "init_params",
+    "forward_hidden",
+    "lm_loss",
+    "prefill",
+    "decode_step",
+    "init_decode_state",
+]
+
+
+def _cdtype(cfg: ModelConfig):
+    return jnp.dtype(cfg.compute_dtype)
+
+
+def _pdtype(cfg: ModelConfig):
+    return jnp.dtype(cfg.param_dtype)
+
+
+# ---------------------------------------------------------------------------
+# per-block init / apply
+# ---------------------------------------------------------------------------
+
+
+def init_block(key, cfg: ModelConfig, kind: str) -> Dict:
+    dt = _pdtype(cfg)
+    d = cfg.d_model
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    if kind in ("attention", "local_attention"):
+        return {
+            "ln1": rmsnorm_init(d, dt),
+            "attn": attn.attn_init(
+                k1, d, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim, dt, cfg.qkv_bias,
+                n_heads_layout=attn.layout_heads(cfg.n_heads, cfg.tp_head_pad),
+            ),
+            "ln2": rmsnorm_init(d, dt),
+            "mlp": swiglu_init(k2, d, cfg.d_ff, dt),
+        }
+    if kind == "moe":
+        return {
+            "ln1": rmsnorm_init(d, dt),
+            "attn": attn.attn_init(
+                k1, d, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim, dt, cfg.qkv_bias,
+                n_heads_layout=attn.layout_heads(cfg.n_heads, cfg.tp_head_pad),
+            ),
+            "ln2": rmsnorm_init(d, dt),
+            "moe": moe_mod.moe_init(k2, d, cfg.d_ff, cfg.n_experts, dt, cfg.shared_expert),
+        }
+    if kind == "rwkv":
+        return {
+            "ln1": rmsnorm_init(d, dt),
+            "ln2": rmsnorm_init(d, dt),
+            "rwkv": rwkv_mod.rwkv_block_init(k1, d, cfg.d_ff, dt),
+        }
+    if kind == "recurrent":
+        width = cfg.rnn_width or d
+        return {
+            "ln1": rmsnorm_init(d, dt),
+            "rglru": rglru_mod.rglru_block_init(k1, d, width, cfg.conv_width, dt),
+            "ln2": rmsnorm_init(d, dt),
+            "mlp": swiglu_init(k2, d, cfg.d_ff, dt),
+        }
+    raise ValueError(f"unknown block kind {kind}")
+
+
+def apply_block_train(
+    p: Dict,
+    kind: str,
+    cfg: ModelConfig,
+    x: jnp.ndarray,
+    positions: jnp.ndarray,
+    impl: str,
+    carry_state: Optional[Dict] = None,
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Full-sequence (train / prefill) block. Returns (x, aux_loss)."""
+    cd = _cdtype(cfg)
+    aux = jnp.float32(0.0)
+    eps = cfg.norm_eps
+    if kind in ("attention", "local_attention", "moe"):
+        window = cfg.window if kind == "local_attention" else 0
+        h = attn.attn_apply(
+            p["attn"],
+            rmsnorm(p["ln1"], x, eps),
+            positions,
+            n_heads=cfg.n_heads,
+            n_kv_heads=cfg.n_kv_heads,
+            head_dim=cfg.head_dim,
+            rope_theta=cfg.rope_theta,
+            causal=True,
+            window=window,
+            impl=impl,
+            compute_dtype=cd,
+            n_heads_layout=attn.layout_heads(cfg.n_heads, cfg.tp_head_pad),
+        )
+        x = x + h
+        if kind == "moe":
+            m, aux = moe_mod.moe_apply(
+                p["moe"],
+                rmsnorm(p["ln2"], x, eps),
+                n_experts=cfg.n_experts,
+                k=cfg.experts_per_token,
+                capacity_factor=cfg.moe_capacity_factor,
+                compute_dtype=cd,
+            )
+        else:
+            m = swiglu(p["mlp"], rmsnorm(p["ln2"], x, eps), cd)
+        return x + m, aux
+    if kind == "rwkv":
+        b, s, d = x.shape
+        st = carry_state or rwkv_mod.rwkv_decode_states(b, d)
+        h, _, _ = rwkv_mod.rwkv_time_mix(
+            p["rwkv"]["time"], rmsnorm(p["ln1"], x, eps), st["tm_prev"], st["s"], cd, impl=impl
+        )
+        x = x + h
+        c, _ = rwkv_mod.rwkv_channel_mix(
+            p["rwkv"]["channel"], rmsnorm(p["ln2"], x, eps), st["cm_prev"], cd
+        )
+        return x + c, aux
+    if kind == "recurrent":
+        b = x.shape[0]
+        width = cfg.rnn_width or cfg.d_model
+        st = carry_state or rglru_mod.rglru_decode_state(b, width, cfg.conv_width)
+        h, _ = rglru_mod.rglru_block_apply(p["rglru"], rmsnorm(p["ln1"], x, eps), st, cd, impl=impl)
+        x = x + h
+        m = swiglu(p["mlp"], rmsnorm(p["ln2"], x, eps), cd)
+        return x + m, aux
+    raise ValueError(kind)
+
+
+# ---------------------------------------------------------------------------
+# whole-stack init / forward
+# ---------------------------------------------------------------------------
+
+
+def _period_split(cfg: ModelConfig) -> Tuple[int, int, int]:
+    """(period, n_periods, n_tail) for patterned stacks. Periods are scanned
+    when n_periods >= 2 (compile-time O(1) in depth); the tail unrolls."""
+    period = len(cfg.block_pattern) or 1
+    n_periods = cfg.n_layers // period
+    if n_periods < 2:
+        return period, 0, cfg.n_layers
+    return period, n_periods, cfg.n_layers - n_periods * period
+
+
+def init_params(cfg: ModelConfig, key) -> Dict:
+    dt = _pdtype(cfg)
+    k_embed, k_blocks, k_head = jax.random.split(key, 3)
+    params: Dict[str, Any] = {
+        "embed": embed_init(k_embed, cfg.padded_vocab, cfg.d_model, dt),
+        "final_norm": rmsnorm_init(cfg.d_model, dt),
+    }
+    if not cfg.tie_embeddings:
+        params["head"] = embed_init(k_head, cfg.padded_vocab, cfg.d_model, dt)
+    pattern = cfg.effective_pattern
+    keys = jax.random.split(k_blocks, cfg.n_layers)
+    if cfg.is_homogeneous:
+        params["blocks"] = jax.vmap(lambda k: init_block(k, cfg, pattern[0]))(keys)
+    else:
+        period, n_periods, n_tail = _period_split(cfg)
+        if n_periods:
+            # one layer-stacked tree per position in the repeating pattern
+            params["pblocks"] = [
+                jax.vmap(lambda k, pos=pos: init_block(k, cfg, pattern[pos]))(
+                    jnp.stack([keys[p * period + pos] for p in range(n_periods)])
+                )
+                for pos in range(period)
+            ]
+            params["tail"] = [
+                init_block(keys[n_periods * period + i], cfg, pattern[n_periods * period + i])
+                for i in range(n_tail)
+            ]
+        else:
+            params["blocks"] = [init_block(keys[i], cfg, pattern[i]) for i in range(cfg.n_layers)]
+    return params
+
+
+def _layer_params(params: Dict, cfg: ModelConfig, i: int) -> Dict:
+    """Per-layer param tree regardless of storage layout (used by decode)."""
+    if "blocks" in params and cfg.is_homogeneous:
+        return jax.tree_util.tree_map(lambda a: a[i], params["blocks"])
+    if "pblocks" in params:
+        period, n_periods, _ = _period_split(cfg)
+        if i < n_periods * period:
+            p, pos = divmod(i, period)
+            return jax.tree_util.tree_map(lambda a: a[p], params["pblocks"][pos])
+        return params["tail"][i - n_periods * period]
+    return params["blocks"][i]
+
+
+def forward_hidden(
+    params: Dict,
+    cfg: ModelConfig,
+    x: jnp.ndarray,
+    positions: jnp.ndarray,
+    impl: str = "ref",
+    remat: bool = True,
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Embedded inputs (B,S,d) -> final hidden (B,S,d), total aux loss."""
+    pattern = cfg.effective_pattern
+    if cfg.is_homogeneous:
+        kind = pattern[0]
+
+        def body(carry, layer_params):
+            h, aux = carry
+            h2, a = apply_block_train(layer_params, kind, cfg, h, positions, impl)
+            return (h2, aux + a), None
+
+        if remat:
+            body = jax.checkpoint(body, prevent_cse=False)
+        (x, aux), _ = jax.lax.scan(body, (x, jnp.float32(0.0)), params["blocks"])
+    else:
+        aux = jnp.float32(0.0)
+        period, n_periods, n_tail = _period_split(cfg)
+
+        def one_layer(blk_, h, pos, kind):
+            return apply_block_train(blk_, kind, cfg, h, pos, impl)
+
+        if "pblocks" in params and n_periods:
+
+            def period_body(carry, stacked_blks):
+                h, a = carry
+                for pos in range(period):
+                    fn = functools.partial(one_layer, kind=pattern[pos])
+                    if remat:
+                        fn = jax.checkpoint(fn, prevent_cse=False)
+                    h, ai = fn(stacked_blks[pos], h, positions)
+                    a = a + ai
+                return (h, a), None
+
+            (x, aux), _ = jax.lax.scan(
+                period_body, (x, aux), tuple(params["pblocks"])
+            )
+            tail_blocks = params.get("tail", [])
+            tail_kinds = pattern[n_periods * period :]
+        else:
+            tail_blocks = params["blocks"]
+            tail_kinds = pattern
+        for blk, kind in zip(tail_blocks, tail_kinds):
+            fn = functools.partial(one_layer, kind=kind)
+            if remat:
+                fn = jax.checkpoint(fn, prevent_cse=False)
+            x, a = fn(blk, x, positions)
+            aux = aux + a
+    return rmsnorm(params["final_norm"], x, cfg.norm_eps), aux
+
+
+def _embed_inputs(
+    params: Dict, cfg: ModelConfig, batch: Dict
+) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """Returns (embedded (B,S,d), positions (B,S), labels (B,S))."""
+    cd = _cdtype(cfg)
+    tokens = batch["tokens"]  # (B, S+1): inputs + shifted labels
+    inputs, labels = tokens[:, :-1], tokens[:, 1:]
+    emb = embed_lookup(params["embed"], inputs, cd)
+    if cfg.frontend != "none" and "prefix_embeds" in batch:
+        pre = batch["prefix_embeds"].astype(cd)  # (B, P, d) stubbed frontend
+        emb = jnp.concatenate([pre, emb], axis=1)
+        labels = jnp.concatenate(
+            [jnp.full(pre.shape[:2], -1, labels.dtype), labels], axis=1
+        )
+    b, s, _ = emb.shape
+    positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32)[None], (b, s))
+    return emb, positions, labels
+
+
+def lm_loss(
+    params: Dict,
+    cfg: ModelConfig,
+    batch: Dict,
+    impl: str = "ref",
+    remat: bool = True,
+    loss_chunk: int = 512,
+) -> jnp.ndarray:
+    """Next-token cross-entropy (mean over valid tokens) + MoE aux."""
+    emb, positions, labels = _embed_inputs(params, cfg, batch)
+    h, aux = forward_hidden(params, cfg, emb, positions, impl, remat)
+    table = params["embed" if cfg.tie_embeddings else "head"]["table"]
+    loss = chunked_softmax_xent(
+        table, h, labels, cfg.vocab_size, chunk=loss_chunk, compute_dtype=_cdtype(cfg)
+    )
+    return loss + cfg.router_aux_coef * aux
+
+
+# ---------------------------------------------------------------------------
+# decode (serving)
+# ---------------------------------------------------------------------------
+
+
+def _decode_kinds(cfg: ModelConfig, max_seq: int, sliding_override: bool) -> Tuple[Tuple[str, int], ...]:
+    """(kind, cache_len) per layer. ``sliding_override`` replaces full
+    attention with a window ring buffer (the long_500k policy for dense
+    archs -- see DESIGN.md)."""
+    out = []
+    for kind in cfg.effective_pattern:
+        if kind in ("attention", "moe"):
+            if sliding_override:
+                out.append((kind, min(cfg.window or 4096, max_seq)))
+            else:
+                out.append((kind, max_seq))
+        elif kind == "local_attention":
+            out.append((kind, min(cfg.window or max_seq, max_seq)))
+        else:
+            out.append((kind, 0))
+    return tuple(out)
+
+
+def init_decode_state(
+    cfg: ModelConfig,
+    batch: int,
+    max_seq: int,
+    sliding_override: bool = False,
+    cache_dtype=jnp.bfloat16,
+) -> Any:
+    """Per-layer decode caches. Homogeneous stacks get layer-stacked caches
+    (scanned decode); patterned stacks get a list."""
+    kinds = _decode_kinds(cfg, max_seq, sliding_override)
+
+    def one(kind: str, cache_len: int):
+        if kind in ("attention", "moe", "local_attention"):
+            return attn.init_kv_cache(batch, cache_len, cfg.n_kv_heads, cfg.head_dim, cache_dtype)
+        if kind == "rwkv":
+            return rwkv_mod.rwkv_decode_states(batch, cfg.d_model)
+        if kind == "recurrent":
+            return rglru_mod.rglru_decode_state(batch, cfg.rnn_width or cfg.d_model, cfg.conv_width)
+        raise ValueError(kind)
+
+    if cfg.is_homogeneous:
+        single = one(*kinds[0])
+        return jax.tree_util.tree_map(
+            lambda a: jnp.broadcast_to(a[None], (cfg.n_layers,) + a.shape).copy(), single
+        )
+    return [one(k, c) for k, c in kinds]
+
+
+def apply_block_decode(
+    p: Dict, kind: str, cfg: ModelConfig, x: jnp.ndarray, state: Any, ring: bool
+) -> Tuple[jnp.ndarray, Any]:
+    cd = _cdtype(cfg)
+    eps = cfg.norm_eps
+    if kind in ("attention", "local_attention", "moe"):
+        h, state = attn.attn_decode(
+            p["attn"],
+            rmsnorm(p["ln1"], x, eps),
+            state,
+            n_heads=cfg.n_heads,
+            n_kv_heads=cfg.n_kv_heads,
+            head_dim=cfg.head_dim,
+            rope_theta=cfg.rope_theta,
+            ring=ring or kind == "local_attention",
+            compute_dtype=cd,
+            n_heads_layout=attn.layout_heads(cfg.n_heads, cfg.tp_head_pad),
+        )
+        x = x + h
+        if kind == "moe":
+            m, _ = moe_mod.moe_apply(
+                p["moe"],
+                rmsnorm(p["ln2"], x, eps),
+                n_experts=cfg.n_experts,
+                k=cfg.experts_per_token,
+                capacity_factor=cfg.moe_capacity_factor,
+                compute_dtype=cd,
+            )
+        else:
+            m = swiglu(p["mlp"], rmsnorm(p["ln2"], x, eps), cd)
+        return x + m, state
+    if kind == "rwkv":
+        h, tm_prev, s_new = rwkv_mod.rwkv_time_mix(
+            p["rwkv"]["time"], rmsnorm(p["ln1"], x, eps), state["tm_prev"], state["s"], cd, chunk=1
+        )
+        x = x + h
+        c, cm_prev = rwkv_mod.rwkv_channel_mix(
+            p["rwkv"]["channel"], rmsnorm(p["ln2"], x, eps), state["cm_prev"], cd
+        )
+        return x + c, {"tm_prev": tm_prev, "cm_prev": cm_prev, "s": s_new}
+    if kind == "recurrent":
+        h, state2 = rglru_mod.rglru_block_apply(p["rglru"], rmsnorm(p["ln1"], x, eps), state, cd)
+        x = x + h
+        m = swiglu(p["mlp"], rmsnorm(p["ln2"], x, eps), cd)
+        return x + m, state2
+    raise ValueError(kind)
+
+
+def decode_step(
+    params: Dict,
+    cfg: ModelConfig,
+    tokens: jnp.ndarray,
+    caches: Any,
+    sliding_override: bool = False,
+) -> Tuple[jnp.ndarray, Any]:
+    """One decode step: tokens (B,) -> (logits (B, padded_vocab), caches)."""
+    cd = _cdtype(cfg)
+    x = embed_lookup(params["embed"], tokens[:, None], cd)  # (B,1,d)
+    pattern = cfg.effective_pattern
+    if cfg.is_homogeneous:
+        kind = pattern[0]
+
+        def body(h, xs):
+            layer_params, layer_cache = xs
+            h2, new_cache = apply_block_decode(
+                layer_params, kind, cfg, h, layer_cache, ring=sliding_override
+            )
+            return h2, new_cache
+
+        x, caches = jax.lax.scan(body, x, (params["blocks"], caches))
+    else:
+        new_caches = []
+        for i, kind in enumerate(pattern):
+            x, c = apply_block_decode(
+                _layer_params(params, cfg, i), kind, cfg, x, caches[i], ring=sliding_override
+            )
+            new_caches.append(c)
+        caches = new_caches
+    x = rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    table = params["embed" if cfg.tie_embeddings else "head"]["table"]
+    logits = unembed_logits(table, x[:, 0], cd)
+    return logits, caches
+
+
+def prefill(
+    params: Dict,
+    cfg: ModelConfig,
+    batch: Dict,
+    impl: str = "ref",
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Full-sequence forward returning last-position logits (B, padded_vocab).
+
+    (The production engine would also materialize KV caches; for the
+    dry-run roofline the compute/collective profile of prefill is what
+    matters, and cache writes are pure stores.)
+    """
+    cd = _cdtype(cfg)
+    tokens = batch["tokens"]
+    emb = embed_lookup(params["embed"], tokens, cd)
+    if cfg.frontend != "none" and "prefix_embeds" in batch:
+        emb = jnp.concatenate([batch["prefix_embeds"].astype(cd), emb], axis=1)
+    b, s, _ = emb.shape
+    positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32)[None], (b, s))
+    h, _ = forward_hidden(params, cfg, emb, positions, impl, remat=False)
+    table = params["embed" if cfg.tie_embeddings else "head"]["table"]
+    return unembed_logits(table, h[:, -1], cd), h[:, -1]

@@ -1,0 +1,6 @@
+"""Serving substrate: batched prefill + decode engine over the consensus
+model (the deployable artifact of a decentralized-FL run)."""
+
+from repro.serving.engine import ServeEngine, GenerationResult
+
+__all__ = ["ServeEngine", "GenerationResult"]

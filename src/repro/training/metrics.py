@@ -1,0 +1,79 @@
+"""Communication accounting + run metrics.
+
+The paper's headline metric is *communication rounds*; production deploys
+care about *bytes on the wire*. Both are derived here from the parameter
+pytree and the topology, and both appear in EXPERIMENTS.md.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict
+
+import jax
+import numpy as np
+
+PyTree = Any
+
+__all__ = ["param_bytes", "comm_bytes_per_gossip", "allreduce_bytes", "MetricHistory"]
+
+
+def param_bytes(params: PyTree, wire_dtype: str | None = None) -> int:
+    """Bytes of ONE node's parameters as sent on the wire."""
+    total = 0
+    for leaf in jax.tree_util.tree_leaves(params):
+        itemsize = np.dtype(wire_dtype).itemsize if wire_dtype else leaf.dtype.itemsize
+        total += leaf.size * itemsize
+    return total
+
+
+def comm_bytes_per_gossip(
+    params: PyTree, topology: str, n_nodes: int, wire_dtype: str | None = None
+) -> int:
+    """Per-NODE egress bytes for one gossip round.
+
+    ring/torus: one parameter copy per outgoing direction (ppermute).
+    complete/allgather: N-1 copies. star: 1 (upload) + broadcast share.
+    """
+    p = param_bytes(params, wire_dtype)
+    if topology.startswith("torus"):
+        return 4 * p
+    if topology == "ring":
+        return 2 * p
+    if topology == "complete":
+        return (n_nodes - 1) * p
+    if topology == "star":
+        return 2 * p  # up to server + down
+    # arbitrary graph: mean degree from the mixing matrix
+    from repro.core.topology import mixing_matrix
+
+    w = mixing_matrix(topology, n_nodes)
+    mean_deg = float((np.abs(w) > 1e-12).sum(1).mean() - 1.0)
+    return int(mean_deg * p)
+
+
+def allreduce_bytes(params: PyTree, n_nodes: int, wire_dtype: str | None = None) -> int:
+    """Per-node bytes of a ring all-reduce: 2 (N-1)/N x payload."""
+    p = param_bytes(params, wire_dtype)
+    return int(2 * (n_nodes - 1) / n_nodes * p)
+
+
+class MetricHistory:
+    """Append-only metric recorder with numpy export."""
+
+    def __init__(self) -> None:
+        self._rows: list[Dict[str, float]] = []
+
+    def append(self, **kv: float) -> None:
+        self._rows.append({k: float(v) for k, v in kv.items()})
+
+    def __len__(self) -> int:
+        return len(self._rows)
+
+    def column(self, key: str) -> np.ndarray:
+        return np.array([r[key] for r in self._rows if key in r])
+
+    def last(self) -> Dict[str, float]:
+        return dict(self._rows[-1]) if self._rows else {}
+
+    def rows(self) -> list[Dict[str, float]]:
+        return [dict(r) for r in self._rows]

@@ -1,0 +1,5 @@
+"""Suite config."""
+
+
+def pytest_configure(config):
+    config.addinivalue_line("markers", "slow: multi-device subprocess tests")

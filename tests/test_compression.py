@@ -1,0 +1,140 @@
+"""int8 error-feedback gossip: unbiasedness and convergence properties."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.compression import (
+    compressed_wire_bytes,
+    dequantize_int8,
+    init_compression_state,
+    make_compressed_dense_gossip,
+    quantize_int8,
+)
+from repro.core.mixing import make_dense_gossip
+from repro.core.topology import mixing_matrix
+
+
+@settings(max_examples=25, deadline=None)
+@given(seed=st.integers(0, 1000), scale=st.floats(1e-3, 1e3))
+def test_quantizer_roundtrip_error_bound(seed, scale):
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(scale * rng.normal(size=(4, 64)), jnp.float32)
+    q, s = quantize_int8(x)
+    dq = dequantize_int8(q, s)
+    assert q.dtype == jnp.int8
+    # error per element <= half a quantization step
+    step = np.asarray(s)[:, None]
+    err = np.abs(np.asarray(dq - x)).reshape(4, -1)
+    assert (err <= 0.5 * step + 1e-7).all()
+
+
+def test_quantizer_handles_zeros():
+    q, s = quantize_int8(jnp.zeros((3, 8)))
+    assert np.asarray(dequantize_int8(q, s)).max() == 0.0
+
+
+def _disagreement(tree):
+    x = np.asarray(tree["x"])
+    return float(np.linalg.norm(x - x.mean(0)))
+
+
+def test_difference_coding_reaches_exact_floor_naive_stalls():
+    """Repeated mixing of a FIXED disagreement on a fast-mixing graph:
+    NAIVE full-payload int8 gossip stalls at its quantization floor
+    (step ~ max|theta|/127 never shrinks -- measured 2.5e-2 on this
+    setup, even WITH error feedback), while difference coding converges
+    to the exact-gossip floor because payload scales vanish with
+    consensus."""
+    n = 16
+    w = mixing_matrix("torus:4x4", n)
+    rng = np.random.default_rng(0)
+    x0 = {"x": jnp.asarray(rng.normal(size=(n, 32)), jnp.float32)}
+
+    exact = make_dense_gossip(w)
+    g_diff = make_compressed_dense_gossip(w, error_feedback=True)
+    g_naive = make_compressed_dense_gossip(w, error_feedback=True, difference_coding=False)
+
+    t_ex, t_df, t_nv = x0, x0, x0
+    s_df = init_compression_state(x0)
+    s_nv = init_compression_state(x0)
+    for _ in range(120):
+        t_ex = exact(t_ex)
+        t_df, s_df = g_diff(t_df, s_df)
+        t_nv, s_nv = g_naive(t_nv, s_nv)
+    d_ex, d_df, d_nv = _disagreement(t_ex), _disagreement(t_df), _disagreement(t_nv)
+    assert d_df < 10 * max(d_ex, 1e-6), (d_df, d_ex)
+    assert d_nv > 100 * d_df, (d_nv, d_df)
+
+
+def test_mixing_preserves_mean_with_ef():
+    """EF gossip must still never move the node average (1^T W = 1^T holds
+    leaf-wise because dequantized payloads are mixed with the same W)."""
+    n = 8
+    w = mixing_matrix("ring", n)
+    g = make_compressed_dense_gossip(w, error_feedback=True)
+    rng = np.random.default_rng(1)
+    tree = {"x": jnp.asarray(rng.normal(size=(n, 16)), jnp.float32)}
+    res = init_compression_state(tree)
+    mean0 = np.asarray(tree["x"]).mean(0)
+    for _ in range(5):
+        tree, res = g(tree, res)
+    # the mean moves only by the (bounded) quantization error of one round
+    drift = np.abs(np.asarray(tree["x"]).mean(0) - mean0).max()
+    q_step = np.abs(np.asarray(tree["x"])).max() / 127.0
+    assert drift < 5 * q_step
+
+
+def test_wire_bytes_accounting():
+    tree = {"a": jnp.zeros((4, 1000)), "b": jnp.zeros((4, 10, 10))}
+    assert compressed_wire_bytes(tree, degree=2) == 2 * (1000 + 4 + 100 + 4)
+
+
+def test_ef_gossip_in_fl_loop_converges():
+    """End-to-end: DSGD with EF-int8 gossip still drives every node to the
+    consensus optimum on non-IID quadratics (4x fewer wire bytes)."""
+    from repro.core import FLConfig, consensus_params, init_fl_state
+    from repro.core.schedules import constant
+
+    n, d = 8, 6
+    rng = np.random.default_rng(2)
+    b = jnp.asarray(rng.normal(size=(n, d)), jnp.float32)
+    w = mixing_matrix("torus:2x4", n)
+    g = make_compressed_dense_gossip(w, error_feedback=True)
+
+    # hand-rolled DSGD round with compressed mixing (the compressed gossip
+    # carries residual state, so it threads outside make_fl_round)
+    alpha = 0.05
+    params = {"x": jnp.zeros((n, d))}
+    res = init_compression_state(params)
+
+    @jax.jit
+    def round_fn(params, res):
+        mixed, res = g(params, res)
+        grads = {"x": params["x"] - b}
+        new = {"x": mixed["x"] - alpha * grads["x"]}
+        return new, res
+
+    exact_gossip = make_dense_gossip(w)
+
+    @jax.jit
+    def round_exact(params):
+        mixed = exact_gossip(params)
+        return {"x": mixed["x"] - alpha * (params["x"] - b)}
+
+    params_ex = {"x": jnp.zeros((n, d))}
+    for _ in range(600):
+        params, res = round_fn(params, res)
+        params_ex = round_exact(params_ex)
+    xbar = np.asarray(params["x"]).mean(0)
+    np.testing.assert_allclose(xbar, np.asarray(b.mean(0)), atol=2e-2)
+    # constant-alpha DSGD has an inherent O(alpha*heterogeneity/gap)
+    # consensus spread even with EXACT gossip; compression must not make
+    # it materially worse
+    spread = np.abs(np.asarray(params["x"]) - xbar).max()
+    spread_ex = np.abs(
+        np.asarray(params_ex["x"]) - np.asarray(params_ex["x"]).mean(0)
+    ).max()
+    assert spread < 2.0 * spread_ex + 1e-3, (spread, spread_ex)

@@ -1,0 +1,8 @@
+"""Environment guard: the suite must see ONE device (the dry-run's
+512-device XLA override must never leak into tests or benches)."""
+
+import jax
+
+
+def test_single_device_environment():
+    assert jax.device_count() == 1

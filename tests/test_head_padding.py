@@ -1,0 +1,56 @@
+"""TP head padding (§Perf optimization): exact logical-head semantics."""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config
+from repro.models import build_model
+from repro.models.attention import layout_heads
+
+
+def test_layout_heads():
+    assert layout_heads(40, 16) == 48
+    assert layout_heads(15, 16) == 16
+    assert layout_heads(32, 16) == 32  # already divisible: no padding
+    assert layout_heads(40, 0) == 40  # disabled
+
+
+def test_padded_heads_receive_zero_gradient():
+    """Padded q heads are zero-init + output-masked: they must NEVER train,
+    so the padded model IS the logical-head model."""
+    cfg = dataclasses.replace(get_config("smollm-360m", smoke=True), tp_head_pad=4)
+    bundle = build_model(cfg)
+    params = bundle.init_fn(jax.random.key(0))
+    hd = cfg.head_dim
+    real = cfg.n_heads * hd
+    assert params["blocks"]["attn"]["wq"]["w"].shape[-1] == layout_heads(cfg.n_heads, 4) * hd
+
+    batch = {"tokens": jax.random.randint(jax.random.key(1), (2, 33), 0, cfg.vocab_size)}
+    loss, g = jax.jit(jax.value_and_grad(bundle.loss_fn))(params, batch)
+    assert np.isfinite(float(loss))
+    gwq = np.asarray(g["blocks"]["attn"]["wq"]["w"], np.float32)
+    gwo = np.asarray(g["blocks"]["attn"]["wo"]["w"], np.float32)
+    assert np.abs(gwq[..., real:]).max() == 0.0
+    assert np.abs(gwo[:, real:, :]).max() == 0.0
+    assert np.abs(gwq[..., :real]).max() > 0.0
+
+
+def test_padded_decode_matches_unpadded_prefill_argmax():
+    """Decode with padded layout stays finite and self-consistent."""
+    cfg = dataclasses.replace(get_config("smollm-360m", smoke=True), tp_head_pad=4)
+    bundle = build_model(cfg)
+    params = bundle.init_fn(jax.random.key(0))
+    rng = np.random.default_rng(0)
+    prompt = jnp.asarray(rng.integers(0, cfg.vocab_size, (2, 8)), jnp.int32)
+    logits_pre, _ = jax.jit(bundle.prefill_fn)(params, {"tokens": prompt})
+    caches = bundle.init_decode_state_fn(2, 32)
+    step = jax.jit(lambda p, t, c: bundle.decode_fn(p, t, c))
+    logits = None
+    for t in range(8):
+        logits, caches = step(params, prompt[:, t], caches)
+    a = np.argmax(np.asarray(logits_pre, np.float32), -1)
+    b = np.argmax(np.asarray(logits, np.float32), -1)
+    np.testing.assert_array_equal(a, b)

@@ -1,0 +1,123 @@
+"""The while-aware HLO analyzer vs ground truth (unrolled lowerings)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.launch.hlo_analysis import analyze_hlo
+
+
+def _compile(f, *args):
+    return jax.jit(f).lower(*args).compile()
+
+
+def test_scan_flops_match_unrolled():
+    def f_scan(x, w):
+        def body(h, _):
+            return jnp.tanh(h @ w), None
+        h, _ = jax.lax.scan(body, x, None, length=9)
+        return h.sum()
+
+    def f_unroll(x, w):
+        h = x
+        for _ in range(9):
+            h = jnp.tanh(h @ w)
+        return h.sum()
+
+    xs = jax.ShapeDtypeStruct((64, 128), jnp.float32)
+    ws = jax.ShapeDtypeStruct((128, 128), jnp.float32)
+    a_scan = analyze_hlo(_compile(f_scan, xs, ws).as_text())
+    c_unroll = _compile(f_unroll, xs, ws)
+    truth = c_unroll.cost_analysis()["flops"]
+    dot_flops = 9 * 2 * 64 * 128 * 128
+    assert abs(a_scan.flops - truth) / truth < 0.02
+    assert a_scan.flops >= dot_flops
+
+
+def test_nested_scan_multiplication():
+    def f(x, w):
+        def outer(h, _):
+            def inner(g, _):
+                return g @ w, None
+            g, _ = jax.lax.scan(inner, h, None, length=4)
+            return g, None
+        h, _ = jax.lax.scan(outer, x, None, length=3)
+        return h.sum()
+
+    xs = jax.ShapeDtypeStruct((32, 64), jnp.float32)
+    ws = jax.ShapeDtypeStruct((64, 64), jnp.float32)
+    a = analyze_hlo(_compile(f, xs, ws).as_text())
+    expect = 3 * 4 * 2 * 32 * 64 * 64
+    assert abs(a.flops - expect) / expect < 0.05
+
+
+def test_grad_of_scan_counts_forward_and_backward():
+    def loss(x, w):
+        def body(h, _):
+            return jnp.tanh(h @ w), None
+        h, _ = jax.lax.scan(body, x, None, length=6)
+        return jnp.sum(h * h)
+
+    xs = jax.ShapeDtypeStruct((32, 64), jnp.float32)
+    ws = jax.ShapeDtypeStruct((64, 64), jnp.float32)
+    a_fwd = analyze_hlo(_compile(loss, xs, ws).as_text())
+    a_grad = analyze_hlo(_compile(jax.grad(loss, argnums=(0, 1)), xs, ws).as_text())
+    # backward ~ 2x forward matmul cost (dx and dw) on top of the forward
+    assert a_grad.flops > 2.4 * a_fwd.flops
+
+
+def test_collectives_exact_count_and_bytes():
+    import os
+    import subprocess
+    import sys
+    import textwrap
+
+    script = textwrap.dedent(
+        """
+        import os
+        os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+        import jax, jax.numpy as jnp
+        from jax.sharding import NamedSharding, PartitionSpec as P, AxisType
+        from repro.launch.hlo_analysis import analyze_hlo
+        mesh = jax.make_mesh((8,), ("model",), axis_types=(AxisType.Auto,))
+        def g(x, w):
+            def body(h, _):
+                return jnp.tanh(h @ w), None
+            h, _ = jax.lax.scan(body, x, None, length=5)
+            return h.sum()
+        xs = jax.ShapeDtypeStruct((128, 256), jnp.float32)
+        ws = jax.ShapeDtypeStruct((256, 256), jnp.float32)
+        with mesh:
+            c = jax.jit(g, in_shardings=(
+                NamedSharding(mesh, P(None, "model")),
+                NamedSharding(mesh, P("model", None)))).lower(xs, ws).compile()
+        a = analyze_hlo(c.as_text())
+        ar = a.collectives["all-reduce"]
+        # 5 in-loop activation all-reduces (128x256 fp32) + 1 scalar
+        assert ar["count"] == 6, ar
+        assert abs(ar["bytes"] - (5 * 128 * 256 * 4 + 4)) < 8, ar
+        print("COLL-OK")
+        """
+    )
+    repo = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(repo, "src")
+    proc = subprocess.run([sys.executable, "-c", script], env=env,
+                          capture_output=True, text=True, timeout=600)
+    assert proc.returncode == 0, proc.stderr[-2000:]
+    assert "COLL-OK" in proc.stdout
+
+
+def test_traffic_includes_loop_body():
+    def f_scan(x):
+        def body(h, _):
+            return jnp.sin(h) * 2.0, None
+        h, _ = jax.lax.scan(body, x, None, length=50)
+        return h
+
+    xs = jax.ShapeDtypeStruct((1024, 1024), jnp.float32)
+    a = analyze_hlo(_compile(f_scan, xs).as_text())
+    one_buffer = 1024 * 1024 * 4
+    # >= 50 reads + 50 writes of the carried buffer
+    assert a.traffic_bytes >= 90 * one_buffer

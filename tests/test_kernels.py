@@ -1,0 +1,143 @@
+"""Pallas kernel sweeps: shapes x dtypes, assert_allclose vs ref.py oracles.
+
+All kernels execute in interpret mode (kernel body in Python on CPU), per
+the container's validation contract; the BlockSpec tiling is the TPU
+target."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.flash_attention.flash_attention import flash_attention_bhsd
+from repro.kernels.flash_attention.ref import attention_ref_bhsd
+from repro.kernels.rglru_scan.rglru_scan import rglru_scan_pallas
+from repro.kernels.rglru_scan.ref import rglru_ref
+from repro.kernels.rwkv6_scan.rwkv6_scan import wkv6_chunked_pallas
+from repro.kernels.rwkv6_scan.ref import wkv6_ref
+from repro.models.rglru import rglru_scan_assoc
+from repro.models.rwkv6 import wkv6_chunked
+
+
+def _rand(rng, shape, dtype, scale=1.0):
+    return jnp.asarray(scale * rng.normal(size=shape), jnp.float32).astype(dtype)
+
+
+FLASH_CASES = [
+    # (b, n_q, n_kv, seq, hd, causal, window, bq, bk)
+    (2, 2, 1, 256, 64, True, 0, 128, 128),
+    (1, 4, 4, 128, 128, True, 64, 64, 64),
+    (2, 2, 2, 200, 64, True, 0, 128, 128),  # ragged tail blocks
+    (1, 2, 1, 256, 64, False, 0, 128, 128),
+    (1, 8, 2, 384, 256, True, 128, 128, 128),  # recurrentgemma-like hd
+    (1, 3, 1, 192, 64, True, 0, 64, 64),  # odd head count (smollm-like)
+]
+
+
+@pytest.mark.parametrize("case", FLASH_CASES, ids=[str(c) for c in FLASH_CASES])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_flash_attention_matches_ref(case, dtype):
+    b, nq, nkv, seq, hd, causal, window, bq, bk = case
+    rng = np.random.default_rng(hash(case) % 2**31)
+    q = _rand(rng, (b * nq, seq, hd), dtype)
+    k = _rand(rng, (b * nkv, seq, hd), dtype)
+    v = _rand(rng, (b * nkv, seq, hd), dtype)
+    out = flash_attention_bhsd(
+        q, k, v, causal=causal, window=window, n_q_heads=nq, n_kv_heads=nkv,
+        block_q=bq, block_k=bk, interpret=True,
+    )
+    ref = attention_ref_bhsd(q, k, v, causal=causal, window=window, n_q_heads=nq, n_kv_heads=nkv)
+    tol = 2e-5 if dtype == jnp.float32 else 2e-2
+    np.testing.assert_allclose(
+        np.asarray(out, np.float32), np.asarray(ref, np.float32), atol=tol, rtol=tol
+    )
+
+
+WKV_CASES = [
+    # (bh, seq, chunk)
+    (4, 128, 64),
+    (2, 256, 32),
+    (3, 64, 64),
+    (1, 512, 128),
+]
+
+
+@pytest.mark.parametrize("case", WKV_CASES, ids=[str(c) for c in WKV_CASES])
+def test_wkv6_kernel_matches_naive_scan(case):
+    bh, seq, chunk = case
+    hd = 64
+    rng = np.random.default_rng(seq + bh)
+    r = _rand(rng, (bh, seq, hd), jnp.float32)
+    k = _rand(rng, (bh, seq, hd), jnp.float32, 0.5)
+    v = _rand(rng, (bh, seq, hd), jnp.float32)
+    log_w = -jnp.exp(_rand(rng, (bh, seq, hd), jnp.float32) - 1.0)
+    u = _rand(rng, (bh, hd), jnp.float32, 0.3)
+    s0 = _rand(rng, (bh, hd, hd), jnp.float32, 0.1)
+    y_k, s_k = wkv6_chunked_pallas(r, k, v, log_w, u, s0, chunk=chunk, interpret=True)
+    y_r, s_r = wkv6_ref(r, k, v, log_w, u, s0)
+    np.testing.assert_allclose(np.asarray(y_k), np.asarray(y_r), atol=5e-4, rtol=1e-3)
+    np.testing.assert_allclose(np.asarray(s_k), np.asarray(s_r), atol=5e-4, rtol=1e-3)
+
+
+def test_wkv6_model_chunked_matches_naive_scan():
+    """The pure-jnp chunked form used in training == the sequential oracle."""
+    bh, seq, hd = 3, 128, 64
+    rng = np.random.default_rng(0)
+    r = _rand(rng, (bh, seq, hd), jnp.float32)
+    k = _rand(rng, (bh, seq, hd), jnp.float32, 0.5)
+    v = _rand(rng, (bh, seq, hd), jnp.float32)
+    log_w = -jnp.exp(_rand(rng, (bh, seq, hd), jnp.float32) - 1.0)
+    u0 = _rand(rng, (hd,), jnp.float32, 0.3)
+    s0 = _rand(rng, (bh, hd, hd), jnp.float32, 0.1)
+    y_c, s_c = wkv6_chunked(
+        r[:, :, None], k[:, :, None], v[:, :, None], log_w[:, :, None],
+        u0[None], s0[:, None], chunk=32,
+    )
+    u = jnp.broadcast_to(u0, (bh, hd))
+    y_r, s_r = wkv6_ref(r, k, v, log_w, u, s0)
+    np.testing.assert_allclose(np.asarray(y_c[:, :, 0]), np.asarray(y_r), atol=5e-4, rtol=1e-3)
+    np.testing.assert_allclose(np.asarray(s_c[:, 0]), np.asarray(s_r), atol=5e-4, rtol=1e-3)
+
+
+RGLRU_CASES = [
+    # (b, seq, width, block_d, chunk)
+    (2, 128, 256, 128, 64),
+    (3, 64, 128, 128, 64),
+    (2, 256, 384, 128, 32),
+    (1, 512, 128, 64, 128),
+]
+
+
+@pytest.mark.parametrize("case", RGLRU_CASES, ids=[str(c) for c in RGLRU_CASES])
+def test_rglru_kernel_matches_naive_scan(case):
+    b, seq, w, bd, ck = case
+    rng = np.random.default_rng(b * seq)
+    log_a = -jnp.exp(_rand(rng, (b, seq, w), jnp.float32))
+    bb = _rand(rng, (b, seq, w), jnp.float32)
+    h0 = _rand(rng, (b, w), jnp.float32)
+    h_k, hl_k = rglru_scan_pallas(log_a, bb, h0, block_d=bd, chunk=ck, interpret=True)
+    h_r, hl_r = rglru_ref(log_a, bb, h0)
+    np.testing.assert_allclose(np.asarray(h_k), np.asarray(h_r), atol=1e-4, rtol=1e-4)
+    np.testing.assert_allclose(np.asarray(hl_k), np.asarray(hl_r), atol=1e-4, rtol=1e-4)
+
+
+def test_rglru_assoc_scan_matches_naive():
+    rng = np.random.default_rng(9)
+    log_a = -jnp.exp(_rand(rng, (2, 96, 64), jnp.float32))
+    bb = _rand(rng, (2, 96, 64), jnp.float32)
+    h0 = _rand(rng, (2, 64), jnp.float32)
+    h_a, _ = rglru_scan_assoc(log_a, bb, h0)
+    h_r, _ = rglru_ref(log_a, bb, h0)
+    np.testing.assert_allclose(np.asarray(h_a), np.asarray(h_r), atol=1e-4, rtol=1e-4)
+
+
+def test_rglru_strong_decay_stability():
+    """Extreme decay (log_a ~ -60) must not produce NaN/Inf (the kernel's
+    closed form keeps every exponent <= 0)."""
+    b, s, w = 1, 64, 128
+    log_a = jnp.full((b, s, w), -60.0)
+    bb = jnp.ones((b, s, w))
+    h0 = jnp.full((b, w), 1e6)
+    h_k, _ = rglru_scan_pallas(log_a, bb, h0, block_d=128, chunk=64, interpret=True)
+    assert np.isfinite(np.asarray(h_k)).all()
+    np.testing.assert_allclose(np.asarray(h_k[:, 1:]), 1.0, atol=1e-5)

@@ -1,0 +1,86 @@
+"""Gossip backend properties (simulated dense-W; sharded backends are
+covered by tests/test_sharded.py in a multi-device subprocess)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core.mixing import make_dense_gossip, make_mean_consensus, mesh_gossip_dense_equivalent
+from repro.core.topology import mixing_matrix, spectral_gap
+
+
+def _tree(n, seed):
+    rng = np.random.default_rng(seed)
+    return {
+        "a": jnp.asarray(rng.normal(size=(n, 5)), jnp.float32),
+        "b": {"c": jnp.asarray(rng.normal(size=(n, 3, 4)), jnp.float32)},
+    }
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    topo=st.sampled_from(["ring", "complete", "hospital20", "torus:4x4"]),
+    seed=st.integers(0, 1000),
+)
+def test_gossip_preserves_mean(topo, seed):
+    """1^T W = 1^T  =>  mixing never moves the node-average (the quantity
+    the consensus model serves)."""
+    n = 20 if topo == "hospital20" else 16
+    w = mixing_matrix(topo, n)
+    g = make_dense_gossip(w)
+    tree = _tree(n, seed)
+    mixed = g(tree)
+    for k_in, k_out in zip(jax.tree.leaves(tree), jax.tree.leaves(mixed)):
+        np.testing.assert_allclose(
+            np.asarray(k_in.mean(0)), np.asarray(k_out.mean(0)), atol=1e-5
+        )
+
+
+@settings(max_examples=25, deadline=None)
+@given(seed=st.integers(0, 1000), reps=st.integers(1, 4))
+def test_gossip_contracts_disagreement(seed, reps):
+    """||Theta - mean|| shrinks by at least (1 - spectral_gap) per round."""
+    n = 16
+    w = mixing_matrix("ring", n)
+    lam2 = 1.0 - spectral_gap(w)
+    g = make_dense_gossip(w)
+    tree = _tree(n, seed)
+
+    def dev(t):
+        x = np.asarray(t["a"])
+        return float(np.linalg.norm(x - x.mean(0)))
+
+    cur = tree
+    before = dev(cur)
+    for _ in range(reps):
+        cur = g(cur)
+    after = dev(cur)
+    assert after <= lam2**reps * before + 1e-4
+
+
+def test_mean_consensus_is_exact_average():
+    tree = _tree(8, 0)
+    out = make_mean_consensus(8)(tree)
+    for leaf_in, leaf_out in zip(jax.tree.leaves(tree), jax.tree.leaves(out)):
+        expect = np.broadcast_to(np.asarray(leaf_in).mean(0), leaf_in.shape)
+        np.testing.assert_allclose(np.asarray(leaf_out), expect, atol=1e-6)
+
+
+def test_bf16_wire_error_is_bounded():
+    n = 16
+    w = mixing_matrix("ring", n)
+    tree = _tree(n, 1)
+    exact = make_dense_gossip(w)(tree)
+    wired = make_dense_gossip(w, wire_dtype=jnp.bfloat16)(tree)
+    for a, b in zip(jax.tree.leaves(exact), jax.tree.leaves(wired)):
+        rel = np.abs(np.asarray(a) - np.asarray(b)).max() / (np.abs(np.asarray(a)).max() + 1e-9)
+        assert rel < 0.02  # bf16 has ~3 decimal digits
+
+
+def test_dense_equivalent_is_circulant_for_ring():
+    w = mesh_gossip_dense_equivalent({"data": 8})
+    # circulant: every row is a rotation of the first
+    for i in range(8):
+        np.testing.assert_allclose(w[i], np.roll(w[0], i), atol=1e-12)
+    np.testing.assert_allclose(np.diag(w), 1.0 / 3.0)

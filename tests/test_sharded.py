@@ -1,0 +1,150 @@
+"""Sharded-vs-simulated equivalence, run in a subprocess with 8 placeholder
+devices (jax locks the device count at init, and the rest of the suite must
+see a single device).
+
+The key system test: one FL round executed (a) sharded over a (2,2,2)
+(pod, data, model) mesh with ppermute gossip and (b) simulated on the node
+axis with the dense-W oracle, must produce identical parameters.
+"""
+
+import os
+import subprocess
+import sys
+import textwrap
+
+import pytest
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+_SCRIPT = textwrap.dedent(
+    """
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    import jax, jax.numpy as jnp, numpy as np
+    from jax.sharding import NamedSharding, PartitionSpec as P
+    from repro.core import (FLConfig, init_fl_state, make_fl_round,
+                            make_dense_gossip, make_mesh_gossip,
+                            mesh_gossip_dense_equivalent)
+    from repro.core.schedules import constant
+    from repro.configs import get_config
+    from repro.models import build_model
+    from repro.models.sharding import model_param_specs, node_stack_specs
+    from repro.launch.mesh import make_test_mesh, node_axes, n_fl_nodes
+
+    mesh = make_test_mesh((2, 2, 2))
+    naxes = node_axes(mesh)
+    nodes = n_fl_nodes(mesh)
+
+    cfg = get_config("tinyllama-1.1b", smoke=True)
+    bundle = build_model(cfg)
+    key = jax.random.key(0)
+    params1 = bundle.init_fn(key)
+    stacked = jax.tree.map(lambda p: jnp.broadcast_to(p[None], (nodes,) + p.shape) * 1.0, params1)
+    # per-node perturbation so gossip actually moves parameters
+    leaves, tdef = jax.tree_util.tree_flatten(stacked)
+    ks = jax.random.split(jax.random.key(1), len(leaves))
+    leaves = [l + 0.01 * jax.random.normal(k, l.shape, jnp.float32).astype(l.dtype)
+              for l, k in zip(leaves, ks)]
+    stacked = jax.tree_util.tree_unflatten(tdef, leaves)
+
+    rng = np.random.default_rng(0)
+    q = 2
+    batches = {"tokens": jnp.asarray(
+        rng.integers(0, cfg.vocab_size, size=(q, nodes, 2, 33)), jnp.int32)}
+
+    fl_cfg = FLConfig(algorithm="dsgt", q=q, n_nodes=nodes)
+    sched = constant(0.1)
+
+    # (a) simulated: dense-W oracle of the mesh torus
+    w = mesh_gossip_dense_equivalent({a: mesh.shape[a] for a in naxes})
+    rf_sim = jax.jit(make_fl_round(bundle.loss_fn, make_dense_gossip(w), sched, fl_cfg))
+    st_sim = init_fl_state(fl_cfg, stacked)
+    st_sim, m_sim = rf_sim(st_sim, batches)
+    st_sim, m_sim = rf_sim(st_sim, batches)
+
+    # (b) sharded: ppermute gossip over (pod, data), TP over model
+    pspecs = node_stack_specs(model_param_specs(params1), naxes)
+    gossip = make_mesh_gossip(mesh, naxes, pspecs)
+    rf_sh = make_fl_round(bundle.loss_fn, gossip, sched, fl_cfg)
+    def shardings(spec_tree):
+        return jax.tree.map(lambda s: NamedSharding(mesh, s), spec_tree,
+                            is_leaf=lambda x: isinstance(x, P))
+    st_sh = init_fl_state(fl_cfg, jax.device_put(stacked, shardings(pspecs)))
+    with mesh:
+        rf_sh_j = jax.jit(rf_sh)
+        st_sh, m_sh = rf_sh_j(st_sh, batches)
+        st_sh, m_sh = rf_sh_j(st_sh, batches)
+
+    for (pa, a), (pb, b) in zip(
+        jax.tree_util.tree_flatten_with_path(st_sim.params)[0][0:999],
+        jax.tree_util.tree_flatten_with_path(st_sh.params)[0][0:999],
+    ):
+        err = float(jnp.abs(a - b).max())
+        rel = err / (float(jnp.abs(a).max()) + 1e-9)
+        # bf16 matmul reduction orders differ between the sharded (vocab-
+        # partitioned logits) and single-device lowerings; 1% is the
+        # expected bf16 agreement after two optimizer rounds.
+        assert rel < 2e-2, (pa, err, rel)
+    print("loss sim/sh:", float(m_sim["loss"]), float(m_sh["loss"]))
+    assert abs(float(m_sim["loss"]) - float(m_sh["loss"])) < 1e-2
+    tr_err = max(float(jnp.abs(a - b).max()) for a, b in zip(
+        jax.tree.leaves(st_sim.tracker), jax.tree.leaves(st_sh.tracker)))
+    print("tracker max err:", tr_err)
+    print("SHARDED-EQUIV-OK")
+    """
+)
+
+
+@pytest.mark.slow
+def test_sharded_fl_round_matches_simulated():
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(REPO, "src")
+    proc = subprocess.run(
+        [sys.executable, "-c", _SCRIPT], env=env, capture_output=True, text=True,
+        timeout=900,
+    )
+    assert proc.returncode == 0, proc.stderr[-4000:]
+    assert "SHARDED-EQUIV-OK" in proc.stdout
+
+
+_GOSSIP_SCRIPT = textwrap.dedent(
+    """
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    import jax, jax.numpy as jnp, numpy as np
+    from jax.sharding import NamedSharding, PartitionSpec as P
+    from repro.core import (make_dense_gossip, make_mesh_gossip,
+                            make_allgather_gossip, mesh_gossip_dense_equivalent,
+                            mixing_matrix)
+    from repro.launch.mesh import make_test_mesh
+
+    mesh = make_test_mesh((2, 2, 2))
+    tree = {"w": jnp.arange(4 * 6 * 4, dtype=jnp.float32).reshape(4, 6, 4),
+            "b": jnp.linspace(0, 1, 20, dtype=jnp.float32).reshape(4, 5)}
+    specs = {"w": P(("pod", "data"), None, "model"), "b": P(("pod", "data"), None)}
+
+    with mesh:
+        out_mesh = jax.jit(make_mesh_gossip(mesh, ("pod", "data"), specs))(tree)
+        w_er = mixing_matrix("erdos_renyi", 4, p=0.7, seed=1)
+        out_ag = jax.jit(make_allgather_gossip(mesh, ("pod", "data"), specs, w_er))(tree)
+
+    ref_mesh = make_dense_gossip(mesh_gossip_dense_equivalent({"pod": 2, "data": 2}))(tree)
+    ref_ag = make_dense_gossip(w_er)(tree)
+    for k in tree:
+        np.testing.assert_allclose(np.asarray(out_mesh[k]), np.asarray(ref_mesh[k]), rtol=1e-5)
+        np.testing.assert_allclose(np.asarray(out_ag[k]), np.asarray(ref_ag[k]), rtol=1e-5)
+    print("GOSSIP-BACKENDS-OK")
+    """
+)
+
+
+@pytest.mark.slow
+def test_sharded_gossip_backends_match_oracle():
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(REPO, "src")
+    proc = subprocess.run(
+        [sys.executable, "-c", _GOSSIP_SCRIPT], env=env, capture_output=True,
+        text=True, timeout=600,
+    )
+    assert proc.returncode == 0, proc.stderr[-4000:]
+    assert "GOSSIP-BACKENDS-OK" in proc.stdout

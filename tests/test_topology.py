@@ -1,0 +1,87 @@
+"""Assumption 1 machinery: graphs, mixing matrices, spectral gaps."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.topology import (
+    check_assumption1,
+    complete_graph,
+    erdos_renyi_graph,
+    hospital20_graph,
+    metropolis_weights,
+    mixing_matrix,
+    ring_graph,
+    spectral_gap,
+    star_graph,
+    torus_graph,
+    uniform_neighbor_weights,
+)
+from repro.core.mixing import mesh_gossip_dense_equivalent
+
+
+@pytest.mark.parametrize(
+    "topo,n",
+    [("ring", 4), ("ring", 16), ("complete", 8), ("star", 8), ("hospital20", 20), ("torus:4x4", 16), ("torus:2x16", 32)],
+)
+def test_named_topologies_satisfy_assumption1(topo, n):
+    w = mixing_matrix(topo, n)
+    diag = check_assumption1(w)
+    assert diag["spectral_gap"] > 0.0
+    assert np.all(w >= -1e-12), "nonnegative weights"
+
+
+@settings(max_examples=40, deadline=None)
+@given(
+    n=st.integers(4, 24),
+    p=st.floats(0.15, 0.9),
+    seed=st.integers(0, 10_000),
+)
+def test_metropolis_weights_any_connected_graph(n, p, seed):
+    g = erdos_renyi_graph(n, p, seed)
+    assert g.is_connected()
+    w = metropolis_weights(g)
+    diag = check_assumption1(w)
+    assert 0.0 < diag["spectral_gap"] <= 1.0
+    # doubly stochastic both ways (symmetry + row sums)
+    np.testing.assert_allclose(w.sum(0), 1.0, atol=1e-10)
+
+
+def test_ring_spectral_gap_shrinks_with_n():
+    gaps = [spectral_gap(mixing_matrix("ring", n)) for n in (4, 8, 16, 32)]
+    assert all(g1 > g2 for g1, g2 in zip(gaps, gaps[1:]))
+
+
+def test_torus_beats_ring_at_same_size():
+    ring = spectral_gap(mixing_matrix("ring", 16))
+    torus = spectral_gap(mixing_matrix("torus:4x4", 16))
+    assert torus > ring
+
+
+def test_hospital20_structure():
+    g = hospital20_graph()
+    assert g.n == 20
+    assert g.is_connected()
+    deg = g.degrees
+    assert deg.mean() >= 2.0 and deg.max() <= 6
+
+
+def test_mesh_gossip_equivalent_matches_assumption1():
+    for sizes in ({"data": 16}, {"pod": 2, "data": 16}, {"pod": 4, "data": 4}):
+        w = mesh_gossip_dense_equivalent(sizes)
+        diag = check_assumption1(w)
+        assert diag["spectral_gap"] > 0.0
+
+
+def test_uniform_neighbor_requires_regular():
+    with pytest.raises(ValueError):
+        uniform_neighbor_weights(star_graph(5))
+    w = uniform_neighbor_weights(ring_graph(6))
+    np.testing.assert_allclose(np.diag(w), 1.0 / 3.0)
+
+
+def test_graph_validation():
+    with pytest.raises(ValueError):
+        ring_graph(1)
+    g = torus_graph(2, 4)
+    assert g.n == 8 and g.is_connected()
