@@ -10,6 +10,7 @@ bytes the dry-run parser extracts from the compiled HLO.
 from __future__ import annotations
 
 import json
+import os
 from typing import Dict
 
 import jax
@@ -31,14 +32,18 @@ def main(arch: str = "tinyllama-1.1b") -> Dict:
         rows.append({"strategy": name, "bytes_per_iter_per_node": bytes_per_iter,
                      "ratio_vs_centralized": bytes_per_iter / ar})
 
-    from repro.core.compression import compressed_wire_bytes
+    from repro.core.compression import DEFAULT_SCALE_CHUNK
+    from repro.core.packing import flat_wire_bytes, pack_layout
 
     ar = allreduce_bytes(shapes, n)
     ring = comm_bytes_per_gossip(shapes, "ring", n)
     ring_bf16 = comm_bytes_per_gossip(shapes, "ring", n, wire_dtype="bfloat16")
     star = comm_bytes_per_gossip(shapes, "star", n)
     stacked = jax.tree.map(lambda l: jax.ShapeDtypeStruct((n,) + l.shape, l.dtype), shapes)
-    ring_int8 = compressed_wire_bytes(stacked, degree=2)
+    # the flat engine behind make_compressed_dense_gossip: int8 payload
+    # (incl. chunk padding) + one fp32 scale per (node, scale_chunk) block
+    layout = pack_layout(stacked, pad_to=DEFAULT_SCALE_CHUNK)
+    ring_int8 = flat_wire_bytes(layout, degree=2, scale_chunk=DEFAULT_SCALE_CHUNK)
     row("centralized all-reduce (every step)", ar)
     row("FedAvg star, Q=100", star / 100)
     row("DSGD/DSGT ring gossip (every step)", ring)
@@ -57,5 +62,6 @@ def main(arch: str = "tinyllama-1.1b") -> Dict:
 
 if __name__ == "__main__":
     out = main()
+    os.makedirs("experiments", exist_ok=True)
     with open("experiments/comm_bytes.json", "w") as f:
         json.dump(out, f, indent=2)

@@ -3,6 +3,7 @@ learning (DSGD / DSGT with Q local steps) over an explicit node graph.
 
 Public API:
     topology  — graphs + mixing matrices (Assumption 1 machinery)
+    packing   — flat-buffer engine: pytree <-> one (nodes, total) buffer
     mixing    — gossip backends (dense-W simulated, ppermute mesh, all-gather)
     fl        — FLState + DSGD/DSGT/FD round builders + baselines
     schedules — alpha^r schedules (paper's 0.02/sqrt(r), Theorem 1 rate, ...)
@@ -10,17 +11,21 @@ Public API:
 
 from repro.core.compression import (
     init_compression_state,
+    init_flat_compression_state,
     make_compressed_dense_gossip,
+    make_compressed_flat_gossip,
     quantize_int8,
 )
 from repro.core.fl import FLConfig, FLState, consensus_params, init_fl_state, make_fl_round
 from repro.core.mixing import (
     make_allgather_gossip,
+    make_dense_flat_mix,
     make_dense_gossip,
     make_mean_consensus,
     make_mesh_gossip,
     mesh_gossip_dense_equivalent,
 )
+from repro.core.packing import FlatLayout, flat_wire_bytes, pack, pack_like, unpack
 from repro.core.topology import (
     Graph,
     check_assumption1,
@@ -39,8 +44,16 @@ from repro.core import schedules
 
 __all__ = [
     "init_compression_state",
+    "init_flat_compression_state",
     "make_compressed_dense_gossip",
+    "make_compressed_flat_gossip",
     "quantize_int8",
+    "FlatLayout",
+    "flat_wire_bytes",
+    "pack",
+    "pack_like",
+    "unpack",
+    "make_dense_flat_mix",
     "FLConfig",
     "FLState",
     "consensus_params",

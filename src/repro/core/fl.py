@@ -8,7 +8,12 @@ carries a leading ``nodes`` axis). The same code runs:
   and all CPU tests), with a dense-W gossip backend;
 * *sharded*    -- nodes sharded over the (pod, data) mesh axes, gossip via
   the ppermute backend; the node axis is a pure map dimension so local
-  steps lower with ZERO cross-node collectives (verified in the dry-run).
+  steps lower with ZERO cross-node collectives (verified in the dry-run);
+* *flat*       -- either of the above with the state packed into a single
+  ``(nodes, total_params)`` buffer (``core.packing``): pass ``layout=`` to
+  ``make_fl_round`` and a flat-native gossip backend, and the optimizer
+  update, metrics, and mixing all become single-buffer ops instead of
+  per-leaf traversals (benchmarks/gossip_bench.py).
 
 Update equations (r is the global iteration counter, 1-indexed):
 
@@ -39,13 +44,13 @@ Baselines expressed in the same machinery:
 from __future__ import annotations
 
 import dataclasses
-import functools
 from typing import Any, Callable, Dict, NamedTuple, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 
 from repro.core.mixing import GossipFn
+from repro.core.packing import FlatLayout, pack_like, unpack
 from repro.core.schedules import Schedule
 
 PyTree = Any
@@ -111,14 +116,26 @@ def make_fl_round(
     gossip_fn: GossipFn,
     schedule: Schedule,
     cfg: FLConfig,
+    layout: Optional[FlatLayout] = None,
 ) -> Callable[[FLState, PyTree], Tuple[FLState, Dict[str, jnp.ndarray]]]:
     """Build one *communication round*: (Q-1) local steps + 1 comm step.
 
     Args:
       loss_fn: per-node loss ``(params, batch) -> scalar`` (unstacked).
-      gossip_fn: mixing backend on node-stacked pytrees (theta <- W theta).
+      gossip_fn: mixing backend (theta <- W theta). Operates on
+        node-stacked pytrees, or directly on the flat buffer when
+        ``layout`` is given (e.g. ``make_dense_flat_mix``).
       schedule: alpha^r.
       cfg: algorithm + Q + N.
+      layout: when a ``core.packing.FlatLayout`` is passed, the round runs
+        the **flat-buffer engine**: ``FLState.params`` (and the DSGT
+        tracker/prev_grad) are single ``(nodes, total)`` fp32 buffers, the
+        pytree is materialized only transiently inside the per-node loss,
+        and every optimizer update / metric / gossip step is ONE fused op
+        on the contiguous buffer instead of a pytree traversal -- the
+        local ``scan`` body stops re-traversing the state leaf-by-leaf.
+        Build the state with ``pack(stacked_params, pad_to=...)`` and read
+        results back with ``unpack``.
 
     Hierarchical (multi-pod) gossip is built by ALTERNATING two round
     functions at the driver level -- one whose gossip mixes only the cheap
@@ -134,19 +151,29 @@ def make_fl_round(
     """
     grad_fn = jax.vmap(jax.value_and_grad(loss_fn))
 
+    if layout is None:
+        eval_grads = grad_fn
+    else:
+
+        def eval_grads(params: jnp.ndarray, batch: PyTree):
+            # The tree view exists only inside this call; XLA lowers the
+            # unpack/pack pair to slices/concat and fuses them away.
+            losses, grads = grad_fn(unpack(params, layout), batch)
+            return losses, pack_like(grads, layout)
+
     def local_step(state: FLState, batch: PyTree) -> Tuple[FLState, jnp.ndarray]:
         step = state.step + 1
         alpha = schedule(step)
-        losses, grads = grad_fn(state.params, batch)
+        losses, grads = eval_grads(state.params, batch)
         params = _tm(lambda p, g: p - alpha * g.astype(p.dtype), state.params, grads)
         return state._replace(step=step, params=params), jnp.mean(losses)
 
     def comm_step(
-        state: FLState, batch: PyTree, round_index: jnp.ndarray
+        state: FLState, batch: PyTree
     ) -> Tuple[FLState, Dict[str, jnp.ndarray]]:
         step = state.step + 1
         alpha = schedule(step)
-        losses, grads = grad_fn(state.params, batch)
+        losses, grads = eval_grads(state.params, batch)
         mix = gossip_fn
 
         if cfg.algorithm == "dsgd":
@@ -186,14 +213,13 @@ def make_fl_round(
         state: FLState, batches: PyTree
     ) -> Tuple[FLState, Dict[str, jnp.ndarray]]:
         q = cfg.q
-        round_index = state.step // q
         if q > 1:
             local_batches = _tm(lambda b: b[: q - 1], batches)
             state, local_losses = jax.lax.scan(local_step, state, local_batches)
         else:
             local_losses = jnp.zeros((0,), jnp.float32)
         comm_batch = _tm(lambda b: b[q - 1], batches)
-        state, metrics = comm_step(state, comm_batch, round_index)
+        state, metrics = comm_step(state, comm_batch)
         metrics["local_loss"] = jnp.where(
             q > 1, jnp.sum(local_losses) / jnp.maximum(1, q - 1), metrics["loss"]
         )

@@ -1,0 +1,163 @@
+"""Flat-buffer packing: the node-stacked pytree as ONE contiguous matrix.
+
+Every gossip backend mixes along the leading ``nodes`` axis and treats the
+rest of each leaf as an opaque payload. Traversing the pytree leaf-by-leaf
+therefore pays per-leaf overhead (one einsum / one ppermute-per-direction /
+one quantize pass *per leaf per round*) for no semantic gain. This module
+collapses the state into a single ``(nodes, total_params)`` buffer plus a
+static :class:`FlatLayout` record (per-leaf offset/shape/dtype), so a gossip
+round becomes ONE matmul (dense W), ONE ppermute per torus direction (mesh
+backend), or ONE all-gather (arbitrary W) -- independent of leaf count.
+
+Layouts are static Python data (hashable, usable as a jit static argument);
+``pack``/``unpack`` lower to pure reshapes + concatenate / slices, which XLA
+fuses away, and the round trip is lossless: each leaf is stored in its own
+dtype's bit-width inside a common buffer dtype wide enough to hold it
+exactly (fp32 holds bf16/fp16/fp32 losslessly).
+
+Wire-byte accounting: a flat int8 payload costs ``total`` bytes +
+4 bytes per (node, scale-chunk) for the scales -- see
+:func:`flat_wire_bytes` and ``compression.compressed_wire_bytes`` for the
+per-leaf equivalent.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+PyTree = Any
+
+__all__ = ["FlatLayout", "pack", "pack_layout", "pack_like", "unpack", "flat_wire_bytes"]
+
+
+@dataclasses.dataclass(frozen=True)
+class LeafSpec:
+    offset: int  # column offset into the flat buffer
+    shape: Tuple[int, ...]  # per-node shape (leading nodes axis stripped)
+    dtype: str  # original leaf dtype name, restored by unpack
+
+    @property
+    def size(self) -> int:
+        return int(np.prod(self.shape)) if self.shape else 1
+
+
+@dataclasses.dataclass(frozen=True)
+class FlatLayout:
+    """Static description of a packed node-stacked pytree.
+
+    Hashable (usable as a jit static argument): the treedef is stored
+    alongside tuple-of-:class:`LeafSpec` records. ``total`` includes the
+    zero padding appended by ``pack(..., pad_to=k)``; ``used`` is the sum
+    of real leaf sizes.
+    """
+
+    treedef: Any
+    leaves: Tuple[LeafSpec, ...]
+    n_nodes: int
+    total: int
+
+    @property
+    def used(self) -> int:
+        return sum(l.size for l in self.leaves)
+
+    @property
+    def n_leaves(self) -> int:
+        return len(self.leaves)
+
+
+def _layout(treedef, leaf_list, n_nodes: int, pad_to: int) -> FlatLayout:
+    specs = []
+    off = 0
+    for leaf in leaf_list:
+        shape = tuple(leaf.shape[1:])
+        specs.append(LeafSpec(off, shape, jnp.dtype(leaf.dtype).name))
+        off += specs[-1].size
+    total = off if pad_to <= 1 else ((off + pad_to - 1) // pad_to) * pad_to
+    return FlatLayout(treedef, tuple(specs), n_nodes, total)
+
+
+def pack_layout(tree: PyTree, pad_to: int = 1) -> FlatLayout:
+    """Compute the layout without materializing the buffer (works on
+    ShapeDtypeStructs too -- used by lowering-only dry runs)."""
+    leaf_list, treedef = jax.tree_util.tree_flatten(tree)
+    if not leaf_list:
+        raise ValueError("cannot pack an empty pytree")
+    n_nodes = leaf_list[0].shape[0]
+    for leaf in leaf_list:
+        if leaf.ndim < 1 or leaf.shape[0] != n_nodes:
+            raise ValueError(
+                f"leaf shape {leaf.shape} is not node-stacked for n={n_nodes}"
+            )
+    return _layout(treedef, leaf_list, n_nodes, pad_to)
+
+
+def pack(
+    tree: PyTree, pad_to: int = 1, buffer_dtype=jnp.float32
+) -> Tuple[jnp.ndarray, FlatLayout]:
+    """Pack a node-stacked pytree into one ``(nodes, total)`` buffer.
+
+    Args:
+      tree: pytree whose every leaf is ``(nodes, ...)``.
+      pad_to: round ``total`` up to a multiple (zero-filled tail) so the
+        buffer tiles evenly into kernel chunks.
+      buffer_dtype: dtype of the flat buffer; must hold every leaf dtype
+        losslessly (fp32 covers fp32/bf16/fp16).
+
+    Returns:
+      (flat, layout) with ``flat.shape == (nodes, layout.total)``.
+    """
+    layout = pack_layout(tree, pad_to)
+    leaf_list = jax.tree_util.tree_leaves(tree)
+    n = layout.n_nodes
+    cols = [l.reshape(n, -1).astype(buffer_dtype) for l in leaf_list]
+    if layout.total > layout.used:
+        cols.append(jnp.zeros((n, layout.total - layout.used), buffer_dtype))
+    return jnp.concatenate(cols, axis=1), layout
+
+
+def pack_like(tree: PyTree, layout: FlatLayout, buffer_dtype=jnp.float32) -> jnp.ndarray:
+    """Pack a pytree into an EXISTING layout (same structure and per-leaf
+    shapes; zero-padded to ``layout.total``). Used to flatten gradients
+    into the same columns as the packed parameters they update."""
+    leaf_list, treedef = jax.tree_util.tree_flatten(tree)
+    if treedef != layout.treedef:
+        raise ValueError(f"tree structure {treedef} != layout {layout.treedef}")
+    n = layout.n_nodes
+    cols = []
+    for leaf, spec in zip(leaf_list, layout.leaves):
+        if leaf.shape != (n,) + spec.shape:
+            raise ValueError(f"leaf shape {leaf.shape} != layout {(n,) + spec.shape}")
+        cols.append(leaf.reshape(n, -1).astype(buffer_dtype))
+    if layout.total > layout.used:
+        cols.append(jnp.zeros((n, layout.total - layout.used), buffer_dtype))
+    return jnp.concatenate(cols, axis=1)
+
+
+def unpack(flat: jnp.ndarray, layout: FlatLayout) -> PyTree:
+    """Invert :func:`pack`: slice, reshape, and restore each leaf's dtype."""
+    if flat.shape != (layout.n_nodes, layout.total):
+        raise ValueError(
+            f"flat buffer {flat.shape} does not match layout "
+            f"({layout.n_nodes}, {layout.total})"
+        )
+    n = layout.n_nodes
+    leaves = [
+        jax.lax.slice_in_dim(flat, s.offset, s.offset + s.size, axis=1)
+        .reshape((n,) + s.shape)
+        .astype(s.dtype)
+        for s in layout.leaves
+    ]
+    return jax.tree_util.tree_unflatten(layout.treedef, leaves)
+
+
+def flat_wire_bytes(layout: FlatLayout, degree: int, scale_chunk: int = 0) -> int:
+    """Per-node egress bytes per round for an int8 flat payload:
+    1 B/param + 4 B per scale chunk (``scale_chunk=0``: one scale per node),
+    times the out-degree."""
+    n_scales = 1 if scale_chunk <= 0 else -(-layout.total // scale_chunk)
+    return degree * (layout.total + 4 * n_scales)

@@ -1,0 +1,7 @@
+"""Fused gossip kernel: int8 quantize -> W-row mix -> dequant + EF residual
+in one VMEM-tiled pass over the flat (nodes, total) state."""
+
+from repro.kernels.gossip.ops import gossip_mix
+from repro.kernels.gossip.ref import gossip_mix_ref
+
+__all__ = ["gossip_mix", "gossip_mix_ref"]

@@ -1,0 +1,61 @@
+"""jit'd dispatch for the fused quantize-mix-EF gossip kernel."""
+
+from __future__ import annotations
+
+import functools
+import os
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.gossip.gossip import gossip_mix_pallas
+
+__all__ = ["gossip_mix"]
+
+
+def _interpret() -> bool:
+    env = os.environ.get("REPRO_PALLAS_INTERPRET")
+    if env is not None:
+        return env not in ("0", "false", "False")
+    return jax.default_backend() != "tpu"
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("scale_chunk", "error_feedback", "difference_coding", "interpret"),
+)
+def _gossip_mix(x, recon, res, w_off, w_self, scale_chunk, error_feedback,
+                difference_coding, interpret):
+    return gossip_mix_pallas(
+        x,
+        recon,
+        res,
+        w_off,
+        w_self,
+        scale_chunk=scale_chunk,
+        error_feedback=error_feedback,
+        difference_coding=difference_coding,
+        interpret=interpret,
+    )
+
+
+def gossip_mix(
+    x: jnp.ndarray,
+    recon: jnp.ndarray,
+    res: jnp.ndarray,
+    w_off: jnp.ndarray,
+    w_self: jnp.ndarray,
+    scale_chunk: int = 512,
+    error_feedback: bool = True,
+    difference_coding: bool = True,
+) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """Fused pass on a flat buffer whose width is a multiple of
+    ``scale_chunk`` (pack with ``pad_to=scale_chunk``); raises ValueError
+    otherwise, exactly like the jnp reference. ``interpret`` is resolved
+    OUTSIDE the jit so REPRO_PALLAS_INTERPRET is honored per call, not
+    frozen into the first compilation."""
+    return _gossip_mix(
+        x, recon, res, w_off, w_self, scale_chunk, error_feedback,
+        difference_coding, _interpret(),
+    )

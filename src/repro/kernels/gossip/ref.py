@@ -1,0 +1,59 @@
+"""Chunked jnp oracle for the fused quantize-mix-EF gossip pass.
+
+Computes the CHOCO-gossip round on a flat ``(nodes, total)`` buffer with
+per-``(node, scale_chunk)`` int8 scales -- bit-identical math to the
+Pallas kernel (``gossip.py``), which tiles the same computation over
+``(nodes, scale_chunk)`` VMEM blocks. This reference materializes the
+full-size payload/dq/recon intermediates the kernel fuses away; it is the
+interpret-mode correctness oracle and the single-device simulated path.
+"""
+
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax.numpy as jnp
+
+__all__ = ["gossip_mix_ref"]
+
+
+def gossip_mix_ref(
+    x: jnp.ndarray,
+    recon: jnp.ndarray,
+    res: jnp.ndarray,
+    w_off: jnp.ndarray,
+    w_self: jnp.ndarray,
+    *,
+    scale_chunk: int,
+    error_feedback: bool = True,
+    difference_coding: bool = True,
+) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """One compressed gossip round on flat buffers.
+
+    Args:
+      x: (n, t) fp32 node-stacked flat parameters, t % scale_chunk == 0.
+      recon: (n, t) fp32 shared reconstruction (wire-reconstructible).
+      res: (n, t) fp32 error-feedback residual.
+      w_off: (n, n) fp32 off-diagonal mixing weights (zero diagonal).
+      w_self: (n,) fp32 self weights (the W diagonal).
+      scale_chunk: columns per int8 scale block.
+
+    Returns:
+      (mixed, new_recon, new_res, scales) with scales (n, t // scale_chunk).
+    """
+    n, t = x.shape
+    if t % scale_chunk:
+        raise ValueError(f"total {t} not a multiple of scale_chunk {scale_chunk}")
+    base = recon if difference_coding else jnp.zeros_like(recon)
+    payload = x - base + (res if error_feedback else 0.0)
+
+    p3 = payload.reshape(n, t // scale_chunk, scale_chunk)
+    scales = jnp.max(jnp.abs(p3), axis=2) / 127.0  # (n, n_chunks)
+    safe = jnp.where(scales > 0, scales, 1.0)
+    q = jnp.clip(jnp.round(p3 / safe[:, :, None]), -127, 127)
+    dq = (q * scales[:, :, None]).reshape(n, t)
+
+    new_recon = base + dq
+    new_res = payload - dq if error_feedback else res
+    mixed = w_off @ new_recon + w_self[:, None] * x
+    return mixed, new_recon, new_res, scales

@@ -244,6 +244,8 @@ def run_pair(
         t_compile = time.time() - t0 - t_lower
 
     ca = compiled.cost_analysis() or {}
+    if isinstance(ca, (list, tuple)):  # jax 0.4.x returns a 1-list of dicts
+        ca = ca[0] if ca else {}
     ma = compiled.memory_analysis()
     # while-aware accounting (cost_analysis counts scan bodies once)
     hlo = analyze_hlo(compiled.as_text())

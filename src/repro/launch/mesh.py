@@ -14,7 +14,18 @@ from __future__ import annotations
 from typing import Tuple
 
 import jax
-from jax.sharding import AxisType, Mesh
+from jax.sharding import Mesh
+
+try:  # jax >= 0.5: explicit-sharding axis types
+    from jax.sharding import AxisType
+
+    def _axis_kw(n: int):
+        return {"axis_types": (AxisType.Auto,) * n}
+
+except ImportError:  # jax 0.4.x: meshes are Auto-typed implicitly
+
+    def _axis_kw(n: int):
+        return {}
 
 __all__ = [
     "make_production_mesh",
@@ -36,7 +47,7 @@ HW = {
 def make_production_mesh(*, multi_pod: bool = False) -> Mesh:
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(shape, axes, axis_types=(AxisType.Auto,) * len(axes))
+    return jax.make_mesh(shape, axes, **_axis_kw(len(axes)))
 
 
 def make_test_mesh(shape: Tuple[int, ...] = (2, 2, 2)) -> Mesh:
@@ -44,7 +55,7 @@ def make_test_mesh(shape: Tuple[int, ...] = (2, 2, 2)) -> Mesh:
     axes = ("pod", "data", "model")[-len(shape) :] if len(shape) < 3 else ("pod", "data", "model")
     if len(shape) == 2:
         axes = ("data", "model")
-    return jax.make_mesh(shape, axes, axis_types=(AxisType.Auto,) * len(shape))
+    return jax.make_mesh(shape, axes, **_axis_kw(len(shape)))
 
 
 def node_axes(mesh: Mesh) -> Tuple[str, ...]:

@@ -2,4 +2,11 @@
 
 
 def pytest_configure(config):
-    config.addinivalue_line("markers", "slow: multi-device subprocess tests")
+    config.addinivalue_line(
+        "markers",
+        "slow: heavyweight tests (per-arch model compiles, real training "
+        "runs, model-sized multi-device subprocesses); the fast tier-1 "
+        "subset runs -m 'not slow' (see ROADMAP.md). Lightweight subprocess "
+        "checks (e.g. the gossip HLO collective count) stay in the fast tier "
+        "so CI always asserts them.",
+    )

@@ -50,6 +50,7 @@ def test_decode_attention_empty_cache_rows():
     np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=2e-5)
 
 
+@pytest.mark.slow
 def test_decode_kernel_integrated_matches_ref_path():
     """attn_decode(impl='decode_kernel') == the ref cached-decode path,
     including GQA and padded-head layouts."""

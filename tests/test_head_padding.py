@@ -5,6 +5,7 @@ import dataclasses
 import jax
 import jax.numpy as jnp
 import numpy as np
+import pytest
 
 from repro.configs import get_config
 from repro.models import build_model
@@ -18,6 +19,7 @@ def test_layout_heads():
     assert layout_heads(40, 0) == 40  # disabled
 
 
+@pytest.mark.slow
 def test_padded_heads_receive_zero_gradient():
     """Padded q heads are zero-init + output-masked: they must NEVER train,
     so the padded model IS the logical-head model."""

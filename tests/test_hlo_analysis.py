@@ -12,6 +12,13 @@ def _compile(f, *args):
     return jax.jit(f).lower(*args).compile()
 
 
+def _cost(compiled):
+    """compiled.cost_analysis() returns a dict (jax >= 0.5) or a 1-list of
+    dicts (jax 0.4.x)."""
+    ca = compiled.cost_analysis()
+    return ca[0] if isinstance(ca, (list, tuple)) else ca
+
+
 def test_scan_flops_match_unrolled():
     def f_scan(x, w):
         def body(h, _):
@@ -29,7 +36,7 @@ def test_scan_flops_match_unrolled():
     ws = jax.ShapeDtypeStruct((128, 128), jnp.float32)
     a_scan = analyze_hlo(_compile(f_scan, xs, ws).as_text())
     c_unroll = _compile(f_unroll, xs, ws)
-    truth = c_unroll.cost_analysis()["flops"]
+    truth = _cost(c_unroll)["flops"]
     dot_flops = 9 * 2 * 64 * 128 * 128
     assert abs(a_scan.flops - truth) / truth < 0.02
     assert a_scan.flops >= dot_flops
@@ -78,9 +85,9 @@ def test_collectives_exact_count_and_bytes():
         import os
         os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
         import jax, jax.numpy as jnp
-        from jax.sharding import NamedSharding, PartitionSpec as P, AxisType
+        from jax.sharding import NamedSharding, PartitionSpec as P
         from repro.launch.hlo_analysis import analyze_hlo
-        mesh = jax.make_mesh((8,), ("model",), axis_types=(AxisType.Auto,))
+        mesh = jax.make_mesh((8,), ("model",))
         def g(x, w):
             def body(h, _):
                 return jnp.tanh(h @ w), None

@@ -4,6 +4,9 @@ covered by tests/test_sharded.py in a multi-device subprocess)."""
 import jax
 import jax.numpy as jnp
 import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis", reason="property tests need hypothesis")
 from hypothesis import given, settings, strategies as st
 
 from repro.core.mixing import make_dense_gossip, make_mean_consensus, mesh_gossip_dense_equivalent

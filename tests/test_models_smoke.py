@@ -10,6 +10,9 @@ import pytest
 from repro.configs import ASSIGNED_ARCHS, get_config
 from repro.models import build_model
 
+# ~80 s of per-arch compiles on CPU: excluded from the fast tier-1 subset
+pytestmark = pytest.mark.slow
+
 B, S = 2, 64
 
 

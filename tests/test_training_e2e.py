@@ -13,9 +13,12 @@ from repro.core.fl import FLConfig, init_fl_state
 from repro.data.ehr import generate_ehr_cohort, make_node_batcher
 from repro.data.tokens import make_fl_token_batches
 from repro.models import build_model
-from repro.models.mlp import mlp_accuracy, mlp_init, mlp_loss
+from repro.models.mlp import mlp_accuracy, mlp_init, mlp_logits, mlp_loss
 from repro.training.checkpoint import load_fl_state, save_fl_state
 from repro.training.trainer import train_decentralized
+
+# real multi-round training runs (~30 s): excluded from the fast tier-1 subset
+pytestmark = pytest.mark.slow
 
 
 def test_ehr_fl_training_learns(tmp_path):
@@ -32,7 +35,12 @@ def test_ehr_fl_training_learns(tmp_path):
     yall = np.concatenate(data.labels)
 
     def eval_fn(consensus):
-        return {"acc": float(mlp_accuracy(consensus, jnp.asarray(xall), jnp.asarray(yall)))}
+        pred = np.asarray(jnp.argmax(mlp_logits(consensus, jnp.asarray(xall)), -1))
+        bal = np.mean([(pred[yall == k] == k).mean() for k in np.unique(yall)])
+        return {
+            "acc": float(mlp_accuracy(consensus, jnp.asarray(xall), jnp.asarray(yall))),
+            "bal_acc": float(bal),
+        }
 
     result = train_decentralized(
         mlp_loss, params, run, make_node_batcher(data, m=20, seed=1),
@@ -41,7 +49,11 @@ def test_ehr_fl_training_learns(tmp_path):
     hist = result.history
     losses = hist.column("loss")
     assert losses[-1] < losses[0] * 0.8
-    assert hist.last()["eval_acc"] > 0.80
+    # The cohort is 79% MCI, so plain accuracy near 0.80 is close to the
+    # majority rate; require it not to degenerate AND require balanced
+    # accuracy (chance = 0.5) to show learning on BOTH classes.
+    assert hist.last()["eval_acc"] > 0.78
+    assert hist.last()["eval_bal_acc"] > 0.55
     # checkpoint roundtrip on the real state
     path = os.path.join(tmp_path, "ckpt")
     save_fl_state(path, result.state, extra={"run": "test"})
