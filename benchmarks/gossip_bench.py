@@ -1,6 +1,6 @@
 """Flat-buffer vs per-leaf gossip micro-benchmark -> BENCH_gossip.json.
 
-Measures the tentpole claim on a many-leaf synthetic node-stacked state
+Measures the tentpole claims on a many-leaf synthetic node-stacked state
 (64 nodes x 192 leaves -- the leaf-count profile of a real transformer
 pytree, where most leaves are small: norms, biases, per-head slices):
 
@@ -10,18 +10,29 @@ pytree, where most leaves are small: norms, biases, per-head slices):
                         (the Pallas kernel's bit-identical jnp oracle) vs
                         per-leaf quantize + matmul + EF;
   * FL round:           a full DSGD round (Q=4) with flat state threading
-                        (make_fl_round(layout=...)) vs tree state.
+                        (make_fl_round(layout=...)) vs tree state;
+  * fused round:        the round megakernel's comm step (ONE fused
+                        update+quantize+mix+EF call; two wires for DSGT)
+                        vs the pre-megakernel update-then-mix flat path
+                        (the update as one jit, then one compressed-gossip
+                        jit per wire, compression state threaded through
+                        Python at the driver level -- the only way to run
+                        a compressed comm round before the megakernel).
 
-Methodology (honest measurement on a noisy shared CPU): each variant runs
-ROUNDS consecutive gossip rounds inside ONE jitted lax.scan -- measuring
-the steady-state per-round cost of the computation graph itself, with
-per-call dispatch amortized away, exactly how a training loop consumes the
-engine (the state is packed once at init and stays flat; the pack/unpack
-adapters only run at the boundary). Variants are timed INTERLEAVED over
-several trials and the median is reported, so slow-container drift hits
-both sides equally. The Pallas kernel itself runs in interpret mode
-(Python) on CPU, so the fused path is timed via its jnp oracle; the
-kernel's additional TPU win (no materialized payload/dq/recon HBM
+Methodology (honest measurement on a noisy shared CPU): the first three
+rows run ROUNDS consecutive rounds inside ONE jitted lax.scan -- the
+steady-state per-round cost of the computation graph itself, with
+per-call dispatch amortized away, exactly how a training loop consumes
+the engine. The fused-round row CANNOT use that harness for its baseline:
+the pre-megakernel path is forced through Python between its stages
+(that is precisely what the megakernel removes), so both sides of that
+row are timed as per-round dispatch loops with donated buffers (how a
+training loop consumes state), gradients precomputed since the grad
+evaluation is identical on both sides. All variants are timed INTERLEAVED
+over several trials and the median is reported, so slow-container drift
+hits both sides equally. The Pallas kernels run in interpret mode
+(Python) on CPU, so fused paths are timed via their jnp oracles; the
+kernels' additional TPU win (no materialized h/payload/dq/recon HBM
 round-trips) is a roofline argument, not a CPU wall-time one.
 
 Usage: PYTHONPATH=src python benchmarks/gossip_bench.py [--out BENCH_gossip.json]
@@ -176,6 +187,113 @@ def bench_fl_round(tree, w, q: int = 4) -> Dict:
     }
 
 
+def bench_fused_round(tree, w, algorithm: str) -> Dict:
+    """Round-megakernel comm step (one fused call) vs the pre-megakernel
+    update-then-mix flat path (update jit + one compressed-gossip jit per
+    wire, state threaded through Python). Both sides: donated buffers,
+    per-round dispatch, precomputed flat gradients (identical grad work on
+    both sides is excluded so the row measures the fused machinery)."""
+    from repro.kernels.gossip.ref import fused_round_gt_ref, fused_round_ref
+
+    flat_buf, layout = pack(tree, pad_to=SCALE_CHUNK)
+    n, t = flat_buf.shape
+    w_self = jnp.asarray(np.diag(w), jnp.float32)
+    w_off = jnp.asarray(w - np.diag(np.diag(w)), jnp.float32)
+    alpha = jnp.float32(0.01)
+    rng = np.random.default_rng(1)
+    g = jnp.asarray(0.5 * rng.normal(size=(n, t)), jnp.float32)
+    gp = jnp.asarray(0.5 * rng.normal(size=(n, t)), jnp.float32)
+    tr = jnp.asarray(0.3 * rng.normal(size=(n, t)), jnp.float32)
+    zeros = lambda: jnp.zeros((n, t), jnp.float32)
+
+    gfn = make_compressed_flat_gossip(w, scale_chunk=SCALE_CHUNK)
+    gossip = jax.jit(lambda h, c: gfn(h, c), donate_argnums=(0, 1))
+
+    if algorithm == "dsgd":
+        fused = jax.jit(
+            lambda x, r, s: fused_round_ref(
+                x, g, r, s, w_off, w_self, alpha, scale_chunk=SCALE_CHUNK
+            ),
+            donate_argnums=(0, 1, 2),
+        )
+        upd = jax.jit(lambda x: x - alpha * g, donate_argnums=(0,))
+
+        def run_fused(rounds):
+            x, r, s = flat_buf + 0, zeros(), zeros()
+            for _ in range(rounds):
+                x, r, s, _ = fused(x, r, s)
+            jax.block_until_ready(x)
+
+        def run_unfused(rounds):
+            x, c = flat_buf + 0, {"recon": zeros(), "residual": zeros()}
+            for _ in range(rounds):
+                h = upd(x)
+                x, c = gossip(h, c)
+            jax.block_until_ready(x)
+
+        dispatches = 2
+    else:
+        fused = jax.jit(
+            lambda x, tk, rx, sx, rt, st: fused_round_gt_ref(
+                x, tk, g, gp, rx, sx, rt, st, w_off, w_self, alpha,
+                scale_chunk=SCALE_CHUNK,
+            ),
+            donate_argnums=(0, 1, 2, 3, 4, 5),
+        )
+        upd = jax.jit(
+            lambda x, tk: (tk + g - gp, x - alpha * (tk + g - gp)),
+            donate_argnums=(0, 1),
+        )
+
+        def run_fused(rounds):
+            x, tk = flat_buf + 0, tr + 0
+            rx, sx, rt, st = zeros(), zeros(), zeros(), zeros()
+            for _ in range(rounds):
+                x, tk, rx, sx, rt, st, _, _ = fused(x, tk, rx, sx, rt, st)
+            jax.block_until_ready(x)
+
+        def run_unfused(rounds):
+            x, tk = flat_buf + 0, tr + 0
+            cx = {"recon": zeros(), "residual": zeros()}
+            ct = {"recon": zeros(), "residual": zeros()}
+            for _ in range(rounds):
+                th, h = upd(x, tk)
+                x, cx = gossip(h, cx)
+                tk, ct = gossip(th, ct)
+            jax.block_until_ready(x)
+
+        dispatches = 3
+
+    rounds, trials = 200, 9
+    run_fused(10), run_unfused(10)  # compile + warm
+    samples = {"fused": [], "update_then_mix": []}
+    for _ in range(trials):
+        for name, fn in (("fused", run_fused), ("update_then_mix", run_unfused)):
+            t0 = time.perf_counter()
+            fn(rounds)
+            samples[name].append((time.perf_counter() - t0) / rounds * 1e6)
+    us = {k: float(np.median(v)) for k, v in samples.items()}
+    wires = 2 if algorithm == "dsgt" else 1
+    return {
+        "name": f"fused_round_{algorithm}",
+        "n_nodes": n,
+        "total_params": t,
+        "scale_chunk": SCALE_CHUNK,
+        "us_fused": us["fused"],
+        "us_update_then_mix": us["update_then_mix"],
+        "speedup_fused": us["update_then_mix"] / us["fused"],
+        "dispatches_fused": 1,
+        "dispatches_update_then_mix": dispatches,
+        "wire_bytes_per_neighbor": wires * flat_wire_bytes(layout, 1, SCALE_CHUNK),
+        "note": "comm-step machinery only (grad eval identical on both "
+                "sides); per-round dispatch with donated buffers -- the "
+                "pre-megakernel path is forced through Python between its "
+                "stages, which is exactly what the megakernel removes. "
+                "jnp-oracle timing on CPU; the Pallas kernel's VMEM win is "
+                "a TPU roofline argument.",
+    }
+
+
 def main() -> List[Dict]:
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--out", default="BENCH_gossip.json")
@@ -184,7 +302,13 @@ def main() -> List[Dict]:
     tree = make_state()
     w = mixing_matrix("torus:8x8", N_NODES)
 
-    rows = [bench_dense(tree, w), bench_compressed(tree, w), bench_fl_round(tree, w)]
+    rows = [
+        bench_dense(tree, w),
+        bench_compressed(tree, w),
+        bench_fl_round(tree, w),
+        bench_fused_round(tree, w, "dsgd"),
+        bench_fused_round(tree, w, "dsgt"),
+    ]
     for r in rows:
         extras = {k: v for k, v in r.items() if isinstance(v, float)}
         print(f"  {r['name']:22s} " + "  ".join(f"{k}={v:10.1f}" for k, v in extras.items()))

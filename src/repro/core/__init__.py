@@ -16,12 +16,20 @@ from repro.core.compression import (
     make_compressed_flat_gossip,
     quantize_int8,
 )
-from repro.core.fl import FLConfig, FLState, consensus_params, init_fl_state, make_fl_round
+from repro.core.fl import (
+    FLConfig,
+    FLState,
+    FusedRoundSpec,
+    consensus_params,
+    init_fl_state,
+    make_fl_round,
+)
 from repro.core.mixing import (
     make_allgather_gossip,
     make_dense_flat_mix,
     make_dense_gossip,
     make_mean_consensus,
+    make_mesh_flat_mix,
     make_mesh_gossip,
     mesh_gossip_dense_equivalent,
 )
@@ -56,12 +64,14 @@ __all__ = [
     "make_dense_flat_mix",
     "FLConfig",
     "FLState",
+    "FusedRoundSpec",
     "consensus_params",
     "init_fl_state",
     "make_fl_round",
     "make_allgather_gossip",
     "make_dense_gossip",
     "make_mean_consensus",
+    "make_mesh_flat_mix",
     "make_mesh_gossip",
     "mesh_gossip_dense_equivalent",
     "Graph",

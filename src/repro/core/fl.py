@@ -13,7 +13,12 @@ carries a leading ``nodes`` axis). The same code runs:
   ``(nodes, total_params)`` buffer (``core.packing``): pass ``layout=`` to
   ``make_fl_round`` and a flat-native gossip backend, and the optimizer
   update, metrics, and mixing all become single-buffer ops instead of
-  per-leaf traversals (benchmarks/gossip_bench.py).
+  per-leaf traversals (benchmarks/gossip_bench.py);
+* *fused*      -- the flat mode with ``fused=FusedRoundSpec(...)``: the
+  whole communication step (local update + int8 quantize + W mix + EF
+  residual, for DSGD and DSGT alike) is ONE round-megakernel call on the
+  flat buffers (``repro.kernels.gossip``), and the int8 compression state
+  rides along in ``FLState.comm``.
 
 Update equations (r is the global iteration counter, 1-indexed):
 
@@ -36,6 +41,20 @@ Update equations (r is the global iteration counter, 1-indexed):
 
   is preserved by any doubly-stochastic W and is property-tested.
 
+  The FUSED comm step uses the adapt-then-combine ordering (update first,
+  then mix the half-updated state) so the megakernel quantizes exactly
+  what goes on the wire:
+
+      DSGD:  theta_i <- sum_j W_ij Q[theta_j - alpha^r g_j]
+      DSGT:  vtheta_half = vtheta + (g_new - g_prev)
+             vtheta <- sum_j W_ij Q[vtheta_half_j]
+             theta  <- sum_j W_ij Q[theta_j - alpha^r vtheta_half_j]
+
+  with Q[.] the difference-coded int8 quantizer with error feedback
+  (CHOCO-style; exact in the consensus limit). Both orderings satisfy the
+  same Theorem 1 style guarantees; the fused one is what a bandwidth-bound
+  deployment runs.
+
 Baselines expressed in the same machinery:
   * centralized SGD ("fusion center"):  W = (1/N) 1 1^T, Q = 1
   * FedAvg (star network, McMahan et al.): W = (1/N) 1 1^T, Q > 1
@@ -48,6 +67,7 @@ from typing import Any, Callable, Dict, NamedTuple, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.core.mixing import GossipFn
 from repro.core.packing import FlatLayout, pack_like, unpack
@@ -56,17 +76,29 @@ from repro.core.schedules import Schedule
 PyTree = Any
 LossFn = Callable[[PyTree, Any], jnp.ndarray]  # (params_one_node, batch_one_node) -> scalar
 
-__all__ = ["FLState", "FLConfig", "init_fl_state", "make_fl_round", "consensus_params"]
+__all__ = [
+    "FLState",
+    "FLConfig",
+    "FusedRoundSpec",
+    "init_fl_state",
+    "make_fl_round",
+    "consensus_params",
+]
 
 
 class FLState(NamedTuple):
     """Node-stacked optimizer state. ``tracker``/``prev_grad`` are None for
-    DSGD (keeps DSGD memory at 1x params, DSGT at 3x -- inherent to GT)."""
+    DSGD (keeps DSGD memory at 1x params, DSGT at 3x -- inherent to GT).
+    ``comm`` is None except in the fused engine, where it holds the int8
+    wire state: ``{"recon", "residual"}`` (n, total) fp32 buffers for the
+    parameter wire, plus ``{"recon_t", "residual_t"}`` for DSGT's tracker
+    wire."""
 
     step: jnp.ndarray  # () int32, global iteration r (counts local steps too)
     params: PyTree  # each leaf (nodes, ...)
     tracker: Optional[PyTree]  # DSGT vtheta, same layout
     prev_grad: Optional[PyTree]  # DSGT g at the last comm round
+    comm: Optional[Dict[str, jnp.ndarray]] = None  # fused engine wire state
 
 
 @dataclasses.dataclass(frozen=True)
@@ -84,14 +116,54 @@ class FLConfig:
             raise ValueError("n_nodes must be >= 1")
 
 
+@dataclasses.dataclass(frozen=True)
+class FusedRoundSpec:
+    """Configuration of the fused round megakernel (``make_fl_round``'s
+    ``fused=`` argument).
+
+    Attributes:
+      w: (n, n) doubly-stochastic mixing matrix (numpy, compile-time
+        constant; split into diagonal + off-diagonal for the kernel).
+      scale_chunk: columns per int8 scale block == the kernel's VMEM tile
+        width; ``layout.total`` must be a multiple (pack with
+        ``pad_to=scale_chunk``).
+      error_feedback / difference_coding: the CHOCO wire semantics (see
+        ``kernels.gossip.ops.gossip_mix``); defaults give exact-in-the-
+        limit mixing.
+      impl: "pallas" runs the Pallas megakernel (interpret mode off-TPU);
+        "jnp" the chunked oracle -- bit-identical math, GSPMD-partitionable
+        (what the sharded dry-run lowers).
+    """
+
+    w: Any
+    scale_chunk: int = 512
+    error_feedback: bool = True
+    difference_coding: bool = True
+    impl: str = "pallas"
+
+    def __post_init__(self) -> None:
+        if self.impl not in ("pallas", "jnp"):
+            raise ValueError(f"unknown impl {self.impl!r}")
+        if self.scale_chunk < 1:
+            raise ValueError("scale_chunk must be >= 1")
+
+
 def _tm(f, *trees):
     return jax.tree_util.tree_map(f, *trees)
 
 
-def init_fl_state(cfg: FLConfig, stacked_params: PyTree) -> FLState:
+def init_fl_state(
+    cfg: FLConfig, stacked_params: PyTree, fused: bool = False
+) -> FLState:
     """Initial state. DSGT's tracker is initialized to zeros; the first
     comm round's ``g_new - g_prev`` then loads the first gradient into the
-    tracker (the standard GNSD cold start with g^0 := 0)."""
+    tracker (the standard GNSD cold start with g^0 := 0).
+
+    With ``fused=True``, ``stacked_params`` must be the packed
+    ``(nodes, total)`` flat buffer (``core.packing.pack``) and the state
+    additionally carries zero-initialized int8 wire buffers in ``comm``
+    (zeros mean the first round effectively transmits the full state).
+    """
     leaves = jax.tree_util.tree_leaves(stacked_params)
     if not leaves:
         raise ValueError("empty parameter pytree")
@@ -100,10 +172,22 @@ def init_fl_state(cfg: FLConfig, stacked_params: PyTree) -> FLState:
             raise ValueError(
                 f"param leaf {leaf.shape} is not node-stacked for n={cfg.n_nodes}"
             )
+    comm = None
+    if fused:
+        if len(leaves) != 1 or leaves[0].ndim != 2:
+            raise ValueError(
+                "fused=True requires the packed (nodes, total) flat buffer"
+            )
+        z = jnp.zeros(leaves[0].shape, jnp.float32)
+        comm = {"recon": z, "residual": z}
+        if cfg.algorithm == "dsgt":
+            comm.update({"recon_t": z, "residual_t": z})
     zeros = _tm(jnp.zeros_like, stacked_params)
     if cfg.algorithm == "dsgt":
-        return FLState(jnp.int32(0), stacked_params, zeros, _tm(jnp.zeros_like, zeros))
-    return FLState(jnp.int32(0), stacked_params, None, None)
+        return FLState(
+            jnp.int32(0), stacked_params, zeros, _tm(jnp.zeros_like, zeros), comm
+        )
+    return FLState(jnp.int32(0), stacked_params, None, None, comm)
 
 
 def consensus_params(state: FLState) -> PyTree:
@@ -113,10 +197,11 @@ def consensus_params(state: FLState) -> PyTree:
 
 def make_fl_round(
     loss_fn: LossFn,
-    gossip_fn: GossipFn,
+    gossip_fn: Optional[GossipFn],
     schedule: Schedule,
     cfg: FLConfig,
     layout: Optional[FlatLayout] = None,
+    fused: Optional[FusedRoundSpec] = None,
 ) -> Callable[[FLState, PyTree], Tuple[FLState, Dict[str, jnp.ndarray]]]:
     """Build one *communication round*: (Q-1) local steps + 1 comm step.
 
@@ -124,7 +209,9 @@ def make_fl_round(
       loss_fn: per-node loss ``(params, batch) -> scalar`` (unstacked).
       gossip_fn: mixing backend (theta <- W theta). Operates on
         node-stacked pytrees, or directly on the flat buffer when
-        ``layout`` is given (e.g. ``make_dense_flat_mix``).
+        ``layout`` is given (e.g. ``make_dense_flat_mix`` /
+        ``make_mesh_flat_mix``). Ignored (may be None) when ``fused`` is
+        given -- the megakernel carries its own W.
       schedule: alpha^r.
       cfg: algorithm + Q + N.
       layout: when a ``core.packing.FlatLayout`` is passed, the round runs
@@ -136,6 +223,16 @@ def make_fl_round(
         local ``scan`` body stops re-traversing the state leaf-by-leaf.
         Build the state with ``pack(stacked_params, pad_to=...)`` and read
         results back with ``unpack``.
+      fused: a :class:`FusedRoundSpec` (requires ``layout``): the comm
+        step becomes ONE round-megakernel call -- local update, int8
+        quantize, W-row mix, and error-feedback residual fused over
+        ``(nodes, scale_chunk)`` tiles with no materialized full-size
+        intermediates. The wire is the CHOCO difference-coded int8
+        payload, so build the state with ``init_fl_state(..., fused=True)``
+        (adds the ``comm`` buffers) and pack with
+        ``pad_to=fused.scale_chunk``. Metrics gain ``wire_bytes``: the
+        summed per-round egress of all nodes (int8 payload + fp32 scales,
+        doubled for DSGT's tracker wire).
 
     Hierarchical (multi-pod) gossip is built by ALTERNATING two round
     functions at the driver level -- one whose gossip mixes only the cheap
@@ -152,6 +249,8 @@ def make_fl_round(
     grad_fn = jax.vmap(jax.value_and_grad(loss_fn))
 
     if layout is None:
+        if fused is not None:
+            raise ValueError("fused rounds require the flat engine (layout=...)")
         eval_grads = grad_fn
     else:
 
@@ -161,12 +260,40 @@ def make_fl_round(
             losses, grads = grad_fn(unpack(params, layout), batch)
             return losses, pack_like(grads, layout)
 
+    if fused is not None:
+        comm_step = _make_fused_comm_step(eval_grads, schedule, cfg, layout, fused)
+    else:
+        comm_step = _make_comm_step(eval_grads, gossip_fn, schedule, cfg)
+
     def local_step(state: FLState, batch: PyTree) -> Tuple[FLState, jnp.ndarray]:
         step = state.step + 1
         alpha = schedule(step)
         losses, grads = eval_grads(state.params, batch)
         params = _tm(lambda p, g: p - alpha * g.astype(p.dtype), state.params, grads)
         return state._replace(step=step, params=params), jnp.mean(losses)
+
+    def round_fn(
+        state: FLState, batches: PyTree
+    ) -> Tuple[FLState, Dict[str, jnp.ndarray]]:
+        q = cfg.q
+        if q > 1:
+            local_batches = _tm(lambda b: b[: q - 1], batches)
+            state, local_losses = jax.lax.scan(local_step, state, local_batches)
+        else:
+            local_losses = jnp.zeros((0,), jnp.float32)
+        comm_batch = _tm(lambda b: b[q - 1], batches)
+        state, metrics = comm_step(state, comm_batch)
+        metrics["local_loss"] = jnp.where(
+            q > 1, jnp.sum(local_losses) / jnp.maximum(1, q - 1), metrics["loss"]
+        )
+        return state, metrics
+
+    return round_fn
+
+
+def _make_comm_step(eval_grads, gossip_fn, schedule: Schedule, cfg: FLConfig):
+    """The exact-wire comm step: gossip_fn mixes, then the optimizer update
+    (mix-then-adapt, Eqs. 2/3)."""
 
     def comm_step(
         state: FLState, batch: PyTree
@@ -193,7 +320,7 @@ def make_fl_round(
             params = _tm(
                 lambda wp, t: wp - alpha * t, mix(state.params), tracker
             )
-            new_state = FLState(
+            new_state = state._replace(
                 step=step,
                 params=params,
                 tracker=tracker,
@@ -209,23 +336,94 @@ def make_fl_round(
         }
         return new_state, metrics
 
-    def round_fn(
-        state: FLState, batches: PyTree
-    ) -> Tuple[FLState, Dict[str, jnp.ndarray]]:
-        q = cfg.q
-        if q > 1:
-            local_batches = _tm(lambda b: b[: q - 1], batches)
-            state, local_losses = jax.lax.scan(local_step, state, local_batches)
-        else:
-            local_losses = jnp.zeros((0,), jnp.float32)
-        comm_batch = _tm(lambda b: b[q - 1], batches)
-        state, metrics = comm_step(state, comm_batch)
-        metrics["local_loss"] = jnp.where(
-            q > 1, jnp.sum(local_losses) / jnp.maximum(1, q - 1), metrics["loss"]
-        )
-        return state, metrics
+    return comm_step
 
-    return round_fn
+
+def _make_fused_comm_step(
+    eval_grads, schedule: Schedule, cfg: FLConfig, layout: FlatLayout,
+    spec: FusedRoundSpec,
+):
+    """The megakernel comm step: ONE fused update+quantize+mix+EF kernel
+    call on the flat buffers (two mixed wires for DSGT, still one call)."""
+    if layout.total % spec.scale_chunk:
+        raise ValueError(
+            f"layout.total {layout.total} not a multiple of scale_chunk "
+            f"{spec.scale_chunk}; pack with pad_to={spec.scale_chunk}"
+        )
+    w = np.asarray(spec.w, dtype=np.float64)
+    if w.shape != (cfg.n_nodes, cfg.n_nodes):
+        raise ValueError(f"W shape {w.shape} != ({cfg.n_nodes},) * 2")
+    w_self = jnp.asarray(np.diag(w), jnp.float32)
+    w_off = jnp.asarray(w - np.diag(np.diag(w)), jnp.float32)
+
+    if spec.impl == "pallas":
+        from repro.kernels.gossip.ops import fused_round, fused_round_gt
+    else:
+        from repro.kernels.gossip.ref import (
+            fused_round_gt_ref as fused_round_gt,
+            fused_round_ref as fused_round,
+        )
+
+    # Per-round egress, summed over nodes: every off-diagonal edge carries
+    # 1 B/param + 4 B per scale chunk; DSGT ships params AND tracker.
+    degrees = (np.abs(w - np.diag(np.diag(w))) > 0).sum(axis=1)
+    n_scales = layout.total // spec.scale_chunk
+    wires = 2 if cfg.algorithm == "dsgt" else 1
+    egress = float(wires * degrees.sum() * (layout.total + 4 * n_scales))
+
+    kw = dict(
+        scale_chunk=spec.scale_chunk,
+        error_feedback=spec.error_feedback,
+        difference_coding=spec.difference_coding,
+    )
+
+    def comm_step(
+        state: FLState, batch: PyTree
+    ) -> Tuple[FLState, Dict[str, jnp.ndarray]]:
+        if state.comm is None:
+            raise ValueError("fused rounds need init_fl_state(..., fused=True)")
+        step = state.step + 1
+        alpha = schedule(step)
+        losses, grads = eval_grads(state.params, batch)
+        grads = grads.astype(jnp.float32)
+
+        if cfg.algorithm == "dsgd":
+            mixed, recon, res, _ = fused_round(
+                state.params, grads, state.comm["recon"], state.comm["residual"],
+                w_off, w_self, alpha, **kw,
+            )
+            new_state = state._replace(
+                step=step, params=mixed, comm={"recon": recon, "residual": res}
+            )
+        else:
+            mx, mt, nrx, nsx, nrt, nst, _, _ = fused_round_gt(
+                state.params, state.tracker, grads, state.prev_grad,
+                state.comm["recon"], state.comm["residual"],
+                state.comm["recon_t"], state.comm["residual_t"],
+                w_off, w_self, alpha, **kw,
+            )
+            new_state = FLState(
+                step=step,
+                params=mx,
+                tracker=mt,
+                prev_grad=grads,
+                comm={
+                    "recon": nrx, "residual": nsx,
+                    "recon_t": nrt, "residual_t": nst,
+                },
+            )
+
+        metrics = {
+            "loss": jnp.mean(losses),
+            "alpha": alpha,
+            "grad_norm_sq": _mean_grad_norm_sq(grads),
+            "consensus_err": _consensus_error(new_state.params),
+            "comm_rounds": jnp.float32(1.0),
+            "wire_bytes": jnp.float32(egress),
+        }
+        return new_state, metrics
+
+    return comm_step
 
 
 def _mean_grad_norm_sq(stacked_grads: PyTree) -> jnp.ndarray:

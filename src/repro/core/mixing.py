@@ -78,6 +78,7 @@ __all__ = [
     "make_dense_flat_mix",
     "make_dense_gossip_per_leaf",
     "make_mesh_gossip",
+    "make_mesh_flat_mix",
     "make_mesh_gossip_per_leaf",
     "make_allgather_gossip",
     "make_allgather_gossip_per_leaf",
@@ -281,6 +282,41 @@ def make_mesh_gossip(
 
     sm = _shard_map(body, mesh=mesh, in_specs=(specs,), out_specs=specs)
     return lambda tree: sm(tree)
+
+
+def make_mesh_flat_mix(
+    mesh: Mesh,
+    node_axes: Sequence[str],
+    self_weight: Optional[float] = None,
+    wire_dtype=None,
+    axes_subset: Optional[Sequence[str]] = None,
+) -> FlatMixFn:
+    """Flat-native ring/torus gossip: ppermute directly on the packed
+    ``(nodes, total)`` buffer, sharded ``P(node_axes, None)``.
+
+    The mesh counterpart of :func:`make_dense_flat_mix` for
+    ``make_fl_round(layout=...)``: the state ALREADY lives flat, so the
+    shard_map body skips the per-call pack/unpack of :func:`make_mesh_gossip`
+    and is exactly one ppermute per torus direction. Same wire-dtype
+    semantics as the tree backend (the whole neighbor path stays in
+    ``wire_dtype``; self term and accumulation in fp32).
+    """
+    w_self, dirs = _mesh_dirs(mesh, node_axes, axes_subset, self_weight)
+    spec = P(tuple(node_axes), None)
+
+    def body(flat: jnp.ndarray) -> jnp.ndarray:
+        wire = wire_dtype or flat.dtype
+        payload = flat.astype(wire)
+        acc = flat.astype(jnp.float32) * w_self
+        for axis_name, shift, weight in dirs:
+            n = mesh.shape[axis_name]
+            perm = [(i, (i + shift) % n) for i in range(n)]
+            recv = jax.lax.ppermute(payload, axis_name, perm)
+            acc = acc + (recv * jnp.asarray(weight, wire)).astype(jnp.float32)
+        return acc.astype(flat.dtype)
+
+    sm = _shard_map(body, mesh=mesh, in_specs=(spec,), out_specs=spec)
+    return lambda flat: sm(flat)
 
 
 def make_mesh_gossip_per_leaf(

@@ -48,12 +48,34 @@ class LeafSpec:
 
 @dataclasses.dataclass(frozen=True)
 class FlatLayout:
-    """Static description of a packed node-stacked pytree.
+    """Static description of a packed node-stacked pytree -- the CONTRACT
+    between the tree world and the flat engine.
 
-    Hashable (usable as a jit static argument): the treedef is stored
-    alongside tuple-of-:class:`LeafSpec` records. ``total`` includes the
-    zero padding appended by ``pack(..., pad_to=k)``; ``used`` is the sum
-    of real leaf sizes.
+    A layout promises, for a buffer ``flat`` of shape
+    ``(n_nodes, total)``:
+
+    * **Column map.** Leaf ``k`` (in ``tree_flatten`` order) occupies
+      columns ``[leaves[k].offset, leaves[k].offset + leaves[k].size)``;
+      leaves are contiguous, in order, and non-overlapping
+      (``offset[k+1] == offset[k] + size[k]``).
+    * **Padding.** Columns ``[used, total)`` are structural zero padding
+      (``pack(..., pad_to=k)`` rounds ``total`` up so the buffer tiles
+      evenly into kernel ``scale_chunk`` blocks). Engine ops must keep
+      them zero-preserving: every shipped backend is columnwise, so zeros
+      mix/update/quantize to zeros and ``unpack`` never reads them.
+    * **Dtype round trip.** ``unpack(pack(tree)) == tree`` exactly: each
+      leaf is stored widened to the buffer dtype (fp32 holds
+      fp32/bf16/fp16 losslessly) and ``unpack`` restores
+      ``leaves[k].dtype``.
+    * **Static + hashable.** Layouts are plain Python data (treedef +
+      tuple of :class:`LeafSpec`), computable from ShapeDtypeStructs alone
+      (:func:`pack_layout`) -- usable as a jit static argument and at
+      trace time in lowering-only dry runs.
+
+    Mutating state between pack and unpack is fine as long as shapes stay
+    ``(n_nodes, total)``: ``make_fl_round(layout=...)`` runs whole
+    training rounds on the buffer and unpacks only at the read-out
+    boundary.
     """
 
     treedef: Any

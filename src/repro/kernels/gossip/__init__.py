@@ -1,7 +1,19 @@
-"""Fused gossip kernel: int8 quantize -> W-row mix -> dequant + EF residual
-in one VMEM-tiled pass over the flat (nodes, total) state."""
+"""Fused gossip kernels: int8 quantize -> W-row mix -> dequant + EF residual
+in one VMEM-tiled pass over the flat (nodes, total) state, plus the round
+megakernels that fuse the DSGD/DSGT local update into the same pass."""
 
-from repro.kernels.gossip.ops import gossip_mix
-from repro.kernels.gossip.ref import gossip_mix_ref
+from repro.kernels.gossip.ops import fused_round, fused_round_gt, gossip_mix
+from repro.kernels.gossip.ref import (
+    fused_round_gt_ref,
+    fused_round_ref,
+    gossip_mix_ref,
+)
 
-__all__ = ["gossip_mix", "gossip_mix_ref"]
+__all__ = [
+    "gossip_mix",
+    "gossip_mix_ref",
+    "fused_round",
+    "fused_round_ref",
+    "fused_round_gt",
+    "fused_round_gt_ref",
+]

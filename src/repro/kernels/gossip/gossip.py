@@ -1,11 +1,12 @@
-"""Fused quantize-mix-EF gossip round -- Pallas.
+"""Fused gossip + round megakernel bodies -- Pallas.
 
 Grid = (total // chunk,): each program owns ONE ``(nodes, chunk)`` column
 block of the flat state, which is the natural tile because compressed
 gossip is columnwise-independent -- the int8 scale is per (node, chunk)
 block, the W contraction runs over the nodes axis that is fully resident
-in the tile, and the EF update is elementwise. Per tile the kernel
-computes, entirely in VMEM with no materialized full-size intermediates:
+in the tile, and the local-update / EF arithmetic is elementwise. Per tile
+the shared quantize-mix stage computes, entirely in VMEM with no
+materialized full-size intermediates:
 
     payload = x - recon + res            (difference coding + EF)
     s       = max|payload| / 127         per node row       <- wire scales
@@ -15,12 +16,28 @@ computes, entirely in VMEM with no materialized full-size intermediates:
     res'    = payload - dq
     mixed   = W_off @ recon' + w_self * x    (MXU: (n,n) x (n,chunk))
 
-replacing the three full-size fp32 intermediates (payload, dq, recon') of
-the unfused path with one HBM read of each input and one write of each
-output. With the default chunk=512 and n=64 nodes the live tile set is
-~0.9 MiB fp32 -- far under VMEM; n should be a multiple of 8 (fp32
-sublane) on real hardware. The jnp oracle in ``ref.py`` is bit-identical
-math (interpret-mode property tests in tests/test_gossip_flat.py).
+Three kernels share that stage:
+
+* :func:`gossip_mix_pallas` -- the stage alone (PR 1's fused
+  quantize-mix-EF gossip round);
+* :func:`fused_round_pallas` -- the DSGD **round megakernel**: the local
+  update ``h = x - alpha * g`` runs in-register ahead of the stage, so one
+  kernel call is a whole communication round (update + quantize + mix +
+  EF) over the flat state;
+* :func:`fused_round_gt_pallas` -- the DSGT round megakernel: tracker
+  arithmetic ``t_half = t + g - g_prev``, parameter update
+  ``h = x - alpha * t_half``, then the quantize-mix stage applied to BOTH
+  buffers inside the same program (two MXU contractions against the same
+  resident W tile).
+
+Replacing the unfused path's full-size fp32 intermediates (the updated
+parameters h, payload, dq, recon') with one HBM read of each input and one
+write of each output. With the default chunk=512 and n=64 nodes the DSGT
+live tile set is ~2 MiB fp32 -- far under VMEM; n should be a multiple of
+8 (fp32 sublane) on real hardware. ``alpha`` rides along as a (1, 1)
+operand mapped to every program (scalar on the wire, SMEM-friendly). The
+jnp oracles in ``ref.py`` are bit-identical math (interpret-mode property
+tests in tests/test_gossip_flat.py and tests/test_megakernel.py).
 """
 
 from __future__ import annotations
@@ -31,7 +48,27 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
-__all__ = ["gossip_mix_pallas"]
+__all__ = ["gossip_mix_pallas", "fused_round_pallas", "fused_round_gt_pallas"]
+
+
+def _quantize_mix(x, recon, res, woff, wself, *, error_feedback, difference_coding):
+    """The shared in-VMEM stage: difference-code, int8-quantize, W-row mix,
+    and error-feedback update of ONE (nodes, chunk) tile. Returns
+    (mixed, new_recon, new_res, scale)."""
+    base = recon if difference_coding else jnp.zeros_like(recon)
+    payload = x - base
+    if error_feedback:
+        payload = payload + res
+
+    scale = jnp.max(jnp.abs(payload), axis=1, keepdims=True) / 127.0  # (n, 1)
+    safe = jnp.where(scale > 0, scale, 1.0)
+    q = jnp.clip(jnp.round(payload / safe), -127, 127)
+    dq = q * scale
+
+    new_recon = base + dq
+    mixed = jnp.dot(woff, new_recon, preferred_element_type=jnp.float32) + wself * x
+    new_res = payload - dq if error_feedback else res
+    return mixed, new_recon, new_res, scale
 
 
 def _kernel(
@@ -48,30 +85,130 @@ def _kernel(
     error_feedback,
     difference_coding,
 ):
-    x = x_ref[...]  # (n, chunk) fp32
-    recon = recon_ref[...]
-    res = res_ref[...]
-
-    base = recon if difference_coding else jnp.zeros_like(recon)
-    payload = x - base
-    if error_feedback:
-        payload = payload + res
-
-    scale = jnp.max(jnp.abs(payload), axis=1, keepdims=True) / 127.0  # (n, 1)
-    safe = jnp.where(scale > 0, scale, 1.0)
-    q = jnp.clip(jnp.round(payload / safe), -127, 127)
-    dq = q * scale
-
-    new_recon = base + dq
-    mixed = (
-        jnp.dot(woff_ref[...], new_recon, preferred_element_type=jnp.float32)
-        + wself_ref[...] * x
+    mixed, nrecon, nres, scale = _quantize_mix(
+        x_ref[...],
+        recon_ref[...],
+        res_ref[...],
+        woff_ref[...],
+        wself_ref[...],
+        error_feedback=error_feedback,
+        difference_coding=difference_coding,
     )
-
     mixed_ref[...] = mixed
-    nrecon_ref[...] = new_recon
-    nres_ref[...] = payload - dq if error_feedback else res
+    nrecon_ref[...] = nrecon
+    nres_ref[...] = nres
     scale_ref[...] = scale
+
+
+def _fused_round_kernel(
+    x_ref,
+    g_ref,
+    recon_ref,
+    res_ref,
+    woff_ref,
+    wself_ref,
+    alpha_ref,
+    mixed_ref,
+    nrecon_ref,
+    nres_ref,
+    scale_ref,
+    *,
+    error_feedback,
+    difference_coding,
+):
+    # DSGD local update fused ahead of the gossip stage: the half-updated
+    # parameters h never touch HBM.
+    h = x_ref[...] - alpha_ref[0, 0] * g_ref[...]
+    mixed, nrecon, nres, scale = _quantize_mix(
+        h,
+        recon_ref[...],
+        res_ref[...],
+        woff_ref[...],
+        wself_ref[...],
+        error_feedback=error_feedback,
+        difference_coding=difference_coding,
+    )
+    mixed_ref[...] = mixed
+    nrecon_ref[...] = nrecon
+    nres_ref[...] = nres
+    scale_ref[...] = scale
+
+
+def _fused_round_gt_kernel(
+    x_ref,
+    t_ref,
+    g_ref,
+    gp_ref,
+    rx_ref,
+    sx_ref,
+    rt_ref,
+    st_ref,
+    woff_ref,
+    wself_ref,
+    alpha_ref,
+    mx_ref,
+    mt_ref,
+    nrx_ref,
+    nsx_ref,
+    nrt_ref,
+    nst_ref,
+    scx_ref,
+    sct_ref,
+    *,
+    error_feedback,
+    difference_coding,
+):
+    # DSGT (adapt-then-combine ordering): tracker absorbs the gradient
+    # innovation, parameters step against the updated tracker, and BOTH
+    # half-updated buffers go through the quantize-mix stage against the
+    # same resident W tile. mean_i t_half preserves the tracking invariant
+    # for any doubly-stochastic W.
+    woff = woff_ref[...]
+    wself = wself_ref[...]
+    t_half = t_ref[...] + g_ref[...] - gp_ref[...]
+    h = x_ref[...] - alpha_ref[0, 0] * t_half
+
+    mt, nrt, nst, sct = _quantize_mix(
+        t_half,
+        rt_ref[...],
+        st_ref[...],
+        woff,
+        wself,
+        error_feedback=error_feedback,
+        difference_coding=difference_coding,
+    )
+    mx, nrx, nsx, scx = _quantize_mix(
+        h,
+        rx_ref[...],
+        sx_ref[...],
+        woff,
+        wself,
+        error_feedback=error_feedback,
+        difference_coding=difference_coding,
+    )
+    mx_ref[...] = mx
+    mt_ref[...] = mt
+    nrx_ref[...] = nrx
+    nsx_ref[...] = nsx
+    nrt_ref[...] = nrt
+    nst_ref[...] = nst
+    scx_ref[...] = scx
+    sct_ref[...] = sct
+
+
+def _specs(n: int, scale_chunk: int):
+    tile = pl.BlockSpec((n, scale_chunk), lambda c: (0, c))
+    whole = pl.BlockSpec((n, n), lambda c: (0, 0))
+    col = pl.BlockSpec((n, 1), lambda c: (0, c))
+    one = pl.BlockSpec((n, 1), lambda c: (0, 0))
+    scalar = pl.BlockSpec((1, 1), lambda c: (0, 0))
+    return tile, whole, col, one, scalar
+
+
+def _check_chunk(t: int, scale_chunk: int) -> int:
+    if t % scale_chunk:
+        raise ValueError(f"total {t} not a multiple of scale_chunk {scale_chunk}")
+    return t // scale_chunk
 
 
 def gossip_mix_pallas(
@@ -89,13 +226,8 @@ def gossip_mix_pallas(
     """x, recon, res: (n, t) fp32 with t % scale_chunk == 0; w_off (n, n);
     w_self (n,). Returns (mixed, new_recon, new_res, scales (n, t//chunk))."""
     n, t = x.shape
-    if t % scale_chunk:
-        raise ValueError(f"total {t} not a multiple of scale_chunk {scale_chunk}")
-    n_chunks = t // scale_chunk
-
-    tile = pl.BlockSpec((n, scale_chunk), lambda c: (0, c))
-    whole = pl.BlockSpec((n, n), lambda c: (0, 0))
-    col = pl.BlockSpec((n, 1), lambda c: (0, c))
+    n_chunks = _check_chunk(t, scale_chunk)
+    tile, whole, col, one, _ = _specs(n, scale_chunk)
 
     kernel = functools.partial(
         _kernel, error_feedback=error_feedback, difference_coding=difference_coding
@@ -103,7 +235,7 @@ def gossip_mix_pallas(
     return pl.pallas_call(
         kernel,
         grid=(n_chunks,),
-        in_specs=[tile, tile, tile, whole, pl.BlockSpec((n, 1), lambda c: (0, 0))],
+        in_specs=[tile, tile, tile, whole, one],
         out_specs=[tile, tile, tile, col],
         out_shape=[
             jax.ShapeDtypeStruct((n, t), jnp.float32),
@@ -113,3 +245,108 @@ def gossip_mix_pallas(
         ],
         interpret=interpret,
     )(x, recon, res, w_off, w_self.reshape(n, 1))
+
+
+def fused_round_pallas(
+    x: jnp.ndarray,
+    g: jnp.ndarray,
+    recon: jnp.ndarray,
+    res: jnp.ndarray,
+    w_off: jnp.ndarray,
+    w_self: jnp.ndarray,
+    alpha: jnp.ndarray,
+    *,
+    scale_chunk: int = 512,
+    error_feedback: bool = True,
+    difference_coding: bool = True,
+    interpret: bool = False,
+):
+    """DSGD round megakernel: ``h = x - alpha * g`` then quantize-mix-EF of
+    h, in ONE pass. x, g, recon, res: (n, t) fp32; alpha: scalar. Returns
+    (mixed, new_recon, new_res, scales)."""
+    n, t = x.shape
+    n_chunks = _check_chunk(t, scale_chunk)
+    tile, whole, col, one, scalar = _specs(n, scale_chunk)
+
+    kernel = functools.partial(
+        _fused_round_kernel,
+        error_feedback=error_feedback,
+        difference_coding=difference_coding,
+    )
+    return pl.pallas_call(
+        kernel,
+        grid=(n_chunks,),
+        in_specs=[tile, tile, tile, tile, whole, one, scalar],
+        out_specs=[tile, tile, tile, col],
+        out_shape=[
+            jax.ShapeDtypeStruct((n, t), jnp.float32),
+            jax.ShapeDtypeStruct((n, t), jnp.float32),
+            jax.ShapeDtypeStruct((n, t), jnp.float32),
+            jax.ShapeDtypeStruct((n, n_chunks), jnp.float32),
+        ],
+        interpret=interpret,
+    )(
+        x,
+        g,
+        recon,
+        res,
+        w_off,
+        w_self.reshape(n, 1),
+        jnp.asarray(alpha, jnp.float32).reshape(1, 1),
+    )
+
+
+def fused_round_gt_pallas(
+    x: jnp.ndarray,
+    t: jnp.ndarray,
+    g: jnp.ndarray,
+    g_prev: jnp.ndarray,
+    recon_x: jnp.ndarray,
+    res_x: jnp.ndarray,
+    recon_t: jnp.ndarray,
+    res_t: jnp.ndarray,
+    w_off: jnp.ndarray,
+    w_self: jnp.ndarray,
+    alpha: jnp.ndarray,
+    *,
+    scale_chunk: int = 512,
+    error_feedback: bool = True,
+    difference_coding: bool = True,
+    interpret: bool = False,
+):
+    """DSGT round megakernel: tracker arithmetic + parameter update + two
+    quantize-mix-EF stages (params and tracker) in ONE pass. All array
+    operands (n, tot) fp32 except w_off (n, n) / w_self (n,); alpha scalar.
+    Returns (mixed_x, mixed_t, new_recon_x, new_res_x, new_recon_t,
+    new_res_t, scales_x, scales_t)."""
+    n, tot = x.shape
+    n_chunks = _check_chunk(tot, scale_chunk)
+    tile, whole, col, one, scalar = _specs(n, scale_chunk)
+
+    kernel = functools.partial(
+        _fused_round_gt_kernel,
+        error_feedback=error_feedback,
+        difference_coding=difference_coding,
+    )
+    buf = jax.ShapeDtypeStruct((n, tot), jnp.float32)
+    sc = jax.ShapeDtypeStruct((n, n_chunks), jnp.float32)
+    return pl.pallas_call(
+        kernel,
+        grid=(n_chunks,),
+        in_specs=[tile] * 8 + [whole, one, scalar],
+        out_specs=[tile] * 6 + [col, col],
+        out_shape=[buf, buf, buf, buf, buf, buf, sc, sc],
+        interpret=interpret,
+    )(
+        x,
+        t,
+        g,
+        g_prev,
+        recon_x,
+        res_x,
+        recon_t,
+        res_t,
+        w_off,
+        w_self.reshape(n, 1),
+        jnp.asarray(alpha, jnp.float32).reshape(1, 1),
+    )

@@ -1,4 +1,10 @@
-"""jit'd dispatch for the fused quantize-mix-EF gossip kernel."""
+"""jit'd dispatch for the fused gossip / round megakernels.
+
+Every entry point resolves Pallas ``interpret`` mode OUTSIDE the jit so
+the ``REPRO_PALLAS_INTERPRET`` environment variable is honored per call
+(not frozen into the first compilation): interpret defaults to on
+everywhere except a real TPU backend.
+"""
 
 from __future__ import annotations
 
@@ -9,9 +15,13 @@ from typing import Tuple
 import jax
 import jax.numpy as jnp
 
-from repro.kernels.gossip.gossip import gossip_mix_pallas
+from repro.kernels.gossip.gossip import (
+    fused_round_gt_pallas,
+    fused_round_pallas,
+    gossip_mix_pallas,
+)
 
-__all__ = ["gossip_mix"]
+__all__ = ["gossip_mix", "fused_round", "fused_round_gt"]
 
 
 def _interpret() -> bool:
@@ -50,12 +60,153 @@ def gossip_mix(
     error_feedback: bool = True,
     difference_coding: bool = True,
 ) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray, jnp.ndarray]:
-    """Fused pass on a flat buffer whose width is a multiple of
-    ``scale_chunk`` (pack with ``pad_to=scale_chunk``); raises ValueError
-    otherwise, exactly like the jnp reference. ``interpret`` is resolved
-    OUTSIDE the jit so REPRO_PALLAS_INTERPRET is honored per call, not
-    frozen into the first compilation."""
+    """One fused quantize -> W-row mix -> dequant + EF gossip round on the
+    flat node-stacked state.
+
+    Shapes and dtypes (n = nodes, t = flat width, c = t // scale_chunk):
+
+      x      (n, t) fp32   node-stacked flat parameters (``core.packing``);
+                           t must be a multiple of ``scale_chunk`` -- pack
+                           with ``pad_to=scale_chunk`` -- else ValueError,
+                           exactly like the jnp reference.
+      recon  (n, t) fp32   shared reconstruction theta_hat: what every
+                           neighbor can rebuild from wire traffic alone.
+      res    (n, t) fp32   error-feedback residual.
+      w_off  (n, n) fp32   off-diagonal mixing weights (zero diagonal).
+      w_self (n,)   fp32   self weights (the W diagonal).
+
+    Returns ``(mixed, new_recon, new_res, scales)``:
+
+      mixed      (n, t) fp32  ``W_off @ new_recon + w_self * x`` -- the
+                              gossip output; neighbors are mixed through
+                              their reconstructions (what actually crossed
+                              the wire), self through the exact value.
+      new_recon  (n, t) fp32  ``recon + dequant(q)``; both endpoints of
+                              every edge advance it identically, so it
+                              never needs (re)transmission.
+      new_res    (n, t) fp32  ``payload - dequant(q)``: the quantization
+                              error, re-injected into the NEXT round's
+                              payload (error feedback). With EF +
+                              difference coding the payload magnitude --
+                              and hence the int8 step -- vanishes as
+                              consensus is approached, so mixing becomes
+                              exact in the limit; without EF the round
+                              stalls at an O(max|x|/127/gap) floor.
+      scales     (n, c) fp32  per-(node, chunk) symmetric int8 scales --
+                              the only fp32 values on the wire (4 bytes
+                              per ``scale_chunk`` int8 payload bytes).
+
+    Flags: ``difference_coding=False`` quantizes x itself instead of the
+    delta against ``recon``; ``error_feedback=False`` passes ``res``
+    through untouched.
+    """
     return _gossip_mix(
         x, recon, res, w_off, w_self, scale_chunk, error_feedback,
         difference_coding, _interpret(),
+    )
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("scale_chunk", "error_feedback", "difference_coding", "interpret"),
+)
+def _fused_round(x, g, recon, res, w_off, w_self, alpha, scale_chunk,
+                 error_feedback, difference_coding, interpret):
+    return fused_round_pallas(
+        x,
+        g,
+        recon,
+        res,
+        w_off,
+        w_self,
+        alpha,
+        scale_chunk=scale_chunk,
+        error_feedback=error_feedback,
+        difference_coding=difference_coding,
+        interpret=interpret,
+    )
+
+
+def fused_round(
+    x: jnp.ndarray,
+    g: jnp.ndarray,
+    recon: jnp.ndarray,
+    res: jnp.ndarray,
+    w_off: jnp.ndarray,
+    w_self: jnp.ndarray,
+    alpha: jnp.ndarray,
+    scale_chunk: int = 512,
+    error_feedback: bool = True,
+    difference_coding: bool = True,
+) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """DSGD round megakernel: ``h = x - alpha * g`` fused ahead of
+    :func:`gossip_mix` in ONE Pallas pass -- one kernel call is a whole
+    communication round over the flat state.
+
+    ``g`` is the flat gradient buffer (same (n, t) layout as x, packed by
+    ``core.packing.pack_like``); ``alpha`` the scalar step size. Remaining
+    operands, outputs, and EF semantics exactly as :func:`gossip_mix`
+    applied to h.
+    """
+    return _fused_round(
+        x, g, recon, res, w_off, w_self, alpha, scale_chunk, error_feedback,
+        difference_coding, _interpret(),
+    )
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("scale_chunk", "error_feedback", "difference_coding", "interpret"),
+)
+def _fused_round_gt(x, t, g, g_prev, recon_x, res_x, recon_t, res_t, w_off,
+                    w_self, alpha, scale_chunk, error_feedback,
+                    difference_coding, interpret):
+    return fused_round_gt_pallas(
+        x,
+        t,
+        g,
+        g_prev,
+        recon_x,
+        res_x,
+        recon_t,
+        res_t,
+        w_off,
+        w_self,
+        alpha,
+        scale_chunk=scale_chunk,
+        error_feedback=error_feedback,
+        difference_coding=difference_coding,
+        interpret=interpret,
+    )
+
+
+def fused_round_gt(
+    x: jnp.ndarray,
+    t: jnp.ndarray,
+    g: jnp.ndarray,
+    g_prev: jnp.ndarray,
+    recon_x: jnp.ndarray,
+    res_x: jnp.ndarray,
+    recon_t: jnp.ndarray,
+    res_t: jnp.ndarray,
+    w_off: jnp.ndarray,
+    w_self: jnp.ndarray,
+    alpha: jnp.ndarray,
+    scale_chunk: int = 512,
+    error_feedback: bool = True,
+    difference_coding: bool = True,
+) -> Tuple[jnp.ndarray, ...]:
+    """DSGT round megakernel: tracker arithmetic ``t_half = t + g - g_prev``,
+    parameter update ``h = x - alpha * t_half``, and the quantize-mix-EF
+    stage applied to BOTH buffers, in ONE Pallas pass.
+
+    ``(recon_x, res_x)`` / ``(recon_t, res_t)`` are independent compression
+    states for the parameter and tracker wires (both travel int8). Returns
+    ``(mixed_x, mixed_t, new_recon_x, new_res_x, new_recon_t, new_res_t,
+    scales_x, scales_t)``; store ``g`` as the next round's ``g_prev``. See
+    ``ref.fused_round_gt_ref`` for the exact update equations.
+    """
+    return _fused_round_gt(
+        x, t, g, g_prev, recon_x, res_x, recon_t, res_t, w_off, w_self, alpha,
+        scale_chunk, error_feedback, difference_coding, _interpret(),
     )

@@ -1,11 +1,18 @@
-"""Chunked jnp oracle for the fused quantize-mix-EF gossip pass.
+"""Chunked jnp oracles for the fused gossip / round megakernels.
 
 Computes the CHOCO-gossip round on a flat ``(nodes, total)`` buffer with
 per-``(node, scale_chunk)`` int8 scales -- bit-identical math to the
-Pallas kernel (``gossip.py``), which tiles the same computation over
-``(nodes, scale_chunk)`` VMEM blocks. This reference materializes the
-full-size payload/dq/recon intermediates the kernel fuses away; it is the
-interpret-mode correctness oracle and the single-device simulated path.
+Pallas kernels (``gossip.py``), which tile the same computation over
+``(nodes, scale_chunk)`` VMEM blocks. These references materialize the
+full-size payload/dq/recon intermediates the kernels fuse away; they are
+the interpret-mode correctness oracles and the single-device simulated
+path.
+
+The round oracles (:func:`fused_round_ref`, :func:`fused_round_gt_ref`)
+are deliberately written as the COMPOSITION of the plain local update and
+:func:`gossip_mix_ref` -- "fused == local-step-then-gossip" therefore
+holds by construction on the reference side, and the megakernels are
+property-tested against it (tests/test_megakernel.py).
 """
 
 from __future__ import annotations
@@ -14,7 +21,7 @@ from typing import Tuple
 
 import jax.numpy as jnp
 
-__all__ = ["gossip_mix_ref"]
+__all__ = ["gossip_mix_ref", "fused_round_ref", "fused_round_gt_ref"]
 
 
 def gossip_mix_ref(
@@ -57,3 +64,91 @@ def gossip_mix_ref(
     new_res = payload - dq if error_feedback else res
     mixed = w_off @ new_recon + w_self[:, None] * x
     return mixed, new_recon, new_res, scales
+
+
+def fused_round_ref(
+    x: jnp.ndarray,
+    g: jnp.ndarray,
+    recon: jnp.ndarray,
+    res: jnp.ndarray,
+    w_off: jnp.ndarray,
+    w_self: jnp.ndarray,
+    alpha: jnp.ndarray,
+    *,
+    scale_chunk: int,
+    error_feedback: bool = True,
+    difference_coding: bool = True,
+) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """DSGD round oracle: the local update ``h = x - alpha * g`` followed
+    by one compressed gossip round on h (adapt-then-combine ordering).
+
+    Same signature contract as :func:`gossip_mix_ref` plus the flat
+    gradient buffer ``g`` (n, t) and the scalar step size ``alpha``.
+    """
+    h = x - alpha * g
+    return gossip_mix_ref(
+        h,
+        recon,
+        res,
+        w_off,
+        w_self,
+        scale_chunk=scale_chunk,
+        error_feedback=error_feedback,
+        difference_coding=difference_coding,
+    )
+
+
+def fused_round_gt_ref(
+    x: jnp.ndarray,
+    t: jnp.ndarray,
+    g: jnp.ndarray,
+    g_prev: jnp.ndarray,
+    recon_x: jnp.ndarray,
+    res_x: jnp.ndarray,
+    recon_t: jnp.ndarray,
+    res_t: jnp.ndarray,
+    w_off: jnp.ndarray,
+    w_self: jnp.ndarray,
+    alpha: jnp.ndarray,
+    *,
+    scale_chunk: int,
+    error_feedback: bool = True,
+    difference_coding: bool = True,
+) -> Tuple[jnp.ndarray, ...]:
+    """DSGT round oracle (adapt-then-combine gradient tracking):
+
+        t_half = t + g - g_prev          (tracker absorbs the innovation)
+        h      = x - alpha * t_half      (parameter update)
+        t'     = quantize-mix(t_half)    (compressed gossip, tracker wire)
+        x'     = quantize-mix(h)         (compressed gossip, param wire)
+
+    ``mean_i t_half = mean_i t + mean_i (g - g_prev)`` so the tracking
+    invariant ``mean_i t == mean_i g`` is preserved by any
+    doubly-stochastic W up to the (vanishing, EF-corrected) quantization
+    drift. Returns (mixed_x, mixed_t, new_recon_x, new_res_x, new_recon_t,
+    new_res_t, scales_x, scales_t); the caller stores ``g`` as the next
+    round's ``g_prev``.
+    """
+    t_half = t + g - g_prev
+    h = x - alpha * t_half
+    mt, nrt, nst, sct = gossip_mix_ref(
+        t_half,
+        recon_t,
+        res_t,
+        w_off,
+        w_self,
+        scale_chunk=scale_chunk,
+        error_feedback=error_feedback,
+        difference_coding=difference_coding,
+    )
+    mx, nrx, nsx, scx = gossip_mix_ref(
+        h,
+        recon_x,
+        res_x,
+        w_off,
+        w_self,
+        scale_chunk=scale_chunk,
+        error_feedback=error_feedback,
+        difference_coding=difference_coding,
+    )
+    return mx, mt, nrx, nsx, nrt, nst, scx, sct

@@ -34,10 +34,15 @@ def _flat_dict(tree: PyTree) -> dict:
 def save_fl_state(path: str, state: FLState, extra: Optional[dict] = None) -> None:
     os.makedirs(path, exist_ok=True)
     arrays = {}
-    manifest = {"step": int(state.step), "has_tracker": state.tracker is not None}
+    manifest = {
+        "step": int(state.step),
+        "has_tracker": state.tracker is not None,
+        "has_comm": state.comm is not None,
+    }
     if extra:
         manifest["extra"] = extra
-    for name, tree in (("params", state.params), ("tracker", state.tracker), ("prev_grad", state.prev_grad)):
+    for name, tree in (("params", state.params), ("tracker", state.tracker),
+                       ("prev_grad", state.prev_grad), ("comm", state.comm)):
         if tree is None:
             continue
         for k, v in _flat_dict(tree).items():
@@ -75,9 +80,15 @@ def load_fl_state(path: str, template: FLState) -> FLState:
         new_leaves = [out[k] for k in keys]
         return jax.tree_util.tree_unflatten(leaves_paths[1], new_leaves)
 
+    # pre-comm checkpoints restore onto fused templates with zeroed wire
+    # state (self-consistent: every node retransmits in full next round)
+    comm = template.comm
+    if comm is not None and manifest.get("has_comm", False):
+        comm = restore("comm", template.comm)
     return FLState(
         step=np.int32(manifest["step"]),
         params=restore("params", template.params),
         tracker=restore("tracker", template.tracker),
         prev_grad=restore("prev_grad", template.prev_grad),
+        comm=comm,
     )

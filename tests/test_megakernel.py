@@ -1,0 +1,276 @@
+"""Round megakernel: fused update+quantize+mix+EF == the driver-level
+(local-step then gossip-reference) composition for DSGD and DSGT, the
+Pallas kernels == the jnp oracles, and the fused comm round emits exactly
+ONE kernel call.
+
+The composition oracle is built from the PRE-EXISTING primitives only --
+``make_fl_round`` with an identity mix (whose comm step is then exactly
+the plain local update / tracker arithmetic) followed by
+``make_compressed_flat_gossip`` on each wire -- so these tests pin the
+megakernel to the semantics the engine already had, not to a parallel
+reimplementation.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.compression import (
+    init_flat_compression_state,
+    make_compressed_flat_gossip,
+)
+from repro.core.fl import FLConfig, FusedRoundSpec, init_fl_state, make_fl_round
+from repro.core.packing import pack, unpack
+from repro.core.schedules import constant, inv_sqrt
+from repro.core.topology import mixing_matrix
+
+ATOL = 1e-5
+
+
+def _problem(n, q, seed=0):
+    rng = np.random.default_rng(seed)
+
+    def loss(p, batch):
+        return jnp.sum((p["w"] - batch["t"]) ** 2) + jnp.sum(p["b"] ** 2)
+
+    params = {
+        "w": jnp.asarray(rng.normal(size=(n, 4, 3)), jnp.float32),
+        "b": jnp.asarray(rng.normal(size=(n, 3)), jnp.float32),
+    }
+    batches = {"t": jnp.asarray(rng.normal(size=(q, n, 4, 3)), jnp.float32)}
+    return loss, params, batches
+
+
+def _run_fused(loss, flat, layout, batches, cfg, w, chunk, impl, rounds, sched):
+    spec = FusedRoundSpec(w=w, scale_chunk=chunk, impl=impl)
+    rf = jax.jit(make_fl_round(loss, None, sched, cfg, layout=layout, fused=spec))
+    st = init_fl_state(cfg, flat, fused=True)
+    m = None
+    for _ in range(rounds):
+        st, m = rf(st, batches)
+    return st, m
+
+
+def _run_composition(loss, flat, layout, batches, cfg, w, chunk, rounds, sched):
+    """Local-step-then-gossip-reference: make_fl_round with the identity
+    mix runs Q local steps plus the bare update/tracker arithmetic (an
+    identity-W comm step IS the local update), then each wire goes through
+    one compressed flat gossip round -- the unfused engine of PR 1."""
+    rf_local = jax.jit(make_fl_round(loss, lambda f: f, sched, cfg, layout=layout))
+    gossip = make_compressed_flat_gossip(w, scale_chunk=chunk)
+    gossip = jax.jit(gossip)
+    st = init_fl_state(cfg, flat)
+    comp_x = init_flat_compression_state(flat)
+    comp_t = init_flat_compression_state(flat)
+    m = None
+    for _ in range(rounds):
+        st, m = rf_local(st, batches)
+        px, comp_x = gossip(st.params, comp_x)
+        if cfg.algorithm == "dsgt":
+            pt, comp_t = gossip(st.tracker, comp_t)
+            st = st._replace(params=px, tracker=pt)
+        else:
+            st = st._replace(params=px)
+    return st, m
+
+
+@pytest.mark.parametrize("impl", ["jnp", "pallas"])
+@pytest.mark.parametrize("algorithm", ["dsgd", "dsgt"])
+@pytest.mark.parametrize("n,topo,chunk", [
+    (8, "ring", 8),
+    (8, "ring", 32),
+    (16, "torus:4x4", 8),
+    (16, "torus:4x4", 64),
+])
+def test_fused_round_matches_update_then_mix(impl, algorithm, n, topo, chunk):
+    """The megakernel round == (Q local steps, update, then compressed
+    gossip of each wire) across >= 2 chunk sizes and node counts, for both
+    impls, over several rounds (so the EF/recon state threading is
+    exercised, not just one application)."""
+    q, rounds = 3, 4
+    w = mixing_matrix(topo, n)
+    loss, params, batches = _problem(n, q, seed=n + chunk)
+    cfg = FLConfig(algorithm=algorithm, q=q, n_nodes=n)
+    flat, layout = pack(params, pad_to=chunk)
+    sched = inv_sqrt(0.05)
+
+    st_f, m_f = _run_fused(loss, flat, layout, batches, cfg, w, chunk, impl, rounds, sched)
+    st_c, m_c = _run_composition(loss, flat, layout, batches, cfg, w, chunk, rounds, sched)
+
+    np.testing.assert_allclose(
+        np.asarray(st_f.params), np.asarray(st_c.params), atol=ATOL
+    )
+    if algorithm == "dsgt":
+        np.testing.assert_allclose(
+            np.asarray(st_f.tracker), np.asarray(st_c.tracker), atol=ATOL
+        )
+        np.testing.assert_allclose(
+            np.asarray(st_f.prev_grad), np.asarray(st_c.prev_grad), atol=ATOL
+        )
+    # unpacked view agrees leaf-by-leaf too
+    back_f, back_c = unpack(st_f.params, layout), unpack(st_c.params, layout)
+    for k in back_f:
+        np.testing.assert_allclose(np.asarray(back_f[k]), np.asarray(back_c[k]), atol=ATOL)
+    for k in ("loss", "grad_norm_sq", "local_loss"):
+        np.testing.assert_allclose(float(m_f[k]), float(m_c[k]), rtol=1e-4, atol=1e-6)
+    # the composition's consensus_err metric is measured before its gossip
+    # stage (identity mix), so compare the fused metric against a direct
+    # recomputation on the final mixed parameters instead
+    pf = np.asarray(st_f.params)
+    dev = pf - pf.mean(axis=0, keepdims=True)
+    np.testing.assert_allclose(
+        float(m_f["consensus_err"]), float((dev * dev).sum() / n), rtol=1e-4, atol=1e-6
+    )
+
+
+@pytest.mark.parametrize("seed", [0, 1, 2])
+@pytest.mark.parametrize("cfg", [
+    # (n, t, chunk, ef, dc)
+    (16, 256, 64, True, True),
+    (8, 512, 128, True, False),
+    (64, 1024, 256, True, True),
+    (8, 96, 32, False, True),
+])
+def test_fused_dsgd_kernel_matches_ref(seed, cfg):
+    """fused_round (Pallas, interpret on CPU) == fused_round_ref on every
+    output, atol 1e-5."""
+    from repro.kernels.gossip import fused_round, fused_round_ref
+
+    n, t, ck, ef, dc = cfg
+    rng = np.random.default_rng(seed)
+    w = mixing_matrix("ring", n)
+    w_self = jnp.asarray(np.diag(w), jnp.float32)
+    w_off = jnp.asarray(w - np.diag(np.diag(w)), jnp.float32)
+    scale = 10.0 ** rng.integers(-2, 2)
+    mk = lambda s: jnp.asarray(s * rng.normal(size=(n, t)), jnp.float32)
+    x, g, recon, res = mk(scale), mk(scale), mk(scale), mk(0.1 * scale)
+    alpha = jnp.float32(0.05)
+    outs_k = fused_round(x, g, recon, res, w_off, w_self, alpha, scale_chunk=ck,
+                         error_feedback=ef, difference_coding=dc)
+    outs_r = fused_round_ref(x, g, recon, res, w_off, w_self, alpha, scale_chunk=ck,
+                             error_feedback=ef, difference_coding=dc)
+    for name, a, b in zip(("mixed", "recon", "res", "scales"), outs_k, outs_r):
+        np.testing.assert_allclose(
+            np.asarray(a), np.asarray(b), atol=ATOL * max(scale, 1.0), err_msg=name
+        )
+
+
+@pytest.mark.parametrize("seed", [0, 1, 2])
+@pytest.mark.parametrize("n,t,ck", [(16, 256, 64), (8, 128, 32), (64, 512, 256)])
+def test_fused_dsgt_kernel_matches_ref(seed, n, t, ck):
+    """fused_round_gt (Pallas, interpret on CPU) == fused_round_gt_ref on
+    all eight outputs, atol 1e-5."""
+    from repro.kernels.gossip import fused_round_gt, fused_round_gt_ref
+
+    rng = np.random.default_rng(seed)
+    w = mixing_matrix("ring", n)
+    w_self = jnp.asarray(np.diag(w), jnp.float32)
+    w_off = jnp.asarray(w - np.diag(np.diag(w)), jnp.float32)
+    mk = lambda s: jnp.asarray(s * rng.normal(size=(n, t)), jnp.float32)
+    args = (mk(1.0), mk(0.3), mk(0.5), mk(0.5), mk(1.0), mk(0.1), mk(1.0), mk(0.1))
+    alpha = jnp.float32(0.02)
+    outs_k = fused_round_gt(*args, w_off, w_self, alpha, scale_chunk=ck)
+    outs_r = fused_round_gt_ref(*args, w_off, w_self, alpha, scale_chunk=ck)
+    names = ("mixed_x", "mixed_t", "recon_x", "res_x", "recon_t", "res_t",
+             "scales_x", "scales_t")
+    for name, a, b in zip(names, outs_k, outs_r):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=ATOL, err_msg=name)
+
+
+# ---------------------------------------------------------------------------
+# single-kernel-call lowering assert
+# ---------------------------------------------------------------------------
+
+
+def _count_primitive(jaxpr, name: str) -> int:
+    """Count `name` eqns in a jaxpr, descending into sub-jaxprs (scan
+    bodies, cond branches, pjit calls)."""
+    count = 0
+    for eqn in jaxpr.eqns:
+        if eqn.primitive.name == name:
+            count += 1
+        for v in eqn.params.values():
+            subs = v if isinstance(v, (list, tuple)) else [v]
+            for sub in subs:
+                if hasattr(sub, "jaxpr"):  # ClosedJaxpr
+                    count += _count_primitive(sub.jaxpr, name)
+                elif hasattr(sub, "eqns"):  # Jaxpr
+                    count += _count_primitive(sub, name)
+    return count
+
+
+@pytest.mark.parametrize("algorithm", ["dsgd", "dsgt"])
+def test_fused_round_is_single_kernel_call(algorithm):
+    """The whole comm round -- local update + quantize + mix + EF, both
+    wires for DSGT -- lowers to exactly ONE pallas_call, with the Q-1
+    local-step scan contributing none. (Non-interpret HLO can only be
+    emitted on a TPU backend, where the same program must contain exactly
+    one tpu_custom_call; on CPU the jaxpr is the lowering contract.)"""
+    n, q, chunk = 8, 3, 32
+    w = mixing_matrix("ring", n)
+    loss, params, batches = _problem(n, q)
+    cfg = FLConfig(algorithm=algorithm, q=q, n_nodes=n)
+    flat, layout = pack(params, pad_to=chunk)
+    spec = FusedRoundSpec(w=w, scale_chunk=chunk, impl="pallas")
+    rf = make_fl_round(loss, None, constant(0.05), cfg, layout=layout, fused=spec)
+    st = init_fl_state(cfg, flat, fused=True)
+
+    jaxpr = jax.make_jaxpr(rf)(st, batches)
+    assert _count_primitive(jaxpr.jaxpr, "pallas_call") == 1
+
+    if jax.default_backend() == "tpu":
+        txt = jax.jit(rf).lower(st, batches).as_text()
+        assert txt.count("tpu_custom_call") == 1
+
+
+def test_fused_requires_flat_layout_and_comm_state():
+    n = 8
+    w = mixing_matrix("ring", n)
+    loss, params, batches = _problem(n, 1)
+    cfg = FLConfig(algorithm="dsgd", q=1, n_nodes=n)
+    with pytest.raises(ValueError, match="flat engine"):
+        make_fl_round(loss, None, constant(0.05), cfg, fused=FusedRoundSpec(w=w))
+    flat, layout = pack(params, pad_to=32)
+    with pytest.raises(ValueError, match="scale_chunk"):
+        make_fl_round(loss, None, constant(0.05), cfg, layout=layout,
+                      fused=FusedRoundSpec(w=w, scale_chunk=7))
+    with pytest.raises(ValueError, match="flat buffer"):
+        init_fl_state(cfg, params, fused=True)
+
+
+def test_fused_checkpoint_roundtrip(tmp_path):
+    """FLState.comm (the int8 wire state) survives save/load; pre-comm
+    checkpoints restore onto fused templates with zeroed wire buffers."""
+    from repro.training.checkpoint import load_fl_state, save_fl_state
+
+    cfg = FLConfig(algorithm="dsgt", q=2, n_nodes=4)
+    flat = jnp.arange(4 * 16, dtype=jnp.float32).reshape(4, 16)
+    st = init_fl_state(cfg, flat, fused=True)
+    st = st._replace(comm={k: v + 1.5 for k, v in st.comm.items()})
+    save_fl_state(str(tmp_path), st)
+    back = load_fl_state(str(tmp_path), init_fl_state(cfg, flat, fused=True))
+    for k in st.comm:
+        np.testing.assert_array_equal(np.asarray(back.comm[k]), np.asarray(st.comm[k]))
+    np.testing.assert_array_equal(np.asarray(back.params), np.asarray(st.params))
+
+
+def test_fused_dsgt_tracking_invariant():
+    """mean_i tracker == mean_i prev_grad at every comm round up to the
+    EF-corrected quantization drift (the megakernel preserves the GT
+    invariant that makes DSGT converge)."""
+    n, q, chunk, rounds = 16, 2, 32, 8
+    w = mixing_matrix("torus:4x4", n)
+    loss, params, batches = _problem(n, q, seed=7)
+    cfg = FLConfig(algorithm="dsgt", q=q, n_nodes=n)
+    flat, layout = pack(params, pad_to=chunk)
+    spec = FusedRoundSpec(w=w, scale_chunk=chunk, impl="jnp")
+    rf = jax.jit(make_fl_round(loss, None, constant(0.02), cfg, layout=layout, fused=spec))
+    st = init_fl_state(cfg, flat, fused=True)
+    for _ in range(rounds):
+        st, _ = rf(st, batches)
+        t_bar = np.asarray(st.tracker).mean(axis=0)
+        g_bar = np.asarray(st.prev_grad).mean(axis=0)
+        drift = np.abs(t_bar - g_bar).max()
+        q_step = max(np.abs(np.asarray(st.tracker)).max(), 1e-6) / 127.0
+        assert drift < 10 * q_step + 1e-5, drift

@@ -1,0 +1,69 @@
+#!/usr/bin/env python
+"""Fail CI on broken intra-repo markdown links.
+
+Scans README.md, ROADMAP.md, CHANGES.md, and docs/*.md for inline
+markdown links ``[text](target)`` and checks that every RELATIVE target
+(anything that is not http(s)/mailto or a pure #anchor) resolves to an
+existing file or directory, after stripping any #fragment. External URLs
+are deliberately not fetched -- this guards the repo's internal
+documentation graph, not the internet.
+
+Usage: python tools/check_links.py  (exit 1 + report on broken links)
+"""
+
+from __future__ import annotations
+
+import glob
+import os
+import re
+import sys
+
+# inline links, skipping images' leading ! is harmless (path must exist
+# either way); excludes autolinks <...> and reference-style definitions
+_LINK_RE = re.compile(r"\[[^\]]*\]\(([^)\s]+)(?:\s+\"[^\"]*\")?\)")
+
+_EXTERNAL = ("http://", "https://", "mailto:")
+
+
+def iter_md_files(repo_root: str):
+    for name in ("README.md", "ROADMAP.md", "CHANGES.md"):
+        path = os.path.join(repo_root, name)
+        if os.path.exists(path):
+            yield path
+    yield from sorted(glob.glob(os.path.join(repo_root, "docs", "*.md")))
+
+
+def broken_links(md_path: str):
+    base = os.path.dirname(md_path)
+    with open(md_path, encoding="utf-8") as f:
+        text = f.read()
+    for match in _LINK_RE.finditer(text):
+        target = match.group(1)
+        if target.startswith(_EXTERNAL) or target.startswith("#"):
+            continue
+        rel = target.split("#", 1)[0]
+        if not rel:
+            continue
+        if not os.path.exists(os.path.join(base, rel)):
+            line = text.count("\n", 0, match.start()) + 1
+            yield line, target
+
+
+def main() -> int:
+    repo_root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    failures = []
+    checked = 0
+    for md in iter_md_files(repo_root):
+        checked += 1
+        for line, target in broken_links(md):
+            failures.append(f"{os.path.relpath(md, repo_root)}:{line}: broken link -> {target}")
+    if failures:
+        print("\n".join(failures))
+        print(f"\n{len(failures)} broken intra-repo link(s).")
+        return 1
+    print(f"checked {checked} markdown file(s): all intra-repo links resolve.")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
