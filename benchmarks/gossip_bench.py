@@ -10,14 +10,21 @@ pytree, where most leaves are small: norms, biases, per-head slices):
                         (the Pallas kernel's bit-identical jnp oracle) vs
                         per-leaf quantize + matmul + EF;
   * FL round:           a full DSGD round (Q=4) with flat state threading
-                        (make_fl_round(layout=...)) vs tree state;
+                        (make_fl_round(engine=FlatEngine(...))) vs tree
+                        state;
   * fused round:        the round megakernel's comm step (ONE fused
                         update+quantize+mix+EF call; two wires for DSGT)
                         vs the pre-megakernel update-then-mix flat path
                         (the update as one jit, then one compressed-gossip
                         jit per wire, compression state threaded through
                         Python at the driver level -- the only way to run
-                        a compressed comm round before the megakernel).
+                        a compressed comm round before the megakernel);
+  * top-k wire:         the fused round with top-k payload sparsification
+                        (k columns per scale chunk inside the kernel, EF
+                        absorbing the truncation) vs the dense-int8 wire:
+                        per-round wire bytes (values + positions + scales
+                        accounting, packing.flat_wire_bytes) and step
+                        time.
 
 Methodology (honest measurement on a noisy shared CPU): the first three
 rows run ROUNDS consecutive rounds inside ONE jitted lax.scan -- the
@@ -36,6 +43,7 @@ kernels' additional TPU win (no materialized h/payload/dq/recon HBM
 round-trips) is a roofline argument, not a CPU wall-time one.
 
 Usage: PYTHONPATH=src python benchmarks/gossip_bench.py [--out BENCH_gossip.json]
+       PYTHONPATH=src python benchmarks/gossip_bench.py --smoke   # tiny CI shapes
 """
 
 from __future__ import annotations
@@ -55,6 +63,7 @@ from repro.core.compression import (
     make_compressed_dense_gossip_per_leaf,
     make_compressed_flat_gossip,
 )
+from repro.core.engine import FlatEngine
 from repro.core.fl import FLConfig, init_fl_state, make_fl_round
 from repro.core.mixing import (
     make_dense_flat_mix,
@@ -68,6 +77,7 @@ from repro.core.topology import mixing_matrix
 N_NODES = 64
 N_LEAVES = 192
 SCALE_CHUNK = 512
+TOPK = 64  # top-k row: 64 of 512 columns per chunk on the wire
 ROUNDS = 50
 TRIALS = 9
 
@@ -93,10 +103,14 @@ def _scan_runner(step: Callable, rounds: int) -> Callable:
     return run
 
 
-def time_interleaved(variants: Dict[str, tuple], rounds: int = ROUNDS,
-                     trials: int = TRIALS) -> Dict[str, float]:
+def time_interleaved(variants: Dict[str, tuple], rounds: int = None,
+                     trials: int = None) -> Dict[str, float]:
     """Median per-round us for {name: (step_fn, init_carry)}, variants
-    interleaved within each trial so container noise hits all equally."""
+    interleaved within each trial so container noise hits all equally.
+    ``rounds``/``trials`` default to the module knobs (resolved at call
+    time so --smoke can shrink them)."""
+    rounds = ROUNDS if rounds is None else rounds
+    trials = TRIALS if trials is None else trials
     runners = {k: (_scan_runner(fn, rounds), init) for k, (fn, init) in variants.items()}
     for run, init in runners.values():  # compile + warm
         jax.block_until_ready(run(init))
@@ -117,7 +131,7 @@ def bench_dense(tree, w) -> Dict:
     })
     return {
         "name": "dense_gossip",
-        "n_nodes": N_NODES,
+        "n_nodes": flat_buf.shape[0],
         "n_leaves": len(jax.tree_util.tree_leaves(tree)),
         "total_params": layout.used,
         "us_per_leaf": us["per_leaf"],
@@ -143,7 +157,7 @@ def bench_compressed(tree, w) -> Dict:
     })
     return {
         "name": "compressed_gossip",
-        "n_nodes": N_NODES,
+        "n_nodes": flat_buf.shape[0],
         "n_leaves": len(jax.tree_util.tree_leaves(tree)),
         "total_params": layout.total,
         "us_per_leaf": us["per_leaf"],
@@ -154,27 +168,30 @@ def bench_compressed(tree, w) -> Dict:
 
 
 def bench_fl_round(tree, w, q: int = 4) -> Dict:
+    n_nodes = w.shape[0]
+
     def loss_fn(params, batch):
         sq = 0.0
         for leaf in jax.tree_util.tree_leaves(params):
             sq = sq + jnp.sum((leaf - batch["t"]) ** 2) / leaf.size
         return sq
 
-    batches = {"t": jnp.zeros((q, N_NODES), jnp.float32)}
-    cfg = FLConfig(algorithm="dsgd", q=q, n_nodes=N_NODES)
+    batches = {"t": jnp.zeros((q, n_nodes), jnp.float32)}
+    cfg = FLConfig(algorithm="dsgd", q=q, n_nodes=n_nodes)
     sched = constant(0.01)
 
     rf_tree = make_fl_round(loss_fn, make_dense_gossip(w), sched, cfg)
     flat_buf, layout = pack(tree, pad_to=SCALE_CHUNK)
-    rf_flat = make_fl_round(loss_fn, make_dense_flat_mix(w), sched, cfg, layout=layout)
+    flat_engine = FlatEngine(make_dense_flat_mix(w), layout)
+    rf_flat = make_fl_round(loss_fn, None, sched, cfg, engine=flat_engine)
 
     us = time_interleaved({
         "tree": (lambda st: rf_tree(st, batches)[0], init_fl_state(cfg, tree)),
         "flat": (lambda st: rf_flat(st, batches)[0], init_fl_state(cfg, flat_buf)),
-    }, rounds=20, trials=7)
+    }, rounds=min(20, ROUNDS), trials=min(7, TRIALS))
     return {
         "name": f"fl_round_dsgd_q{q}",
-        "n_nodes": N_NODES,
+        "n_nodes": n_nodes,
         "n_leaves": len(jax.tree_util.tree_leaves(tree)),
         "us_tree_state": us["tree"],
         "us_flat_state": us["flat"],
@@ -187,7 +204,8 @@ def bench_fl_round(tree, w, q: int = 4) -> Dict:
     }
 
 
-def bench_fused_round(tree, w, algorithm: str) -> Dict:
+def bench_fused_round(tree, w, algorithm: str, rounds: int = 200,
+                      trials: int = 9) -> Dict:
     """Round-megakernel comm step (one fused call) vs the pre-megakernel
     update-then-mix flat path (update jit + one compressed-gossip jit per
     wire, state threaded through Python). Both sides: donated buffers,
@@ -195,10 +213,11 @@ def bench_fused_round(tree, w, algorithm: str) -> Dict:
     both sides is excluded so the row measures the fused machinery)."""
     from repro.kernels.gossip.ref import fused_round_gt_ref, fused_round_ref
 
+    from repro.core.mixing import _split_w
+
     flat_buf, layout = pack(tree, pad_to=SCALE_CHUNK)
     n, t = flat_buf.shape
-    w_self = jnp.asarray(np.diag(w), jnp.float32)
-    w_off = jnp.asarray(w - np.diag(np.diag(w)), jnp.float32)
+    w_self, w_off = _split_w(w)
     alpha = jnp.float32(0.01)
     rng = np.random.default_rng(1)
     g = jnp.asarray(0.5 * rng.normal(size=(n, t)), jnp.float32)
@@ -264,7 +283,6 @@ def bench_fused_round(tree, w, algorithm: str) -> Dict:
 
         dispatches = 3
 
-    rounds, trials = 200, 9
     run_fused(10), run_unfused(10)  # compile + warm
     samples = {"fused": [], "update_then_mix": []}
     for _ in range(trials):
@@ -294,20 +312,128 @@ def bench_fused_round(tree, w, algorithm: str) -> Dict:
     }
 
 
+
+
+def bench_topk_wire(tree, w, algorithm: str, topk: int = TOPK,
+                    rounds: int = 200, trials: int = 9) -> Dict:
+    """Top-k sparsified wire vs the dense-int8 wire, same fused round
+    machinery (jnp oracle on CPU, donated-buffer dispatch loop). Reports
+    measured step time and the per-round wire bytes of each
+    (values + position encoding + scales for top-k; see
+    packing.flat_wire_bytes). The CPU step-time delta is the in-kernel
+    sort cost; the wire-byte column is the point -- the payload drops
+    below the int8 floor while EF keeps the mixing contraction
+    (tests/test_topk_property.py property-tests consensus under top-k)."""
+    from repro.kernels.gossip.ref import fused_round_gt_ref, fused_round_ref
+
+    from repro.core.mixing import _split_w
+
+    flat_buf, layout = pack(tree, pad_to=SCALE_CHUNK)
+    n, t = flat_buf.shape
+    w_self, w_off = _split_w(w)
+    alpha = jnp.float32(0.01)
+    rng = np.random.default_rng(3)
+    g = jnp.asarray(0.5 * rng.normal(size=(n, t)), jnp.float32)
+    gp = jnp.asarray(0.5 * rng.normal(size=(n, t)), jnp.float32)
+    tr = jnp.asarray(0.3 * rng.normal(size=(n, t)), jnp.float32)
+    zeros = lambda: jnp.zeros((n, t), jnp.float32)
+
+    def make_runner(k):
+        if algorithm == "dsgd":
+            step = jax.jit(
+                lambda x, r, s: fused_round_ref(
+                    x, g, r, s, w_off, w_self, alpha, scale_chunk=SCALE_CHUNK,
+                    topk=k,
+                ),
+                donate_argnums=(0, 1, 2),
+            )
+
+            def run(nr):
+                x, r, s = flat_buf + 0, zeros(), zeros()
+                for _ in range(nr):
+                    x, r, s, _ = step(x, r, s)
+                jax.block_until_ready(x)
+        else:
+            step = jax.jit(
+                lambda x, tk, rx, sx, rt, st: fused_round_gt_ref(
+                    x, tk, g, gp, rx, sx, rt, st, w_off, w_self, alpha,
+                    scale_chunk=SCALE_CHUNK, topk=k,
+                ),
+                donate_argnums=(0, 1, 2, 3, 4, 5),
+            )
+
+            def run(nr):
+                x, tk = flat_buf + 0, tr + 0
+                rx, sx, rt, st = zeros(), zeros(), zeros(), zeros()
+                for _ in range(nr):
+                    x, tk, rx, sx, rt, st, _, _ = step(x, tk, rx, sx, rt, st)
+                jax.block_until_ready(x)
+        return run
+
+    runners = {"int8": make_runner(None), "topk": make_runner(topk)}
+    for r in runners.values():
+        r(10)  # compile + warm
+    samples = {k: [] for k in runners}
+    for _ in range(trials):
+        for name, fn in runners.items():
+            t0 = time.perf_counter()
+            fn(rounds)
+            samples[name].append((time.perf_counter() - t0) / rounds * 1e6)
+    us = {k: float(np.median(v)) for k, v in samples.items()}
+    wires = 2 if algorithm == "dsgt" else 1
+    int8_bytes = wires * flat_wire_bytes(layout, 1, SCALE_CHUNK)
+    topk_bytes = wires * flat_wire_bytes(layout, 1, SCALE_CHUNK, topk)
+    return {
+        "name": f"topk_wire_{algorithm}",
+        "n_nodes": n,
+        "total_params": t,
+        "scale_chunk": SCALE_CHUNK,
+        "topk": topk,
+        "us_int8": us["int8"],
+        "us_topk": us["topk"],
+        "wire_bytes_per_neighbor_int8": int8_bytes,
+        "wire_bytes_per_neighbor_topk": topk_bytes,
+        "wire_reduction_vs_int8": int8_bytes / topk_bytes,
+        "note": "same fused round, payload masked to the k largest "
+                "columns per scale chunk inside the kernel; wire bytes = "
+                "k int8 values + min(2k, chunk/8) position bytes + 4 B "
+                "scale per chunk. EF absorbs the truncation. jnp-oracle "
+                "timing on CPU (the sort is in-tile on TPU).",
+    }
+
 def main() -> List[Dict]:
+    global ROUNDS, TRIALS
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--out", default="BENCH_gossip.json")
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny shapes + few rounds: the CI smoke that "
+                         "exercises every row (numbers are NOT "
+                         "representative; the committed BENCH_gossip.json "
+                         "is the full run)")
     args = ap.parse_args()
 
-    tree = make_state()
-    w = mixing_matrix("torus:8x8", N_NODES)
+    if args.smoke:
+        ROUNDS, TRIALS = 5, 3
+        tree = make_state(n_nodes=8, n_leaves=12)
+        w = mixing_matrix("torus:4x2", 8)
+        fused_rounds, fused_trials = 10, 3
+    else:
+        tree = make_state()
+        w = mixing_matrix("torus:8x8", N_NODES)
+        fused_rounds, fused_trials = 200, 9
 
     rows = [
         bench_dense(tree, w),
         bench_compressed(tree, w),
         bench_fl_round(tree, w),
-        bench_fused_round(tree, w, "dsgd"),
-        bench_fused_round(tree, w, "dsgt"),
+        bench_fused_round(tree, w, "dsgd", fused_rounds, fused_trials),
+        bench_fused_round(tree, w, "dsgt", fused_rounds, fused_trials),
+        # fewer samples: the row's point is the wire-byte column; the CPU
+        # step time only prices the jnp-oracle sort (in-tile on TPU)
+        bench_topk_wire(tree, w, "dsgd", rounds=min(fused_rounds, 40),
+                        trials=min(fused_trials, 5)),
+        bench_topk_wire(tree, w, "dsgt", rounds=min(fused_rounds, 40),
+                        trials=min(fused_trials, 5)),
     ]
     for r in rows:
         extras = {k: v for k, v in r.items() if isinstance(v, float)}
@@ -317,6 +443,7 @@ def main() -> List[Dict]:
         "bench": "gossip_flat_vs_per_leaf",
         "device": jax.devices()[0].device_kind,
         "backend": jax.default_backend(),
+        "smoke": bool(args.smoke),
         "rounds_per_sample": ROUNDS,
         "trials": TRIALS,
         "rows": rows,

@@ -7,17 +7,20 @@ FD-DSGT(Q=100) and writes the loss-vs-communication-round curves to
 experiments/ehr_curves.csv.
 
 Part 2 -- the communication-savings story on the production engine: the
-same cohort trained with FD-DSGT on the **flat/fused path**
-(``make_fl_round(layout=..., fused=...)``): the state lives in one packed
+same cohort trained with FD-DSGT on a **GossipEngine from the registry**
+(``--fl-engine``, same names as ``launch/dryrun.py`` -- the registry in
+``repro.core.engine`` is the single source of truth, so the lists cannot
+drift). With the default ``fused`` engine the state lives in one packed
 ``(nodes, total)`` buffer and every comm round is ONE round-megakernel
 call (local update + int8 quantize + W mix + error feedback; see
-docs/ARCHITECTURE.md). Prints per-round comm bytes of the int8
-difference-coded wire vs the fp32 wire the plain engine ships, i.e. the
-paper's round savings (Q local steps per exchange) COMPOSED with the
-engine's byte savings (int8 wire).
+docs/ARCHITECTURE.md); ``--topk`` sparsifies the wire below int8. Prints
+per-round comm bytes of the difference-coded wire vs the fp32 wire the
+plain engine ships, i.e. the paper's round savings (Q local steps per
+exchange) COMPOSED with the engine's byte savings.
 
   PYTHONPATH=src python examples/ehr_federated.py [--iterations 3000]
-  PYTHONPATH=src python examples/ehr_federated.py --iterations 300 --fused-rounds 50
+  PYTHONPATH=src python examples/ehr_federated.py --iterations 300 \
+      --fused-rounds 50 --fl-engine fused --topk 64
 """
 
 import argparse
@@ -35,21 +38,31 @@ sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
 from benchmarks.fig2_comm_rounds import ALGOS, comm_rounds_to_loss, run  # noqa: E402
 from repro.core import (
     FLConfig,
-    FusedRoundSpec,
+    engine_names,
+    get_engine,
     init_fl_state,
     make_fl_round,
     mixing_matrix,
-    pack,
-    unpack,
 )
+from repro.configs.ehr_mlp import CLASS_WEIGHT, class_weights
 from repro.core.schedules import inv_sqrt
 from repro.data.ehr import generate_ehr_cohort, make_node_batcher
-from repro.models.mlp import mlp_accuracy, mlp_init, mlp_loss
+from repro.models.mlp import (
+    make_mlp_loss,
+    mlp_accuracy,
+    mlp_balanced_accuracy,
+    mlp_init,
+)
 from repro.training.trainer import stack_for_nodes
 
 
-def run_fused_engine(rounds: int, q: int, scale_chunk: int = 512, seed: int = 0):
-    """FD-DSGT on the flat/fused engine: one megakernel call per comm round."""
+def run_fused_engine(rounds: int, q: int, scale_chunk: int = 512, seed: int = 0,
+                     fl_engine: str = "fused", topk=None,
+                     class_weight=CLASS_WEIGHT):
+    """FD-DSGT on a registry engine: one megakernel call per comm round
+    on the default ``fused`` engine, with the class-weighted loss
+    (``configs.ehr_mlp.class_weights``) unless ``class_weight=None`` --
+    part 1 stays paper-faithful unweighted."""
     if rounds < 1:
         raise ValueError("--fused-rounds must be >= 1")
     n = 20
@@ -58,46 +71,65 @@ def run_fused_engine(rounds: int, q: int, scale_chunk: int = 512, seed: int = 0)
     batcher = make_node_batcher(data, m=20, seed=seed + 1)
 
     params = stack_for_nodes(mlp_init(jax.random.key(seed)), n)
-    flat, layout = pack(params, pad_to=scale_chunk)
     cfg = FLConfig(algorithm="dsgt", q=q, n_nodes=n)
-    spec = FusedRoundSpec(w=w, scale_chunk=scale_chunk, impl="pallas")
-    round_fn = jax.jit(
-        make_fl_round(mlp_loss, None, inv_sqrt(0.02), cfg, layout=layout, fused=spec)
+    engine, state0 = get_engine(fl_engine).simulated(
+        w, params, scale_chunk=scale_chunk, topk=topk, impl="pallas",
     )
-    state = init_fl_state(cfg, flat, fused=True)
+    loss_fn = make_mlp_loss(class_weights(class_weight))
+    round_fn = jax.jit(
+        make_fl_round(loss_fn, None, inv_sqrt(0.02), cfg, engine=engine)
+    )
+    state = init_fl_state(cfg, state0, engine=engine)
 
-    # Wire accounting: the fused engine ships int8 payloads + one fp32
-    # scale per (node, scale_chunk) block (padding included -- it travels);
-    # the plain engine ships the unpadded pytree in fp32. DSGT ships
-    # params AND tracker on both.
+    # Wire accounting: the fused engines ship int8 (or top-k sparsified)
+    # payloads + one fp32 scale per (node, scale_chunk) block (padding
+    # included -- it travels) and report it in the wire_bytes metric; the
+    # exact-wire engines (tree/flat) ship the unpadded pytree in fp32.
+    # DSGT ships params AND tracker on both.
+    n_params = sum(
+        int(np.prod(l.shape[1:])) for l in jax.tree_util.tree_leaves(params)
+    )
     degrees = (w - np.diag(np.diag(w)) > 0).sum(axis=1)
-    fp32_bytes = float(2 * degrees.sum() * layout.used * 4)
+    fp32_bytes = float(2 * degrees.sum() * n_params * 4)
+    engine_bytes = engine.wire_bytes(cfg)  # None: engine ships the fp32 wire
+    layout_note = (
+        f"{n_params} params -> {engine.layout.total} padded, "
+        f"chunk={scale_chunk}, topk={topk}"
+        if engine.layout is not None else f"{n_params} params, exact fp32 wire"
+    )
+    wire_label = (
+        "fp32" if engine_bytes is None else f"top-{topk}" if topk else "int8"
+    )
 
-    print(f"\nFused flat engine (FD-DSGT, Q={q}, hospital graph, "
-          f"{layout.used} params -> {layout.total} padded, chunk={scale_chunk}):")
+    print(f"\n{fl_engine} engine (FD-DSGT, Q={q}, hospital graph, "
+          f"class_weight={class_weight}, {layout_note}):")
     m = None
     for rnd in range(1, rounds + 1):
         qs = [next(batcher) for _ in range(q)]
         batches = jax.tree_util.tree_map(lambda *xs: np.stack(xs), *qs)
         state, m = round_fn(state, batches)
         if rnd % max(1, rounds // 5) == 0 or rnd == 1:
+            per_round = float(m.get("wire_bytes", fp32_bytes))
             print(f"  [round {rnd:4d}] loss={float(m['loss']):.4f} "
                   f"consensus_err={float(m['consensus_err']):.2e} "
-                  f"comm_bytes/round={float(m['wire_bytes']):,.0f} (int8 fused) "
+                  f"comm_bytes/round={per_round:,.0f} ({wire_label} wire) "
                   f"vs {fp32_bytes:,.0f} (fp32 wire)")
 
     consensus = jax.tree_util.tree_map(
-        lambda p: jnp.mean(p, axis=0), unpack(state.params, layout)
+        lambda p: jnp.mean(p, axis=0), engine.params_view(state.params)
     )
     xall = jnp.asarray(np.concatenate(data.features))
     yall = jnp.asarray(np.concatenate(data.labels))
     acc = float(mlp_accuracy(consensus, xall, yall))
-    int8_bytes = float(m["wire_bytes"])
-    print(f"  final acc={acc:.3f}  wire saving: {fp32_bytes / int8_bytes:.2f}x "
+    bal = float(mlp_balanced_accuracy(consensus, xall, yall))
+    wire_bytes = float(m.get("wire_bytes", fp32_bytes))
+    saving = fp32_bytes / wire_bytes
+    print(f"  final acc={acc:.3f} bal_acc={bal:.3f}  "
+          f"wire saving: {saving:.2f}x "
           f"bytes/round on top of the {q}x round saving (Q={q} local steps "
-          f"per exchange) => {q * fp32_bytes / int8_bytes:.0f}x fewer bytes "
+          f"per exchange) => {q * saving:.0f}x fewer bytes "
           f"per iteration than comm-every-step fp32 gossip")
-    return acc
+    return {"acc": acc, "bal_acc": bal, "wire_saving": saving}
 
 
 def main() -> None:
@@ -108,6 +140,22 @@ def main() -> None:
                     help="comm rounds for the fused-engine demo (part 2)")
     ap.add_argument("--fused-q", type=int, default=10,
                     help="local steps per comm round for the fused demo")
+    # same registry as launch/dryrun.py; mesh-only engines are excluded
+    # up front (this is a single-host driver) instead of crashing after
+    # the expensive part-1 run
+    ap.add_argument("--fl-engine", default="fused",
+                    choices=[n for n in engine_names()
+                             if not get_engine(n).needs_mesh],
+                    help="registry engine for part 2 (same names as "
+                         "launch/dryrun.py --fl-engine; mesh-only engines "
+                         "need launch/dryrun.py)")
+    ap.add_argument("--topk", type=int, default=None,
+                    help="fused engines: k payload columns per scale chunk")
+    ap.add_argument("--class-weight", default=CLASS_WEIGHT,
+                    help="part-2 loss weighting: 'balanced' (inverse "
+                         "frequency, lifts balanced accuracy off the ~0.6 "
+                         "saturation) or 'none' for the paper-faithful "
+                         "unweighted loss")
     args = ap.parse_args()
 
     results = run(iterations=args.iterations)
@@ -128,12 +176,20 @@ def main() -> None:
     for k, v in to_t.items():
         print(f"  {k:18s} {v:8.0f}")
 
-    run_fused_engine(rounds=args.fused_rounds, q=args.fused_q)
+    part2 = run_fused_engine(rounds=args.fused_rounds, q=args.fused_q,
+                             fl_engine=args.fl_engine, topk=args.topk,
+                             class_weight=None if args.class_weight == "none"
+                             else args.class_weight)
 
     print("\nPaper claims validated:")
     print("  * FD variants converge with ~2 orders of magnitude fewer comm rounds")
     print("  * all four algorithms reach comparable loss at the same iteration budget")
-    print("  * the fused engine ships the same rounds in ~3.7x fewer bytes (int8 wire)")
+    if part2["wire_saving"] > 1.0:
+        print(f"  * the {args.fl_engine} engine shipped the same rounds in "
+              f"{part2['wire_saving']:.1f}x fewer bytes than the fp32 wire")
+    else:
+        print(f"  * the {args.fl_engine} engine ships the exact fp32 wire "
+              "(use fused engines +/- --topk for the byte savings)")
 
 
 if __name__ == "__main__":

@@ -5,6 +5,8 @@ Public API:
     topology  — graphs + mixing matrices (Assumption 1 machinery)
     packing   — flat-buffer engine: pytree <-> one (nodes, total) buffer
     mixing    — gossip backends (dense-W simulated, ppermute mesh, all-gather)
+    engine    — the GossipEngine protocol + registry (tree / flat / fused /
+                sharded_fused) behind make_fl_round(engine=...)
     fl        — FLState + DSGD/DSGT/FD round builders + baselines
     schedules — alpha^r schedules (paper's 0.02/sqrt(r), Theorem 1 rate, ...)
 """
@@ -16,10 +18,19 @@ from repro.core.compression import (
     make_compressed_flat_gossip,
     quantize_int8,
 )
+from repro.core.engine import (
+    FlatEngine,
+    FusedEngine,
+    GossipEngine,
+    ShardedFusedEngine,
+    TreeEngine,
+    engine_names,
+    get_engine,
+    register_engine,
+)
 from repro.core.fl import (
     FLConfig,
     FLState,
-    FusedRoundSpec,
     consensus_params,
     init_fl_state,
     make_fl_round,
@@ -64,7 +75,14 @@ __all__ = [
     "make_dense_flat_mix",
     "FLConfig",
     "FLState",
-    "FusedRoundSpec",
+    "GossipEngine",
+    "TreeEngine",
+    "FlatEngine",
+    "FusedEngine",
+    "ShardedFusedEngine",
+    "register_engine",
+    "get_engine",
+    "engine_names",
     "consensus_params",
     "init_fl_state",
     "make_fl_round",

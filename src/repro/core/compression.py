@@ -109,6 +109,7 @@ def make_compressed_flat_gossip(
     difference_coding: bool = True,
     scale_chunk: int = DEFAULT_SCALE_CHUNK,
     impl: str = "jnp",
+    topk: int | None = None,
 ) -> FlatGossipFn:
     """Flat-native CHOCO-style gossip on the packed ``(nodes, total)``
     buffer (``total`` must be a multiple of ``scale_chunk``; pack with
@@ -132,7 +133,10 @@ def make_compressed_flat_gossip(
     ``impl="jnp"`` runs the chunked jnp reference; ``impl="pallas"`` the
     fused VMEM-tiled kernel (``repro.kernels.gossip``) that computes
     quantize -> W-row mix -> dequant + EF in one pass with no materialized
-    full-size payload/dq/recon intermediates.
+    full-size payload/dq/recon intermediates. ``topk=k`` ships only the k
+    largest-|payload| columns per scale chunk (sub-int8 wire bytes; the EF
+    residual absorbs the truncation, so consensus contraction survives --
+    property-tested in tests/test_topk_property.py).
     """
     if impl == "jnp":
         from repro.kernels.gossip.ref import gossip_mix_ref as mix_impl
@@ -154,6 +158,7 @@ def make_compressed_flat_gossip(
             scale_chunk=scale_chunk,
             error_feedback=error_feedback,
             difference_coding=difference_coding,
+            topk=topk,
         )
         return mixed.astype(flat.dtype), {"recon": recon, "residual": res}
 

@@ -1,0 +1,848 @@
+"""GossipEngine protocol: ONE pluggable layer behind ``make_fl_round``.
+
+Historically the round machinery grew three divergent call paths -- the
+node-stacked pytree path, the flat ``(nodes, total)`` buffer path
+(``layout=``), and the fused round megakernel (``fused=``) -- selected by
+a kwarg maze in ``core.fl`` and string-dispatched if-chains in the
+launchers. This module replaces all of that with a small protocol:
+
+    init_comm_state(cfg, params)  extra wire state carried in FLState.comm
+    local_step(params, grads, a)  the SGD update in the engine's own
+                                  state representation
+    mix(buf)                      exact-wire W application (tree/flat
+                                  engines; fused engines mix inside their
+                                  comm step instead)
+    wire_bytes(cfg)               per-round egress accounting (all nodes)
+
+plus two build hooks ``make_eval_grads`` (representation adapter around
+the vmapped grad fn) and ``make_comm_step`` (the whole communication
+step; the base class provides the paper's exact-wire mix-then-adapt
+Eqs. 2/3, fused engines override it with adapt-then-combine kernels).
+
+Shipped engines (the registry keys are what ``--fl-engine`` accepts
+everywhere -- launch/dryrun.py, launch/train.py, examples -- so names
+cannot drift):
+
+    tree           node-stacked pytree state + any tree-level gossip
+                   backend (dense-W simulated, mesh ppermute, all-gather)
+    flat           the state IS one packed (nodes, total) fp32 buffer;
+                   mixing is one matmul / ppermute / all-gather on it
+    fused          the round megakernel: local update + int8 quantize +
+                   W mix + error feedback in ONE Pallas call
+                   (``kernels.gossip``), CHOCO difference-coded wire
+    sharded_fused  the shard_map-native fused round: every device owns
+                   its node's W row and its rows of the flat buffer, the
+                   wire stage (update + top-k + int8 quantize + EF) is
+                   ONE Pallas call per round, and the int8 payload moves
+                   via ppermute (circulant torus/ring W) or all-gather
+                   (arbitrary dense W)
+
+``topk=`` on the fused engines masks the payload to the k largest-|.|
+columns per scale chunk inside the kernel; the EF residual absorbs the
+truncation, and wire bytes drop below the dense-int8 floor
+(``packing.flat_wire_bytes``).
+
+How the sharded engine stays O(params/node) per device: a CHOCO node
+needs ``sum_j W_ij recon_j`` over its neighbors' reconstructions, but
+``recon_j`` only ever advances by the dequantized wire payload
+``dq_j``, so each node carries a running accumulator
+
+    mix_recon_i  <-  mix_recon_i + sum_j W_ij dq_j        (one buffer)
+    mixed_i       =  w_ii * h_i + mix_recon_i'
+
+which equals the dense megakernel's ``W_off @ recon' + w_self * h`` row
+exactly (up to summation order) without ever materializing neighbor
+state. ``mix_recon`` rides in ``FLState.comm`` next to recon/residual.
+"""
+
+from __future__ import annotations
+
+import abc
+from typing import Any, Callable, ClassVar, Dict, Optional, Sequence, Tuple, Type
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, PartitionSpec as P
+
+from repro.core.fl import (
+    FLConfig,
+    FLState,
+    _consensus_error,
+    _mean_grad_norm_sq,
+)
+from repro.core.mixing import (
+    GossipFn,
+    _allgather_row,
+    _mesh_dirs,
+    _shard_map,
+    _split_w,
+    make_dense_flat_mix,
+    make_dense_gossip,
+    make_mesh_flat_mix,
+    make_mesh_gossip,
+    mesh_gossip_dense_equivalent,
+)
+from repro.core.packing import (
+    FlatLayout,
+    flat_wire_bytes,
+    pack,
+    pack_layout,
+    pack_like,
+    unpack,
+)
+
+PyTree = Any
+
+__all__ = [
+    "GossipEngine",
+    "TreeEngine",
+    "FlatEngine",
+    "FusedEngine",
+    "ShardedFusedEngine",
+    "register_engine",
+    "get_engine",
+    "engine_names",
+]
+
+
+def _tm(f, *trees):
+    return jax.tree_util.tree_map(f, *trees)
+
+
+def _check_flat_params(cfg: FLConfig, params: PyTree, name: str) -> None:
+    leaves = jax.tree_util.tree_leaves(params)
+    if not leaves:
+        raise ValueError("empty parameter pytree")
+    for leaf in leaves:
+        if leaf.shape[:1] != (cfg.n_nodes,):
+            raise ValueError(
+                f"param leaf {leaf.shape} is not node-stacked for n={cfg.n_nodes}"
+            )
+    if len(leaves) != 1 or leaves[0].ndim != 2:
+        raise ValueError(
+            f"{name} engine state must be the packed (nodes, total) flat "
+            "buffer (core.packing.pack)"
+        )
+
+
+def _make_flat_eval_grads(layout: FlatLayout, grad_fn):
+    def eval_grads(params: jnp.ndarray, batch: PyTree):
+        # The tree view exists only inside this call; XLA lowers the
+        # unpack/pack pair to slices/concat and fuses them away.
+        losses, grads = grad_fn(unpack(params, layout), batch)
+        return losses, pack_like(grads, layout)
+
+    return eval_grads
+
+
+# ---------------------------------------------------------------------------
+# The protocol
+# ---------------------------------------------------------------------------
+
+
+class GossipEngine(abc.ABC):
+    """One round engine: state representation + wire + mixing semantics.
+
+    Subclasses set ``name`` (the registry key) and ``layout`` (the
+    :class:`FlatLayout` for flat-state engines, None for tree state), and
+    either implement :meth:`mix` (exact-wire engines; the base
+    :meth:`make_comm_step` then runs the paper's mix-then-adapt Eqs. 2/3)
+    or override :meth:`make_comm_step` entirely (fused engines).
+    """
+
+    name: ClassVar[str] = "abstract"
+    #: True for engines that only run on a device mesh (no ``simulated``)
+    needs_mesh: ClassVar[bool] = False
+    layout: Optional[FlatLayout] = None
+
+    # -- protocol ----------------------------------------------------------
+
+    def comm_keys(self, cfg: FLConfig) -> Tuple[str, ...]:
+        """Names of the engine's extra wire-state buffers (each a
+        ``(nodes, layout.total)`` fp32 array in ``FLState.comm``)."""
+        return ()
+
+    def init_comm_state(
+        self, cfg: FLConfig, params: PyTree
+    ) -> Optional[Dict[str, jnp.ndarray]]:
+        """Zero-initialized wire state (zeros = the first round
+        effectively transmits the full parameters)."""
+        keys = self.comm_keys(cfg)
+        if not keys:
+            return None
+        leaves = jax.tree_util.tree_leaves(params)
+        z = jnp.zeros(leaves[0].shape, jnp.float32)
+        return {k: z for k in keys}
+
+    def local_step(self, params: PyTree, grads: PyTree, alpha) -> PyTree:
+        """Eq. 4 in the engine's state representation (works unchanged for
+        tree state and for the single-leaf flat buffer)."""
+        return _tm(lambda p, g: p - alpha * g.astype(p.dtype), params, grads)
+
+    def mix(self, buf: PyTree) -> PyTree:
+        """Exact-wire W application (theta <- W theta) on the engine's
+        state representation. Fused engines do not expose a standalone
+        mix -- their W lives inside the comm-step kernel."""
+        raise NotImplementedError(
+            f"{type(self).__name__} mixes inside its fused comm step"
+        )
+
+    def wire_bytes(self, cfg: FLConfig) -> Optional[float]:
+        """Per-round egress summed over all nodes (None: engine does not
+        account -- e.g. the tree engine, whose payload depends on the
+        pytree; see training.metrics.comm_bytes_per_gossip)."""
+        return None
+
+    # -- round building ----------------------------------------------------
+
+    def check_params(self, cfg: FLConfig, params: PyTree) -> None:
+        """Validate the initial state representation (called by
+        ``init_fl_state``); base checks node-stacking only."""
+        leaves = jax.tree_util.tree_leaves(params)
+        if not leaves:
+            raise ValueError("empty parameter pytree")
+        for leaf in leaves:
+            if leaf.shape[:1] != (cfg.n_nodes,):
+                raise ValueError(
+                    f"param leaf {leaf.shape} is not node-stacked for "
+                    f"n={cfg.n_nodes}"
+                )
+
+    def make_eval_grads(self, grad_fn):
+        """Adapt the vmapped per-node grad fn to the engine's state
+        representation (identity for tree state)."""
+        return grad_fn
+
+    def params_view(self, params: PyTree) -> PyTree:
+        """The pytree view of the engine's parameter state (unpacks flat
+        buffers; identity for tree state)."""
+        if self.layout is None:
+            return params
+        return unpack(params, self.layout)
+
+    def init_state(self, cfg: FLConfig, params: PyTree) -> FLState:
+        from repro.core.fl import init_fl_state
+
+        return init_fl_state(cfg, params, engine=self)
+
+    def restore_comm(
+        self, comm: Dict[str, jnp.ndarray]
+    ) -> Dict[str, jnp.ndarray]:
+        """Rebuild DERIVED wire-state buffers after a checkpoint restore
+        (identity for engines whose comm buffers are all independent)."""
+        return comm
+
+    def make_comm_step(self, eval_grads, schedule, cfg: FLConfig):
+        """Default EXACT-WIRE comm step: ``self.mix`` applies W, then the
+        optimizer update (mix-then-adapt, the paper's Eqs. 2/3)."""
+        mix = self.mix
+        wire = self.wire_bytes(cfg)
+
+        def comm_step(state: FLState, batch: PyTree):
+            step = state.step + 1
+            alpha = schedule(step)
+            losses, grads = eval_grads(state.params, batch)
+
+            if cfg.algorithm == "dsgd":
+                params = _tm(
+                    lambda wp, g: wp - alpha * g.astype(wp.dtype),
+                    mix(state.params), grads,
+                )
+                new_state = state._replace(step=step, params=params)
+            else:
+                tracker = _tm(
+                    lambda wt, gn, gp: wt + gn.astype(wt.dtype) - gp,
+                    mix(state.tracker), grads, state.prev_grad,
+                )
+                params = _tm(
+                    lambda wp, t: wp - alpha * t, mix(state.params), tracker
+                )
+                new_state = state._replace(
+                    step=step,
+                    params=params,
+                    tracker=tracker,
+                    prev_grad=_tm(
+                        lambda g, p: g.astype(p.dtype), grads, state.prev_grad
+                    ),
+                )
+
+            metrics = {
+                "loss": jnp.mean(losses),
+                "alpha": alpha,
+                "grad_norm_sq": _mean_grad_norm_sq(grads),
+                "consensus_err": _consensus_error(new_state.params),
+                "comm_rounds": jnp.float32(1.0),
+            }
+            if wire is not None:
+                metrics["wire_bytes"] = jnp.float32(wire)
+            return new_state, metrics
+
+        return comm_step
+
+
+# ---------------------------------------------------------------------------
+# Registry
+# ---------------------------------------------------------------------------
+
+_REGISTRY: Dict[str, Type[GossipEngine]] = {}
+
+
+def register_engine(cls: Type[GossipEngine]) -> Type[GossipEngine]:
+    """Class decorator: make ``cls`` resolvable by ``get_engine(cls.name)``.
+    The registry is the ONE list of engine names every CLI / example /
+    checkpoint manifest consults -- never hardcode the strings."""
+    if cls.name in _REGISTRY:
+        raise ValueError(f"duplicate engine name {cls.name!r}")
+    _REGISTRY[cls.name] = cls
+    return cls
+
+
+def get_engine(name: str) -> Type[GossipEngine]:
+    try:
+        return _REGISTRY[name]
+    except KeyError:
+        raise ValueError(
+            f"unknown engine {name!r}; registered: {engine_names()}"
+        ) from None
+
+
+def engine_names() -> Tuple[str, ...]:
+    return tuple(sorted(_REGISTRY))
+
+
+# ---------------------------------------------------------------------------
+# Exact-wire engines
+# ---------------------------------------------------------------------------
+
+
+@register_engine
+class TreeEngine(GossipEngine):
+    """Node-stacked pytree state; mixing delegated to any tree-level
+    gossip backend from ``core.mixing`` (dense-W simulated, mesh
+    ppermute, all-gather)."""
+
+    name = "tree"
+
+    def __init__(self, gossip: GossipFn):
+        self._gossip = gossip
+
+    def mix(self, tree: PyTree) -> PyTree:
+        return self._gossip(tree)
+
+    @classmethod
+    def simulated(cls, w: np.ndarray, stacked_params: PyTree, *,
+                  wire_dtype=None, topk=None, **_ignored):
+        """Single-host build: dense-W backend; state stays the input tree."""
+        _reject_topk(topk, cls.name)
+        return cls(make_dense_gossip(w, wire_dtype)), stacked_params
+
+    @classmethod
+    def from_mesh(cls, mesh: Mesh, node_axes: Sequence[str], stacked_sds,
+                  *, specs=None, wire_dtype=None, axes_subset=None,
+                  topk=None, **_ignored):
+        _reject_topk(topk, cls.name)
+        if specs is None:
+            raise ValueError("tree engine from_mesh needs the param specs")
+        return cls(
+            make_mesh_gossip(mesh, node_axes, specs, wire_dtype=wire_dtype,
+                             axes_subset=axes_subset)
+        )
+
+
+@register_engine
+class FlatEngine(GossipEngine):
+    """The state is ONE packed ``(nodes, total)`` fp32 buffer end to end;
+    mixing is a flat-native backend (one matmul / one ppermute per torus
+    direction / one all-gather per round, independent of leaf count)."""
+
+    name = "flat"
+
+    def __init__(self, mix_fn: Callable[[jnp.ndarray], jnp.ndarray],
+                 layout: FlatLayout):
+        self._mix = mix_fn
+        self.layout = layout
+
+    def mix(self, flat: jnp.ndarray) -> jnp.ndarray:
+        return self._mix(flat)
+
+    def check_params(self, cfg: FLConfig, params: PyTree) -> None:
+        _check_flat_params(cfg, params, self.name)
+
+    def make_eval_grads(self, grad_fn):
+        return _make_flat_eval_grads(self.layout, grad_fn)
+
+    @classmethod
+    def simulated(cls, w: np.ndarray, stacked_params: PyTree, *,
+                  scale_chunk: int = 1, wire_dtype=None, topk=None,
+                  **_ignored):
+        _reject_topk(topk, cls.name)
+        flat, layout = pack(stacked_params, pad_to=scale_chunk)
+        return cls(make_dense_flat_mix(w, wire_dtype), layout), flat
+
+    @classmethod
+    def from_mesh(cls, mesh: Mesh, node_axes: Sequence[str], stacked_sds,
+                  *, wire_dtype=None, axes_subset=None, scale_chunk: int = 512,
+                  topk=None, **_ignored):
+        _reject_topk(topk, cls.name)
+        layout = pack_layout(stacked_sds, pad_to=scale_chunk)
+        return cls(
+            make_mesh_flat_mix(mesh, node_axes, wire_dtype=wire_dtype,
+                               axes_subset=axes_subset),
+            layout,
+        )
+
+
+# ---------------------------------------------------------------------------
+# Fused engines
+# ---------------------------------------------------------------------------
+
+
+_WIRE_DTYPE_MSG = (
+    "the fused engines' wire is always difference-coded int8; wire_dtype "
+    "only applies to the tree/flat exact-wire engines"
+)
+
+
+def _reject_wire_dtype(wire_dtype) -> None:
+    if wire_dtype is not None:
+        raise ValueError(_WIRE_DTYPE_MSG)
+
+
+def _reject_topk(topk, name: str) -> None:
+    if topk is not None:
+        raise ValueError(
+            f"topk is a fused-engine knob (sub-int8 sparsified wire); the "
+            f"{name!r} engine ships an exact wire -- use 'fused' or "
+            "'sharded_fused'"
+        )
+
+
+def _split_w_np(w: np.ndarray, n: int):
+    """Shape-checked (w, diag, off-diag) via ``mixing._split_w``."""
+    w = np.asarray(w, dtype=np.float64)
+    if w.shape != (n, n):
+        raise ValueError(f"W shape {w.shape} != ({n}, {n})")
+    w_self, w_off = _split_w(w)
+    return w, w_self, w_off
+
+
+def _degrees(w: np.ndarray) -> np.ndarray:
+    return (np.abs(w - np.diag(np.diag(w))) > 0).sum(axis=1)
+
+
+def _dequant(q: jnp.ndarray, scales: jnp.ndarray, scale_chunk: int):
+    """(n, t) int8 + (n, t//chunk) fp32 scales -> (n, t) fp32."""
+    n, t = q.shape
+    q3 = q.astype(jnp.float32).reshape(n, t // scale_chunk, scale_chunk)
+    return (q3 * scales[:, :, None]).reshape(n, t)
+
+
+class _FusedBase(GossipEngine):
+    """Shared knobs + validation of the fused (CHOCO int8 wire) engines."""
+
+    def __init__(self, layout: FlatLayout, *, scale_chunk: int = 512,
+                 topk: Optional[int] = None, error_feedback: bool = True,
+                 difference_coding: bool = True, impl: str = "pallas"):
+        if impl not in ("pallas", "jnp"):
+            raise ValueError(f"unknown impl {impl!r}")
+        if scale_chunk < 1:
+            raise ValueError("scale_chunk must be >= 1")
+        if topk is not None and not (1 <= topk):
+            raise ValueError("topk must be >= 1 or None")
+        if layout.total % scale_chunk:
+            raise ValueError(
+                f"layout.total {layout.total} not a multiple of scale_chunk "
+                f"{scale_chunk}; pack with pad_to={scale_chunk}"
+            )
+        self.layout = layout
+        self.scale_chunk = scale_chunk
+        self.topk = topk
+        self.error_feedback = error_feedback
+        self.difference_coding = difference_coding
+        self.impl = impl
+
+    def check_params(self, cfg: FLConfig, params: PyTree) -> None:
+        _check_flat_params(cfg, params, self.name)
+
+    def make_eval_grads(self, grad_fn):
+        return _make_flat_eval_grads(self.layout, grad_fn)
+
+    def _kernel_kwargs(self):
+        return dict(
+            scale_chunk=self.scale_chunk,
+            error_feedback=self.error_feedback,
+            difference_coding=self.difference_coding,
+            topk=self.topk,
+        )
+
+    def _edge_bytes(self) -> int:
+        """Wire bytes one node ships to ONE neighbor per wire per round."""
+        return flat_wire_bytes(self.layout, 1, self.scale_chunk, self.topk)
+
+
+@register_engine
+class FusedEngine(_FusedBase):
+    """The round megakernel on a dense compile-time W: local update + int8
+    quantize (top-k sparsified when ``topk`` is set) + W-row mix + error
+    feedback, ONE Pallas call per comm round (``kernels.gossip``;
+    ``impl="jnp"`` runs the bit-identical chunked oracle, which is what
+    GSPMD partitions in the sharded dry run)."""
+
+    name = "fused"
+
+    def __init__(self, w: np.ndarray, layout: FlatLayout, **kw):
+        super().__init__(layout, **kw)
+        self.w = np.asarray(w, dtype=np.float64)
+
+    def comm_keys(self, cfg: FLConfig) -> Tuple[str, ...]:
+        keys = ("recon", "residual")
+        if cfg.algorithm == "dsgt":
+            keys += ("recon_t", "residual_t")
+        return keys
+
+    def wire_bytes(self, cfg: FLConfig) -> float:
+        wires = 2 if cfg.algorithm == "dsgt" else 1
+        return float(wires * _degrees(self.w).sum() * self._edge_bytes())
+
+    def make_comm_step(self, eval_grads, schedule, cfg: FLConfig):
+        _, w_self, w_off = _split_w_np(self.w, cfg.n_nodes)
+        if self.impl == "pallas":
+            from repro.kernels.gossip.ops import fused_round, fused_round_gt
+        else:
+            from repro.kernels.gossip.ref import (
+                fused_round_gt_ref as fused_round_gt,
+                fused_round_ref as fused_round,
+            )
+        kw = self._kernel_kwargs()
+        egress = self.wire_bytes(cfg)
+
+        def comm_step(state: FLState, batch: PyTree):
+            if state.comm is None:
+                raise ValueError(
+                    "fused rounds need init_fl_state(..., engine=...)"
+                )
+            step = state.step + 1
+            alpha = schedule(step)
+            losses, grads = eval_grads(state.params, batch)
+            grads = grads.astype(jnp.float32)
+
+            if cfg.algorithm == "dsgd":
+                mixed, recon, res, _ = fused_round(
+                    state.params, grads, state.comm["recon"],
+                    state.comm["residual"], w_off, w_self, alpha, **kw,
+                )
+                new_state = state._replace(
+                    step=step, params=mixed,
+                    comm={"recon": recon, "residual": res},
+                )
+            else:
+                mx, mt, nrx, nsx, nrt, nst, _, _ = fused_round_gt(
+                    state.params, state.tracker, grads, state.prev_grad,
+                    state.comm["recon"], state.comm["residual"],
+                    state.comm["recon_t"], state.comm["residual_t"],
+                    w_off, w_self, alpha, **kw,
+                )
+                new_state = FLState(
+                    step=step, params=mx, tracker=mt, prev_grad=grads,
+                    comm={"recon": nrx, "residual": nsx,
+                          "recon_t": nrt, "residual_t": nst},
+                )
+
+            metrics = {
+                "loss": jnp.mean(losses),
+                "alpha": alpha,
+                "grad_norm_sq": _mean_grad_norm_sq(grads),
+                "consensus_err": _consensus_error(new_state.params),
+                "comm_rounds": jnp.float32(1.0),
+                "wire_bytes": jnp.float32(egress),
+            }
+            return new_state, metrics
+
+        return comm_step
+
+    @classmethod
+    def simulated(cls, w: np.ndarray, stacked_params: PyTree, *,
+                  scale_chunk: int = 512, topk=None, impl: str = "pallas",
+                  error_feedback: bool = True, difference_coding: bool = True,
+                  wire_dtype=None, **_ignored):
+        _reject_wire_dtype(wire_dtype)
+        flat, layout = pack(stacked_params, pad_to=scale_chunk)
+        return cls(w, layout, scale_chunk=scale_chunk, topk=topk, impl=impl,
+                   error_feedback=error_feedback,
+                   difference_coding=difference_coding), flat
+
+    @classmethod
+    def from_mesh(cls, mesh: Mesh, node_axes: Sequence[str], stacked_sds,
+                  *, wire_dtype=None, axes_subset=None, scale_chunk: int = 512,
+                  topk=None, impl: str = "jnp", error_feedback: bool = True,
+                  difference_coding: bool = True, self_weight=None,
+                  **_ignored):
+        """Mesh build: W is the dense equivalent of the circulant torus the
+        ppermute backend realizes over the node axes (directions restricted
+        to ``axes_subset`` for hierarchical gossip). ``impl`` defaults to
+        the jnp oracle, which GSPMD partitions in lowering-only dry runs."""
+        _reject_wire_dtype(wire_dtype)
+        w = mesh_gossip_dense_equivalent(
+            {a: mesh.shape[a] for a in node_axes}, self_weight=self_weight,
+            axes_subset=axes_subset,
+        )
+        layout = pack_layout(stacked_sds, pad_to=scale_chunk)
+        return cls(w, layout, scale_chunk=scale_chunk, topk=topk, impl=impl,
+                   error_feedback=error_feedback,
+                   difference_coding=difference_coding)
+
+
+@register_engine
+class ShardedFusedEngine(_FusedBase):
+    """The shard_map-native fused round for real meshes.
+
+    Each device owns its node's row of the flat buffer (sharded
+    ``P(node_axes, None)``) and its node's W row. Per round, inside ONE
+    shard_map body:
+
+      1. the WIRE STAGE -- local update (DSGD) / tracker arithmetic +
+         update (DSGT), difference coding, top-k masking, int8 quantize,
+         EF -- runs as ONE Pallas call on this shard's rows
+         (``kernels.gossip.wire_stage[_gt]``; ``impl="jnp"`` uses the
+         bit-identical oracle);
+      2. the int8 payload + fp32 scales cross the wire: one ``ppermute``
+         per torus direction for the circulant W realized by the mesh
+         node axes (``w=None``), or one ``all_gather`` over the node axes
+         for an arbitrary dense W;
+      3. the mix finishes against the running neighbor-reconstruction
+         accumulator: ``mix_recon' = mix_recon + sum_j W_ij dq_j``,
+         ``mixed = w_self * h + mix_recon'`` -- O(params/node) state,
+         bit-equal (up to summation order) to ``FusedEngine`` on the
+         dense equivalent W.
+    """
+
+    name = "sharded_fused"
+    needs_mesh = True
+
+    def __init__(self, mesh: Mesh, node_axes: Sequence[str],
+                 layout: FlatLayout, *, w: Optional[np.ndarray] = None,
+                 self_weight: Optional[float] = None, axes_subset=None, **kw):
+        super().__init__(layout, **kw)
+        self.mesh = mesh
+        self.node_axes = tuple(node_axes)
+        self.n_nodes = int(np.prod([mesh.shape[a] for a in self.node_axes]))
+        self.axes_subset = tuple(axes_subset) if axes_subset else None
+        self.self_weight = self_weight
+        if w is None:
+            # circulant torus W over the node axes: ppermute wire
+            self.w_dense = None
+            self.w_self, self.dirs = _mesh_dirs(
+                mesh, self.node_axes, self.axes_subset, self_weight
+            )
+        else:
+            w = np.asarray(w, dtype=np.float64)
+            if w.shape != (self.n_nodes,) * 2:
+                raise ValueError(
+                    f"W shape {w.shape} != ({self.n_nodes},) * 2"
+                )
+            self.w_dense = w
+            self.w_self, self.dirs = None, None
+
+    def comm_keys(self, cfg: FLConfig) -> Tuple[str, ...]:
+        keys = ("recon", "residual", "mix_recon")
+        if cfg.algorithm == "dsgt":
+            keys += ("recon_t", "residual_t", "mix_recon_t")
+        return keys
+
+    def dense_equivalent(self) -> np.ndarray:
+        """The dense W this engine realizes (the ``FusedEngine`` oracle)."""
+        if self.w_dense is not None:
+            return self.w_dense
+        return mesh_gossip_dense_equivalent(
+            {a: self.mesh.shape[a] for a in self.node_axes},
+            self_weight=self.self_weight,
+            axes_subset=self.axes_subset,
+        )
+
+    def wire_bytes(self, cfg: FLConfig) -> float:
+        wires = 2 if cfg.algorithm == "dsgt" else 1
+        return float(
+            wires * _degrees(self.dense_equivalent()).sum() * self._edge_bytes()
+        )
+
+    def restore_comm(
+        self, comm: Dict[str, jnp.ndarray]
+    ) -> Dict[str, jnp.ndarray]:
+        """The mix_recon accumulators are DERIVED state -- the invariant is
+        ``mix_recon == W_off @ recon`` at every round boundary -- so a
+        restore (possibly from a fused checkpoint that never had them)
+        rebuilds them from the restored recon instead of trusting whatever
+        the template carried."""
+        w = self.dense_equivalent()
+        w_off = jnp.asarray(w - np.diag(np.diag(w)), jnp.float32)
+        comm = dict(comm)
+        comm["mix_recon"] = w_off @ jnp.asarray(comm["recon"], jnp.float32)
+        if "recon_t" in comm:
+            comm["mix_recon_t"] = w_off @ jnp.asarray(
+                comm["recon_t"], jnp.float32
+            )
+        return comm
+
+    # -- the shard_map round ----------------------------------------------
+
+    def _wire_mix(self, q, scales, w_off_rows):
+        """Move the int8 payload and return ``sum_j W_ij dq_j`` for this
+        shard's rows. ``w_off_rows``: replicated (n, n) off-diagonal W
+        (dense wire only; None for the circulant ppermute wire)."""
+        ck = self.scale_chunk
+        if self.dirs is not None:
+            acc = jnp.zeros(q.shape, jnp.float32)
+            for axis_name, shift, weight in self.dirs:
+                size = self.mesh.shape[axis_name]
+                perm = [(i, (i + shift) % size) for i in range(size)]
+                qr = jax.lax.ppermute(q, axis_name, perm)  # int8 on the wire
+                sr = jax.lax.ppermute(scales, axis_name, perm)
+                acc = acc + jnp.float32(weight) * _dequant(qr, sr, ck)
+            return acc
+        # arbitrary dense W: ONE all-gather of the int8 payload + scales
+        n = self.n_nodes
+        qf = jax.lax.all_gather(q[0], self.node_axes, tiled=False)
+        sf = jax.lax.all_gather(scales[0], self.node_axes, tiled=False)
+        dq = _dequant(qf.reshape(n, -1), sf.reshape(n, -1), ck)
+        row = _allgather_row(self.mesh, self.node_axes, w_off_rows)  # (n,)
+        return (row @ dq)[None]
+
+    def _self_weight(self, w_diag):
+        if self.dirs is not None:
+            return jnp.float32(self.w_self)
+        idx = 0
+        for a in self.node_axes:
+            idx = idx * self.mesh.shape[a] + jax.lax.axis_index(a)
+        return jax.lax.dynamic_slice_in_dim(w_diag, idx, 1)[0]
+
+    def make_comm_step(self, eval_grads, schedule, cfg: FLConfig):
+        if cfg.n_nodes != self.n_nodes:
+            raise ValueError(
+                f"cfg.n_nodes {cfg.n_nodes} != mesh node axes product "
+                f"{self.n_nodes}"
+            )
+        if self.impl == "pallas":
+            from repro.kernels.gossip.ops import wire_stage, wire_stage_gt
+        else:
+            from repro.kernels.gossip.ref import (
+                wire_stage_gt_ref as wire_stage_gt,
+                wire_stage_ref as wire_stage,
+            )
+        kw = self._kernel_kwargs()
+        egress = self.wire_bytes(cfg)
+        spec = P(self.node_axes, None)
+        if self.w_dense is None:
+            # rank-matched placeholders; the circulant wire never reads them
+            w_diag = jnp.zeros((1,), jnp.float32)
+            w_off = jnp.zeros((1, 1), jnp.float32)
+        else:
+            _, w_diag, w_off = _split_w_np(self.w_dense, self.n_nodes)
+
+        # With difference coding, recon_j' = recon_j + dq_j, so the
+        # neighbor-mix term accumulates: mix_recon' = mix_recon + S W dq.
+        # WITHOUT it, recon_j' = dq_j alone, so the term is rebuilt from
+        # this round's wire and mix_recon stays zero (replace, don't sum).
+        dc = self.difference_coding
+
+        def body(x, g, recon, res, mix_recon, alpha, w_diag, w_off):
+            h, q, sc, nrecon, nres = wire_stage(x, g, recon, res, alpha, **kw)
+            mix_add = self._wire_mix(q, sc, w_off)
+            new_mix = mix_recon + mix_add if dc else mix_add
+            mixed = self._self_weight(w_diag) * h + new_mix
+            return mixed, nrecon, nres, new_mix
+
+        def body_gt(x, t, g, gp, rx, sx, mrx, rt, st, mrt, alpha, w_diag,
+                    w_off):
+            (h, t_half, qx, scx, nrx, nsx, qt, sct, nrt, nst) = wire_stage_gt(
+                x, t, g, gp, rx, sx, rt, st, alpha, **kw
+            )
+            w_self = self._self_weight(w_diag)
+            mix_x = self._wire_mix(qx, scx, w_off)
+            mix_t = self._wire_mix(qt, sct, w_off)
+            new_mrx = mrx + mix_x if dc else mix_x
+            new_mrt = mrt + mix_t if dc else mix_t
+            mixed_x = w_self * h + new_mrx
+            mixed_t = w_self * t_half + new_mrt
+            return mixed_x, mixed_t, nrx, nsx, new_mrx, nrt, nst, new_mrt
+
+        rep = P(None, None)
+        sm_dsgd = _shard_map(
+            body, mesh=self.mesh,
+            in_specs=(spec,) * 5 + (P(), P(None), rep),
+            out_specs=(spec,) * 4,
+        )
+        sm_dsgt = _shard_map(
+            body_gt, mesh=self.mesh,
+            in_specs=(spec,) * 10 + (P(), P(None), rep),
+            out_specs=(spec,) * 8,
+        )
+
+        def comm_step(state: FLState, batch: PyTree):
+            if state.comm is None:
+                raise ValueError(
+                    "fused rounds need init_fl_state(..., engine=...)"
+                )
+            step = state.step + 1
+            alpha = schedule(step)
+            losses, grads = eval_grads(state.params, batch)
+            grads = grads.astype(jnp.float32)
+            alpha32 = jnp.asarray(alpha, jnp.float32)
+
+            if cfg.algorithm == "dsgd":
+                mixed, nrecon, nres, new_mix = sm_dsgd(
+                    state.params, grads, state.comm["recon"],
+                    state.comm["residual"], state.comm["mix_recon"],
+                    alpha32, w_diag, w_off,
+                )
+                new_state = state._replace(
+                    step=step, params=mixed,
+                    comm={"recon": nrecon, "residual": nres,
+                          "mix_recon": new_mix},
+                )
+            else:
+                (mx, mt, nrx, nsx, nmrx, nrt, nst, nmrt) = sm_dsgt(
+                    state.params, state.tracker, grads, state.prev_grad,
+                    state.comm["recon"], state.comm["residual"],
+                    state.comm["mix_recon"], state.comm["recon_t"],
+                    state.comm["residual_t"], state.comm["mix_recon_t"],
+                    alpha32, w_diag, w_off,
+                )
+                new_state = FLState(
+                    step=step, params=mx, tracker=mt, prev_grad=grads,
+                    comm={"recon": nrx, "residual": nsx, "mix_recon": nmrx,
+                          "recon_t": nrt, "residual_t": nst,
+                          "mix_recon_t": nmrt},
+                )
+
+            metrics = {
+                "loss": jnp.mean(losses),
+                "alpha": alpha,
+                "grad_norm_sq": _mean_grad_norm_sq(grads),
+                "consensus_err": _consensus_error(new_state.params),
+                "comm_rounds": jnp.float32(1.0),
+                "wire_bytes": jnp.float32(egress),
+            }
+            return new_state, metrics
+
+        return comm_step
+
+    @classmethod
+    def simulated(cls, w, stacked_params, **_ignored):
+        raise ValueError(
+            "sharded_fused needs a device mesh (use from_mesh); on a single "
+            "host use the 'fused' engine -- identical math, dense W"
+        )
+
+    @classmethod
+    def from_mesh(cls, mesh: Mesh, node_axes: Sequence[str], stacked_sds,
+                  *, wire_dtype=None, axes_subset=None, scale_chunk: int = 512,
+                  topk=None, impl: str = "pallas", w=None,
+                  error_feedback: bool = True, difference_coding: bool = True,
+                  self_weight=None, **_ignored):
+        _reject_wire_dtype(wire_dtype)
+        layout = pack_layout(stacked_sds, pad_to=scale_chunk)
+        return cls(mesh, node_axes, layout, w=w, axes_subset=axes_subset,
+                   self_weight=self_weight, scale_chunk=scale_chunk,
+                   topk=topk, impl=impl, error_feedback=error_feedback,
+                   difference_coding=difference_coding)

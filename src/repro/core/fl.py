@@ -2,23 +2,25 @@
 
 Implements the paper's Algorithm 1 and both base optimizers as pure JAX
 step builders operating on **node-stacked** state (every parameter leaf
-carries a leading ``nodes`` axis). The same code runs:
+carries a leading ``nodes`` axis). All state representation, mixing, and
+wire concerns live behind the :class:`repro.core.engine.GossipEngine`
+protocol -- ``make_fl_round`` builds ONE round function for whichever
+engine it is handed:
 
-* *simulated*  -- single device, nodes as a vmap axis (the EHR experiments
-  and all CPU tests), with a dense-W gossip backend;
-* *sharded*    -- nodes sharded over the (pod, data) mesh axes, gossip via
-  the ppermute backend; the node axis is a pure map dimension so local
-  steps lower with ZERO cross-node collectives (verified in the dry-run);
-* *flat*       -- either of the above with the state packed into a single
-  ``(nodes, total_params)`` buffer (``core.packing``): pass ``layout=`` to
-  ``make_fl_round`` and a flat-native gossip backend, and the optimizer
-  update, metrics, and mixing all become single-buffer ops instead of
-  per-leaf traversals (benchmarks/gossip_bench.py);
-* *fused*      -- the flat mode with ``fused=FusedRoundSpec(...)``: the
+* ``tree``          -- nodes as a vmap axis over the parameter pytree,
+  mixing via any tree-level gossip backend (dense-W simulated, ppermute
+  mesh, all-gather); the EHR experiments and all CPU tests;
+* ``flat``          -- the state packed into a single ``(nodes,
+  total_params)`` buffer (``core.packing``): optimizer update, metrics,
+  and mixing are single-buffer ops instead of per-leaf traversals;
+* ``fused``         -- the flat state with the round megakernel: the
   whole communication step (local update + int8 quantize + W mix + EF
-  residual, for DSGD and DSGT alike) is ONE round-megakernel call on the
-  flat buffers (``repro.kernels.gossip``), and the int8 compression state
-  rides along in ``FLState.comm``.
+  residual, optionally top-k sparsified, for DSGD and DSGT alike) is ONE
+  Pallas call (``repro.kernels.gossip``), with the compression state in
+  ``FLState.comm``;
+* ``sharded_fused`` -- the shard_map-native fused round for real meshes:
+  one wire-stage kernel per round per shard, int8 payload moved by
+  ppermute (circulant W) or all-gather (dense W).
 
 Update equations (r is the global iteration counter, 1-indexed):
 
@@ -41,7 +43,7 @@ Update equations (r is the global iteration counter, 1-indexed):
 
   is preserved by any doubly-stochastic W and is property-tested.
 
-  The FUSED comm step uses the adapt-then-combine ordering (update first,
+  The FUSED engines use the adapt-then-combine ordering (update first,
   then mix the half-updated state) so the megakernel quantizes exactly
   what goes on the wire:
 
@@ -51,9 +53,10 @@ Update equations (r is the global iteration counter, 1-indexed):
              theta  <- sum_j W_ij Q[theta_j - alpha^r vtheta_half_j]
 
   with Q[.] the difference-coded int8 quantizer with error feedback
-  (CHOCO-style; exact in the consensus limit). Both orderings satisfy the
-  same Theorem 1 style guarantees; the fused one is what a bandwidth-bound
-  deployment runs.
+  (CHOCO-style; exact in the consensus limit; ``topk`` ships only the k
+  largest payload columns per scale chunk, EF absorbing the truncation).
+  Both orderings satisfy the same Theorem 1 style guarantees; the fused
+  one is what a bandwidth-bound deployment runs.
 
 Baselines expressed in the same machinery:
   * centralized SGD ("fusion center"):  W = (1/N) 1 1^T, Q = 1
@@ -67,10 +70,8 @@ from typing import Any, Callable, Dict, NamedTuple, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.core.mixing import GossipFn
-from repro.core.packing import FlatLayout, pack_like, unpack
 from repro.core.schedules import Schedule
 
 PyTree = Any
@@ -79,26 +80,34 @@ LossFn = Callable[[PyTree, Any], jnp.ndarray]  # (params_one_node, batch_one_nod
 __all__ = [
     "FLState",
     "FLConfig",
-    "FusedRoundSpec",
     "init_fl_state",
     "make_fl_round",
     "consensus_params",
 ]
 
+_MIGRATION_HINT = (
+    "was replaced by the GossipEngine protocol (repro.core.engine). "
+    "Build an engine -- TreeEngine(gossip_fn), FlatEngine(mix_fn, layout), "
+    "FusedEngine(w, layout, topk=...), or ShardedFusedEngine(mesh, "
+    "node_axes, layout, ...) -- and pass it as engine=...; CLI surfaces "
+    "resolve names through repro.core.engine.get_engine()."
+)
+
 
 class FLState(NamedTuple):
     """Node-stacked optimizer state. ``tracker``/``prev_grad`` are None for
     DSGD (keeps DSGD memory at 1x params, DSGT at 3x -- inherent to GT).
-    ``comm`` is None except in the fused engine, where it holds the int8
-    wire state: ``{"recon", "residual"}`` (n, total) fp32 buffers for the
-    parameter wire, plus ``{"recon_t", "residual_t"}`` for DSGT's tracker
-    wire."""
+    ``comm`` is None except in the fused engines, where it holds the int8
+    wire state (``engine.comm_keys``): ``{"recon", "residual"}`` (n, total)
+    fp32 buffers for the parameter wire, ``{"recon_t", "residual_t"}`` for
+    DSGT's tracker wire, and the sharded engine's running neighbor-mix
+    accumulators ``{"mix_recon", "mix_recon_t"}``."""
 
     step: jnp.ndarray  # () int32, global iteration r (counts local steps too)
     params: PyTree  # each leaf (nodes, ...)
     tracker: Optional[PyTree]  # DSGT vtheta, same layout
     prev_grad: Optional[PyTree]  # DSGT g at the last comm round
-    comm: Optional[Dict[str, jnp.ndarray]] = None  # fused engine wire state
+    comm: Optional[Dict[str, jnp.ndarray]] = None  # fused-engine wire state
 
 
 @dataclasses.dataclass(frozen=True)
@@ -116,72 +125,49 @@ class FLConfig:
             raise ValueError("n_nodes must be >= 1")
 
 
-@dataclasses.dataclass(frozen=True)
-class FusedRoundSpec:
-    """Configuration of the fused round megakernel (``make_fl_round``'s
-    ``fused=`` argument).
-
-    Attributes:
-      w: (n, n) doubly-stochastic mixing matrix (numpy, compile-time
-        constant; split into diagonal + off-diagonal for the kernel).
-      scale_chunk: columns per int8 scale block == the kernel's VMEM tile
-        width; ``layout.total`` must be a multiple (pack with
-        ``pad_to=scale_chunk``).
-      error_feedback / difference_coding: the CHOCO wire semantics (see
-        ``kernels.gossip.ops.gossip_mix``); defaults give exact-in-the-
-        limit mixing.
-      impl: "pallas" runs the Pallas megakernel (interpret mode off-TPU);
-        "jnp" the chunked oracle -- bit-identical math, GSPMD-partitionable
-        (what the sharded dry-run lowers).
-    """
-
-    w: Any
-    scale_chunk: int = 512
-    error_feedback: bool = True
-    difference_coding: bool = True
-    impl: str = "pallas"
-
-    def __post_init__(self) -> None:
-        if self.impl not in ("pallas", "jnp"):
-            raise ValueError(f"unknown impl {self.impl!r}")
-        if self.scale_chunk < 1:
-            raise ValueError("scale_chunk must be >= 1")
-
-
 def _tm(f, *trees):
     return jax.tree_util.tree_map(f, *trees)
 
 
 def init_fl_state(
-    cfg: FLConfig, stacked_params: PyTree, fused: bool = False
+    cfg: FLConfig, stacked_params: PyTree, engine=None, **legacy
 ) -> FLState:
     """Initial state. DSGT's tracker is initialized to zeros; the first
     comm round's ``g_new - g_prev`` then loads the first gradient into the
     tracker (the standard GNSD cold start with g^0 := 0).
 
-    With ``fused=True``, ``stacked_params`` must be the packed
-    ``(nodes, total)`` flat buffer (``core.packing.pack``) and the state
-    additionally carries zero-initialized int8 wire buffers in ``comm``
-    (zeros mean the first round effectively transmits the full state).
+    ``engine``: the :class:`~repro.core.engine.GossipEngine` the state
+    will be trained with. Engines validate their representation (the
+    fused engines require the packed ``(nodes, total)`` flat buffer from
+    ``core.packing.pack``) and contribute zero-initialized wire-state
+    buffers to ``FLState.comm``. ``engine=None`` builds plain tree-state
+    (no comm buffers) -- valid for the tree and flat exact-wire engines.
     """
-    leaves = jax.tree_util.tree_leaves(stacked_params)
-    if not leaves:
-        raise ValueError("empty parameter pytree")
-    for leaf in leaves:
-        if leaf.shape[:1] != (cfg.n_nodes,):
-            raise ValueError(
-                f"param leaf {leaf.shape} is not node-stacked for n={cfg.n_nodes}"
-            )
+    if legacy:
+        raise TypeError(
+            f"init_fl_state() got {sorted(legacy)}: the fused= flag "
+            + _MIGRATION_HINT
+        )
+    if engine is not None and not hasattr(engine, "init_comm_state"):
+        # e.g. the historical positional fused: bool landing on engine=
+        raise TypeError(
+            f"init_fl_state() engine must be a GossipEngine, got "
+            f"{engine!r}: the fused= flag " + _MIGRATION_HINT
+        )
     comm = None
-    if fused:
-        if len(leaves) != 1 or leaves[0].ndim != 2:
-            raise ValueError(
-                "fused=True requires the packed (nodes, total) flat buffer"
-            )
-        z = jnp.zeros(leaves[0].shape, jnp.float32)
-        comm = {"recon": z, "residual": z}
-        if cfg.algorithm == "dsgt":
-            comm.update({"recon_t": z, "residual_t": z})
+    if engine is not None:
+        engine.check_params(cfg, stacked_params)
+        comm = engine.init_comm_state(cfg, stacked_params)
+    else:
+        leaves = jax.tree_util.tree_leaves(stacked_params)
+        if not leaves:
+            raise ValueError("empty parameter pytree")
+        for leaf in leaves:
+            if leaf.shape[:1] != (cfg.n_nodes,):
+                raise ValueError(
+                    f"param leaf {leaf.shape} is not node-stacked for "
+                    f"n={cfg.n_nodes}"
+                )
     zeros = _tm(jnp.zeros_like, stacked_params)
     if cfg.algorithm == "dsgt":
         return FLState(
@@ -197,79 +183,85 @@ def consensus_params(state: FLState) -> PyTree:
 
 def make_fl_round(
     loss_fn: LossFn,
-    gossip_fn: Optional[GossipFn],
-    schedule: Schedule,
-    cfg: FLConfig,
-    layout: Optional[FlatLayout] = None,
-    fused: Optional[FusedRoundSpec] = None,
+    gossip_fn: Optional[GossipFn] = None,
+    schedule: Schedule = None,
+    cfg: FLConfig = None,
+    engine=None,
+    **legacy,
 ) -> Callable[[FLState, PyTree], Tuple[FLState, Dict[str, jnp.ndarray]]]:
     """Build one *communication round*: (Q-1) local steps + 1 comm step.
 
     Args:
       loss_fn: per-node loss ``(params, batch) -> scalar`` (unstacked).
-      gossip_fn: mixing backend (theta <- W theta). Operates on
-        node-stacked pytrees, or directly on the flat buffer when
-        ``layout`` is given (e.g. ``make_dense_flat_mix`` /
-        ``make_mesh_flat_mix``). Ignored (may be None) when ``fused`` is
-        given -- the megakernel carries its own W.
+      gossip_fn: convenience shorthand -- a tree-level mixing backend
+        (theta <- W theta); wrapped in a
+        :class:`~repro.core.engine.TreeEngine`. Mutually exclusive with
+        ``engine``.
       schedule: alpha^r.
       cfg: algorithm + Q + N.
-      layout: when a ``core.packing.FlatLayout`` is passed, the round runs
-        the **flat-buffer engine**: ``FLState.params`` (and the DSGT
-        tracker/prev_grad) are single ``(nodes, total)`` fp32 buffers, the
-        pytree is materialized only transiently inside the per-node loss,
-        and every optimizer update / metric / gossip step is ONE fused op
-        on the contiguous buffer instead of a pytree traversal -- the
-        local ``scan`` body stops re-traversing the state leaf-by-leaf.
-        Build the state with ``pack(stacked_params, pad_to=...)`` and read
-        results back with ``unpack``.
-      fused: a :class:`FusedRoundSpec` (requires ``layout``): the comm
-        step becomes ONE round-megakernel call -- local update, int8
-        quantize, W-row mix, and error-feedback residual fused over
-        ``(nodes, scale_chunk)`` tiles with no materialized full-size
-        intermediates. The wire is the CHOCO difference-coded int8
-        payload, so build the state with ``init_fl_state(..., fused=True)``
-        (adds the ``comm`` buffers) and pack with
-        ``pad_to=fused.scale_chunk``. Metrics gain ``wire_bytes``: the
-        summed per-round egress of all nodes (int8 payload + fp32 scales,
-        doubled for DSGT's tracker wire).
+      engine: a :class:`~repro.core.engine.GossipEngine` -- THE dispatch
+        path. The engine owns the state representation (tree pytree vs
+        packed flat buffer), the wire (exact fp32/bf16 vs difference-coded
+        int8 vs top-k sparsified int8), and the mixing implementation
+        (dense matmul, ppermute, all-gather, round megakernel, sharded
+        megakernel). Build the matching state with
+        ``init_fl_state(cfg, params, engine=engine)``. The historical
+        ``layout=`` / ``fused=`` kwargs raise with a migration hint.
 
     Hierarchical (multi-pod) gossip is built by ALTERNATING two round
-    functions at the driver level -- one whose gossip mixes only the cheap
-    intra-pod axis, one that also crosses pods -- rather than branching
-    inside the jitted program (a data-dependent `where` would execute both
-    collectives every round; verified in the dry-run HLO).
+    functions at the driver level -- one whose engine mixes only the cheap
+    intra-pod axis (``axes_subset=("data",)``), one that also crosses pods
+    -- rather than branching inside the jitted program (a data-dependent
+    `where` would execute both collectives every round; verified in the
+    dry-run HLO).
 
     Returns ``round_fn(state, batches) -> (state, metrics)`` where each
     ``batches`` leaf is shaped (Q, nodes, ...) -- one microbatch per local
     iteration per node. Metrics: mean loss, ||mean_i grad_i||^2 (the
     stationarity term of Theorem 1), consensus error
-    (1/N) sum_i ||theta_i - theta_bar||^2, comm_rounds (=1), and alpha.
+    (1/N) sum_i ||theta_i - theta_bar||^2, comm_rounds (=1), alpha, and --
+    for engines that account their wire -- ``wire_bytes`` (summed
+    per-round egress of all nodes).
     """
+    if legacy:
+        raise TypeError(
+            f"make_fl_round() got {sorted(legacy)}: the layout=/fused= "
+            "kwarg maze " + _MIGRATION_HINT
+        )
+    if schedule is None or cfg is None:
+        raise TypeError(
+            "make_fl_round requires schedule and cfg (they default to None "
+            "only so engine= can be passed by keyword)"
+        )
+    if engine is not None and not hasattr(engine, "make_comm_step"):
+        # e.g. a historical positional layout= landing on engine=
+        raise TypeError(
+            f"make_fl_round() engine must be a GossipEngine, got "
+            f"{engine!r}: the layout=/fused= kwarg maze " + _MIGRATION_HINT
+        )
+    if engine is None:
+        if gossip_fn is None:
+            raise ValueError(
+                "make_fl_round needs either a tree-level gossip_fn or an "
+                "engine=GossipEngine"
+            )
+        from repro.core.engine import TreeEngine
+
+        engine = TreeEngine(gossip_fn)
+    elif gossip_fn is not None:
+        raise ValueError(
+            "pass the mixing backend inside the engine, not as gossip_fn"
+        )
+
     grad_fn = jax.vmap(jax.value_and_grad(loss_fn))
-
-    if layout is None:
-        if fused is not None:
-            raise ValueError("fused rounds require the flat engine (layout=...)")
-        eval_grads = grad_fn
-    else:
-
-        def eval_grads(params: jnp.ndarray, batch: PyTree):
-            # The tree view exists only inside this call; XLA lowers the
-            # unpack/pack pair to slices/concat and fuses them away.
-            losses, grads = grad_fn(unpack(params, layout), batch)
-            return losses, pack_like(grads, layout)
-
-    if fused is not None:
-        comm_step = _make_fused_comm_step(eval_grads, schedule, cfg, layout, fused)
-    else:
-        comm_step = _make_comm_step(eval_grads, gossip_fn, schedule, cfg)
+    eval_grads = engine.make_eval_grads(grad_fn)
+    comm_step = engine.make_comm_step(eval_grads, schedule, cfg)
 
     def local_step(state: FLState, batch: PyTree) -> Tuple[FLState, jnp.ndarray]:
         step = state.step + 1
         alpha = schedule(step)
         losses, grads = eval_grads(state.params, batch)
-        params = _tm(lambda p, g: p - alpha * g.astype(p.dtype), state.params, grads)
+        params = engine.local_step(state.params, grads, alpha)
         return state._replace(step=step, params=params), jnp.mean(losses)
 
     def round_fn(
@@ -289,141 +281,6 @@ def make_fl_round(
         return state, metrics
 
     return round_fn
-
-
-def _make_comm_step(eval_grads, gossip_fn, schedule: Schedule, cfg: FLConfig):
-    """The exact-wire comm step: gossip_fn mixes, then the optimizer update
-    (mix-then-adapt, Eqs. 2/3)."""
-
-    def comm_step(
-        state: FLState, batch: PyTree
-    ) -> Tuple[FLState, Dict[str, jnp.ndarray]]:
-        step = state.step + 1
-        alpha = schedule(step)
-        losses, grads = eval_grads(state.params, batch)
-        mix = gossip_fn
-
-        if cfg.algorithm == "dsgd":
-            # Eq. (2): theta <- W theta - alpha * g
-            params = _tm(
-                lambda wp, g: wp - alpha * g.astype(wp.dtype), mix(state.params), grads
-            )
-            new_state = state._replace(step=step, params=params)
-        else:
-            # Eq. (3): tracker <- W tracker + (g_new - g_prev); theta <- W theta - alpha*tracker
-            tracker = _tm(
-                lambda wt, gn, gp: wt + gn.astype(wt.dtype) - gp,
-                mix(state.tracker),
-                grads,
-                state.prev_grad,
-            )
-            params = _tm(
-                lambda wp, t: wp - alpha * t, mix(state.params), tracker
-            )
-            new_state = state._replace(
-                step=step,
-                params=params,
-                tracker=tracker,
-                prev_grad=_tm(lambda g, p: g.astype(p.dtype), grads, state.prev_grad),
-            )
-
-        metrics = {
-            "loss": jnp.mean(losses),
-            "alpha": alpha,
-            "grad_norm_sq": _mean_grad_norm_sq(grads),
-            "consensus_err": _consensus_error(new_state.params),
-            "comm_rounds": jnp.float32(1.0),
-        }
-        return new_state, metrics
-
-    return comm_step
-
-
-def _make_fused_comm_step(
-    eval_grads, schedule: Schedule, cfg: FLConfig, layout: FlatLayout,
-    spec: FusedRoundSpec,
-):
-    """The megakernel comm step: ONE fused update+quantize+mix+EF kernel
-    call on the flat buffers (two mixed wires for DSGT, still one call)."""
-    if layout.total % spec.scale_chunk:
-        raise ValueError(
-            f"layout.total {layout.total} not a multiple of scale_chunk "
-            f"{spec.scale_chunk}; pack with pad_to={spec.scale_chunk}"
-        )
-    w = np.asarray(spec.w, dtype=np.float64)
-    if w.shape != (cfg.n_nodes, cfg.n_nodes):
-        raise ValueError(f"W shape {w.shape} != ({cfg.n_nodes},) * 2")
-    w_self = jnp.asarray(np.diag(w), jnp.float32)
-    w_off = jnp.asarray(w - np.diag(np.diag(w)), jnp.float32)
-
-    if spec.impl == "pallas":
-        from repro.kernels.gossip.ops import fused_round, fused_round_gt
-    else:
-        from repro.kernels.gossip.ref import (
-            fused_round_gt_ref as fused_round_gt,
-            fused_round_ref as fused_round,
-        )
-
-    # Per-round egress, summed over nodes: every off-diagonal edge carries
-    # 1 B/param + 4 B per scale chunk; DSGT ships params AND tracker.
-    degrees = (np.abs(w - np.diag(np.diag(w))) > 0).sum(axis=1)
-    n_scales = layout.total // spec.scale_chunk
-    wires = 2 if cfg.algorithm == "dsgt" else 1
-    egress = float(wires * degrees.sum() * (layout.total + 4 * n_scales))
-
-    kw = dict(
-        scale_chunk=spec.scale_chunk,
-        error_feedback=spec.error_feedback,
-        difference_coding=spec.difference_coding,
-    )
-
-    def comm_step(
-        state: FLState, batch: PyTree
-    ) -> Tuple[FLState, Dict[str, jnp.ndarray]]:
-        if state.comm is None:
-            raise ValueError("fused rounds need init_fl_state(..., fused=True)")
-        step = state.step + 1
-        alpha = schedule(step)
-        losses, grads = eval_grads(state.params, batch)
-        grads = grads.astype(jnp.float32)
-
-        if cfg.algorithm == "dsgd":
-            mixed, recon, res, _ = fused_round(
-                state.params, grads, state.comm["recon"], state.comm["residual"],
-                w_off, w_self, alpha, **kw,
-            )
-            new_state = state._replace(
-                step=step, params=mixed, comm={"recon": recon, "residual": res}
-            )
-        else:
-            mx, mt, nrx, nsx, nrt, nst, _, _ = fused_round_gt(
-                state.params, state.tracker, grads, state.prev_grad,
-                state.comm["recon"], state.comm["residual"],
-                state.comm["recon_t"], state.comm["residual_t"],
-                w_off, w_self, alpha, **kw,
-            )
-            new_state = FLState(
-                step=step,
-                params=mx,
-                tracker=mt,
-                prev_grad=grads,
-                comm={
-                    "recon": nrx, "residual": nsx,
-                    "recon_t": nrt, "residual_t": nst,
-                },
-            )
-
-        metrics = {
-            "loss": jnp.mean(losses),
-            "alpha": alpha,
-            "grad_norm_sq": _mean_grad_norm_sq(grads),
-            "consensus_err": _consensus_error(new_state.params),
-            "comm_rounds": jnp.float32(1.0),
-            "wire_bytes": jnp.float32(egress),
-        }
-        return new_state, metrics
-
-    return comm_step
 
 
 def _mean_grad_norm_sq(stacked_grads: PyTree) -> jnp.ndarray:

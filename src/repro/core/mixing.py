@@ -201,17 +201,29 @@ def mesh_gossip_directions(
 
 
 def mesh_gossip_dense_equivalent(
-    axis_sizes: Dict[str, int], self_weight: Optional[float] = None
+    axis_sizes: Dict[str, int],
+    self_weight: Optional[float] = None,
+    axes_subset: Optional[Sequence[str]] = None,
 ) -> np.ndarray:
     """The dense W the ppermute backend realizes (row-major node order).
 
-    Used as the oracle in sharded-vs-simulated equivalence tests and to
-    check Assumption 1 for the production topology.
+    Used as the oracle in sharded-vs-simulated equivalence tests, as the
+    compile-time W of the fused engine's mesh build, and to check
+    Assumption 1 for the production topology. ``axes_subset`` restricts
+    the mixing directions to those axes (hierarchical gossip: the other
+    axes contribute no edges, so e.g. ("data",) on a (pod, data) mesh
+    yields the intra-pod block-diagonal W).
     """
     names = list(axis_sizes)
     sizes = [axis_sizes[k] for k in names]
     n = int(np.prod(sizes))
-    w_self, dirs = mesh_gossip_directions(axis_sizes, self_weight)
+    active = dict(axis_sizes)
+    if axes_subset is not None:
+        for a in axes_subset:
+            if a not in axis_sizes:
+                raise ValueError(f"axes_subset {axes_subset} not in {names}")
+        active = {a: axis_sizes[a] for a in axes_subset}
+    w_self, dirs = mesh_gossip_directions(active, self_weight)
     w = np.eye(n) * w_self if dirs else np.eye(n)
     idx = np.arange(n).reshape(sizes)
     for name, shift, weight in dirs:
@@ -294,8 +306,9 @@ def make_mesh_flat_mix(
     """Flat-native ring/torus gossip: ppermute directly on the packed
     ``(nodes, total)`` buffer, sharded ``P(node_axes, None)``.
 
-    The mesh counterpart of :func:`make_dense_flat_mix` for
-    ``make_fl_round(layout=...)``: the state ALREADY lives flat, so the
+    The mesh counterpart of :func:`make_dense_flat_mix` for the flat
+    engine (``make_fl_round(engine=FlatEngine(...))``): the state
+    ALREADY lives flat, so the
     shard_map body skips the per-call pack/unpack of :func:`make_mesh_gossip`
     and is exactly one ppermute per torus direction. Same wire-dtype
     semantics as the tree backend (the whole neighbor path stays in

@@ -73,9 +73,9 @@ class FlatLayout:
       trace time in lowering-only dry runs.
 
     Mutating state between pack and unpack is fine as long as shapes stay
-    ``(n_nodes, total)``: ``make_fl_round(layout=...)`` runs whole
-    training rounds on the buffer and unpacks only at the read-out
-    boundary.
+    ``(n_nodes, total)``: the flat/fused GossipEngines
+    (``make_fl_round(engine=...)``) run whole training rounds on the
+    buffer and unpack only at the read-out boundary.
     """
 
     treedef: Any
@@ -177,9 +177,30 @@ def unpack(flat: jnp.ndarray, layout: FlatLayout) -> PyTree:
     return jax.tree_util.tree_unflatten(layout.treedef, leaves)
 
 
-def flat_wire_bytes(layout: FlatLayout, degree: int, scale_chunk: int = 0) -> int:
-    """Per-node egress bytes per round for an int8 flat payload:
-    1 B/param + 4 B per scale chunk (``scale_chunk=0``: one scale per node),
-    times the out-degree."""
+def flat_wire_bytes(
+    layout: FlatLayout, degree: int, scale_chunk: int = 0,
+    topk: int | None = None,
+) -> int:
+    """Per-node egress bytes per round for an int8 flat payload, times the
+    out-degree.
+
+    Dense int8 (``topk=None``): 1 B/param + 4 B per scale chunk
+    (``scale_chunk=0``: one scale per node).
+
+    Top-k sparsified (``topk=k``): per scale chunk, k int8 values + the
+    position encoding + the 4 B scale, capped at the dense chunk bytes (a
+    sender whose sparse encoding would exceed dense just ships dense).
+    The model assumes exactly k survivors; the kernel's tie-keeping mask
+    can ship more when many |payload| values tie at the threshold
+    (measure-zero for float payloads, and a tie-heavy sender's real
+    encoder would fall back to the dense cap above).
+    Positions cost ``min(2k, ceil(chunk/8))`` bytes -- a 16-bit index per
+    survivor or a presence bitmap over the chunk, whichever is smaller
+    (the bitmap wins for k > chunk/16).
+    """
     n_scales = 1 if scale_chunk <= 0 else -(-layout.total // scale_chunk)
-    return degree * (layout.total + 4 * n_scales)
+    if topk is None or scale_chunk <= 0 or topk >= scale_chunk:
+        return degree * (layout.total + 4 * n_scales)
+    index_bytes = min(2 * topk, -(-scale_chunk // 8))
+    per_chunk = min(topk + index_bytes + 4, scale_chunk + 4)
+    return degree * (n_scales * per_chunk)

@@ -1,12 +1,24 @@
 """Fused gossip kernels: int8 quantize -> W-row mix -> dequant + EF residual
-in one VMEM-tiled pass over the flat (nodes, total) state, plus the round
-megakernels that fuse the DSGD/DSGT local update into the same pass."""
+in one VMEM-tiled pass over the flat (nodes, total) state, the round
+megakernels that fuse the DSGD/DSGT local update into the same pass, and
+the wire-stage kernels (pre-collective half of the SHARDED fused round:
+update + top-k + quantize + EF, with the W mix finished after the
+ppermute / all-gather wire). All entry points take ``topk=`` for top-k
+sparsified payloads (EF absorbs the truncation)."""
 
-from repro.kernels.gossip.ops import fused_round, fused_round_gt, gossip_mix
+from repro.kernels.gossip.ops import (
+    fused_round,
+    fused_round_gt,
+    gossip_mix,
+    wire_stage,
+    wire_stage_gt,
+)
 from repro.kernels.gossip.ref import (
     fused_round_gt_ref,
     fused_round_ref,
     gossip_mix_ref,
+    wire_stage_gt_ref,
+    wire_stage_ref,
 )
 
 __all__ = [
@@ -16,4 +28,8 @@ __all__ = [
     "fused_round_ref",
     "fused_round_gt",
     "fused_round_gt_ref",
+    "wire_stage",
+    "wire_stage_ref",
+    "wire_stage_gt",
+    "wire_stage_gt_ref",
 ]

@@ -16,7 +16,15 @@ materialized full-size intermediates:
     res'    = payload - dq
     mixed   = W_off @ recon' + w_self * x    (MXU: (n,n) x (n,chunk))
 
-Three kernels share that stage:
+All stages take ``topk``: when set, the payload is masked to the k
+largest-|.| columns of the tile before quantization (the tile IS one
+scale chunk, so the mask is per (node, chunk) exactly like the scale);
+the EF residual absorbs the truncated mass, and the wire drops below the
+dense-int8 floor. The threshold is the k-th largest |payload| via an
+in-tile ``jnp.sort`` (ties at the threshold are kept, deterministically
+and identically in the jnp oracle).
+
+Five kernels share that stage:
 
 * :func:`gossip_mix_pallas` -- the stage alone (PR 1's fused
   quantize-mix-EF gossip round);
@@ -28,7 +36,13 @@ Three kernels share that stage:
   arithmetic ``t_half = t + g - g_prev``, parameter update
   ``h = x - alpha * t_half``, then the quantize-mix stage applied to BOTH
   buffers inside the same program (two MXU contractions against the same
-  resident W tile).
+  resident W tile);
+* :func:`wire_stage_pallas` / :func:`wire_stage_gt_pallas` -- the
+  SHARDED fused round's pre-collective half: everything above EXCEPT the
+  W contraction (update + diff-code + top-k + int8 quantize + EF),
+  emitting the int8 payload + fp32 scales that cross the wire; the mix
+  finishes outside the kernel against the engine's running
+  neighbor-reconstruction accumulator (``core.engine.ShardedFusedEngine``).
 
 Replacing the unfused path's full-size fp32 intermediates (the updated
 parameters h, payload, dq, recon') with one HBM read of each input and one
@@ -48,26 +62,61 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
-__all__ = ["gossip_mix_pallas", "fused_round_pallas", "fused_round_gt_pallas"]
+__all__ = [
+    "gossip_mix_pallas",
+    "fused_round_pallas",
+    "fused_round_gt_pallas",
+    "wire_stage_pallas",
+    "wire_stage_gt_pallas",
+]
 
 
-def _quantize_mix(x, recon, res, woff, wself, *, error_feedback, difference_coding):
-    """The shared in-VMEM stage: difference-code, int8-quantize, W-row mix,
-    and error-feedback update of ONE (nodes, chunk) tile. Returns
-    (mixed, new_recon, new_res, scale)."""
+def _topk_mask(payload, topk):
+    """Keep only the ``topk`` largest-|.| columns of each row of ONE
+    (nodes, chunk) tile; everything else becomes a structural zero on the
+    wire (ties at the threshold are all kept -- deterministic, and shared
+    bit-for-bit with the jnp oracle which applies the same formula
+    chunk-by-chunk). ``topk >= chunk`` disables the mask."""
+    chunk = payload.shape[-1]
+    if topk is None or topk >= chunk:
+        return payload
+    thr = jnp.sort(jnp.abs(payload), axis=-1)[..., chunk - topk][..., None]
+    return jnp.where(jnp.abs(payload) >= thr, payload, 0.0)
+
+
+def _quantize_ef(x, recon, res, *, error_feedback, difference_coding, topk):
+    """Difference-code, (optionally top-k mask,) int8-quantize, and EF
+    update of ONE (nodes, chunk) tile -- everything that happens BEFORE the
+    wire. Returns (payload_q as fp32 ints, scale, new_recon, new_res).
+    With top-k the EF residual absorbs the truncated mass (payload - dq is
+    the FULL payload minus the sparse dequant), so masking never loses
+    signal, it only defers it."""
     base = recon if difference_coding else jnp.zeros_like(recon)
     payload = x - base
     if error_feedback:
         payload = payload + res
 
-    scale = jnp.max(jnp.abs(payload), axis=1, keepdims=True) / 127.0  # (n, 1)
+    sel = _topk_mask(payload, topk)
+    scale = jnp.max(jnp.abs(sel), axis=1, keepdims=True) / 127.0  # (n, 1)
     safe = jnp.where(scale > 0, scale, 1.0)
-    q = jnp.clip(jnp.round(payload / safe), -127, 127)
+    q = jnp.clip(jnp.round(sel / safe), -127, 127)
     dq = q * scale
 
     new_recon = base + dq
-    mixed = jnp.dot(woff, new_recon, preferred_element_type=jnp.float32) + wself * x
     new_res = payload - dq if error_feedback else res
+    return q, scale, new_recon, new_res
+
+
+def _quantize_mix(x, recon, res, woff, wself, *, error_feedback,
+                  difference_coding, topk=None):
+    """The shared in-VMEM stage: difference-code, int8-quantize (top-k
+    sparsified when ``topk`` is set), W-row mix, and error-feedback update
+    of ONE (nodes, chunk) tile. Returns (mixed, new_recon, new_res, scale)."""
+    _, scale, new_recon, new_res = _quantize_ef(
+        x, recon, res, error_feedback=error_feedback,
+        difference_coding=difference_coding, topk=topk,
+    )
+    mixed = jnp.dot(woff, new_recon, preferred_element_type=jnp.float32) + wself * x
     return mixed, new_recon, new_res, scale
 
 
@@ -84,6 +133,7 @@ def _kernel(
     *,
     error_feedback,
     difference_coding,
+    topk,
 ):
     mixed, nrecon, nres, scale = _quantize_mix(
         x_ref[...],
@@ -93,6 +143,7 @@ def _kernel(
         wself_ref[...],
         error_feedback=error_feedback,
         difference_coding=difference_coding,
+        topk=topk,
     )
     mixed_ref[...] = mixed
     nrecon_ref[...] = nrecon
@@ -115,6 +166,7 @@ def _fused_round_kernel(
     *,
     error_feedback,
     difference_coding,
+    topk,
 ):
     # DSGD local update fused ahead of the gossip stage: the half-updated
     # parameters h never touch HBM.
@@ -127,6 +179,7 @@ def _fused_round_kernel(
         wself_ref[...],
         error_feedback=error_feedback,
         difference_coding=difference_coding,
+        topk=topk,
     )
     mixed_ref[...] = mixed
     nrecon_ref[...] = nrecon
@@ -157,6 +210,7 @@ def _fused_round_gt_kernel(
     *,
     error_feedback,
     difference_coding,
+    topk,
 ):
     # DSGT (adapt-then-combine ordering): tracker absorbs the gradient
     # innovation, parameters step against the updated tracker, and BOTH
@@ -176,6 +230,7 @@ def _fused_round_gt_kernel(
         wself,
         error_feedback=error_feedback,
         difference_coding=difference_coding,
+        topk=topk,
     )
     mx, nrx, nsx, scx = _quantize_mix(
         h,
@@ -185,6 +240,7 @@ def _fused_round_gt_kernel(
         wself,
         error_feedback=error_feedback,
         difference_coding=difference_coding,
+        topk=topk,
     )
     mx_ref[...] = mx
     mt_ref[...] = mt
@@ -211,6 +267,11 @@ def _check_chunk(t: int, scale_chunk: int) -> int:
     return t // scale_chunk
 
 
+def _check_topk(topk) -> None:
+    if topk is not None and topk < 1:
+        raise ValueError(f"topk must be >= 1 or None, got {topk}")
+
+
 def gossip_mix_pallas(
     x: jnp.ndarray,
     recon: jnp.ndarray,
@@ -221,16 +282,21 @@ def gossip_mix_pallas(
     scale_chunk: int = 512,
     error_feedback: bool = True,
     difference_coding: bool = True,
+    topk: int | None = None,
     interpret: bool = False,
 ):
     """x, recon, res: (n, t) fp32 with t % scale_chunk == 0; w_off (n, n);
-    w_self (n,). Returns (mixed, new_recon, new_res, scales (n, t//chunk))."""
+    w_self (n,). Returns (mixed, new_recon, new_res, scales (n, t//chunk)).
+    ``topk`` keeps only the k largest-|.| payload columns per scale chunk
+    (EF absorbs the truncation)."""
     n, t = x.shape
     n_chunks = _check_chunk(t, scale_chunk)
+    _check_topk(topk)
     tile, whole, col, one, _ = _specs(n, scale_chunk)
 
     kernel = functools.partial(
-        _kernel, error_feedback=error_feedback, difference_coding=difference_coding
+        _kernel, error_feedback=error_feedback, difference_coding=difference_coding,
+        topk=topk,
     )
     return pl.pallas_call(
         kernel,
@@ -259,19 +325,23 @@ def fused_round_pallas(
     scale_chunk: int = 512,
     error_feedback: bool = True,
     difference_coding: bool = True,
+    topk: int | None = None,
     interpret: bool = False,
 ):
     """DSGD round megakernel: ``h = x - alpha * g`` then quantize-mix-EF of
-    h, in ONE pass. x, g, recon, res: (n, t) fp32; alpha: scalar. Returns
-    (mixed, new_recon, new_res, scales)."""
+    h (top-k sparsified when ``topk`` is set), in ONE pass. x, g, recon,
+    res: (n, t) fp32; alpha: scalar. Returns (mixed, new_recon, new_res,
+    scales)."""
     n, t = x.shape
     n_chunks = _check_chunk(t, scale_chunk)
+    _check_topk(topk)
     tile, whole, col, one, scalar = _specs(n, scale_chunk)
 
     kernel = functools.partial(
         _fused_round_kernel,
         error_feedback=error_feedback,
         difference_coding=difference_coding,
+        topk=topk,
     )
     return pl.pallas_call(
         kernel,
@@ -312,6 +382,7 @@ def fused_round_gt_pallas(
     scale_chunk: int = 512,
     error_feedback: bool = True,
     difference_coding: bool = True,
+    topk: int | None = None,
     interpret: bool = False,
 ):
     """DSGT round megakernel: tracker arithmetic + parameter update + two
@@ -321,12 +392,14 @@ def fused_round_gt_pallas(
     new_res_t, scales_x, scales_t)."""
     n, tot = x.shape
     n_chunks = _check_chunk(tot, scale_chunk)
+    _check_topk(topk)
     tile, whole, col, one, scalar = _specs(n, scale_chunk)
 
     kernel = functools.partial(
         _fused_round_gt_kernel,
         error_feedback=error_feedback,
         difference_coding=difference_coding,
+        topk=topk,
     )
     buf = jax.ShapeDtypeStruct((n, tot), jnp.float32)
     sc = jax.ShapeDtypeStruct((n, n_chunks), jnp.float32)
@@ -350,3 +423,190 @@ def fused_round_gt_pallas(
         w_self.reshape(n, 1),
         jnp.asarray(alpha, jnp.float32).reshape(1, 1),
     )
+
+# ---------------------------------------------------------------------------
+# Wire-stage kernels: the pre-collective half of the SHARDED fused round
+# ---------------------------------------------------------------------------
+
+
+def _wire_stage_kernel(
+    x_ref,
+    g_ref,
+    recon_ref,
+    res_ref,
+    alpha_ref,
+    h_ref,
+    q_ref,
+    scale_ref,
+    nrecon_ref,
+    nres_ref,
+    *,
+    error_feedback,
+    difference_coding,
+    topk,
+):
+    # Everything a node computes BEFORE its payload crosses the wire:
+    # local update, difference coding, (top-k,) int8 quantize, EF. The
+    # int8 q + fp32 scales ARE the wire; the W contraction happens after
+    # the collective (ppermute / all-gather) outside the kernel, against
+    # the running neighbor-reconstruction accumulator.
+    h = x_ref[...] - alpha_ref[0, 0] * g_ref[...]
+    q, scale, nrecon, nres = _quantize_ef(
+        h,
+        recon_ref[...],
+        res_ref[...],
+        error_feedback=error_feedback,
+        difference_coding=difference_coding,
+        topk=topk,
+    )
+    h_ref[...] = h
+    q_ref[...] = q.astype(jnp.int8)
+    scale_ref[...] = scale
+    nrecon_ref[...] = nrecon
+    nres_ref[...] = nres
+
+
+def _wire_stage_gt_kernel(
+    x_ref,
+    t_ref,
+    g_ref,
+    gp_ref,
+    rx_ref,
+    sx_ref,
+    rt_ref,
+    st_ref,
+    alpha_ref,
+    h_ref,
+    th_ref,
+    qx_ref,
+    scx_ref,
+    nrx_ref,
+    nsx_ref,
+    qt_ref,
+    sct_ref,
+    nrt_ref,
+    nst_ref,
+    *,
+    error_feedback,
+    difference_coding,
+    topk,
+):
+    # DSGT wire stage: tracker arithmetic + parameter update + BOTH wires'
+    # quantize-EF in one program (same adapt-then-combine ordering as the
+    # dense megakernel).
+    t_half = t_ref[...] + g_ref[...] - gp_ref[...]
+    h = x_ref[...] - alpha_ref[0, 0] * t_half
+    qt, sct, nrt, nst = _quantize_ef(
+        t_half, rt_ref[...], st_ref[...],
+        error_feedback=error_feedback, difference_coding=difference_coding,
+        topk=topk,
+    )
+    qx, scx, nrx, nsx = _quantize_ef(
+        h, rx_ref[...], sx_ref[...],
+        error_feedback=error_feedback, difference_coding=difference_coding,
+        topk=topk,
+    )
+    h_ref[...] = h
+    th_ref[...] = t_half
+    qx_ref[...] = qx.astype(jnp.int8)
+    scx_ref[...] = scx
+    nrx_ref[...] = nrx
+    nsx_ref[...] = nsx
+    qt_ref[...] = qt.astype(jnp.int8)
+    sct_ref[...] = sct
+    nrt_ref[...] = nrt
+    nst_ref[...] = nst
+
+
+def wire_stage_pallas(
+    x: jnp.ndarray,
+    g: jnp.ndarray,
+    recon: jnp.ndarray,
+    res: jnp.ndarray,
+    alpha: jnp.ndarray,
+    *,
+    scale_chunk: int = 512,
+    error_feedback: bool = True,
+    difference_coding: bool = True,
+    topk: int | None = None,
+    interpret: bool = False,
+):
+    """DSGD wire stage of the SHARDED fused round: local update + difference
+    coding + (top-k) int8 quantize + EF on this shard's (n_local, t) rows,
+    in ONE pass. Returns (h, q int8, scales, new_recon, new_res); the
+    caller moves (q, scales) over the wire and finishes the mix as
+    ``w_self * h + mix_recon + sum_nbr w * dequant(q, s)``. Runs inside a
+    shard_map body, so n_local is typically 1 (one node row per device;
+    on real TPUs pad the sublane dim as needed)."""
+    n, t = x.shape
+    n_chunks = _check_chunk(t, scale_chunk)
+    _check_topk(topk)
+    tile, _, col, _, scalar = _specs(n, scale_chunk)
+
+    kernel = functools.partial(
+        _wire_stage_kernel,
+        error_feedback=error_feedback,
+        difference_coding=difference_coding,
+        topk=topk,
+    )
+    buf = jax.ShapeDtypeStruct((n, t), jnp.float32)
+    return pl.pallas_call(
+        kernel,
+        grid=(n_chunks,),
+        in_specs=[tile, tile, tile, tile, scalar],
+        out_specs=[tile, tile, col, tile, tile],
+        out_shape=[
+            buf,
+            jax.ShapeDtypeStruct((n, t), jnp.int8),
+            jax.ShapeDtypeStruct((n, n_chunks), jnp.float32),
+            buf,
+            buf,
+        ],
+        interpret=interpret,
+    )(x, g, recon, res, jnp.asarray(alpha, jnp.float32).reshape(1, 1))
+
+
+def wire_stage_gt_pallas(
+    x: jnp.ndarray,
+    t: jnp.ndarray,
+    g: jnp.ndarray,
+    g_prev: jnp.ndarray,
+    recon_x: jnp.ndarray,
+    res_x: jnp.ndarray,
+    recon_t: jnp.ndarray,
+    res_t: jnp.ndarray,
+    alpha: jnp.ndarray,
+    *,
+    scale_chunk: int = 512,
+    error_feedback: bool = True,
+    difference_coding: bool = True,
+    topk: int | None = None,
+    interpret: bool = False,
+):
+    """DSGT wire stage of the SHARDED fused round: tracker arithmetic,
+    parameter update, and both wires' quantize-EF in ONE pass. Returns
+    (h, t_half, q_x int8, scales_x, new_recon_x, new_res_x, q_t int8,
+    scales_t, new_recon_t, new_res_t)."""
+    n, tot = x.shape
+    n_chunks = _check_chunk(tot, scale_chunk)
+    _check_topk(topk)
+    tile, _, col, _, scalar = _specs(n, scale_chunk)
+
+    kernel = functools.partial(
+        _wire_stage_gt_kernel,
+        error_feedback=error_feedback,
+        difference_coding=difference_coding,
+        topk=topk,
+    )
+    buf = jax.ShapeDtypeStruct((n, tot), jnp.float32)
+    qb = jax.ShapeDtypeStruct((n, tot), jnp.int8)
+    sc = jax.ShapeDtypeStruct((n, n_chunks), jnp.float32)
+    return pl.pallas_call(
+        kernel,
+        grid=(n_chunks,),
+        in_specs=[tile] * 8 + [scalar],
+        out_specs=[tile, tile, tile, col, tile, tile, tile, col, tile, tile],
+        out_shape=[buf, buf, qb, sc, buf, buf, qb, sc, buf, buf],
+        interpret=interpret,
+    )(x, t, g, g_prev, recon_x, res_x, recon_t, res_t,
+      jnp.asarray(alpha, jnp.float32).reshape(1, 1))

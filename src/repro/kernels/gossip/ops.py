@@ -19,9 +19,12 @@ from repro.kernels.gossip.gossip import (
     fused_round_gt_pallas,
     fused_round_pallas,
     gossip_mix_pallas,
+    wire_stage_gt_pallas,
+    wire_stage_pallas,
 )
 
-__all__ = ["gossip_mix", "fused_round", "fused_round_gt"]
+__all__ = ["gossip_mix", "fused_round", "fused_round_gt", "wire_stage",
+           "wire_stage_gt"]
 
 
 def _interpret() -> bool:
@@ -33,10 +36,11 @@ def _interpret() -> bool:
 
 @functools.partial(
     jax.jit,
-    static_argnames=("scale_chunk", "error_feedback", "difference_coding", "interpret"),
+    static_argnames=("scale_chunk", "error_feedback", "difference_coding",
+                     "topk", "interpret"),
 )
 def _gossip_mix(x, recon, res, w_off, w_self, scale_chunk, error_feedback,
-                difference_coding, interpret):
+                difference_coding, topk, interpret):
     return gossip_mix_pallas(
         x,
         recon,
@@ -46,6 +50,7 @@ def _gossip_mix(x, recon, res, w_off, w_self, scale_chunk, error_feedback,
         scale_chunk=scale_chunk,
         error_feedback=error_feedback,
         difference_coding=difference_coding,
+        topk=topk,
         interpret=interpret,
     )
 
@@ -59,6 +64,7 @@ def gossip_mix(
     scale_chunk: int = 512,
     error_feedback: bool = True,
     difference_coding: bool = True,
+    topk: int | None = None,
 ) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray, jnp.ndarray]:
     """One fused quantize -> W-row mix -> dequant + EF gossip round on the
     flat node-stacked state.
@@ -98,20 +104,23 @@ def gossip_mix(
 
     Flags: ``difference_coding=False`` quantizes x itself instead of the
     delta against ``recon``; ``error_feedback=False`` passes ``res``
-    through untouched.
+    through untouched; ``topk=k`` ships only the k largest-|payload|
+    columns per scale chunk (EF absorbs the truncation -- sub-int8 wire
+    bytes, see ``packing.flat_wire_bytes``).
     """
     return _gossip_mix(
         x, recon, res, w_off, w_self, scale_chunk, error_feedback,
-        difference_coding, _interpret(),
+        difference_coding, topk, _interpret(),
     )
 
 
 @functools.partial(
     jax.jit,
-    static_argnames=("scale_chunk", "error_feedback", "difference_coding", "interpret"),
+    static_argnames=("scale_chunk", "error_feedback", "difference_coding",
+                     "topk", "interpret"),
 )
 def _fused_round(x, g, recon, res, w_off, w_self, alpha, scale_chunk,
-                 error_feedback, difference_coding, interpret):
+                 error_feedback, difference_coding, topk, interpret):
     return fused_round_pallas(
         x,
         g,
@@ -123,6 +132,7 @@ def _fused_round(x, g, recon, res, w_off, w_self, alpha, scale_chunk,
         scale_chunk=scale_chunk,
         error_feedback=error_feedback,
         difference_coding=difference_coding,
+        topk=topk,
         interpret=interpret,
     )
 
@@ -138,6 +148,7 @@ def fused_round(
     scale_chunk: int = 512,
     error_feedback: bool = True,
     difference_coding: bool = True,
+    topk: int | None = None,
 ) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray, jnp.ndarray]:
     """DSGD round megakernel: ``h = x - alpha * g`` fused ahead of
     :func:`gossip_mix` in ONE Pallas pass -- one kernel call is a whole
@@ -145,22 +156,23 @@ def fused_round(
 
     ``g`` is the flat gradient buffer (same (n, t) layout as x, packed by
     ``core.packing.pack_like``); ``alpha`` the scalar step size. Remaining
-    operands, outputs, and EF semantics exactly as :func:`gossip_mix`
-    applied to h.
+    operands, outputs, EF and ``topk`` semantics exactly as
+    :func:`gossip_mix` applied to h.
     """
     return _fused_round(
         x, g, recon, res, w_off, w_self, alpha, scale_chunk, error_feedback,
-        difference_coding, _interpret(),
+        difference_coding, topk, _interpret(),
     )
 
 
 @functools.partial(
     jax.jit,
-    static_argnames=("scale_chunk", "error_feedback", "difference_coding", "interpret"),
+    static_argnames=("scale_chunk", "error_feedback", "difference_coding",
+                     "topk", "interpret"),
 )
 def _fused_round_gt(x, t, g, g_prev, recon_x, res_x, recon_t, res_t, w_off,
                     w_self, alpha, scale_chunk, error_feedback,
-                    difference_coding, interpret):
+                    difference_coding, topk, interpret):
     return fused_round_gt_pallas(
         x,
         t,
@@ -176,6 +188,7 @@ def _fused_round_gt(x, t, g, g_prev, recon_x, res_x, recon_t, res_t, w_off,
         scale_chunk=scale_chunk,
         error_feedback=error_feedback,
         difference_coding=difference_coding,
+        topk=topk,
         interpret=interpret,
     )
 
@@ -195,6 +208,7 @@ def fused_round_gt(
     scale_chunk: int = 512,
     error_feedback: bool = True,
     difference_coding: bool = True,
+    topk: int | None = None,
 ) -> Tuple[jnp.ndarray, ...]:
     """DSGT round megakernel: tracker arithmetic ``t_half = t + g - g_prev``,
     parameter update ``h = x - alpha * t_half``, and the quantize-mix-EF
@@ -208,5 +222,81 @@ def fused_round_gt(
     """
     return _fused_round_gt(
         x, t, g, g_prev, recon_x, res_x, recon_t, res_t, w_off, w_self, alpha,
-        scale_chunk, error_feedback, difference_coding, _interpret(),
+        scale_chunk, error_feedback, difference_coding, topk, _interpret(),
+    )
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("scale_chunk", "error_feedback", "difference_coding",
+                     "topk", "interpret"),
+)
+def _wire_stage(x, g, recon, res, alpha, scale_chunk, error_feedback,
+                difference_coding, topk, interpret):
+    return wire_stage_pallas(
+        x, g, recon, res, alpha, scale_chunk=scale_chunk,
+        error_feedback=error_feedback, difference_coding=difference_coding,
+        topk=topk, interpret=interpret,
+    )
+
+
+def wire_stage(
+    x: jnp.ndarray,
+    g: jnp.ndarray,
+    recon: jnp.ndarray,
+    res: jnp.ndarray,
+    alpha: jnp.ndarray,
+    scale_chunk: int = 512,
+    error_feedback: bool = True,
+    difference_coding: bool = True,
+    topk: int | None = None,
+) -> Tuple[jnp.ndarray, ...]:
+    """DSGD wire stage of the sharded fused round (pre-collective half):
+    local update + difference coding + (top-k) int8 quantize + EF in ONE
+    Pallas pass on this shard's rows. Returns (h, q int8, scales,
+    new_recon, new_res); see ``core.engine.ShardedFusedEngine`` for the
+    post-wire mix."""
+    return _wire_stage(
+        x, g, recon, res, alpha, scale_chunk, error_feedback,
+        difference_coding, topk, _interpret(),
+    )
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("scale_chunk", "error_feedback", "difference_coding",
+                     "topk", "interpret"),
+)
+def _wire_stage_gt(x, t, g, g_prev, recon_x, res_x, recon_t, res_t, alpha,
+                   scale_chunk, error_feedback, difference_coding, topk,
+                   interpret):
+    return wire_stage_gt_pallas(
+        x, t, g, g_prev, recon_x, res_x, recon_t, res_t, alpha,
+        scale_chunk=scale_chunk, error_feedback=error_feedback,
+        difference_coding=difference_coding, topk=topk, interpret=interpret,
+    )
+
+
+def wire_stage_gt(
+    x: jnp.ndarray,
+    t: jnp.ndarray,
+    g: jnp.ndarray,
+    g_prev: jnp.ndarray,
+    recon_x: jnp.ndarray,
+    res_x: jnp.ndarray,
+    recon_t: jnp.ndarray,
+    res_t: jnp.ndarray,
+    alpha: jnp.ndarray,
+    scale_chunk: int = 512,
+    error_feedback: bool = True,
+    difference_coding: bool = True,
+    topk: int | None = None,
+) -> Tuple[jnp.ndarray, ...]:
+    """DSGT wire stage of the sharded fused round: tracker arithmetic +
+    parameter update + both wires' quantize-EF in ONE Pallas pass.
+    Returns (h, t_half, q_x, scales_x, new_recon_x, new_res_x, q_t,
+    scales_t, new_recon_t, new_res_t)."""
+    return _wire_stage_gt(
+        x, t, g, g_prev, recon_x, res_x, recon_t, res_t, alpha, scale_chunk,
+        error_feedback, difference_coding, topk, _interpret(),
     )

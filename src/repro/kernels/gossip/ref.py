@@ -21,7 +21,29 @@ from typing import Tuple
 
 import jax.numpy as jnp
 
-__all__ = ["gossip_mix_ref", "fused_round_ref", "fused_round_gt_ref"]
+__all__ = [
+    "gossip_mix_ref",
+    "fused_round_ref",
+    "fused_round_gt_ref",
+    "wire_stage_ref",
+    "wire_stage_gt_ref",
+]
+
+
+def _quantize_ef_chunks(payload, scale_chunk: int, topk):
+    """Shared quantize core: per-(node, scale_chunk) int8 with optional
+    top-k masking (same tie-keeping threshold formula as the kernel tile,
+    applied chunk-by-chunk -- bit-identical). Returns (q, scales, dq)."""
+    n, t = payload.shape
+    p3 = payload.reshape(n, t // scale_chunk, scale_chunk)
+    if topk is not None and topk < scale_chunk:
+        thr = jnp.sort(jnp.abs(p3), axis=2)[:, :, scale_chunk - topk][:, :, None]
+        p3 = jnp.where(jnp.abs(p3) >= thr, p3, 0.0)
+    scales = jnp.max(jnp.abs(p3), axis=2) / 127.0  # (n, n_chunks)
+    safe = jnp.where(scales > 0, scales, 1.0)
+    q = jnp.clip(jnp.round(p3 / safe[:, :, None]), -127, 127)
+    dq = (q * scales[:, :, None]).reshape(n, t)
+    return q, scales, dq
 
 
 def gossip_mix_ref(
@@ -34,6 +56,7 @@ def gossip_mix_ref(
     scale_chunk: int,
     error_feedback: bool = True,
     difference_coding: bool = True,
+    topk: int | None = None,
 ) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray, jnp.ndarray]:
     """One compressed gossip round on flat buffers.
 
@@ -44,6 +67,10 @@ def gossip_mix_ref(
       w_off: (n, n) fp32 off-diagonal mixing weights (zero diagonal).
       w_self: (n,) fp32 self weights (the W diagonal).
       scale_chunk: columns per int8 scale block.
+      topk: if set, only the k largest-|payload| columns per scale chunk
+        go on the wire (ties at the threshold kept); with error feedback
+        the truncated mass is absorbed by the residual, so top-k gossip
+        still contracts to consensus (property-tested).
 
     Returns:
       (mixed, new_recon, new_res, scales) with scales (n, t // scale_chunk).
@@ -54,11 +81,7 @@ def gossip_mix_ref(
     base = recon if difference_coding else jnp.zeros_like(recon)
     payload = x - base + (res if error_feedback else 0.0)
 
-    p3 = payload.reshape(n, t // scale_chunk, scale_chunk)
-    scales = jnp.max(jnp.abs(p3), axis=2) / 127.0  # (n, n_chunks)
-    safe = jnp.where(scales > 0, scales, 1.0)
-    q = jnp.clip(jnp.round(p3 / safe[:, :, None]), -127, 127)
-    dq = (q * scales[:, :, None]).reshape(n, t)
+    _, scales, dq = _quantize_ef_chunks(payload, scale_chunk, topk)
 
     new_recon = base + dq
     new_res = payload - dq if error_feedback else res
@@ -78,6 +101,7 @@ def fused_round_ref(
     scale_chunk: int,
     error_feedback: bool = True,
     difference_coding: bool = True,
+    topk: int | None = None,
 ) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray, jnp.ndarray]:
     """DSGD round oracle: the local update ``h = x - alpha * g`` followed
     by one compressed gossip round on h (adapt-then-combine ordering).
@@ -95,6 +119,7 @@ def fused_round_ref(
         scale_chunk=scale_chunk,
         error_feedback=error_feedback,
         difference_coding=difference_coding,
+        topk=topk,
     )
 
 
@@ -114,6 +139,7 @@ def fused_round_gt_ref(
     scale_chunk: int,
     error_feedback: bool = True,
     difference_coding: bool = True,
+    topk: int | None = None,
 ) -> Tuple[jnp.ndarray, ...]:
     """DSGT round oracle (adapt-then-combine gradient tracking):
 
@@ -140,6 +166,7 @@ def fused_round_gt_ref(
         scale_chunk=scale_chunk,
         error_feedback=error_feedback,
         difference_coding=difference_coding,
+        topk=topk,
     )
     mx, nrx, nsx, scx = gossip_mix_ref(
         h,
@@ -150,5 +177,70 @@ def fused_round_gt_ref(
         scale_chunk=scale_chunk,
         error_feedback=error_feedback,
         difference_coding=difference_coding,
+        topk=topk,
     )
     return mx, mt, nrx, nsx, nrt, nst, scx, sct
+
+
+def wire_stage_ref(
+    x: jnp.ndarray,
+    g: jnp.ndarray,
+    recon: jnp.ndarray,
+    res: jnp.ndarray,
+    alpha: jnp.ndarray,
+    *,
+    scale_chunk: int,
+    error_feedback: bool = True,
+    difference_coding: bool = True,
+    topk: int | None = None,
+) -> Tuple[jnp.ndarray, ...]:
+    """DSGD wire-stage oracle (the pre-collective half of the SHARDED
+    fused round): local update + difference coding + (top-k) int8
+    quantize + EF. Returns (h, q int8, scales, new_recon, new_res); the
+    sharded engine moves (q, scales) over the wire and finishes the mix
+    against its running neighbor-reconstruction accumulator."""
+    n, t = x.shape
+    if t % scale_chunk:
+        raise ValueError(f"total {t} not a multiple of scale_chunk {scale_chunk}")
+    h = x - alpha * g
+    base = recon if difference_coding else jnp.zeros_like(recon)
+    payload = h - base + (res if error_feedback else 0.0)
+    q, scales, dq = _quantize_ef_chunks(payload, scale_chunk, topk)
+    new_recon = base + dq
+    new_res = payload - dq if error_feedback else res
+    return h, q.reshape(n, t).astype(jnp.int8), scales, new_recon, new_res
+
+
+def wire_stage_gt_ref(
+    x: jnp.ndarray,
+    t: jnp.ndarray,
+    g: jnp.ndarray,
+    g_prev: jnp.ndarray,
+    recon_x: jnp.ndarray,
+    res_x: jnp.ndarray,
+    recon_t: jnp.ndarray,
+    res_t: jnp.ndarray,
+    alpha: jnp.ndarray,
+    *,
+    scale_chunk: int,
+    error_feedback: bool = True,
+    difference_coding: bool = True,
+    topk: int | None = None,
+) -> Tuple[jnp.ndarray, ...]:
+    """DSGT wire-stage oracle: tracker arithmetic + parameter update +
+    both wires' quantize-EF. Returns (h, t_half, q_x, scales_x,
+    new_recon_x, new_res_x, q_t, scales_t, new_recon_t, new_res_t)."""
+    t_half = t + g - g_prev
+    zeros = jnp.zeros_like(g)
+    ht, qt, sct, nrt, nst = wire_stage_ref(
+        t_half, zeros, recon_t, res_t, alpha, scale_chunk=scale_chunk,
+        error_feedback=error_feedback, difference_coding=difference_coding,
+        topk=topk,
+    )
+    h, qx, scx, nrx, nsx = wire_stage_ref(
+        x, t_half, recon_x, res_x, alpha, scale_chunk=scale_chunk,
+        error_feedback=error_feedback, difference_coding=difference_coding,
+        topk=topk,
+    )
+    del ht  # == t_half (zero gradient)
+    return h, t_half, qx, scx, nrx, nsx, qt, sct, nrt, nst

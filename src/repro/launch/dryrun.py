@@ -42,13 +42,8 @@ from repro.configs import (  # noqa: E402
     supports_shape,
     train_input_specs,
 )
-from repro.core.fl import FLConfig, FLState, FusedRoundSpec, make_fl_round  # noqa: E402
-from repro.core.mixing import (  # noqa: E402
-    make_mesh_flat_mix,
-    make_mesh_gossip,
-    mesh_gossip_dense_equivalent,
-)
-from repro.core.packing import pack_layout  # noqa: E402
+from repro.core.engine import engine_names, get_engine  # noqa: E402
+from repro.core.fl import FLConfig, FLState, make_fl_round  # noqa: E402
 from repro.core.schedules import inv_sqrt  # noqa: E402
 from repro.launch.hlo_analysis import analyze_hlo  # noqa: E402
 from repro.launch.mesh import HW, make_production_mesh, n_fl_nodes, node_axes  # noqa: E402
@@ -68,47 +63,37 @@ def _stack_nodes_sds(tree, n_nodes: int):
     )
 
 
-def _fused_mesh_w(mesh, naxes, hier: bool) -> np.ndarray:
-    """The dense W the fused megakernel bakes in: the circulant torus the
-    ppermute backend realizes over the node axes (intra-pod block-diagonal
-    when hierarchical)."""
-    if hier:
-        data_w = mesh_gossip_dense_equivalent({"data": mesh.shape["data"]})
-        return np.kron(np.eye(mesh.shape["pod"]), data_w)
-    return mesh_gossip_dense_equivalent({a: mesh.shape[a] for a in naxes})
-
-
 def build_train_lowering(arch: str, shape_name: str, mesh, q: int, algorithm: str = "dsgt",
                          wire_dtype=None, pod_gossip_every: int = 1, impl: str = "ref",
                          pad_heads: int = 0, fl_engine: str = "tree",
-                         scale_chunk: int = 512):
+                         scale_chunk: int = 512, topk=None):
     """Lower one FL round (Q local steps + gossip) for the given mesh.
 
-    ``fl_engine`` selects the production round engine:
-      * "tree"  -- node-stacked pytree state, per-leaf model sharding,
-                   ppermute gossip inside shard_map (packs per call);
-      * "flat"  -- the state lives as ONE packed (nodes, total) buffer
-                   end to end (``make_fl_round(layout=...)``): local steps,
-                   metrics, and gossip (``make_mesh_flat_mix``) are all
-                   single-buffer ops, with the pytree materialized only
-                   transiently inside the per-node loss;
-      * "fused" -- the flat engine with the round megakernel: the comm
-                   step is ONE fused update+quantize+mix+EF pass against
-                   the dense equivalent of the mesh's circulant W. The
-                   dry-run lowers the kernel's jnp oracle (bit-identical
-                   math) because GSPMD can partition it over the node
-                   axes; on-device the Pallas kernel is the same call with
-                   ``impl="pallas"``.
+    ``fl_engine`` names a registered GossipEngine (the registry in
+    ``repro.core.engine`` is the one source of truth; no string dispatch
+    here), built against the mesh with its ``from_mesh`` constructor:
+
+      * "tree"          -- node-stacked pytree state, per-leaf model
+                           sharding, ppermute gossip inside shard_map;
+      * "flat"          -- the state lives as ONE packed (nodes, total)
+                           buffer end to end; local steps, metrics, and
+                           gossip are all single-buffer ops;
+      * "fused"         -- the round megakernel against the dense
+                           equivalent of the mesh's circulant W. The
+                           dry-run lowers the kernel's jnp oracle
+                           (bit-identical math) because GSPMD can
+                           partition it over the node axes;
+      * "sharded_fused" -- the shard_map-native fused round: wire-stage
+                           Pallas kernel per shard (interpret off-TPU) +
+                           int8 ppermute wire; the one-kernel-per-round
+                           property survives the mesh.
+
+    ``topk`` masks the fused engines' payload to k columns per scale
+    chunk (sub-int8 wire).
     """
     import dataclasses as _dc
 
-    if fl_engine not in ("tree", "flat", "fused"):
-        raise ValueError(f"unknown fl_engine {fl_engine!r}")
-    if fl_engine == "fused" and wire_dtype is not None:
-        raise ValueError(
-            "the fused engine's wire is always difference-coded int8; "
-            "--wire-dtype only applies to the tree/flat exact-wire engines"
-        )
+    engine_cls = get_engine(fl_engine)  # raises with the registry listing
     cfg = get_config(arch)
     if pad_heads:
         cfg = _dc.replace(cfg, tp_head_pad=pad_heads)
@@ -129,44 +114,24 @@ def build_train_lowering(arch: str, shape_name: str, mesh, q: int, algorithm: st
     # ((k-1) * data_only + full) / k (EXPERIMENTS.md §Perf).
     hier = pod_gossip_every > 1 and "pod" in naxes
 
-    layout = None
-    fused = None
-    if fl_engine == "tree":
-        gossip = make_mesh_gossip(
-            mesh, naxes, pspecs, wire_dtype=wire_dtype,
-            axes_subset=("data",) if hier else None,
-        )
-    else:
-        layout = pack_layout(stacked_sds, pad_to=scale_chunk)
-        if fl_engine == "flat":
-            gossip = make_mesh_flat_mix(
-                mesh, naxes, wire_dtype=wire_dtype,
-                axes_subset=("data",) if hier else None,
-            )
-        else:
-            gossip = None
-            fused = FusedRoundSpec(
-                w=_fused_mesh_w(mesh, naxes, hier), scale_chunk=scale_chunk,
-                impl="jnp",
-            )
+    engine = engine_cls.from_mesh(
+        mesh, naxes, stacked_sds, specs=pspecs, wire_dtype=wire_dtype,
+        axes_subset=("data",) if hier else None, scale_chunk=scale_chunk,
+        topk=topk,
+    )
     round_fn = make_fl_round(
-        bundle.loss_fn, gossip, inv_sqrt(0.02), fl_cfg, layout=layout, fused=fused
+        bundle.loss_fn, None, inv_sqrt(0.02), fl_cfg, engine=engine
     )
 
     int_sds = jax.ShapeDtypeStruct((), jnp.int32)
-    if fl_engine == "tree":
+    if engine.layout is None:
         buf_sds, buf_specs = stacked_sds, pspecs
-        comm_sds = comm_specs = None
     else:
-        buf_sds = jax.ShapeDtypeStruct((nodes, layout.total), jnp.float32)
+        buf_sds = jax.ShapeDtypeStruct((nodes, engine.layout.total), jnp.float32)
         buf_specs = P(tuple(naxes), None)
-        comm_sds = comm_specs = None
-        if fl_engine == "fused":
-            keys = ["recon", "residual"] + (
-                ["recon_t", "residual_t"] if algorithm == "dsgt" else []
-            )
-            comm_sds = {k: buf_sds for k in keys}
-            comm_specs = {k: buf_specs for k in keys}
+    keys = engine.comm_keys(fl_cfg)
+    comm_sds = {k: buf_sds for k in keys} or None
+    comm_specs = {k: buf_specs for k in keys} or None
     if algorithm == "dsgt":
         state_sds = FLState(int_sds, buf_sds, buf_sds, buf_sds, comm_sds)
         state_specs = FLState(P(), buf_specs, buf_specs, buf_specs, comm_specs)
@@ -287,6 +252,7 @@ def run_pair(
     impl: str = "ref",
     pad_heads: int = 0,
     fl_engine: str = "tree",
+    topk=None,
 ) -> Dict[str, Any]:
     """Lower + compile one pair; return the dry-run record."""
     mesh = make_production_mesh(multi_pod=(mesh_kind == "multi"))
@@ -303,7 +269,7 @@ def run_pair(
         if shape.kind == "train":
             jitted, args, cfg = build_train_lowering(
                 arch, shape_name, mesh, q, algorithm, wd, pod_gossip_every, impl,
-                pad_heads, fl_engine
+                pad_heads, fl_engine, topk=topk,
             )
             lowered = jitted.lower(*args)
         elif shape.kind == "prefill":
@@ -333,6 +299,7 @@ def run_pair(
         "algorithm": algorithm if shape.kind == "train" else None,
         "impl": impl,
         "fl_engine": fl_engine if shape.kind == "train" else None,
+        "topk": topk if shape.kind == "train" else None,
         "wire_dtype": wire_dtype,
         "pod_gossip_every": pod_gossip_every,
         "n_chips": n_chips,
@@ -373,10 +340,13 @@ def main() -> None:
     ap.add_argument("--wire-dtype", default=None)
     ap.add_argument("--pod-gossip-every", type=int, default=1)
     ap.add_argument("--impl", default="ref", choices=("ref", "blocked"))
-    ap.add_argument("--fl-engine", default="tree", choices=("tree", "flat", "fused"),
-                    help="round engine: node-stacked pytree, flat (nodes, total) "
-                         "buffer, or the fused round megakernel (see "
+    ap.add_argument("--fl-engine", default="tree", choices=engine_names(),
+                    help="round engine, resolved through the GossipEngine "
+                         "registry (repro.core.engine; see "
                          "docs/ARCHITECTURE.md)")
+    ap.add_argument("--topk", type=int, default=None,
+                    help="fused engines: ship only the k largest payload "
+                         "columns per scale chunk (sub-int8 wire)")
     ap.add_argument("--pad-heads", type=int, default=0,
                     help="pad q heads to a multiple of this (16 = TP degree)")
     ap.add_argument("--out", default=None, help="directory for the JSON record")
@@ -386,6 +356,7 @@ def main() -> None:
         args.arch, args.shape, args.mesh, q=args.q, algorithm=args.algorithm,
         wire_dtype=args.wire_dtype, pod_gossip_every=args.pod_gossip_every,
         impl=args.impl, pad_heads=args.pad_heads, fl_engine=args.fl_engine,
+        topk=args.topk,
     )
     print(json.dumps(rec, indent=2))
     if args.out:
@@ -395,6 +366,8 @@ def main() -> None:
             suffix += f"_{args.impl}"
         if args.fl_engine != "tree":
             suffix += f"_{args.fl_engine}"
+        if args.topk:
+            suffix += f"_topk{args.topk}"
         if args.pad_heads:
             suffix += f"_hpad{args.pad_heads}"
         if args.wire_dtype:

@@ -27,6 +27,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs import FLRunConfig, get_config
+from repro.core.engine import engine_names
 from repro.data.tokens import make_fl_token_batches
 from repro.models import build_model
 from repro.training.checkpoint import save_fl_state
@@ -45,6 +46,15 @@ def main() -> None:
     ap.add_argument("--batch-per-node", type=int, default=2)
     ap.add_argument("--seq-len", type=int, default=128)
     ap.add_argument("--alpha0", type=float, default=0.5)
+    ap.add_argument("--fl-engine", default="tree", choices=engine_names(),
+                    help="round engine, resolved through the GossipEngine "
+                         "registry (sharded_fused needs a mesh -- use "
+                         "launch/dryrun.py for that path)")
+    ap.add_argument("--scale-chunk", type=int, default=512,
+                    help="fused engines: int8 scale block width")
+    ap.add_argument("--topk", type=int, default=None,
+                    help="fused engines: k largest payload columns per "
+                         "scale chunk on the wire")
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--checkpoint", default=None)
     ap.add_argument("--log-every", type=int, default=5)
@@ -82,7 +92,8 @@ def main() -> None:
     t0 = time.time()
     result = train_decentralized(
         bundle.loss_fn, params, run, step_batches(), rounds=args.rounds,
-        log_every=args.log_every,
+        log_every=args.log_every, engine=args.fl_engine,
+        scale_chunk=args.scale_chunk, topk=args.topk,
     )
     hist = result.history
     first, last = hist.rows()[0], hist.last()
@@ -90,6 +101,7 @@ def main() -> None:
         json.dumps(
             {
                 "arch": cfg.name,
+                "fl_engine": args.fl_engine,
                 "algorithm": args.algorithm,
                 "q": args.q,
                 "rounds": args.rounds,
@@ -103,7 +115,8 @@ def main() -> None:
         )
     )
     if args.checkpoint:
-        save_fl_state(args.checkpoint, result.state, extra={"arch": cfg.name})
+        save_fl_state(args.checkpoint, result.state, extra={"arch": cfg.name},
+                      engine=result.engine)
         print(f"checkpoint -> {args.checkpoint}")
 
 

@@ -2,9 +2,24 @@
 
 Pure numpy/JSON (no orbax dependency): leaves are flattened by tree path,
 saved in one compressed npz per call, with a manifest recording step,
-algorithm, and tree structure for restore-time validation. Restoring
+engine, and tree structure for restore-time validation. Restoring
 requires a template state (from ``init_fl_state``) whose structure must
 match -- shape/dtype mismatches fail loudly.
+
+Engine awareness: ``save_fl_state(..., engine=...)`` records the engine's
+registry name in the manifest; ``load_fl_state`` validates a recorded
+name against the GossipEngine registry (catching checkpoints written by
+a renamed/removed engine before shape errors obscure the cause) and
+refuses to silently drop wire state: a comm-carrying checkpoint cannot
+land on a comm-less template, and a template may not discard buffers the
+checkpoint saved. Restoring onto a template with MORE comm buffers than
+the checkpoint saved (e.g. a fused checkpoint onto a sharded template)
+requires ``engine=`` so the engine's ``restore_comm`` hook can rebuild
+the DERIVED buffers consistently (the sharded engine's invariant is
+``mix_recon == W_off @ recon``; zero-filling would silently corrupt the
+mix). Pre-comm checkpoints (no comm saved at all) still restore onto any
+template with the zero-initialized comm buffers -- self-consistent:
+every node retransmits in full next round.
 """
 
 from __future__ import annotations
@@ -16,6 +31,7 @@ from typing import Any, Optional
 import jax
 import numpy as np
 
+from repro.core.engine import GossipEngine, engine_names, get_engine
 from repro.core.fl import FLState
 
 PyTree = Any
@@ -31,7 +47,8 @@ def _flat_dict(tree: PyTree) -> dict:
     return flat
 
 
-def save_fl_state(path: str, state: FLState, extra: Optional[dict] = None) -> None:
+def save_fl_state(path: str, state: FLState, extra: Optional[dict] = None,
+                  engine: Optional[GossipEngine] = None) -> None:
     os.makedirs(path, exist_ok=True)
     arrays = {}
     manifest = {
@@ -39,6 +56,10 @@ def save_fl_state(path: str, state: FLState, extra: Optional[dict] = None) -> No
         "has_tracker": state.tracker is not None,
         "has_comm": state.comm is not None,
     }
+    if engine is not None:
+        manifest["engine"] = engine.name
+    if state.comm is not None:
+        manifest["comm_keys"] = sorted(state.comm)
     if extra:
         manifest["extra"] = extra
     for name, tree in (("params", state.params), ("tracker", state.tracker),
@@ -53,10 +74,30 @@ def save_fl_state(path: str, state: FLState, extra: Optional[dict] = None) -> No
         json.dump(manifest, f, indent=2)
 
 
-def load_fl_state(path: str, template: FLState) -> FLState:
+def load_fl_state(path: str, template: FLState,
+                  engine: Optional[GossipEngine] = None) -> FLState:
     with open(os.path.join(path, "manifest.json")) as f:
         manifest = json.load(f)
+    saved_engine = manifest.get("engine")
+    if saved_engine is not None:
+        if saved_engine not in engine_names():
+            raise ValueError(
+                f"checkpoint was written by engine {saved_engine!r}, which "
+                f"is not in the registry {engine_names()}"
+            )
+        get_engine(saved_engine)  # resolvable, not just named
     data = np.load(os.path.join(path, "state.npz"))
+    saved_comm_keys = set(manifest.get("comm_keys") or ())
+    if not saved_comm_keys:  # legacy manifest: derive from the npz contents
+        saved_comm_keys = {
+            k.split("::", 1)[1] for k in data.files if k.startswith("comm::")
+        }
+    if template.comm is None and saved_comm_keys:
+        raise ValueError(
+            f"checkpoint carries wire state {sorted(saved_comm_keys)} but "
+            "the restore template has none; build the template with the "
+            "matching engine (init_fl_state(..., engine=...))"
+        )
 
     def restore(name: str, tree: PyTree) -> PyTree:
         if tree is None:
@@ -80,11 +121,40 @@ def load_fl_state(path: str, template: FLState) -> FLState:
         new_leaves = [out[k] for k in keys]
         return jax.tree_util.tree_unflatten(leaves_paths[1], new_leaves)
 
-    # pre-comm checkpoints restore onto fused templates with zeroed wire
-    # state (self-consistent: every node retransmits in full next round)
+    # pre-comm checkpoints -- and checkpoints from engines with FEWER comm
+    # buffers -- restore onto richer templates with the extra buffers kept
+    # zero-initialized (self-consistent: every node retransmits in full
+    # next round). Buffers present in both are restored exactly.
     comm = template.comm
     if comm is not None and manifest.get("has_comm", False):
-        comm = restore("comm", template.comm)
+        saved_keys = saved_comm_keys
+        extra = saved_keys - set(comm)
+        if extra:  # refuse to silently drop wire state (engine= or not)
+            raise ValueError(
+                f"checkpoint carries wire state {sorted(extra)} that the "
+                "restore template does not use; build the template with the "
+                "matching engine"
+            )
+        if saved_keys and saved_keys < set(comm):
+            # the template carries buffers this checkpoint never saved --
+            # they may be DERIVED from the restored ones (e.g. the sharded
+            # engine's mix_recon == W_off @ recon), so the owning engine
+            # must rebuild them; zero-filling is only safe pre-comm
+            if engine is None:
+                raise ValueError(
+                    "restore template carries engine-specific wire state "
+                    f"{sorted(set(comm) - saved_keys)} the checkpoint did "
+                    "not save; pass engine= so it can be rebuilt "
+                    "consistently"
+                )
+            partial = restore("comm", {k: comm[k] for k in sorted(saved_keys)})
+            comm = dict(comm)
+            comm.update(partial)
+        else:
+            comm = restore("comm", template.comm)
+        rebuild = getattr(engine, "restore_comm", None)
+        if rebuild is not None:
+            comm = rebuild(comm)
     return FLState(
         step=np.int32(manifest["step"]),
         params=restore("params", template.params),

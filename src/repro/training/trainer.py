@@ -1,10 +1,13 @@
 """End-to-end decentralized-FL training driver (simulated node axis).
 
 Runs the paper's Algorithm 1 on a single host: nodes live on the leading
-array axis (vmap), gossip through the dense-W backend. This is the driver
-behind the EHR reproduction and the CPU-scale LM examples; the sharded
-multi-pod variant reuses the same ``make_fl_round`` with mesh gossip
-(see launch/train.py).
+array axis (vmap), mixing through whichever GossipEngine is selected
+(``engine=`` accepts a registry name -- tree / flat / fused -- or a
+prebuilt engine; the default tree engine gossips through the dense-W
+backend). This is the driver behind the EHR reproduction and the
+CPU-scale LM examples; the sharded multi-pod variant reuses the same
+``make_fl_round`` with a mesh-built engine (see launch/train.py and
+launch/dryrun.py).
 """
 
 from __future__ import annotations
@@ -18,8 +21,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import FLRunConfig
-from repro.core.fl import FLConfig, FLState, consensus_params, init_fl_state, make_fl_round
-from repro.core.mixing import make_dense_gossip
+from repro.core.engine import GossipEngine, get_engine
+from repro.core.fl import FLConfig, FLState, init_fl_state, make_fl_round
 from repro.core.schedules import constant, inv_sqrt, theorem1_schedule
 from repro.core.topology import check_assumption1, mixing_matrix
 from repro.training.metrics import MetricHistory, comm_bytes_per_gossip
@@ -35,6 +38,7 @@ class TrainResult:
     history: MetricHistory
     consensus: PyTree
     w: np.ndarray
+    engine: GossipEngine = None  # the engine the run trained with
 
 
 def make_schedule(run: FLRunConfig):
@@ -79,25 +83,59 @@ def train_decentralized(
     eval_every: int = 50,
     log_every: int = 0,
     wire_dtype=None,
+    engine="tree",
+    scale_chunk: Optional[int] = None,
+    topk: Optional[int] = None,
 ) -> TrainResult:
     """Train for ``rounds`` communication rounds.
 
     ``step_batches`` yields PER-STEP node-stacked batches (nodes, ...);
     the driver groups Q of them per round (paper: Q local updates, then
     one communication).
+
+    ``engine`` selects the round engine: a registry name (resolved via
+    ``repro.core.engine.get_engine`` and built with its ``simulated``
+    constructor against the run topology's W) or a prebuilt
+    :class:`GossipEngine`. Flat/fused engines pack the state; the tree
+    view is restored at the eval/consensus boundary via
+    ``engine.params_view``. ``scale_chunk`` / ``topk`` configure the
+    fused engines' int8 / top-k wire.
     """
     w = mixing_matrix(run.topology, run.n_nodes)
     check_assumption1(w)
-    gossip = make_dense_gossip(w, wire_dtype=wire_dtype)
     cfg = FLConfig(algorithm=run.algorithm, q=run.q, n_nodes=run.n_nodes)
-    schedule = make_schedule(run)
-    round_fn = jax.jit(make_fl_round(loss_fn, gossip, schedule, cfg))
-    state = init_fl_state(cfg, params_single if _is_stacked(params_single, run.n_nodes) else stack_for_nodes(params_single, run.n_nodes))
-
-    bytes_per_round = comm_bytes_per_gossip(
-        params_single, run.topology, run.n_nodes,
-        wire_dtype=str(np.dtype(wire_dtype)) if wire_dtype else None,
+    stacked = (
+        params_single
+        if _is_stacked(params_single, run.n_nodes)
+        else stack_for_nodes(params_single, run.n_nodes)
     )
+    if isinstance(engine, GossipEngine):
+        knobs = {"wire_dtype": wire_dtype, "scale_chunk": scale_chunk,
+                 "topk": topk}
+        set_knobs = sorted(k for k, v in knobs.items() if v is not None)
+        if set_knobs:
+            raise ValueError(
+                f"{set_knobs} configure an engine BUILD; the prebuilt "
+                f"{engine.name!r} engine already fixed its wire -- pass a "
+                "registry name instead, or bake the knobs into the engine"
+            )
+        params0 = stacked if engine.layout is None else engine_pack(engine, stacked)
+    else:
+        engine, params0 = get_engine(engine).simulated(
+            w, stacked, wire_dtype=wire_dtype,
+            scale_chunk=512 if scale_chunk is None else scale_chunk,
+            topk=topk,
+        )
+    schedule = make_schedule(run)
+    round_fn = jax.jit(make_fl_round(loss_fn, None, schedule, cfg, engine=engine))
+    state = init_fl_state(cfg, params0, engine=engine)
+
+    bytes_per_round = engine.wire_bytes(cfg)
+    if bytes_per_round is None:
+        bytes_per_round = comm_bytes_per_gossip(
+            params_single, run.topology, run.n_nodes,
+            wire_dtype=str(np.dtype(wire_dtype)) if wire_dtype else None,
+        )
     history = MetricHistory()
     t0 = time.time()
     for rnd in range(1, rounds + 1):
@@ -117,14 +155,29 @@ def train_decentralized(
             "wall_s": time.time() - t0,
         }
         if eval_fn is not None and (rnd % eval_every == 0 or rnd == rounds):
-            row.update({f"eval_{k}": v for k, v in eval_fn(consensus_params(state)).items()})
+            row.update({f"eval_{k}": v for k, v in eval_fn(_consensus(engine, state)).items()})
         history.append(**row)
         if log_every and rnd % log_every == 0:
             print(
                 f"[round {rnd:5d}] it={row['iteration']:6d} loss={row['loss']:.4f} "
                 f"cons={row['consensus_err']:.3e} gnorm2={row['grad_norm_sq']:.3e}"
             )
-    return TrainResult(state=state, history=history, consensus=consensus_params(state), w=w)
+    return TrainResult(state=state, history=history,
+                       consensus=_consensus(engine, state), w=w, engine=engine)
+
+
+def _consensus(engine: GossipEngine, state: FLState) -> PyTree:
+    """theta_bar on the TREE view, whatever the engine's representation."""
+    return jax.tree_util.tree_map(
+        lambda p: jnp.mean(p, axis=0), engine.params_view(state.params)
+    )
+
+
+def engine_pack(engine: GossipEngine, stacked: PyTree):
+    """Pack tree params into a prebuilt flat engine's layout."""
+    from repro.core.packing import pack_like
+
+    return pack_like(stacked, engine.layout)
 
 
 def _is_stacked(params: PyTree, n_nodes: int) -> bool:

@@ -1,0 +1,259 @@
+"""The GossipEngine protocol layer: registry resolution, legacy-kwarg
+migration errors, engine-built rounds matching each other, wire-byte
+accounting, and checkpoint round-trips of the new engine comm state.
+(The hypothesis property tests for top-k + EF consensus contraction live
+in tests/test_topk_property.py so this module runs without hypothesis.)"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.engine import (
+    FlatEngine,
+    FusedEngine,
+    ShardedFusedEngine,
+    TreeEngine,
+    engine_names,
+    get_engine,
+)
+from repro.core.fl import FLConfig, init_fl_state, make_fl_round
+from repro.core.mixing import make_dense_flat_mix, make_dense_gossip
+from repro.core.packing import flat_wire_bytes, pack, pack_layout
+from repro.core.schedules import constant
+from repro.core.topology import mixing_matrix
+
+
+def _problem(n, q, seed=0):
+    rng = np.random.default_rng(seed)
+
+    def loss(p, batch):
+        return jnp.sum((p["w"] - batch["t"]) ** 2) + jnp.sum(p["b"] ** 2)
+
+    params = {
+        "w": jnp.asarray(rng.normal(size=(n, 4, 3)), jnp.float32),
+        "b": jnp.asarray(rng.normal(size=(n, 3)), jnp.float32),
+    }
+    batches = {"t": jnp.asarray(rng.normal(size=(q, n, 4, 3)), jnp.float32)}
+    return loss, params, batches
+
+
+# ---------------------------------------------------------------------------
+# registry + migration
+# ---------------------------------------------------------------------------
+
+
+def test_registry_has_all_engines():
+    assert engine_names() == ("flat", "fused", "sharded_fused", "tree")
+    assert get_engine("tree") is TreeEngine
+    assert get_engine("flat") is FlatEngine
+    assert get_engine("fused") is FusedEngine
+    assert get_engine("sharded_fused") is ShardedFusedEngine
+
+
+def test_unknown_engine_lists_registry():
+    with pytest.raises(ValueError, match="sharded_fused"):
+        get_engine("does-not-exist")
+
+
+def test_legacy_kwargs_raise_with_migration_hint():
+    n = 4
+    loss, params, _ = _problem(n, 1)
+    cfg = FLConfig(algorithm="dsgd", q=1, n_nodes=n)
+    flat, layout = pack(params, pad_to=8)
+    for legacy in ({"layout": layout}, {"fused": object()},
+                   {"layout": layout, "fused": object()}):
+        with pytest.raises(TypeError, match="GossipEngine"):
+            make_fl_round(loss, None, constant(0.1), cfg, **legacy)
+    with pytest.raises(TypeError, match="GossipEngine"):
+        init_fl_state(cfg, flat, fused=True)
+    # engine + gossip_fn is ambiguous
+    with pytest.raises(ValueError, match="inside the engine"):
+        make_fl_round(loss, lambda t: t, constant(0.1), cfg,
+                      engine=FlatEngine(lambda f: f, layout))
+    # neither is an error too
+    with pytest.raises(ValueError, match="gossip_fn or an"):
+        make_fl_round(loss, None, constant(0.1), cfg)
+
+
+def test_sharded_fused_rejects_simulated_build():
+    w = mixing_matrix("ring", 4)
+    _, params, _ = _problem(4, 1)
+    with pytest.raises(ValueError, match="mesh"):
+        get_engine("sharded_fused").simulated(w, params)
+
+
+# ---------------------------------------------------------------------------
+# engine-built rounds agree across representations
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("algorithm", ["dsgd", "dsgt"])
+def test_tree_and_flat_engines_match(algorithm):
+    n, q = 8, 2
+    w = mixing_matrix("ring", n)
+    loss, params, batches = _problem(n, q, seed=3)
+    cfg = FLConfig(algorithm=algorithm, q=q, n_nodes=n)
+    sched = constant(0.05)
+
+    eng_t, p_t = get_engine("tree").simulated(w, params)
+    eng_f, p_f = get_engine("flat").simulated(w, params, scale_chunk=8)
+    rf_t = jax.jit(make_fl_round(loss, None, sched, cfg, engine=eng_t))
+    rf_f = jax.jit(make_fl_round(loss, None, sched, cfg, engine=eng_f))
+    st_t = init_fl_state(cfg, p_t, engine=eng_t)
+    st_f = init_fl_state(cfg, p_f, engine=eng_f)
+    for _ in range(3):
+        st_t, _ = rf_t(st_t, batches)
+        st_f, _ = rf_f(st_f, batches)
+    back = eng_f.params_view(st_f.params)
+    for k in params:
+        np.testing.assert_allclose(
+            np.asarray(back[k]), np.asarray(st_t.params[k]), atol=1e-5
+        )
+
+
+def test_gossip_fn_positional_is_tree_engine_sugar():
+    n, q = 4, 1
+    w = mixing_matrix("ring", n)
+    loss, params, batches = _problem(n, q, seed=5)
+    cfg = FLConfig(algorithm="dsgd", q=q, n_nodes=n)
+    rf_sugar = jax.jit(make_fl_round(loss, make_dense_gossip(w), constant(0.1), cfg))
+    rf_eng = jax.jit(make_fl_round(
+        loss, None, constant(0.1), cfg, engine=TreeEngine(make_dense_gossip(w))
+    ))
+    st = init_fl_state(cfg, params)
+    (s1, m1), (s2, m2) = rf_sugar(st, batches), rf_eng(st, batches)
+    for k in params:
+        np.testing.assert_array_equal(np.asarray(s1.params[k]), np.asarray(s2.params[k]))
+
+
+# ---------------------------------------------------------------------------
+# top-k wire accounting
+# ---------------------------------------------------------------------------
+
+
+def test_topk_wire_bytes_below_int8():
+    _, params, _ = _problem(16, 1)
+    flat, layout = pack(params, pad_to=8)
+    dense = flat_wire_bytes(layout, 3, 8)
+    sparse = flat_wire_bytes(layout, 3, 8, topk=2)
+    assert sparse < dense
+    # per chunk: 2 int8 + min(4, 1) position bytes + 4 B scale
+    n_chunks = layout.total // 8
+    assert sparse == 3 * n_chunks * (2 + 1 + 4)
+    # degenerate k >= chunk falls back to dense accounting
+    assert flat_wire_bytes(layout, 3, 8, topk=8) == dense
+
+
+def test_fused_engine_wire_bytes_metric_drops_with_topk():
+    n, q, chunk = 8, 1, 32
+    w = mixing_matrix("ring", n)
+    loss, params, batches = _problem(n, q, seed=2)
+    cfg = FLConfig(algorithm="dsgt", q=q, n_nodes=n)
+    metrics = {}
+    for tk in (None, 4):
+        eng, flat = get_engine("fused").simulated(
+            w, params, scale_chunk=chunk, topk=tk, impl="jnp"
+        )
+        rf = jax.jit(make_fl_round(loss, None, constant(0.05), cfg, engine=eng))
+        st = init_fl_state(cfg, flat, engine=eng)
+        _, m = rf(st, batches)
+        metrics[tk] = float(m["wire_bytes"])
+        assert metrics[tk] == eng.wire_bytes(cfg)
+    assert metrics[4] < metrics[None]
+
+
+# ---------------------------------------------------------------------------
+# checkpoint round-trip of the new engine comm state
+# ---------------------------------------------------------------------------
+
+
+def test_checkpoint_roundtrip_engine_comm_state(tmp_path):
+    """Every comm buffer an engine declares survives save/load, the
+    manifest records the engine name, and a checkpoint from an engine
+    with FEWER comm buffers restores onto a richer template with the
+    extra buffers left zero-initialized (the sharded engine's mix_recon
+    accumulators)."""
+    from repro.training.checkpoint import load_fl_state, save_fl_state
+
+    cfg = FLConfig(algorithm="dsgt", q=2, n_nodes=4)
+    w = mixing_matrix("ring", 4)
+    flat = jnp.arange(4 * 32, dtype=jnp.float32).reshape(4, 32)
+    layout = pack_layout(flat)
+    fused = FusedEngine(w, layout, scale_chunk=16)
+
+    st = init_fl_state(cfg, flat, engine=fused)
+    assert set(st.comm) == {"recon", "residual", "recon_t", "residual_t"}
+    st = st._replace(comm={k: v + i for i, (k, v) in enumerate(st.comm.items(), 1)})
+    path = str(tmp_path / "fused")
+    save_fl_state(path, st, engine=fused)
+
+    import json, os
+    manifest = json.load(open(os.path.join(path, "manifest.json")))
+    assert manifest["engine"] == "fused"
+    assert manifest["comm_keys"] == sorted(st.comm)
+
+    back = load_fl_state(path, init_fl_state(cfg, flat, engine=fused), engine=fused)
+    for k in st.comm:
+        np.testing.assert_array_equal(np.asarray(back.comm[k]), np.asarray(st.comm[k]))
+
+    # restoring onto the sharded template: shared buffers restored, and the
+    # DERIVED mix_recon accumulators are rebuilt by the engine's
+    # restore_comm hook (mix_recon == W_off @ recon -- the sharded
+    # invariant; a zero template value would silently break mixing)
+    sharded_keys = ("recon", "residual", "mix_recon",
+                    "recon_t", "residual_t", "mix_recon_t")
+    template = st._replace(
+        comm={k: jnp.zeros_like(flat) for k in sharded_keys}
+    )
+    w_off = jnp.asarray(w - np.diag(np.diag(w)), jnp.float32)
+
+    class _FakeSharded:
+        name = "sharded_fused"
+
+        def restore_comm(self, comm):
+            comm = dict(comm)
+            comm["mix_recon"] = w_off @ comm["recon"]
+            comm["mix_recon_t"] = w_off @ comm["recon_t"]
+            return comm
+
+    back2 = load_fl_state(path, template, engine=_FakeSharded())
+    for k in st.comm:
+        np.testing.assert_array_equal(np.asarray(back2.comm[k]), np.asarray(st.comm[k]))
+    np.testing.assert_allclose(
+        np.asarray(back2.comm["mix_recon"]),
+        np.asarray(w_off @ st.comm["recon"]), atol=1e-6)
+    np.testing.assert_allclose(
+        np.asarray(back2.comm["mix_recon_t"]),
+        np.asarray(w_off @ st.comm["recon_t"]), atol=1e-6)
+    # without engine= the partial restore refuses (derived state cannot be
+    # rebuilt blindly)
+    with pytest.raises(ValueError, match="rebuilt"):
+        load_fl_state(path, template)
+
+    # the reverse direction (richer checkpoint onto a poorer template)
+    # must refuse rather than silently drop wire state
+    st_sh = template._replace(
+        comm={k: v + 1.0 for k, v in template.comm.items()}
+    )
+    path2 = str(tmp_path / "sharded")
+    save_fl_state(path2, st_sh, engine=_FakeSharded())
+    with pytest.raises(ValueError, match="mix_recon"):
+        load_fl_state(path2, init_fl_state(cfg, flat, engine=fused), engine=fused)
+
+
+def test_checkpoint_rejects_unregistered_engine(tmp_path):
+    from repro.training.checkpoint import load_fl_state, save_fl_state
+
+    cfg = FLConfig(algorithm="dsgd", q=1, n_nodes=4)
+    flat = jnp.ones((4, 8), jnp.float32)
+    st = init_fl_state(cfg, flat)
+    path = str(tmp_path)
+    save_fl_state(path, st)
+    import json, os
+    mpath = os.path.join(path, "manifest.json")
+    manifest = json.load(open(mpath))
+    manifest["engine"] = "renamed-away"
+    json.dump(manifest, open(mpath, "w"))
+    with pytest.raises(ValueError, match="registry"):
+        load_fl_state(path, st)

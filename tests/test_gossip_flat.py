@@ -246,11 +246,12 @@ def test_flat_fl_round_matches_tree_round(algorithm):
     rf_tree = jax.jit(make_fl_round(loss, make_dense_gossip(w), constant(0.05), cfg))
     st_tree = init_fl_state(cfg, params)
 
+    from repro.core.engine import FlatEngine
+
     flat, layout = pack(params, pad_to=8)
-    rf_flat = jax.jit(
-        make_fl_round(loss, make_dense_flat_mix(w), constant(0.05), cfg, layout=layout)
-    )
-    st_flat = init_fl_state(cfg, flat)
+    engine = FlatEngine(make_dense_flat_mix(w), layout)
+    rf_flat = jax.jit(make_fl_round(loss, None, constant(0.05), cfg, engine=engine))
+    st_flat = init_fl_state(cfg, flat, engine=engine)
 
     for _ in range(3):
         st_tree, m_tree = rf_tree(st_tree, batches)

@@ -20,7 +20,8 @@ from repro.core.compression import (
     init_flat_compression_state,
     make_compressed_flat_gossip,
 )
-from repro.core.fl import FLConfig, FusedRoundSpec, init_fl_state, make_fl_round
+from repro.core.engine import FlatEngine, FusedEngine
+from repro.core.fl import FLConfig, init_fl_state, make_fl_round
 from repro.core.packing import pack, unpack
 from repro.core.schedules import constant, inv_sqrt
 from repro.core.topology import mixing_matrix
@@ -43,9 +44,9 @@ def _problem(n, q, seed=0):
 
 
 def _run_fused(loss, flat, layout, batches, cfg, w, chunk, impl, rounds, sched):
-    spec = FusedRoundSpec(w=w, scale_chunk=chunk, impl=impl)
-    rf = jax.jit(make_fl_round(loss, None, sched, cfg, layout=layout, fused=spec))
-    st = init_fl_state(cfg, flat, fused=True)
+    engine = FusedEngine(w, layout, scale_chunk=chunk, impl=impl)
+    rf = jax.jit(make_fl_round(loss, None, sched, cfg, engine=engine))
+    st = init_fl_state(cfg, flat, engine=engine)
     m = None
     for _ in range(rounds):
         st, m = rf(st, batches)
@@ -57,7 +58,9 @@ def _run_composition(loss, flat, layout, batches, cfg, w, chunk, rounds, sched):
     mix runs Q local steps plus the bare update/tracker arithmetic (an
     identity-W comm step IS the local update), then each wire goes through
     one compressed flat gossip round -- the unfused engine of PR 1."""
-    rf_local = jax.jit(make_fl_round(loss, lambda f: f, sched, cfg, layout=layout))
+    rf_local = jax.jit(
+        make_fl_round(loss, None, sched, cfg, engine=FlatEngine(lambda f: f, layout))
+    )
     gossip = make_compressed_flat_gossip(w, scale_chunk=chunk)
     gossip = jax.jit(gossip)
     st = init_fl_state(cfg, flat)
@@ -212,9 +215,9 @@ def test_fused_round_is_single_kernel_call(algorithm):
     loss, params, batches = _problem(n, q)
     cfg = FLConfig(algorithm=algorithm, q=q, n_nodes=n)
     flat, layout = pack(params, pad_to=chunk)
-    spec = FusedRoundSpec(w=w, scale_chunk=chunk, impl="pallas")
-    rf = make_fl_round(loss, None, constant(0.05), cfg, layout=layout, fused=spec)
-    st = init_fl_state(cfg, flat, fused=True)
+    engine = FusedEngine(w, layout, scale_chunk=chunk, impl="pallas")
+    rf = make_fl_round(loss, None, constant(0.05), cfg, engine=engine)
+    st = init_fl_state(cfg, flat, engine=engine)
 
     jaxpr = jax.make_jaxpr(rf)(st, batches)
     assert _count_primitive(jaxpr.jaxpr, "pallas_call") == 1
@@ -229,14 +232,19 @@ def test_fused_requires_flat_layout_and_comm_state():
     w = mixing_matrix("ring", n)
     loss, params, batches = _problem(n, 1)
     cfg = FLConfig(algorithm="dsgd", q=1, n_nodes=n)
-    with pytest.raises(ValueError, match="flat engine"):
-        make_fl_round(loss, None, constant(0.05), cfg, fused=FusedRoundSpec(w=w))
     flat, layout = pack(params, pad_to=32)
     with pytest.raises(ValueError, match="scale_chunk"):
-        make_fl_round(loss, None, constant(0.05), cfg, layout=layout,
-                      fused=FusedRoundSpec(w=w, scale_chunk=7))
+        FusedEngine(w, layout, scale_chunk=7)
     with pytest.raises(ValueError, match="flat buffer"):
-        init_fl_state(cfg, params, fused=True)
+        init_fl_state(cfg, params, engine=FusedEngine(w, layout, scale_chunk=32))
+    # the historical kwargs raise with a migration hint
+    with pytest.raises(TypeError, match="GossipEngine"):
+        make_fl_round(loss, None, constant(0.05), cfg, layout=layout)
+    with pytest.raises(TypeError, match="GossipEngine"):
+        make_fl_round(loss, None, constant(0.05), cfg,
+                      fused=object())
+    with pytest.raises(TypeError, match="GossipEngine"):
+        init_fl_state(cfg, flat, fused=True)
 
 
 def test_fused_checkpoint_roundtrip(tmp_path):
@@ -245,11 +253,15 @@ def test_fused_checkpoint_roundtrip(tmp_path):
     from repro.training.checkpoint import load_fl_state, save_fl_state
 
     cfg = FLConfig(algorithm="dsgt", q=2, n_nodes=4)
+    w = mixing_matrix("ring", 4)
     flat = jnp.arange(4 * 16, dtype=jnp.float32).reshape(4, 16)
-    st = init_fl_state(cfg, flat, fused=True)
+    from repro.core.packing import pack_layout
+    engine = FusedEngine(w, pack_layout(flat), scale_chunk=16)
+    st = init_fl_state(cfg, flat, engine=engine)
     st = st._replace(comm={k: v + 1.5 for k, v in st.comm.items()})
-    save_fl_state(str(tmp_path), st)
-    back = load_fl_state(str(tmp_path), init_fl_state(cfg, flat, fused=True))
+    save_fl_state(str(tmp_path), st, engine=engine)
+    back = load_fl_state(str(tmp_path), init_fl_state(cfg, flat, engine=engine),
+                         engine=engine)
     for k in st.comm:
         np.testing.assert_array_equal(np.asarray(back.comm[k]), np.asarray(st.comm[k]))
     np.testing.assert_array_equal(np.asarray(back.params), np.asarray(st.params))
@@ -264,9 +276,9 @@ def test_fused_dsgt_tracking_invariant():
     loss, params, batches = _problem(n, q, seed=7)
     cfg = FLConfig(algorithm="dsgt", q=q, n_nodes=n)
     flat, layout = pack(params, pad_to=chunk)
-    spec = FusedRoundSpec(w=w, scale_chunk=chunk, impl="jnp")
-    rf = jax.jit(make_fl_round(loss, None, constant(0.02), cfg, layout=layout, fused=spec))
-    st = init_fl_state(cfg, flat, fused=True)
+    engine = FusedEngine(w, layout, scale_chunk=chunk, impl="jnp")
+    rf = jax.jit(make_fl_round(loss, None, constant(0.02), cfg, engine=engine))
+    st = init_fl_state(cfg, flat, engine=engine)
     for _ in range(rounds):
         st, _ = rf(st, batches)
         t_bar = np.asarray(st.tracker).mean(axis=0)

@@ -1,0 +1,69 @@
+"""Property tests (hypothesis): top-k + EF compressed gossip still
+contracts to consensus on ring / torus / hospital20 graphs -- the EF
+residual defers the truncated payload mass instead of losing it -- and
+``topk == scale_chunk`` degenerates to the exact dense-int8 round."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis", reason="property tests need hypothesis")
+from hypothesis import given, settings, strategies as st
+
+from repro.core.compression import (
+    init_flat_compression_state,
+    make_compressed_flat_gossip,
+)
+from repro.core.topology import mixing_matrix
+
+
+@settings(max_examples=12, deadline=None)
+@given(
+    topo=st.sampled_from(["ring", "torus:4x4", "hospital20"]),
+    seed=st.integers(0, 100),
+    topk=st.sampled_from([1, 2, 4]),
+    scale=st.floats(0.1, 10.0),
+)
+def test_topk_ef_gossip_contracts_to_consensus(topo, seed, topk, scale):
+    n = 20 if topo == "hospital20" else 16
+    w = mixing_matrix(topo, n)
+    chunk = 16
+    rng = np.random.default_rng(seed)
+    flat = jnp.asarray(scale * rng.normal(size=(n, 64)), jnp.float32)
+    gossip = jax.jit(make_compressed_flat_gossip(w, scale_chunk=chunk, topk=topk))
+    state = init_flat_compression_state(flat)
+
+    def disagreement(x):
+        a = np.asarray(x)
+        return float(np.linalg.norm(a - a.mean(0)))
+
+    d0 = disagreement(flat)
+    x = flat
+    for _ in range(60):
+        x, state = gossip(x, state)
+    # mean is preserved by the doubly-stochastic mix through recon +
+    # exact self term, up to EF-deferred mass still in flight
+    assert disagreement(x) < 0.05 * d0 + 1e-5
+    np.testing.assert_allclose(
+        np.asarray(x).mean(0), np.asarray(flat).mean(0), atol=2e-2 * scale
+    )
+
+
+@settings(max_examples=8, deadline=None)
+@given(seed=st.integers(0, 100))
+def test_topk_matches_dense_when_k_is_chunk(seed):
+    """topk == scale_chunk must be the EXACT dense-int8 round."""
+    n, t, chunk = 8, 64, 16
+    w = mixing_matrix("ring", n)
+    rng = np.random.default_rng(seed)
+    flat = jnp.asarray(rng.normal(size=(n, t)), jnp.float32)
+    g_dense = make_compressed_flat_gossip(w, scale_chunk=chunk)
+    g_k = make_compressed_flat_gossip(w, scale_chunk=chunk, topk=chunk)
+    out_d, st_d = g_dense(flat, init_flat_compression_state(flat))
+    out_k, st_k = g_k(flat, init_flat_compression_state(flat))
+    np.testing.assert_array_equal(np.asarray(out_d), np.asarray(out_k))
+    for k in st_d:
+        np.testing.assert_array_equal(np.asarray(st_d[k]), np.asarray(st_k[k]))
+
+
