@@ -24,7 +24,24 @@ pytree, where most leaves are small: norms, biases, per-head slices):
                         absorbing the truncation) vs the dense-int8 wire:
                         per-round wire bytes (values + positions + scales
                         accounting, packing.flat_wire_bytes) and step
-                        time.
+                        time;
+  * round schedule:     sequential vs PIPELINED full rounds on the fused
+                        engine (measured CPU columns + the overlap model
+                        that prices the collective-in-flight window an
+                        async backend exploits), on the many-leaf state
+                        and on a comm-bound single-big-leaf state;
+  * compact wire:       the truly sparse top-k receive path (dense int8
+                        dequant vs compact scatter-accumulate) and the
+                        realized collective operand bytes;
+  * bf16 storage:       fp32 vs bf16 flat-buffer storage through the
+                        dense W mix (fp32 accumulation on both sides):
+                        the halved buffer bytes are the HBM story.
+
+``tools/bench_guard.py`` diffs a fresh JSON against the committed
+baselines (BENCH_gossip.json full, benchmarks/BENCH_gossip_smoke.json
+smoke) in CI: wire bytes at 25% tolerance (deterministic), interleaved
+speedup RATIOS with slack, absolute latencies and modeled columns
+unguarded.
 
 Methodology (honest measurement on a noisy shared CPU): the first three
 rows run ROUNDS consecutive rounds inside ONE jitted lax.scan -- the
@@ -63,14 +80,14 @@ from repro.core.compression import (
     make_compressed_dense_gossip_per_leaf,
     make_compressed_flat_gossip,
 )
-from repro.core.engine import FlatEngine
+from repro.core.engine import FlatEngine, FusedEngine
 from repro.core.fl import FLConfig, init_fl_state, make_fl_round
 from repro.core.mixing import (
     make_dense_flat_mix,
     make_dense_gossip,
     make_dense_gossip_per_leaf,
 )
-from repro.core.packing import flat_wire_bytes, pack
+from repro.core.packing import compact_pos_dtype, flat_wire_bytes, pack
 from repro.core.schedules import constant
 from repro.core.topology import mixing_matrix
 
@@ -401,6 +418,183 @@ def bench_topk_wire(tree, w, algorithm: str, topk: int = TOPK,
                 "timing on CPU (the sort is in-tile on TPU).",
     }
 
+def make_big_state(n_nodes: int = N_NODES, total: int = 16384) -> Dict:
+    """ONE big leaf: the comm-bound shape profile (mixing >> grad eval)
+    where the pipelined schedule's overlap is the round's lever -- the
+    regime a bandwidth-bound deployment lives in."""
+    rng = np.random.default_rng(1)
+    return {"w": jnp.asarray(rng.normal(size=(n_nodes, total)), jnp.float32)}
+
+
+def bench_schedule(tree, w, algorithm: str = "dsgd", q: int = 4,
+                   label: str = "") -> Dict:
+    """Sequential vs PIPELINED round schedule on the fused engine, full
+    rounds (grad eval + Q-1 local-step scan + comm step) in the scan
+    harness.
+
+    What the pipelined schedule buys is OVERLAP: the collective/neighbor
+    term it consumes depends on nothing the local-step scan computes
+    (asserted on the jaxpr in tests/test_schedule.py), so an
+    async-collective backend hides min(t_collective, t_local_steps) of
+    wall clock per round. XLA:CPU runs collectives synchronously in
+    process, so the MEASURED columns here are near parity -- the honest
+    CPU numbers -- and the `us_pipelined_overlap_model` column prices the
+    schedule on an overlapping backend: us_pipelined minus the hideable
+    min(us_mix_term, us_local_steps), which is the wall clock a
+    latency-hiding scheduler converges to. At Q >= 4 the local steps are
+    long enough to hide the whole mix term and the model sits strictly
+    below sequential."""
+    flat_buf, layout = pack(tree, pad_to=SCALE_CHUNK)
+    n, t = flat_buf.shape
+    cfg = FLConfig(algorithm=algorithm, q=q, n_nodes=n)
+    cfg1 = FLConfig(algorithm=algorithm, q=1, n_nodes=n)
+    sched = constant(0.01)
+
+    def loss_fn(params, batch):
+        sq = 0.0
+        for leaf in jax.tree_util.tree_leaves(params):
+            sq = sq + jnp.sum((leaf - batch["t"]) ** 2) / leaf.size
+        return sq
+
+    batches = {"t": jnp.zeros((q, n), jnp.float32)}
+    batches1 = {"t": jnp.zeros((1, n), jnp.float32)}
+
+    def make(rs, c):
+        eng, f0 = FusedEngine.simulated(w, tree, scale_chunk=SCALE_CHUNK,
+                                        impl="jnp", round_schedule=rs)
+        rf = make_fl_round(loss_fn, None, sched, c, engine=eng)
+        return rf, init_fl_state(c, f0, engine=eng)
+
+    rf_seq, st_seq = make("sequential", cfg)
+    rf_pipe, st_pipe = make("pipelined", cfg)
+    rf_seq1, st_seq1 = make("sequential", cfg1)
+
+    # the hideable neighbor-mix term, measured standalone (same shapes)
+    w_off = jnp.asarray(w - np.diag(np.diag(w)), jnp.float32)
+    recon0 = jnp.asarray(np.random.default_rng(0).normal(size=(n, t)),
+                         jnp.float32)
+
+    us = time_interleaved({
+        "seq": (lambda st: rf_seq(st, batches)[0], st_seq),
+        "pipe": (lambda st: rf_pipe(st, batches)[0], st_pipe),
+        "seq_q1": (lambda st: rf_seq1(st, batches1)[0], st_seq1),
+        "mix_term": (lambda r: w_off @ r, recon0),
+    }, rounds=min(20, ROUNDS), trials=min(7, TRIALS))
+    us_local = max(us["seq"] - us["seq_q1"], 0.0)
+    hidden = min(us["mix_term"], us_local)
+    return {
+        "name": f"pipelined_round_{algorithm}_q{q}{label}",
+        "n_nodes": n,
+        "total_params": t,
+        "q": q,
+        "us_sequential": us["seq"],
+        "us_pipelined_measured": us["pipe"],
+        "us_local_steps": us_local,
+        "us_mix_term": us["mix_term"],
+        "us_pipelined_overlap_model": us["pipe"] - hidden,
+        "overlap_model_speedup_vs_sequential": us["seq"] / (us["pipe"] - hidden),
+        "note": "measured columns are XLA:CPU (synchronous in-process "
+                "collectives -- expect parity); the overlap model subtracts "
+                "the hideable min(mix term, local steps), i.e. the round "
+                "time once an async backend schedules the collective issued "
+                "BEFORE the local-step scan (jaxpr ordering asserted in "
+                "tests/test_schedule.py). Numerics are one-round-stale "
+                "mixing; quality cost quantified in "
+                "experiments/staleness_ehr.json.",
+    }
+
+
+def bench_compact_wire(tree, w, topk: int = None, degree: int = 4) -> Dict:
+    """The truly sparse top-k wire's RECEIVE path: dense int8 dequant of
+    (nodes, total) vs scatter-accumulate of the compact (k values, k
+    positions, scales) buffers -- per neighbor per round -- plus the
+    wire-byte columns that are the point of the encoding (the collective
+    operand bytes, not a model; asserted in tests/test_schedule.py)."""
+    from repro.kernels.gossip.ref import (
+        _quantize_ef_compact_chunks,
+        scatter_compact_dq,
+    )
+
+    topk = TOPK if topk is None else topk
+    flat_buf, layout = pack(tree, pad_to=SCALE_CHUNK)
+    n, t = flat_buf.shape
+    c = t // SCALE_CHUNK
+    rng = np.random.default_rng(5)
+    payload = jnp.asarray(rng.normal(size=(n, t)), jnp.float32)
+    q_c, pos_c, sc_c, _ = _quantize_ef_compact_chunks(payload, SCALE_CHUNK, topk)
+    q_c = q_c.astype(jnp.int8)
+    pos_c = pos_c.astype(compact_pos_dtype(SCALE_CHUNK))
+    q_d = jnp.clip(jnp.round(payload), -127, 127).astype(jnp.int8)
+    sc_d = jnp.abs(payload).reshape(n, c, SCALE_CHUNK).max(-1) / 127.0
+
+    def dense_recv(acc):
+        q3 = q_d.astype(jnp.float32).reshape(n, c, SCALE_CHUNK)
+        return acc + 0.25 * (q3 * sc_d[:, :, None]).reshape(n, t)
+
+    def compact_recv(acc):
+        return acc + 0.25 * scatter_compact_dq(q_c, pos_c, sc_c, SCALE_CHUNK, t)
+
+    zeros = jnp.zeros((n, t), jnp.float32)
+    us = time_interleaved({
+        "dense": (dense_recv, zeros),
+        "compact": (compact_recv, zeros),
+    }, rounds=min(30, ROUNDS), trials=min(7, TRIALS))
+    dense_bytes = flat_wire_bytes(layout, degree, SCALE_CHUNK)
+    compact_bytes = flat_wire_bytes(layout, degree, SCALE_CHUNK, topk)
+    return {
+        "name": "compact_wire_receive",
+        "n_nodes": n,
+        "total_params": t,
+        "scale_chunk": SCALE_CHUNK,
+        "topk": topk,
+        "degree": degree,
+        "us_dense_dequant": us["dense"],
+        "us_compact_scatter": us["compact"],
+        "speedup_compact_recv": us["dense"] / us["compact"],
+        "wire_bytes_dense_int8": dense_bytes,
+        "wire_bytes_compact": compact_bytes,
+        "wire_reduction_compact": dense_bytes / compact_bytes,
+        "note": "per-neighbor receive work: the dense wire dequantizes "
+                "every column, the compact wire scatter-accumulates only "
+                "k per chunk; the wire-byte columns are the collective's "
+                "actual operand sizes (k int8 values + k int16 positions "
+                "+ fp32 scales per chunk).",
+    }
+
+
+def bench_bf16_storage(tree, w) -> Dict:
+    """bf16 flat-buffer STORAGE vs fp32 (the flat engine's storage_dtype
+    knob): one dense W mix per round on each. The accumulation is fp32 on
+    both sides (make_dense_flat_mix); what changes is the bytes every
+    buffer-wide op moves -- halved, the HBM-traffic column. On CPU the
+    matmul converts bf16 inputs up to fp32, so measured time is
+    conversion-bound; on TPU the mix is HBM-bound and the byte column is
+    the wall-clock story."""
+    flat32, layout = pack(tree, pad_to=SCALE_CHUNK)
+    flat16 = flat32.astype(jnp.bfloat16)
+    n, t = flat32.shape
+    mix = make_dense_flat_mix(w)
+    us = time_interleaved({
+        "fp32": (mix, flat32),
+        "bf16": (mix, flat16),
+    }, rounds=min(30, ROUNDS), trials=min(7, TRIALS))
+    return {
+        "name": "bf16_flat_storage",
+        "n_nodes": n,
+        "total_params": t,
+        "us_fp32": us["fp32"],
+        "us_bf16": us["bf16"],
+        "buffer_bytes_fp32": 4 * n * t,
+        "buffer_bytes_bf16": 2 * n * t,
+        "hbm_traffic_reduction": 2.0,
+        "note": "storage_dtype='bfloat16' on the flat engine; mix "
+                "accumulates fp32 and stores back bf16 (equivalence at "
+                "relaxed tolerance in tests/test_schedule.py). The byte "
+                "columns are the HBM story; CPU wall time includes "
+                "bf16<->fp32 conversion the TPU does for free in the MXU.",
+    }
+
+
 def main() -> List[Dict]:
     global ROUNDS, TRIALS
     ap = argparse.ArgumentParser(description=__doc__)
@@ -415,10 +609,12 @@ def main() -> List[Dict]:
     if args.smoke:
         ROUNDS, TRIALS = 5, 3
         tree = make_state(n_nodes=8, n_leaves=12)
+        big_state = make_big_state(n_nodes=8, total=1024)
         w = mixing_matrix("torus:4x2", 8)
         fused_rounds, fused_trials = 10, 3
     else:
         tree = make_state()
+        big_state = make_big_state()
         w = mixing_matrix("torus:8x8", N_NODES)
         fused_rounds, fused_trials = 200, 9
 
@@ -434,6 +630,13 @@ def main() -> List[Dict]:
                         trials=min(fused_trials, 5)),
         bench_topk_wire(tree, w, "dsgt", rounds=min(fused_rounds, 40),
                         trials=min(fused_trials, 5)),
+        bench_schedule(tree, w, "dsgd", q=4),
+        bench_schedule(tree, w, "dsgt", q=4),
+        # comm-bound regime (one big leaf, mixing >> grad eval): where the
+        # pipeline's overlap is the round's lever
+        bench_schedule(big_state, w, "dsgd", q=4, label="_commbound"),
+        bench_compact_wire(tree, w, topk=4 if args.smoke else None),
+        bench_bf16_storage(tree, w),
     ]
     for r in rows:
         extras = {k: v for k, v in r.items() if isinstance(v, float)}

@@ -1,0 +1,141 @@
+"""One-round-staleness convergence experiment -> experiments/staleness_ehr.json.
+
+Quantifies what the PipelinedSchedule's one-round-stale mixing costs in
+model quality on the paper's 20-hospital cohort: FD-DSGT with the fused
+engine, sequential vs pipelined, at Q in {1, 4, 16} local steps per
+communication round (equal ITERATION budget across Q, so every cell sees
+the same number of gradient steps).
+
+Why staleness is benign here: stale gossip is the second-order recurrence
+``x^{r+1} = W_self x^r + W_off x^{r-1}`` whose disagreement modes are
+stable whenever ``z^2 = w_self z + (lam - w_self)`` has roots inside the
+unit circle for every eigenvalue ``lam`` of W -- on the hospital graph's
+Metropolis W (lam_min ~ -0.39, mean w_self ~ 0.32) the worst root modulus
+is ~0.84, i.e. mixing at roughly half the sequential rate: consensus
+error equilibrates HIGHER under gradient noise but does not diverge, and
+the consensus model's balanced accuracy lands within the run-to-run
+noise of sequential (asserted <= 0.02 loss in tests/test_schedule.py).
+
+Usage: PYTHONPATH=src python benchmarks/staleness_ehr.py \
+           [--rounds-at-q1 320] [--out experiments/staleness_ehr.json]
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.ehr_mlp import class_weights
+from repro.core import (
+    FLConfig,
+    get_engine,
+    init_fl_state,
+    make_fl_round,
+    mixing_matrix,
+)
+from repro.core.schedules import inv_sqrt
+from repro.data.ehr import generate_ehr_cohort, make_node_batcher
+from repro.models.mlp import make_mlp_loss, mlp_balanced_accuracy, mlp_init
+from repro.training.trainer import stack_for_nodes
+
+
+def run_cell(q: int, schedule: str, rounds: int, seed: int = 0,
+             topk=None) -> dict:
+    """One (Q, schedule) cell: FD-DSGT, fused engine, hospital graph."""
+    n = 20
+    data = generate_ehr_cohort(seed=seed)
+    w = mixing_matrix("hospital20", n)
+    batcher = make_node_batcher(data, m=20, seed=seed + 1)
+    params = stack_for_nodes(mlp_init(jax.random.key(seed)), n)
+    cfg = FLConfig(algorithm="dsgt", q=q, n_nodes=n)
+    engine, state0 = get_engine("fused").simulated(
+        w, params, scale_chunk=512, topk=topk, impl="pallas",
+        round_schedule=schedule,
+    )
+    loss_fn = make_mlp_loss(class_weights("balanced"))
+    round_fn = jax.jit(
+        make_fl_round(loss_fn, None, inv_sqrt(0.02), cfg, engine=engine)
+    )
+    state = init_fl_state(cfg, state0, engine=engine)
+    m = {}
+    for _ in range(rounds):
+        qs = [next(batcher) for _ in range(q)]
+        batches = jax.tree_util.tree_map(lambda *xs: np.stack(xs), *qs)
+        state, m = round_fn(state, batches)
+    consensus = jax.tree_util.tree_map(
+        lambda p: jnp.mean(p, axis=0), engine.params_view(state.params)
+    )
+    xall = jnp.asarray(np.concatenate(data.features))
+    yall = jnp.asarray(np.concatenate(data.labels))
+    return {
+        "q": q,
+        "schedule": schedule,
+        "rounds": rounds,
+        "iterations": int(state.step),
+        "bal_acc": float(mlp_balanced_accuracy(consensus, xall, yall)),
+        "final_loss": float(m["loss"]),
+        "consensus_err": float(m["consensus_err"]),
+    }
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--rounds-at-q1", type=int, default=320,
+                    help="comm rounds at Q=1; Q>1 cells run rounds/Q so "
+                         "every cell sees the same iteration budget")
+    ap.add_argument("--out", default="experiments/staleness_ehr.json")
+    args = ap.parse_args()
+
+    cells = []
+    for q in (1, 4, 16):
+        rounds = max(1, args.rounds_at_q1 // q)
+        for schedule in ("sequential", "pipelined"):
+            cell = run_cell(q, schedule, rounds)
+            cells.append(cell)
+            print(f"Q={q:2d} {schedule:10s} rounds={rounds:4d} "
+                  f"bal_acc={cell['bal_acc']:.3f} "
+                  f"cons_err={cell['consensus_err']:.2e}")
+
+    by_q = {}
+    for q in (1, 4, 16):
+        seq = next(c for c in cells if c["q"] == q and c["schedule"] == "sequential")
+        pipe = next(c for c in cells if c["q"] == q and c["schedule"] == "pipelined")
+        by_q[str(q)] = {
+            "bal_acc_sequential": seq["bal_acc"],
+            "bal_acc_pipelined": pipe["bal_acc"],
+            "bal_acc_delta": seq["bal_acc"] - pipe["bal_acc"],
+            "consensus_err_ratio": (
+                pipe["consensus_err"] / max(seq["consensus_err"], 1e-12)
+            ),
+        }
+        print(f"Q={q:2d} staleness cost: "
+              f"{by_q[str(q)]['bal_acc_delta']:+.4f} balanced accuracy")
+
+    record = {
+        "experiment": "one_round_staleness_ehr",
+        "cohort": "hospital20 (2103 AD / 7919 MCI, 42 features)",
+        "algorithm": "dsgt (fused engine, int8 wire, class-weighted loss)",
+        "alpha": "0.02/sqrt(r)",
+        "note": "equal iteration budget per cell; pipelined = "
+                "sequential-with-one-round-delay (stale gossip is a "
+                "stable second-order recurrence on this W -- worst "
+                "disagreement-mode root ~0.84), so it trades a higher "
+                "consensus-error plateau for a hidden collective; "
+                "balanced-accuracy cost stays within noise "
+                "(<= 0.02 asserted in tests/test_schedule.py)",
+        "cells": cells,
+        "summary": by_q,
+    }
+    os.makedirs(os.path.dirname(args.out), exist_ok=True)
+    with open(args.out, "w") as f:
+        json.dump(record, f, indent=2)
+    print(f"wrote {args.out}")
+
+
+if __name__ == "__main__":
+    main()

@@ -44,7 +44,8 @@ from repro.core import (
     make_fl_round,
     mixing_matrix,
 )
-from repro.configs.ehr_mlp import CLASS_WEIGHT, class_weights
+from repro.configs.ehr_mlp import CLASS_WEIGHT, class_weights, topk_schedule
+from repro.core.engine import schedule_names
 from repro.core.schedules import inv_sqrt
 from repro.data.ehr import generate_ehr_cohort, make_node_batcher
 from repro.models.mlp import (
@@ -53,18 +54,27 @@ from repro.models.mlp import (
     mlp_balanced_accuracy,
     mlp_init,
 )
-from repro.training.trainer import stack_for_nodes
+from repro.training.trainer import AdaptiveTopK, stack_for_nodes
 
 
 def run_fused_engine(rounds: int, q: int, scale_chunk: int = 512, seed: int = 0,
                      fl_engine: str = "fused", topk=None,
-                     class_weight=CLASS_WEIGHT):
+                     class_weight=CLASS_WEIGHT, fl_schedule="sequential",
+                     topk_schedule=None):
     """FD-DSGT on a registry engine: one megakernel call per comm round
     on the default ``fused`` engine, with the class-weighted loss
     (``configs.ehr_mlp.class_weights``) unless ``class_weight=None`` --
-    part 1 stays paper-faithful unweighted."""
+    part 1 stays paper-faithful unweighted.
+
+    ``fl_schedule="pipelined"`` runs the overlapped round schedule
+    (collective in flight across the Q local steps, one-round-stale
+    mixing); ``topk_schedule=(k_sparse, k_dense, threshold)`` runs the
+    adaptive-k wire -- sparse k until the EF-residual RMS crosses the
+    threshold, then temporarily dense."""
     if rounds < 1:
         raise ValueError("--fused-rounds must be >= 1")
+    if topk_schedule is not None and topk is not None:
+        raise ValueError("pass either --topk or --topk-schedule, not both")
     n = 20
     data = generate_ehr_cohort(seed=seed)
     w = mixing_matrix("hospital20", n)
@@ -72,13 +82,31 @@ def run_fused_engine(rounds: int, q: int, scale_chunk: int = 512, seed: int = 0,
 
     params = stack_for_nodes(mlp_init(jax.random.key(seed)), n)
     cfg = FLConfig(algorithm="dsgt", q=q, n_nodes=n)
+    adaptive = (AdaptiveTopK(topk_schedule, scale_chunk)
+                if topk_schedule is not None else None)
+    if adaptive is not None:
+        topk = adaptive.k_sparse
     engine, state0 = get_engine(fl_engine).simulated(
         w, params, scale_chunk=scale_chunk, topk=topk, impl="pallas",
+        round_schedule=fl_schedule,
     )
     loss_fn = make_mlp_loss(class_weights(class_weight))
     round_fn = jax.jit(
         make_fl_round(loss_fn, None, inv_sqrt(0.02), cfg, engine=engine)
     )
+    dense_fn = None
+    if adaptive is not None:
+        # the densified twin advances the SAME state (comm keys are
+        # k-independent); both jitted once, switched per round by the
+        # shared AdaptiveTopK controller on the ef_residual_rms metric
+        dense_engine, _ = get_engine(fl_engine).simulated(
+            w, params, scale_chunk=scale_chunk, topk=adaptive.dense_topk,
+            impl="pallas", round_schedule=fl_schedule,
+        )
+        dense_fn = jax.jit(
+            make_fl_round(loss_fn, None, inv_sqrt(0.02), cfg,
+                          engine=dense_engine)
+        )
     state = init_fl_state(cfg, state0, engine=engine)
 
     # Wire accounting: the fused engines ship int8 (or top-k sparsified)
@@ -101,19 +129,31 @@ def run_fused_engine(rounds: int, q: int, scale_chunk: int = 512, seed: int = 0,
         "fp32" if engine_bytes is None else f"top-{topk}" if topk else "int8"
     )
 
-    print(f"\n{fl_engine} engine (FD-DSGT, Q={q}, hospital graph, "
-          f"class_weight={class_weight}, {layout_note}):")
+    print(f"\n{fl_engine} engine (FD-DSGT, Q={q}, schedule={fl_schedule}, "
+          f"hospital graph, class_weight={class_weight}, {layout_note}):")
     m = None
     for rnd in range(1, rounds + 1):
         qs = [next(batcher) for _ in range(q)]
         batches = jax.tree_util.tree_map(lambda *xs: np.stack(xs), *qs)
-        state, m = round_fn(state, batches)
+        fn = adaptive.pick(round_fn, dense_fn) if adaptive else round_fn
+        state, m = fn(state, batches)
         if rnd % max(1, rounds // 5) == 0 or rnd == 1:
             per_round = float(m.get("wire_bytes", fp32_bytes))
+            k_note = (f" k={adaptive.current_k} "
+                      f"resid={float(m['ef_residual_rms']):.1e}"
+                      if adaptive is not None else "")
             print(f"  [round {rnd:4d}] loss={float(m['loss']):.4f} "
                   f"consensus_err={float(m['consensus_err']):.2e} "
                   f"comm_bytes/round={per_round:,.0f} ({wire_label} wire) "
-                  f"vs {fp32_bytes:,.0f} (fp32 wire)")
+                  f"vs {fp32_bytes:,.0f} (fp32 wire){k_note}")
+        if adaptive is not None:
+            adaptive.update(float(m["ef_residual_rms"]))
+    if adaptive is not None:
+        print(f"  adaptive k: {adaptive.dense_rounds}/{rounds} rounds "
+              f"densified to k={adaptive.k_dense} (EF residual RMS > "
+              f"{adaptive.threshold:g}), "
+              f"{rounds - adaptive.dense_rounds} stayed at "
+              f"k={adaptive.k_sparse}")
 
     consensus = jax.tree_util.tree_map(
         lambda p: jnp.mean(p, axis=0), engine.params_view(state.params)
@@ -129,7 +169,8 @@ def run_fused_engine(rounds: int, q: int, scale_chunk: int = 512, seed: int = 0,
           f"bytes/round on top of the {q}x round saving (Q={q} local steps "
           f"per exchange) => {q * saving:.0f}x fewer bytes "
           f"per iteration than comm-every-step fp32 gossip")
-    return {"acc": acc, "bal_acc": bal, "wire_saving": saving}
+    return {"acc": acc, "bal_acc": bal, "wire_saving": saving,
+            "dense_rounds": adaptive.dense_rounds if adaptive else None}
 
 
 def main() -> None:
@@ -151,6 +192,16 @@ def main() -> None:
                          "need launch/dryrun.py)")
     ap.add_argument("--topk", type=int, default=None,
                     help="fused engines: k payload columns per scale chunk")
+    ap.add_argument("--fl-schedule", default="sequential",
+                    choices=schedule_names(),
+                    help="round time layout for part 2: pipelined overlaps "
+                         "the collective with the next round's local steps "
+                         "(one-round-stale mixing)")
+    ap.add_argument("--topk-schedule", default=None,
+                    help="adaptive k as 'k_sparse:k_dense:threshold' or "
+                         "'config' for configs.ehr_mlp.TOPK_SCHEDULE -- "
+                         "densifies the wire while the EF-residual RMS "
+                         "exceeds the threshold")
     ap.add_argument("--class-weight", default=CLASS_WEIGHT,
                     help="part-2 loss weighting: 'balanced' (inverse "
                          "frequency, lifts balanced accuracy off the ~0.6 "
@@ -176,10 +227,19 @@ def main() -> None:
     for k, v in to_t.items():
         print(f"  {k:18s} {v:8.0f}")
 
+    if args.topk_schedule is None:
+        tks = None
+    elif args.topk_schedule == "config":
+        tks = topk_schedule()
+    else:
+        tks = topk_schedule(tuple(args.topk_schedule.split(":")))
+
     part2 = run_fused_engine(rounds=args.fused_rounds, q=args.fused_q,
                              fl_engine=args.fl_engine, topk=args.topk,
                              class_weight=None if args.class_weight == "none"
-                             else args.class_weight)
+                             else args.class_weight,
+                             fl_schedule=args.fl_schedule,
+                             topk_schedule=tks)
 
     print("\nPaper claims validated:")
     print("  * FD variants converge with ~2 orders of magnitude fewer comm rounds")

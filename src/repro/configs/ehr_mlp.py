@@ -31,6 +31,32 @@ CONFIG = ModelConfig(
 # default for the EHR experiments; None = the paper's unweighted loss
 CLASS_WEIGHT = "balanced"
 
+# Adaptive top-k wire (the error-triggered refresh of the ROADMAP):
+# (k_sparse, k_dense, ef_residual_rms_threshold). Rounds ship the sparse
+# k until the EF-residual RMS -- the mass the wire is deferring -- crosses
+# the threshold, then the next round densifies to k_dense until it
+# drains. k_dense >= scale_chunk means "temporarily dense int8". The
+# threshold is calibrated on the 20-hospital cohort: the first rounds
+# (recon cold, payload = full params) sit well above it, steady-state EF
+# residuals well below, so both wire widths are exercised in the e2e run.
+TOPK_SCHEDULE = (64, 512, 3e-3)
+
+
+def topk_schedule(spec=TOPK_SCHEDULE):
+    """Validate an adaptive-k spec to (k_sparse, k_dense, threshold), or
+    pass None through (fixed-k wire). Feed the result to
+    ``training.trainer.train_decentralized(topk_schedule=...)``."""
+    if spec is None:
+        return None
+    k_sparse, k_dense, thresh = spec
+    k_sparse, k_dense, thresh = int(k_sparse), int(k_dense), float(thresh)
+    if not (1 <= k_sparse <= k_dense) or thresh <= 0:
+        raise ValueError(
+            f"topk_schedule needs 1 <= k_sparse <= k_dense and a positive "
+            f"threshold, got {spec!r}"
+        )
+    return (k_sparse, k_dense, thresh)
+
 
 def class_weights(class_weight=CLASS_WEIGHT):
     """Resolve the ``class_weight`` knob to a (2,) array or None.

@@ -22,11 +22,18 @@ from repro.core.engine import (
     FlatEngine,
     FusedEngine,
     GossipEngine,
+    PipelinedSchedule,
+    RoundSchedule,
+    SequentialSchedule,
     ShardedFusedEngine,
     TreeEngine,
     engine_names,
     get_engine,
+    get_schedule,
     register_engine,
+    register_schedule,
+    resolve_schedule,
+    schedule_names,
 )
 from repro.core.fl import (
     FLConfig,
@@ -44,7 +51,14 @@ from repro.core.mixing import (
     make_mesh_gossip,
     mesh_gossip_dense_equivalent,
 )
-from repro.core.packing import FlatLayout, flat_wire_bytes, pack, pack_like, unpack
+from repro.core.packing import (
+    FlatLayout,
+    compact_pos_dtype,
+    flat_wire_bytes,
+    pack,
+    pack_like,
+    unpack,
+)
 from repro.core.topology import (
     Graph,
     check_assumption1,
@@ -83,6 +97,14 @@ __all__ = [
     "register_engine",
     "get_engine",
     "engine_names",
+    "RoundSchedule",
+    "SequentialSchedule",
+    "PipelinedSchedule",
+    "register_schedule",
+    "get_schedule",
+    "schedule_names",
+    "resolve_schedule",
+    "compact_pos_dtype",
     "consensus_params",
     "init_fl_state",
     "make_fl_round",

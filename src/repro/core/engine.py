@@ -40,7 +40,26 @@ cannot drift):
 ``topk=`` on the fused engines masks the payload to the k largest-|.|
 columns per scale chunk inside the kernel; the EF residual absorbs the
 truncation, and wire bytes drop below the dense-int8 floor
-(``packing.flat_wire_bytes``).
+(``packing.flat_wire_bytes``). On the SHARDED engine, ``topk`` also
+turns on the COMPACT wire by default: the wire-stage kernel's
+compact-gather epilogue emits exactly (k int8 values, k int16/int32
+in-chunk positions, fp32 scales) per chunk, those buffers -- and nothing
+masked-dense -- are the collective's operands, and the receive side
+scatter-accumulates them into the running ``mix_recon`` term, so
+``flat_wire_bytes`` accounts the bytes that actually cross.
+
+Orthogonally to WHAT moves, a :class:`RoundSchedule` fixes WHEN: the
+``sequential`` schedule is the paper's produce -> collective -> mix
+round; the ``pipelined`` schedule double-buffers the wire payload in
+``FLState.comm`` (``wire_*`` keys), issues the collective for round r's
+payload BEFORE round r+1's local-step scan (no data dependency -- the
+overlap window an async-collective backend exploits), and mixes with
+one-round-STALE neighbor information -- exactly
+sequential-with-one-round-delay, proven against a hand-written delayed
+oracle in tests/test_schedule.py. Engines carry their schedule
+(``round_schedule=`` at build time) because it is part of the comm-state
+contract; ``--fl-schedule`` resolves through the schedule registry the
+same way ``--fl-engine`` resolves through the engine registry.
 
 How the sharded engine stays O(params/node) per device: a CHOCO node
 needs ``sum_j W_ij recon_j`` over its neighbors' reconstructions, but
@@ -85,6 +104,7 @@ from repro.core.mixing import (
 )
 from repro.core.packing import (
     FlatLayout,
+    compact_pos_dtype,
     flat_wire_bytes,
     pack,
     pack_layout,
@@ -103,11 +123,176 @@ __all__ = [
     "register_engine",
     "get_engine",
     "engine_names",
+    "RoundSchedule",
+    "SequentialSchedule",
+    "PipelinedSchedule",
+    "register_schedule",
+    "get_schedule",
+    "schedule_names",
+    "resolve_schedule",
 ]
 
 
 def _tm(f, *trees):
     return jax.tree_util.tree_map(f, *trees)
+
+
+# ---------------------------------------------------------------------------
+# Round schedules: how a communication round is laid out in TIME
+# ---------------------------------------------------------------------------
+
+
+class RoundSchedule(abc.ABC):
+    """How one communication round is laid out in time.
+
+    The :class:`GossipEngine` owns WHAT moves (state representation, wire
+    encoding, mixing math); the RoundSchedule owns WHEN: whether the
+    collective for a round's payload blocks that round's mix
+    (:class:`SequentialSchedule`) or is issued while the NEXT round's
+    local steps compute, the mix consuming one-round-stale neighbor
+    information (:class:`PipelinedSchedule`). An engine carries its
+    schedule as ``engine.round_schedule`` (fixed at construction -- the
+    schedule is part of the engine's comm-state contract, so
+    ``init_fl_state`` / checkpoints see one consistent answer), and
+    ``make_fl_round`` delegates the round layout here.
+
+    Schedules register by name exactly like engines -- the registry is
+    what ``--fl-schedule`` accepts everywhere.
+    """
+
+    name: ClassVar[str] = "abstract"
+
+    @abc.abstractmethod
+    def build_round(self, engine: "GossipEngine", eval_grads, schedule,
+                    cfg: FLConfig, local_step):
+        """Assemble ``round_fn(state, batches) -> (state, metrics)`` from
+        the engine's comm machinery and the per-iteration ``local_step``."""
+
+
+_SCHEDULES: Dict[str, "RoundSchedule"] = {}
+
+
+def register_schedule(cls: Type[RoundSchedule]) -> Type[RoundSchedule]:
+    """Class decorator: make the schedule resolvable by name. Schedules
+    are stateless, so the registry holds singleton instances -- the ONE
+    list every ``--fl-schedule`` CLI and checkpoint manifest consults."""
+    if cls.name in _SCHEDULES:
+        raise ValueError(f"duplicate schedule name {cls.name!r}")
+    _SCHEDULES[cls.name] = cls()
+    return cls
+
+
+def get_schedule(name: str) -> RoundSchedule:
+    try:
+        return _SCHEDULES[name]
+    except KeyError:
+        raise ValueError(
+            f"unknown round schedule {name!r}; registered: {schedule_names()}"
+        ) from None
+
+
+def schedule_names() -> Tuple[str, ...]:
+    return tuple(sorted(_SCHEDULES))
+
+
+def resolve_schedule(rs) -> RoundSchedule:
+    """Accept a registry name, a RoundSchedule instance, or None (the
+    sequential default)."""
+    if rs is None:
+        return _SCHEDULES["sequential"]
+    if isinstance(rs, RoundSchedule):
+        return rs
+    return get_schedule(rs)
+
+
+def _require_sequential(round_schedule, name: str) -> RoundSchedule:
+    rs = resolve_schedule(round_schedule)
+    if rs.name != "sequential":
+        raise ValueError(
+            f"round schedule {rs.name!r} needs the split produce/collective "
+            f"comm step of the fused engines; the {name!r} engine is "
+            "sequential-only -- use 'fused' or 'sharded_fused'"
+        )
+    return rs
+
+
+def _assemble_round(cfg, local_step, comm_call, pre_scan=None):
+    """The shared round body: optional pre-scan hook (the pipelined
+    ingest -- traced FIRST so its collective precedes the scan in the
+    jaxpr), (Q-1) local steps under ONE lax.scan, then the comm call.
+    ``comm_call(state, batch, aux)`` receives whatever ``pre_scan``
+    returned (None without one)."""
+
+    def round_fn(state: FLState, batches: PyTree):
+        aux = pre_scan(state) if pre_scan is not None else None
+        q = cfg.q
+        if q > 1:
+            local_batches = _tm(lambda b: b[: q - 1], batches)
+            state, local_losses = jax.lax.scan(
+                local_step, state, local_batches
+            )
+        else:
+            local_losses = jnp.zeros((0,), jnp.float32)
+        comm_batch = _tm(lambda b: b[q - 1], batches)
+        state, metrics = comm_call(state, comm_batch, aux)
+        metrics["local_loss"] = jnp.where(
+            q > 1,
+            jnp.sum(local_losses) / jnp.maximum(1, q - 1),
+            metrics["loss"],
+        )
+        return state, metrics
+
+    return round_fn
+
+
+@register_schedule
+class SequentialSchedule(RoundSchedule):
+    """The paper's round layout: (Q-1) local steps, then ONE comm step in
+    which the payload is produced, crosses the wire, and is mixed before
+    the round returns -- every engine supports it."""
+
+    name = "sequential"
+
+    def build_round(self, engine, eval_grads, schedule, cfg, local_step):
+        comm_step = engine.make_comm_step(eval_grads, schedule, cfg)
+        return _assemble_round(
+            cfg, local_step, lambda state, batch, aux: comm_step(state, batch)
+        )
+
+
+@register_schedule
+class PipelinedSchedule(RoundSchedule):
+    """Overlap the collective with the local steps: round r's payload is
+    double-buffered in ``FLState.comm`` (``wire_*``), its ppermute /
+    all-gather is ISSUED at the top of round r+1 -- before the local-step
+    scan, with no data dependency on it, so an async-collective backend
+    overlaps the wire with the Q local steps -- and round r+1's mix
+    consumes that one-round-stale neighbor information:
+
+        sequential round r:   mixed_r = w_self*h_r + S_j W_ij recon_j^(r)
+        pipelined  round r:   mixed_r = w_self*h_r + S_j W_ij recon_j^(r-1)
+
+    i.e. exactly sequential-with-one-round-delay (tests/test_schedule.py
+    proves equality against a hand-written delayed oracle). The first
+    round mixes nothing (zero in-flight payload), the staleness price is
+    quantified in experiments/staleness_ehr.json.
+
+    Supported by the fused engines (their comm step already separates
+    payload production from the collective); exact-wire engines raise at
+    build time.
+    """
+
+    name = "pipelined"
+
+    def build_round(self, engine, eval_grads, schedule, cfg, local_step):
+        # The ingest collective on the IN-FLIGHT payload is the pre-scan
+        # hook: traced first, so it precedes the local-step scan in the
+        # jaxpr and depends on nothing the scan computes -- that is the
+        # overlap window.
+        ingest, comm_step = engine.make_pipelined_round(
+            eval_grads, schedule, cfg
+        )
+        return _assemble_round(cfg, local_step, comm_step, pre_scan=ingest)
 
 
 def _check_flat_params(cfg: FLConfig, params: PyTree, name: str) -> None:
@@ -155,30 +340,58 @@ class GossipEngine(abc.ABC):
     #: True for engines that only run on a device mesh (no ``simulated``)
     needs_mesh: ClassVar[bool] = False
     layout: Optional[FlatLayout] = None
+    #: the engine's :class:`RoundSchedule` (sequential unless the engine
+    #: was built pipelined -- the schedule is part of the comm-state
+    #: contract, so it is fixed at construction)
+    round_schedule: RoundSchedule = _SCHEDULES["sequential"]
 
     # -- protocol ----------------------------------------------------------
 
     def comm_keys(self, cfg: FLConfig) -> Tuple[str, ...]:
-        """Names of the engine's extra wire-state buffers (each a
-        ``(nodes, layout.total)`` fp32 array in ``FLState.comm``)."""
+        """Names of the engine's extra wire-state buffers in
+        ``FLState.comm`` (shapes/dtypes per :meth:`comm_state_sds`)."""
         return ()
+
+    def comm_state_sds(
+        self, cfg: FLConfig
+    ) -> Optional[Dict[str, jax.ShapeDtypeStruct]]:
+        """Shape/dtype of every comm buffer (trace-time safe -- the
+        lowering-only dry runs build their state specs from this)."""
+        keys = self.comm_keys(cfg)
+        if not keys:
+            return None
+        if self.layout is None:
+            raise NotImplementedError(
+                f"{type(self).__name__} declares comm buffers but no layout"
+            )
+        sds = jax.ShapeDtypeStruct(
+            (cfg.n_nodes, self.layout.total), jnp.float32
+        )
+        return {k: sds for k in keys}
 
     def init_comm_state(
         self, cfg: FLConfig, params: PyTree
     ) -> Optional[Dict[str, jnp.ndarray]]:
         """Zero-initialized wire state (zeros = the first round
-        effectively transmits the full parameters)."""
-        keys = self.comm_keys(cfg)
-        if not keys:
+        effectively transmits the full parameters, and a pipelined
+        engine's first in-flight payload dequantizes to nothing)."""
+        sds = self.comm_state_sds(cfg)
+        if sds is None:
             return None
-        leaves = jax.tree_util.tree_leaves(params)
-        z = jnp.zeros(leaves[0].shape, jnp.float32)
-        return {k: z for k in keys}
+        return {k: jnp.zeros(s.shape, s.dtype) for k, s in sds.items()}
 
     def local_step(self, params: PyTree, grads: PyTree, alpha) -> PyTree:
         """Eq. 4 in the engine's state representation (works unchanged for
-        tree state and for the single-leaf flat buffer)."""
-        return _tm(lambda p, g: p - alpha * g.astype(p.dtype), params, grads)
+        tree state and for the single-leaf flat buffer). The update is
+        computed at the wider of (leaf, fp32) and stored back at the
+        leaf's dtype -- bf16 flat storage keeps fp32 only in transient
+        arithmetic, never in the stored buffer."""
+        return _tm(
+            lambda p, g: (
+                p.astype(jnp.float32) - alpha * g.astype(jnp.float32)
+            ).astype(p.dtype),
+            params, grads,
+        )
 
     def mix(self, buf: PyTree) -> PyTree:
         """Exact-wire W application (theta <- W theta) on the engine's
@@ -244,20 +457,22 @@ class GossipEngine(abc.ABC):
             alpha = schedule(step)
             losses, grads = eval_grads(state.params, batch)
 
+            # adapt at fp32, store back at the state dtype (bf16 flat
+            # storage narrows only what is STORED, never the arithmetic)
+            def adapt(wp, t):
+                return (
+                    wp.astype(jnp.float32) - alpha * t.astype(jnp.float32)
+                ).astype(wp.dtype)
+
             if cfg.algorithm == "dsgd":
-                params = _tm(
-                    lambda wp, g: wp - alpha * g.astype(wp.dtype),
-                    mix(state.params), grads,
-                )
+                params = _tm(adapt, mix(state.params), grads)
                 new_state = state._replace(step=step, params=params)
             else:
                 tracker = _tm(
                     lambda wt, gn, gp: wt + gn.astype(wt.dtype) - gp,
                     mix(state.tracker), grads, state.prev_grad,
                 )
-                params = _tm(
-                    lambda wp, t: wp - alpha * t, mix(state.params), tracker
-                )
+                params = _tm(adapt, mix(state.params), tracker)
                 new_state = state._replace(
                     step=step,
                     params=params,
@@ -279,6 +494,19 @@ class GossipEngine(abc.ABC):
             return new_state, metrics
 
         return comm_step
+
+    def make_pipelined_round(self, eval_grads, schedule, cfg: FLConfig):
+        """The split comm machinery the :class:`PipelinedSchedule` needs:
+        ``(ingest, comm_step)`` where ``ingest(state)`` issues the
+        collective on the IN-FLIGHT payload (None for engines whose mix
+        has no separate collective) and ``comm_step(state, batch, stale)``
+        produces this round's payload and mixes with the stale neighbor
+        term. Exact-wire engines do not implement it."""
+        raise ValueError(
+            f"the {self.name!r} engine is sequential-only; the pipelined "
+            "schedule needs the fused engines' split produce/collective "
+            "comm step (use 'fused' or 'sharded_fused')"
+        )
 
 
 # ---------------------------------------------------------------------------
@@ -332,16 +560,22 @@ class TreeEngine(GossipEngine):
 
     @classmethod
     def simulated(cls, w: np.ndarray, stacked_params: PyTree, *,
-                  wire_dtype=None, topk=None, **_ignored):
+                  wire_dtype=None, topk=None, round_schedule=None,
+                  storage_dtype=None, **_ignored):
         """Single-host build: dense-W backend; state stays the input tree."""
         _reject_topk(topk, cls.name)
+        _require_sequential(round_schedule, cls.name)
+        _reject_storage_dtype(storage_dtype, cls.name)
         return cls(make_dense_gossip(w, wire_dtype)), stacked_params
 
     @classmethod
     def from_mesh(cls, mesh: Mesh, node_axes: Sequence[str], stacked_sds,
                   *, specs=None, wire_dtype=None, axes_subset=None,
-                  topk=None, **_ignored):
+                  topk=None, round_schedule=None, storage_dtype=None,
+                  **_ignored):
         _reject_topk(topk, cls.name)
+        _require_sequential(round_schedule, cls.name)
+        _reject_storage_dtype(storage_dtype, cls.name)
         if specs is None:
             raise ValueError("tree engine from_mesh needs the param specs")
         return cls(
@@ -352,9 +586,17 @@ class TreeEngine(GossipEngine):
 
 @register_engine
 class FlatEngine(GossipEngine):
-    """The state is ONE packed ``(nodes, total)`` fp32 buffer end to end;
+    """The state is ONE packed ``(nodes, total)`` buffer end to end;
     mixing is a flat-native backend (one matmul / one ppermute per torus
-    direction / one all-gather per round, independent of leaf count)."""
+    direction / one all-gather per round, independent of leaf count).
+
+    ``storage_dtype`` selects the buffer's STORAGE precision
+    (``layout.storage_dtype``): the fp32 default is lossless; bf16
+    halves the HBM traffic of every buffer-wide op -- the flat mixing
+    backends already accumulate their weighted sum in fp32 and cast back
+    to the buffer dtype, so only storage narrows, never the mix
+    accumulator (equivalence vs fp32 at relaxed tolerance is tested in
+    tests/test_schedule.py; the HBM-traffic win is a bench row)."""
 
     name = "flat"
 
@@ -362,6 +604,10 @@ class FlatEngine(GossipEngine):
                  layout: FlatLayout):
         self._mix = mix_fn
         self.layout = layout
+
+    @property
+    def storage_dtype(self):
+        return jnp.dtype(self.layout.storage_dtype)
 
     def mix(self, flat: jnp.ndarray) -> jnp.ndarray:
         return self._mix(flat)
@@ -375,17 +621,22 @@ class FlatEngine(GossipEngine):
     @classmethod
     def simulated(cls, w: np.ndarray, stacked_params: PyTree, *,
                   scale_chunk: int = 1, wire_dtype=None, topk=None,
-                  **_ignored):
+                  round_schedule=None, storage_dtype=None, **_ignored):
         _reject_topk(topk, cls.name)
-        flat, layout = pack(stacked_params, pad_to=scale_chunk)
+        _require_sequential(round_schedule, cls.name)
+        flat, layout = pack(stacked_params, pad_to=scale_chunk,
+                            buffer_dtype=storage_dtype or jnp.float32)
         return cls(make_dense_flat_mix(w, wire_dtype), layout), flat
 
     @classmethod
     def from_mesh(cls, mesh: Mesh, node_axes: Sequence[str], stacked_sds,
                   *, wire_dtype=None, axes_subset=None, scale_chunk: int = 512,
-                  topk=None, **_ignored):
+                  topk=None, round_schedule=None, storage_dtype=None,
+                  **_ignored):
         _reject_topk(topk, cls.name)
-        layout = pack_layout(stacked_sds, pad_to=scale_chunk)
+        _require_sequential(round_schedule, cls.name)
+        layout = pack_layout(stacked_sds, pad_to=scale_chunk,
+                             storage_dtype=storage_dtype or jnp.float32)
         return cls(
             make_mesh_flat_mix(mesh, node_axes, wire_dtype=wire_dtype,
                                axes_subset=axes_subset),
@@ -418,6 +669,18 @@ def _reject_topk(topk, name: str) -> None:
         )
 
 
+def _reject_storage_dtype(storage_dtype, name: str) -> None:
+    if storage_dtype is not None and jnp.dtype(storage_dtype) != jnp.float32:
+        raise ValueError(
+            f"storage_dtype is a flat-engine knob (bf16 flat buffer with "
+            f"fp32 mix accumulation); the {name!r} engine "
+            + ("has no flat buffer" if name == "tree"
+               else "keeps its buffer and int8 wire state in fp32 (the EF "
+                    "residual must not be rounded)")
+            + " -- use 'flat'"
+        )
+
+
 def _split_w_np(w: np.ndarray, n: int):
     """Shape-checked (w, diag, off-diag) via ``mixing._split_w``."""
     w = np.asarray(w, dtype=np.float64)
@@ -443,7 +706,8 @@ class _FusedBase(GossipEngine):
 
     def __init__(self, layout: FlatLayout, *, scale_chunk: int = 512,
                  topk: Optional[int] = None, error_feedback: bool = True,
-                 difference_coding: bool = True, impl: str = "pallas"):
+                 difference_coding: bool = True, impl: str = "pallas",
+                 round_schedule=None):
         if impl not in ("pallas", "jnp"):
             raise ValueError(f"unknown impl {impl!r}")
         if scale_chunk < 1:
@@ -455,12 +719,19 @@ class _FusedBase(GossipEngine):
                 f"layout.total {layout.total} not a multiple of scale_chunk "
                 f"{scale_chunk}; pack with pad_to={scale_chunk}"
             )
+        if jnp.dtype(layout.storage_dtype) != jnp.float32:
+            _reject_storage_dtype(layout.storage_dtype, self.name)
         self.layout = layout
         self.scale_chunk = scale_chunk
         self.topk = topk
         self.error_feedback = error_feedback
         self.difference_coding = difference_coding
         self.impl = impl
+        self.round_schedule = resolve_schedule(round_schedule)
+
+    @property
+    def pipelined(self) -> bool:
+        return self.round_schedule.name == "pipelined"
 
     def check_params(self, cfg: FLConfig, params: PyTree) -> None:
         _check_flat_params(cfg, params, self.name)
@@ -479,6 +750,13 @@ class _FusedBase(GossipEngine):
     def _edge_bytes(self) -> int:
         """Wire bytes one node ships to ONE neighbor per wire per round."""
         return flat_wire_bytes(self.layout, 1, self.scale_chunk, self.topk)
+
+    def _residual_rms(self, comm: Dict[str, jnp.ndarray]) -> jnp.ndarray:
+        """RMS of the parameter-wire EF residual -- the adaptive-k signal
+        (``topk_schedule``): a large residual means the wire is dropping
+        mass faster than EF re-injects it, so the schedule densifies k."""
+        res = comm["residual"]
+        return jnp.sqrt(jnp.mean(res.astype(jnp.float32) ** 2))
 
 
 @register_engine
@@ -514,7 +792,12 @@ class FusedEngine(_FusedBase):
                 fused_round_gt_ref as fused_round_gt,
                 fused_round_ref as fused_round,
             )
-        kw = self._kernel_kwargs()
+        # Pipelined: the kernel's stale_mix flag contracts W against the
+        # INPUT recon -- which IS the neighbor reconstruction as of the
+        # end of the previous round -- so the dense engine needs no extra
+        # in-flight buffers: it is the exact single-host oracle of the
+        # sharded pipelined round.
+        kw = dict(self._kernel_kwargs(), stale_mix=self.pipelined)
         egress = self.wire_bytes(cfg)
 
         def comm_step(state: FLState, batch: PyTree):
@@ -556,33 +839,50 @@ class FusedEngine(_FusedBase):
                 "consensus_err": _consensus_error(new_state.params),
                 "comm_rounds": jnp.float32(1.0),
                 "wire_bytes": jnp.float32(egress),
+                "ef_residual_rms": self._residual_rms(new_state.comm),
             }
             return new_state, metrics
 
         return comm_step
 
+    def make_pipelined_round(self, eval_grads, schedule, cfg: FLConfig):
+        """The dense engine has no separate collective (its 'wire' is the
+        in-kernel W contraction), so ingest is None and the comm step --
+        built with ``stale_mix`` -- ignores the stale argument."""
+        if not self.pipelined:
+            raise ValueError(
+                "engine was built with round_schedule='sequential'; build "
+                "it with round_schedule='pipelined'"
+            )
+        comm_step = self.make_comm_step(eval_grads, schedule, cfg)
+        return None, lambda state, batch, stale: comm_step(state, batch)
+
     @classmethod
     def simulated(cls, w: np.ndarray, stacked_params: PyTree, *,
                   scale_chunk: int = 512, topk=None, impl: str = "pallas",
                   error_feedback: bool = True, difference_coding: bool = True,
-                  wire_dtype=None, **_ignored):
+                  wire_dtype=None, round_schedule=None, storage_dtype=None,
+                  **_ignored):
         _reject_wire_dtype(wire_dtype)
+        _reject_storage_dtype(storage_dtype, cls.name)
         flat, layout = pack(stacked_params, pad_to=scale_chunk)
         return cls(w, layout, scale_chunk=scale_chunk, topk=topk, impl=impl,
                    error_feedback=error_feedback,
-                   difference_coding=difference_coding), flat
+                   difference_coding=difference_coding,
+                   round_schedule=round_schedule), flat
 
     @classmethod
     def from_mesh(cls, mesh: Mesh, node_axes: Sequence[str], stacked_sds,
                   *, wire_dtype=None, axes_subset=None, scale_chunk: int = 512,
                   topk=None, impl: str = "jnp", error_feedback: bool = True,
                   difference_coding: bool = True, self_weight=None,
-                  **_ignored):
+                  round_schedule=None, storage_dtype=None, **_ignored):
         """Mesh build: W is the dense equivalent of the circulant torus the
         ppermute backend realizes over the node axes (directions restricted
         to ``axes_subset`` for hierarchical gossip). ``impl`` defaults to
         the jnp oracle, which GSPMD partitions in lowering-only dry runs."""
         _reject_wire_dtype(wire_dtype)
+        _reject_storage_dtype(storage_dtype, cls.name)
         w = mesh_gossip_dense_equivalent(
             {a: mesh.shape[a] for a in node_axes}, self_weight=self_weight,
             axes_subset=axes_subset,
@@ -590,7 +890,8 @@ class FusedEngine(_FusedBase):
         layout = pack_layout(stacked_sds, pad_to=scale_chunk)
         return cls(w, layout, scale_chunk=scale_chunk, topk=topk, impl=impl,
                    error_feedback=error_feedback,
-                   difference_coding=difference_coding)
+                   difference_coding=difference_coding,
+                   round_schedule=round_schedule)
 
 
 @register_engine
@@ -606,15 +907,29 @@ class ShardedFusedEngine(_FusedBase):
          EF -- runs as ONE Pallas call on this shard's rows
          (``kernels.gossip.wire_stage[_gt]``; ``impl="jnp"`` uses the
          bit-identical oracle);
-      2. the int8 payload + fp32 scales cross the wire: one ``ppermute``
-         per torus direction for the circulant W realized by the mesh
-         node axes (``w=None``), or one ``all_gather`` over the node axes
-         for an arbitrary dense W;
+      2. the payload crosses the wire: one ``ppermute`` per torus
+         direction for the circulant W realized by the mesh node axes
+         (``w=None``), or one ``all_gather`` over the node axes for an
+         arbitrary dense W. With ``topk`` the COMPACT buffers move --
+         (k int8 values, k int16 positions, fp32 scales) per chunk, the
+         bytes ``flat_wire_bytes`` accounts -- and the receive side
+         scatter-accumulates them back to dense
+         (``kernels.gossip.ref.scatter_compact_dq``); without ``topk``
+         the dense int8 payload + scales move as before;
       3. the mix finishes against the running neighbor-reconstruction
          accumulator: ``mix_recon' = mix_recon + sum_j W_ij dq_j``,
          ``mixed = w_self * h + mix_recon'`` -- O(params/node) state,
          bit-equal (up to summation order) to ``FusedEngine`` on the
          dense equivalent W.
+
+    Under the PIPELINED round schedule the same three stages split in
+    time: the comm step stores this round's wire buffers in
+    ``FLState.comm`` (``wire_q`` / ``wire_pos`` / ``wire_scales``), the
+    NEXT round's ingest runs stage 2 on them before its local-step scan,
+    and the mix consumes that one-round-stale term
+    (``make_pipelined_round``). Mid-pipeline checkpoints restore
+    consistently: ``restore_comm`` rebuilds
+    ``mix_recon == W_off @ (recon - dq(in-flight wire))``.
     """
 
     name = "sharded_fused"
@@ -622,8 +937,34 @@ class ShardedFusedEngine(_FusedBase):
 
     def __init__(self, mesh: Mesh, node_axes: Sequence[str],
                  layout: FlatLayout, *, w: Optional[np.ndarray] = None,
-                 self_weight: Optional[float] = None, axes_subset=None, **kw):
+                 self_weight: Optional[float] = None, axes_subset=None,
+                 compact: Optional[bool] = None, **kw):
         super().__init__(layout, **kw)
+        # The compact wire is only the wire when it is actually SMALLER
+        # than dense int8 (k values + k positions + scale <= chunk +
+        # scale). `compact=None` auto-enables it exactly in that regime,
+        # so the collective operand bytes ALWAYS equal flat_wire_bytes
+        # (whose dense cap then never binds for this engine); an
+        # explicitly requested uneconomic compact wire is refused rather
+        # than shipped while the accounting reports the dense fallback.
+        economic = self.topk is not None and self._compact_is_economic()
+        if compact is None:
+            compact = economic
+        if compact:
+            if self.topk is None or not (1 <= self.topk < self.scale_chunk):
+                raise ValueError(
+                    "the compact wire needs a sparsified payload: set "
+                    f"1 <= topk < scale_chunk (got topk={self.topk}, "
+                    f"scale_chunk={self.scale_chunk}) or pass compact=False"
+                )
+            if not economic:
+                raise ValueError(
+                    f"compact encoding of topk={self.topk} costs more than "
+                    f"the dense int8 chunk ({self.topk} values + "
+                    f"{self.topk} positions > {self.scale_chunk} columns); "
+                    "ship the dense wire (compact=False) or lower topk"
+                )
+        self.compact_wire = bool(compact)
         self.mesh = mesh
         self.node_axes = tuple(node_axes)
         self.n_nodes = int(np.prod([mesh.shape[a] for a in self.node_axes]))
@@ -644,11 +985,56 @@ class ShardedFusedEngine(_FusedBase):
             self.w_dense = w
             self.w_self, self.dirs = None, None
 
+    def _compact_is_economic(self) -> bool:
+        """True when the compact (values + positions + scale) chunk is no
+        larger than the dense int8 chunk -- the regime where the compact
+        wire is THE wire and ``flat_wire_bytes``'s dense cap never binds."""
+        pos = jnp.dtype(compact_pos_dtype(self.scale_chunk)).itemsize
+        return (self.topk is not None
+                and self.topk * (1 + pos) <= self.scale_chunk)
+
+    # -- comm-state contract ----------------------------------------------
+
+    def _wire_key_names(self, suffix: str = "") -> Tuple[str, ...]:
+        """Names of ONE wire's in-flight payload buffers (pipelined only):
+        the int8 values, the positions (compact wire), and the scales --
+        exactly what crosses the collective, double-buffered in
+        ``FLState.comm`` for one round."""
+        names = (("wire_q", "wire_pos", "wire_scales") if self.compact_wire
+                 else ("wire_q", "wire_scales"))
+        return tuple(n + suffix for n in names)
+
     def comm_keys(self, cfg: FLConfig) -> Tuple[str, ...]:
         keys = ("recon", "residual", "mix_recon")
+        if self.pipelined:
+            keys += self._wire_key_names("")
         if cfg.algorithm == "dsgt":
             keys += ("recon_t", "residual_t", "mix_recon_t")
+            if self.pipelined:
+                keys += self._wire_key_names("_t")
         return keys
+
+    def comm_state_sds(
+        self, cfg: FLConfig
+    ) -> Optional[Dict[str, jax.ShapeDtypeStruct]]:
+        n, t = cfg.n_nodes, self.layout.total
+        n_chunks = t // self.scale_chunk
+        pos_dtype = compact_pos_dtype(self.scale_chunk)
+
+        def buf(key):
+            if key.startswith("wire_q"):
+                width = n_chunks * self.topk if self.compact_wire else t
+                return jax.ShapeDtypeStruct((n, width), jnp.int8)
+            if key.startswith("wire_pos"):
+                return jax.ShapeDtypeStruct(
+                    (n, n_chunks * self.topk), pos_dtype
+                )
+            if key.startswith("wire_scales"):
+                return jax.ShapeDtypeStruct((n, n_chunks), jnp.float32)
+            return jax.ShapeDtypeStruct((n, t), jnp.float32)
+
+        keys = self.comm_keys(cfg)
+        return {k: buf(k) for k in keys} or None
 
     def dense_equivalent(self) -> np.ndarray:
         """The dense W this engine realizes (the ``FusedEngine`` oracle)."""
@@ -660,53 +1046,153 @@ class ShardedFusedEngine(_FusedBase):
             axes_subset=self.axes_subset,
         )
 
+    def _edge_bytes(self) -> int:
+        """What ONE neighbor payload physically costs on this wire: the
+        compact encoding when the compact-gather epilogue is on (values +
+        positions + scales -- the collective's actual operand bytes,
+        strictly below dense by the economic check in ``__init__``), the
+        DENSE int8 bytes otherwise (a masked-dense top-k payload still
+        moves every column; ``compact=False`` is the equivalence baseline
+        and the fallback for an uneconomic k)."""
+        return flat_wire_bytes(
+            self.layout, 1, self.scale_chunk,
+            self.topk if self.compact_wire else None,
+        )
+
     def wire_bytes(self, cfg: FLConfig) -> float:
         wires = 2 if cfg.algorithm == "dsgt" else 1
         return float(
             wires * _degrees(self.dense_equivalent()).sum() * self._edge_bytes()
         )
 
+    def _dq_full(self, wire: Tuple[jnp.ndarray, ...]) -> jnp.ndarray:
+        """Dense dequant of one wire's payload buffers (any row count:
+        per-shard rows inside shard_map, or the full (n, .) buffers at
+        restore time)."""
+        if self.compact_wire:
+            from repro.kernels.gossip.ref import scatter_compact_dq
+
+            q, pos, scales = wire
+            return scatter_compact_dq(
+                q, pos, scales, self.scale_chunk, self.layout.total
+            )
+        q, scales = wire
+        return _dequant(q, scales, self.scale_chunk)
+
     def restore_comm(
         self, comm: Dict[str, jnp.ndarray]
     ) -> Dict[str, jnp.ndarray]:
-        """The mix_recon accumulators are DERIVED state -- the invariant is
-        ``mix_recon == W_off @ recon`` at every round boundary -- so a
-        restore (possibly from a fused checkpoint that never had them)
-        rebuilds them from the restored recon instead of trusting whatever
-        the template carried."""
+        """The mix_recon accumulators are DERIVED state, so a restore
+        (possibly from a fused checkpoint that never had them) rebuilds
+        them from the restored recon instead of trusting whatever the
+        template carried. Sequential invariant: ``mix_recon == W_off @
+        recon`` at every round boundary. Pipelined: the sender has already
+        advanced recon by the IN-FLIGHT payload its neighbors have not
+        mixed yet, so ``mix_recon == W_off @ (recon - dq(wire))`` -- with
+        a zero wire (restore from a sequential/fused checkpoint) the
+        formulas coincide, which is what makes mid-pipeline restores and
+        cross-schedule restores both land in a self-consistent state."""
         w = self.dense_equivalent()
         w_off = jnp.asarray(w - np.diag(np.diag(w)), jnp.float32)
         comm = dict(comm)
-        comm["mix_recon"] = w_off @ jnp.asarray(comm["recon"], jnp.float32)
+
+        def effective_recon(recon_key: str, suffix: str) -> jnp.ndarray:
+            recon = jnp.asarray(comm[recon_key], jnp.float32)
+            names = self._wire_key_names(suffix)
+            if self.pipelined and all(k in comm for k in names):
+                recon = recon - self._dq_full(
+                    tuple(jnp.asarray(comm[k]) for k in names)
+                )
+            return recon
+
+        comm["mix_recon"] = w_off @ effective_recon("recon", "")
         if "recon_t" in comm:
-            comm["mix_recon_t"] = w_off @ jnp.asarray(
-                comm["recon_t"], jnp.float32
-            )
+            comm["mix_recon_t"] = w_off @ effective_recon("recon_t", "_t")
         return comm
 
     # -- the shard_map round ----------------------------------------------
 
-    def _wire_mix(self, q, scales, w_off_rows):
-        """Move the int8 payload and return ``sum_j W_ij dq_j`` for this
-        shard's rows. ``w_off_rows``: replicated (n, n) off-diagonal W
-        (dense wire only; None for the circulant ppermute wire)."""
-        ck = self.scale_chunk
+    def _wire_mix(self, wire: Tuple[jnp.ndarray, ...], w_off_rows):
+        """Move one wire's payload buffers over the collective and return
+        ``sum_j W_ij dq_j`` for this shard's rows. ``wire`` is (q, scales)
+        for the dense int8 wire or (q, pos, scales) for the compact
+        top-k wire -- EVERY buffer in the tuple is a collective operand,
+        so the bytes that move are exactly ``flat_wire_bytes``.
+        ``w_off_rows``: replicated (n, n) off-diagonal W (dense-W
+        all-gather wire only; ignored for the circulant ppermute wire)."""
+        rows = wire[0].shape[0]
+        t = self.layout.total
         if self.dirs is not None:
-            acc = jnp.zeros(q.shape, jnp.float32)
+            acc = jnp.zeros((rows, t), jnp.float32)
             for axis_name, shift, weight in self.dirs:
                 size = self.mesh.shape[axis_name]
                 perm = [(i, (i + shift) % size) for i in range(size)]
-                qr = jax.lax.ppermute(q, axis_name, perm)  # int8 on the wire
-                sr = jax.lax.ppermute(scales, axis_name, perm)
-                acc = acc + jnp.float32(weight) * _dequant(qr, sr, ck)
+                recv = tuple(
+                    jax.lax.ppermute(b, axis_name, perm) for b in wire
+                )
+                acc = acc + jnp.float32(weight) * self._dq_full(recv)
             return acc
-        # arbitrary dense W: ONE all-gather of the int8 payload + scales
+        # arbitrary dense W: ONE all-gather per wire buffer
         n = self.n_nodes
-        qf = jax.lax.all_gather(q[0], self.node_axes, tiled=False)
-        sf = jax.lax.all_gather(scales[0], self.node_axes, tiled=False)
-        dq = _dequant(qf.reshape(n, -1), sf.reshape(n, -1), ck)
+        gathered = tuple(
+            jax.lax.all_gather(b[0], self.node_axes, tiled=False).reshape(
+                n, -1
+            )
+            for b in wire
+        )
+        dq = self._dq_full(gathered)
         row = _allgather_row(self.mesh, self.node_axes, w_off_rows)  # (n,)
         return (row @ dq)[None]
+
+    def _make_produce(self):
+        """The wire-stage kernels (compact or dense epilogue), normalized
+        to return the wire payload as ONE tuple matching
+        ``_wire_key_names`` order."""
+        if self.impl == "pallas":
+            from repro.kernels.gossip.ops import (
+                wire_stage,
+                wire_stage_compact,
+                wire_stage_gt,
+                wire_stage_gt_compact,
+            )
+        else:
+            from repro.kernels.gossip.ref import (
+                wire_stage_compact_ref as wire_stage_compact,
+                wire_stage_gt_compact_ref as wire_stage_gt_compact,
+                wire_stage_gt_ref as wire_stage_gt,
+                wire_stage_ref as wire_stage,
+            )
+        kw = self._kernel_kwargs()
+
+        if self.compact_wire:
+            def produce(x, g, recon, res, alpha):
+                h, q, pos, sc, nrecon, nres = wire_stage_compact(
+                    x, g, recon, res, alpha, **kw
+                )
+                return h, (q, pos, sc), nrecon, nres
+
+            def produce_gt(x, t, g, gp, rx, sx, rt, st, alpha):
+                (h, th, qx, px, scx, nrx, nsx,
+                 qt, pt, sct, nrt, nst) = wire_stage_gt_compact(
+                    x, t, g, gp, rx, sx, rt, st, alpha, **kw
+                )
+                return (h, th, (qx, px, scx), nrx, nsx,
+                        (qt, pt, sct), nrt, nst)
+        else:
+            def produce(x, g, recon, res, alpha):
+                h, q, sc, nrecon, nres = wire_stage(
+                    x, g, recon, res, alpha, **kw
+                )
+                return h, (q, sc), nrecon, nres
+
+            def produce_gt(x, t, g, gp, rx, sx, rt, st, alpha):
+                (h, th, qx, scx, nrx, nsx,
+                 qt, sct, nrt, nst) = wire_stage_gt(
+                    x, t, g, gp, rx, sx, rt, st, alpha, **kw
+                )
+                return h, th, (qx, scx), nrx, nsx, (qt, sct), nrt, nst
+
+        return produce, produce_gt
 
     def _self_weight(self, w_diag):
         if self.dirs is not None:
@@ -716,28 +1202,36 @@ class ShardedFusedEngine(_FusedBase):
             idx = idx * self.mesh.shape[a] + jax.lax.axis_index(a)
         return jax.lax.dynamic_slice_in_dim(w_diag, idx, 1)[0]
 
-    def make_comm_step(self, eval_grads, schedule, cfg: FLConfig):
+    def _round_constants(self, cfg: FLConfig):
         if cfg.n_nodes != self.n_nodes:
             raise ValueError(
                 f"cfg.n_nodes {cfg.n_nodes} != mesh node axes product "
                 f"{self.n_nodes}"
             )
-        if self.impl == "pallas":
-            from repro.kernels.gossip.ops import wire_stage, wire_stage_gt
-        else:
-            from repro.kernels.gossip.ref import (
-                wire_stage_gt_ref as wire_stage_gt,
-                wire_stage_ref as wire_stage,
-            )
-        kw = self._kernel_kwargs()
-        egress = self.wire_bytes(cfg)
-        spec = P(self.node_axes, None)
         if self.w_dense is None:
             # rank-matched placeholders; the circulant wire never reads them
             w_diag = jnp.zeros((1,), jnp.float32)
             w_off = jnp.zeros((1, 1), jnp.float32)
         else:
             _, w_diag, w_off = _split_w_np(self.w_dense, self.n_nodes)
+        return w_diag, w_off
+
+    def _metrics(self, cfg, losses, grads, alpha, new_state, egress):
+        return {
+            "loss": jnp.mean(losses),
+            "alpha": alpha,
+            "grad_norm_sq": _mean_grad_norm_sq(grads),
+            "consensus_err": _consensus_error(new_state.params),
+            "comm_rounds": jnp.float32(1.0),
+            "wire_bytes": jnp.float32(egress),
+            "ef_residual_rms": self._residual_rms(new_state.comm),
+        }
+
+    def make_comm_step(self, eval_grads, schedule, cfg: FLConfig):
+        w_diag, w_off = self._round_constants(cfg)
+        produce, produce_gt = self._make_produce()
+        egress = self.wire_bytes(cfg)
+        spec = P(self.node_axes, None)
 
         # With difference coding, recon_j' = recon_j + dq_j, so the
         # neighbor-mix term accumulates: mix_recon' = mix_recon + S W dq.
@@ -746,20 +1240,20 @@ class ShardedFusedEngine(_FusedBase):
         dc = self.difference_coding
 
         def body(x, g, recon, res, mix_recon, alpha, w_diag, w_off):
-            h, q, sc, nrecon, nres = wire_stage(x, g, recon, res, alpha, **kw)
-            mix_add = self._wire_mix(q, sc, w_off)
+            h, wire, nrecon, nres = produce(x, g, recon, res, alpha)
+            mix_add = self._wire_mix(wire, w_off)
             new_mix = mix_recon + mix_add if dc else mix_add
             mixed = self._self_weight(w_diag) * h + new_mix
             return mixed, nrecon, nres, new_mix
 
         def body_gt(x, t, g, gp, rx, sx, mrx, rt, st, mrt, alpha, w_diag,
                     w_off):
-            (h, t_half, qx, scx, nrx, nsx, qt, sct, nrt, nst) = wire_stage_gt(
-                x, t, g, gp, rx, sx, rt, st, alpha, **kw
+            (h, t_half, wire_x, nrx, nsx, wire_t, nrt, nst) = produce_gt(
+                x, t, g, gp, rx, sx, rt, st, alpha
             )
             w_self = self._self_weight(w_diag)
-            mix_x = self._wire_mix(qx, scx, w_off)
-            mix_t = self._wire_mix(qt, sct, w_off)
+            mix_x = self._wire_mix(wire_x, w_off)
+            mix_t = self._wire_mix(wire_t, w_off)
             new_mrx = mrx + mix_x if dc else mix_x
             new_mrt = mrt + mix_t if dc else mix_t
             mixed_x = w_self * h + new_mrx
@@ -815,17 +1309,134 @@ class ShardedFusedEngine(_FusedBase):
                           "mix_recon_t": nmrt},
                 )
 
-            metrics = {
-                "loss": jnp.mean(losses),
-                "alpha": alpha,
-                "grad_norm_sq": _mean_grad_norm_sq(grads),
-                "consensus_err": _consensus_error(new_state.params),
-                "comm_rounds": jnp.float32(1.0),
-                "wire_bytes": jnp.float32(egress),
-            }
-            return new_state, metrics
+            return new_state, self._metrics(
+                cfg, losses, grads, alpha, new_state, egress
+            )
 
         return comm_step
+
+    def make_pipelined_round(self, eval_grads, schedule, cfg: FLConfig):
+        """The split round: ``ingest`` runs the collective on the
+        IN-FLIGHT payload buffers (``wire_*`` in ``FLState.comm``) --
+        nothing it reads depends on this round's compute, so it lands
+        BEFORE the local-step scan in the jaxpr; ``comm_step`` produces
+        this round's payload (stored for the next round), folds the
+        ingested stale neighbor term into ``mix_recon``, and mixes
+        ``w_self * h + mix_recon'`` -- one-round-stale neighbor
+        information, exactly sequential-with-delay."""
+        if not self.pipelined:
+            raise ValueError(
+                "engine was built with round_schedule='sequential'; build "
+                "it with round_schedule='pipelined'"
+            )
+        w_diag, w_off = self._round_constants(cfg)
+        produce, produce_gt = self._make_produce()
+        egress = self.wire_bytes(cfg)
+        spec = P(self.node_axes, None)
+        rep = P(None, None)
+        nw = 3 if self.compact_wire else 2
+        dc = self.difference_coding
+        wire_keys = self._wire_key_names("")
+        wire_keys_t = self._wire_key_names("_t")
+
+        def ingest_body(*args):
+            wire, w_off = args[:-1], args[-1]
+            return self._wire_mix(tuple(wire), w_off)
+
+        sm_ingest = _shard_map(
+            ingest_body, mesh=self.mesh,
+            in_specs=(spec,) * nw + (rep,), out_specs=spec,
+        )
+
+        def ingest(state: FLState):
+            if state.comm is None or wire_keys[0] not in state.comm:
+                raise ValueError(
+                    "pipelined rounds need init_fl_state(..., engine=...) "
+                    "with the pipelined engine (in-flight wire buffers)"
+                )
+            stale = {"mix": sm_ingest(
+                *[state.comm[k] for k in wire_keys], w_off
+            )}
+            if cfg.algorithm == "dsgt":
+                stale["mix_t"] = sm_ingest(
+                    *[state.comm[k] for k in wire_keys_t], w_off
+                )
+            return stale
+
+        # The comm bodies carry NO collective: the wire payload produced
+        # here is stored in comm and ingested at the top of the next round.
+        def body(x, g, recon, res, mix_recon, mix_add, alpha, w_diag):
+            h, wire, nrecon, nres = produce(x, g, recon, res, alpha)
+            stale_mix = mix_recon + mix_add if dc else mix_add
+            mixed = self._self_weight(w_diag) * h + stale_mix
+            return (mixed, nrecon, nres, stale_mix) + wire
+
+        def body_gt(x, t, g, gp, rx, sx, mrx, rt, st, mrt, add_x, add_t,
+                    alpha, w_diag):
+            (h, t_half, wire_x, nrx, nsx, wire_t, nrt, nst) = produce_gt(
+                x, t, g, gp, rx, sx, rt, st, alpha
+            )
+            w_self = self._self_weight(w_diag)
+            stale_x = mrx + add_x if dc else add_x
+            stale_t = mrt + add_t if dc else add_t
+            mixed_x = w_self * h + stale_x
+            mixed_t = w_self * t_half + stale_t
+            return ((mixed_x, mixed_t, nrx, nsx, stale_x, nrt, nst, stale_t)
+                    + wire_x + wire_t)
+
+        sm_dsgd = _shard_map(
+            body, mesh=self.mesh,
+            in_specs=(spec,) * 6 + (P(), P(None)),
+            out_specs=(spec,) * (4 + nw),
+        )
+        sm_dsgt = _shard_map(
+            body_gt, mesh=self.mesh,
+            in_specs=(spec,) * 12 + (P(), P(None)),
+            out_specs=(spec,) * (8 + 2 * nw),
+        )
+
+        def comm_step(state: FLState, batch: PyTree, stale):
+            step = state.step + 1
+            alpha = schedule(step)
+            losses, grads = eval_grads(state.params, batch)
+            grads = grads.astype(jnp.float32)
+            alpha32 = jnp.asarray(alpha, jnp.float32)
+
+            if cfg.algorithm == "dsgd":
+                outs = sm_dsgd(
+                    state.params, grads, state.comm["recon"],
+                    state.comm["residual"], state.comm["mix_recon"],
+                    stale["mix"], alpha32, w_diag,
+                )
+                mixed, nrecon, nres, new_mix = outs[:4]
+                comm = {"recon": nrecon, "residual": nres,
+                        "mix_recon": new_mix}
+                comm.update(zip(wire_keys, outs[4:]))
+                new_state = state._replace(step=step, params=mixed, comm=comm)
+            else:
+                outs = sm_dsgt(
+                    state.params, state.tracker, grads, state.prev_grad,
+                    state.comm["recon"], state.comm["residual"],
+                    state.comm["mix_recon"], state.comm["recon_t"],
+                    state.comm["residual_t"], state.comm["mix_recon_t"],
+                    stale["mix"], stale["mix_t"], alpha32, w_diag,
+                )
+                (mx, mt, nrx, nsx, nmrx, nrt, nst, nmrt) = outs[:8]
+                comm = {"recon": nrx, "residual": nsx, "mix_recon": nmrx,
+                        "recon_t": nrt, "residual_t": nst,
+                        "mix_recon_t": nmrt}
+                comm.update(zip(wire_keys, outs[8:8 + nw]))
+                comm.update(zip(wire_keys_t, outs[8 + nw:]))
+                new_state = FLState(
+                    step=step, params=mx, tracker=mt, prev_grad=grads,
+                    comm=comm,
+                )
+
+            return new_state, self._metrics(
+                cfg, losses, grads, alpha, new_state, egress
+            )
+
+        return ingest, comm_step
 
     @classmethod
     def simulated(cls, w, stacked_params, **_ignored):
@@ -839,10 +1450,13 @@ class ShardedFusedEngine(_FusedBase):
                   *, wire_dtype=None, axes_subset=None, scale_chunk: int = 512,
                   topk=None, impl: str = "pallas", w=None,
                   error_feedback: bool = True, difference_coding: bool = True,
-                  self_weight=None, **_ignored):
+                  self_weight=None, compact=None, round_schedule=None,
+                  storage_dtype=None, **_ignored):
         _reject_wire_dtype(wire_dtype)
+        _reject_storage_dtype(storage_dtype, cls.name)
         layout = pack_layout(stacked_sds, pad_to=scale_chunk)
         return cls(mesh, node_axes, layout, w=w, axes_subset=axes_subset,
                    self_weight=self_weight, scale_chunk=scale_chunk,
                    topk=topk, impl=impl, error_feedback=error_feedback,
-                   difference_coding=difference_coding)
+                   difference_coding=difference_coding, compact=compact,
+                   round_schedule=round_schedule)

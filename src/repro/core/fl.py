@@ -107,7 +107,11 @@ class FLState(NamedTuple):
     params: PyTree  # each leaf (nodes, ...)
     tracker: Optional[PyTree]  # DSGT vtheta, same layout
     prev_grad: Optional[PyTree]  # DSGT g at the last comm round
-    comm: Optional[Dict[str, jnp.ndarray]] = None  # fused-engine wire state
+    #: fused-engine wire state (engine.comm_keys / comm_state_sds). Under
+    #: the PIPELINED round schedule the sharded engine also double-buffers
+    #: the in-flight wire payload here: ``wire_q`` (int8), ``wire_pos``
+    #: (compact wire positions), ``wire_scales`` (+ ``_t`` twins for DSGT)
+    comm: Optional[Dict[str, jnp.ndarray]] = None
 
 
 @dataclasses.dataclass(frozen=True)
@@ -204,9 +208,14 @@ def make_fl_round(
         packed flat buffer), the wire (exact fp32/bf16 vs difference-coded
         int8 vs top-k sparsified int8), and the mixing implementation
         (dense matmul, ppermute, all-gather, round megakernel, sharded
-        megakernel). Build the matching state with
-        ``init_fl_state(cfg, params, engine=engine)``. The historical
-        ``layout=`` / ``fused=`` kwargs raise with a migration hint.
+        megakernel) -- and, via its ``round_schedule`` attribute, the
+        round's TIME layout: ``sequential`` (the paper's blocking round)
+        or ``pipelined`` (the collective for round r's payload in flight
+        across round r+1's local steps, one-round-stale mixing; see
+        ``repro.core.engine.RoundSchedule``). Build the matching state
+        with ``init_fl_state(cfg, params, engine=engine)``. The
+        historical ``layout=`` / ``fused=`` kwargs raise with a
+        migration hint.
 
     Hierarchical (multi-pod) gossip is built by ALTERNATING two round
     functions at the driver level -- one whose engine mixes only the cheap
@@ -255,7 +264,6 @@ def make_fl_round(
 
     grad_fn = jax.vmap(jax.value_and_grad(loss_fn))
     eval_grads = engine.make_eval_grads(grad_fn)
-    comm_step = engine.make_comm_step(eval_grads, schedule, cfg)
 
     def local_step(state: FLState, batch: PyTree) -> Tuple[FLState, jnp.ndarray]:
         step = state.step + 1
@@ -264,23 +272,16 @@ def make_fl_round(
         params = engine.local_step(state.params, grads, alpha)
         return state._replace(step=step, params=params), jnp.mean(losses)
 
-    def round_fn(
-        state: FLState, batches: PyTree
-    ) -> Tuple[FLState, Dict[str, jnp.ndarray]]:
-        q = cfg.q
-        if q > 1:
-            local_batches = _tm(lambda b: b[: q - 1], batches)
-            state, local_losses = jax.lax.scan(local_step, state, local_batches)
-        else:
-            local_losses = jnp.zeros((0,), jnp.float32)
-        comm_batch = _tm(lambda b: b[q - 1], batches)
-        state, metrics = comm_step(state, comm_batch)
-        metrics["local_loss"] = jnp.where(
-            q > 1, jnp.sum(local_losses) / jnp.maximum(1, q - 1), metrics["loss"]
-        )
-        return state, metrics
+    # The engine's RoundSchedule owns the round's TIME layout: sequential
+    # (Q-1 local steps, then produce -> collective -> mix) or pipelined
+    # (ingest the in-flight collective BEFORE the scan, mix one-round
+    # stale). The schedule is fixed at engine construction because it is
+    # part of the comm-state contract (repro.core.engine.RoundSchedule).
+    from repro.core.engine import resolve_schedule
 
-    return round_fn
+    round_schedule = resolve_schedule(getattr(engine, "round_schedule", None))
+    return round_schedule.build_round(engine, eval_grads, schedule, cfg,
+                                      local_step)
 
 
 def _mean_grad_norm_sq(stacked_grads: PyTree) -> jnp.ndarray:

@@ -32,7 +32,15 @@ import numpy as np
 
 PyTree = Any
 
-__all__ = ["FlatLayout", "pack", "pack_layout", "pack_like", "unpack", "flat_wire_bytes"]
+__all__ = [
+    "FlatLayout",
+    "pack",
+    "pack_layout",
+    "pack_like",
+    "unpack",
+    "flat_wire_bytes",
+    "compact_pos_dtype",
+]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -63,10 +71,13 @@ class FlatLayout:
       evenly into kernel ``scale_chunk`` blocks). Engine ops must keep
       them zero-preserving: every shipped backend is columnwise, so zeros
       mix/update/quantize to zeros and ``unpack`` never reads them.
-    * **Dtype round trip.** ``unpack(pack(tree)) == tree`` exactly: each
-      leaf is stored widened to the buffer dtype (fp32 holds
-      fp32/bf16/fp16 losslessly) and ``unpack`` restores
-      ``leaves[k].dtype``.
+    * **Dtype round trip.** ``unpack(pack(tree)) == tree`` exactly when
+      ``storage_dtype`` holds every leaf dtype losslessly (the fp32
+      default covers fp32/bf16/fp16): each leaf is stored widened to the
+      buffer dtype and ``unpack`` restores ``leaves[k].dtype``. A NARROW
+      ``storage_dtype`` (bf16 flat storage -- halves the HBM traffic of
+      every buffer-wide op) rounds wider leaves on pack; engines that
+      opt in keep fp32 only in their mix accumulators.
     * **Static + hashable.** Layouts are plain Python data (treedef +
       tuple of :class:`LeafSpec`), computable from ShapeDtypeStructs alone
       (:func:`pack_layout`) -- usable as a jit static argument and at
@@ -82,6 +93,11 @@ class FlatLayout:
     leaves: Tuple[LeafSpec, ...]
     n_nodes: int
     total: int
+    #: dtype the flat buffer is STORED in ("float32" default; "bfloat16"
+    #: halves HBM traffic of every buffer-wide op -- engines keep fp32
+    #: only in the mix accumulator). Not necessarily lossless for wider
+    #: leaf dtypes.
+    storage_dtype: str = "float32"
 
     @property
     def used(self) -> int:
@@ -92,7 +108,8 @@ class FlatLayout:
         return len(self.leaves)
 
 
-def _layout(treedef, leaf_list, n_nodes: int, pad_to: int) -> FlatLayout:
+def _layout(treedef, leaf_list, n_nodes: int, pad_to: int,
+            storage_dtype) -> FlatLayout:
     specs = []
     off = 0
     for leaf in leaf_list:
@@ -100,10 +117,12 @@ def _layout(treedef, leaf_list, n_nodes: int, pad_to: int) -> FlatLayout:
         specs.append(LeafSpec(off, shape, jnp.dtype(leaf.dtype).name))
         off += specs[-1].size
     total = off if pad_to <= 1 else ((off + pad_to - 1) // pad_to) * pad_to
-    return FlatLayout(treedef, tuple(specs), n_nodes, total)
+    return FlatLayout(treedef, tuple(specs), n_nodes, total,
+                      jnp.dtype(storage_dtype).name)
 
 
-def pack_layout(tree: PyTree, pad_to: int = 1) -> FlatLayout:
+def pack_layout(tree: PyTree, pad_to: int = 1,
+                storage_dtype=jnp.float32) -> FlatLayout:
     """Compute the layout without materializing the buffer (works on
     ShapeDtypeStructs too -- used by lowering-only dry runs)."""
     leaf_list, treedef = jax.tree_util.tree_flatten(tree)
@@ -115,7 +134,7 @@ def pack_layout(tree: PyTree, pad_to: int = 1) -> FlatLayout:
             raise ValueError(
                 f"leaf shape {leaf.shape} is not node-stacked for n={n_nodes}"
             )
-    return _layout(treedef, leaf_list, n_nodes, pad_to)
+    return _layout(treedef, leaf_list, n_nodes, pad_to, storage_dtype)
 
 
 def pack(
@@ -127,13 +146,14 @@ def pack(
       tree: pytree whose every leaf is ``(nodes, ...)``.
       pad_to: round ``total`` up to a multiple (zero-filled tail) so the
         buffer tiles evenly into kernel chunks.
-      buffer_dtype: dtype of the flat buffer; must hold every leaf dtype
-        losslessly (fp32 covers fp32/bf16/fp16).
+      buffer_dtype: storage dtype of the flat buffer (recorded as
+        ``layout.storage_dtype``). fp32 holds fp32/bf16/fp16 losslessly;
+        bf16 storage rounds fp32 leaves (the flat engine's bf16 mode).
 
     Returns:
       (flat, layout) with ``flat.shape == (nodes, layout.total)``.
     """
-    layout = pack_layout(tree, pad_to)
+    layout = pack_layout(tree, pad_to, storage_dtype=buffer_dtype)
     leaf_list = jax.tree_util.tree_leaves(tree)
     n = layout.n_nodes
     cols = [l.reshape(n, -1).astype(buffer_dtype) for l in leaf_list]
@@ -142,13 +162,16 @@ def pack(
     return jnp.concatenate(cols, axis=1), layout
 
 
-def pack_like(tree: PyTree, layout: FlatLayout, buffer_dtype=jnp.float32) -> jnp.ndarray:
+def pack_like(tree: PyTree, layout: FlatLayout, buffer_dtype=None) -> jnp.ndarray:
     """Pack a pytree into an EXISTING layout (same structure and per-leaf
-    shapes; zero-padded to ``layout.total``). Used to flatten gradients
-    into the same columns as the packed parameters they update."""
+    shapes; zero-padded to ``layout.total``; stored in the layout's
+    ``storage_dtype`` unless overridden). Used to flatten gradients into
+    the same columns as the packed parameters they update."""
     leaf_list, treedef = jax.tree_util.tree_flatten(tree)
     if treedef != layout.treedef:
         raise ValueError(f"tree structure {treedef} != layout {layout.treedef}")
+    if buffer_dtype is None:
+        buffer_dtype = layout.storage_dtype
     n = layout.n_nodes
     cols = []
     for leaf, spec in zip(leaf_list, layout.leaves):
@@ -177,6 +200,14 @@ def unpack(flat: jnp.ndarray, layout: FlatLayout) -> PyTree:
     return jax.tree_util.tree_unflatten(layout.treedef, leaves)
 
 
+def compact_pos_dtype(scale_chunk: int):
+    """Dtype of the compact wire's in-chunk position buffer: int16 when a
+    chunk index fits (the common case -- chunk <= 32768), int32 otherwise.
+    The SAME boundary drives :func:`flat_wire_bytes`, so the accounting
+    is the bytes the collective actually moves."""
+    return jnp.int16 if scale_chunk <= 2 ** 15 else jnp.int32
+
+
 def flat_wire_bytes(
     layout: FlatLayout, degree: int, scale_chunk: int = 0,
     topk: int | None = None,
@@ -187,20 +218,20 @@ def flat_wire_bytes(
     Dense int8 (``topk=None``): 1 B/param + 4 B per scale chunk
     (``scale_chunk=0``: one scale per node).
 
-    Top-k sparsified (``topk=k``): per scale chunk, k int8 values + the
-    position encoding + the 4 B scale, capped at the dense chunk bytes (a
-    sender whose sparse encoding would exceed dense just ships dense).
-    The model assumes exactly k survivors; the kernel's tie-keeping mask
-    can ship more when many |payload| values tie at the threshold
-    (measure-zero for float payloads, and a tie-heavy sender's real
-    encoder would fall back to the dense cap above).
-    Positions cost ``min(2k, ceil(chunk/8))`` bytes -- a 16-bit index per
-    survivor or a presence bitmap over the chunk, whichever is smaller
-    (the bitmap wins for k > chunk/16).
+    Top-k sparsified (``topk=k``): the COMPACT encoding the wire-stage
+    kernels actually emit (``kernels.gossip.wire_stage_compact``) -- per
+    scale chunk, exactly k int8 values + k in-chunk positions
+    (:func:`compact_pos_dtype`: 2 B below 32k-wide chunks, 4 B above) +
+    the 4 B scale, capped at the dense chunk bytes (a sender whose
+    compact encoding would exceed dense just ships dense). This is no
+    longer a model: the collective's operand shapes ARE these buffers
+    (asserted in tests/test_schedule.py). A presence-bitmap encoding
+    (ceil(chunk/8) B) would beat explicit positions for k > chunk/16;
+    it is not implemented, so it is not accounted.
     """
     n_scales = 1 if scale_chunk <= 0 else -(-layout.total // scale_chunk)
     if topk is None or scale_chunk <= 0 or topk >= scale_chunk:
         return degree * (layout.total + 4 * n_scales)
-    index_bytes = min(2 * topk, -(-scale_chunk // 8))
+    index_bytes = topk * jnp.dtype(compact_pos_dtype(scale_chunk)).itemsize
     per_chunk = min(topk + index_bytes + 4, scale_chunk + 4)
     return degree * (n_scales * per_chunk)

@@ -4,19 +4,27 @@ megakernels that fuse the DSGD/DSGT local update into the same pass, and
 the wire-stage kernels (pre-collective half of the SHARDED fused round:
 update + top-k + quantize + EF, with the W mix finished after the
 ppermute / all-gather wire). All entry points take ``topk=`` for top-k
-sparsified payloads (EF absorbs the truncation)."""
+sparsified payloads (EF absorbs the truncation); the ``*_compact``
+variants emit the truly sparse (k values, k positions, scales) wire
+buffers, and the mix kernels take ``stale_mix=`` for the pipelined round
+schedule's one-round-stale neighbor mixing."""
 
 from repro.kernels.gossip.ops import (
     fused_round,
     fused_round_gt,
     gossip_mix,
     wire_stage,
+    wire_stage_compact,
     wire_stage_gt,
+    wire_stage_gt_compact,
 )
 from repro.kernels.gossip.ref import (
     fused_round_gt_ref,
     fused_round_ref,
     gossip_mix_ref,
+    scatter_compact_dq,
+    wire_stage_compact_ref,
+    wire_stage_gt_compact_ref,
     wire_stage_gt_ref,
     wire_stage_ref,
 )
@@ -32,4 +40,9 @@ __all__ = [
     "wire_stage_ref",
     "wire_stage_gt",
     "wire_stage_gt_ref",
+    "wire_stage_compact",
+    "wire_stage_compact_ref",
+    "wire_stage_gt_compact",
+    "wire_stage_gt_compact_ref",
+    "scatter_compact_dq",
 ]

@@ -42,7 +42,27 @@ Five kernels share that stage:
   W contraction (update + diff-code + top-k + int8 quantize + EF),
   emitting the int8 payload + fp32 scales that cross the wire; the mix
   finishes outside the kernel against the engine's running
-  neighbor-reconstruction accumulator (``core.engine.ShardedFusedEngine``).
+  neighbor-reconstruction accumulator (``core.engine.ShardedFusedEngine``);
+* :func:`wire_stage_compact_pallas` / :func:`wire_stage_gt_compact_pallas`
+  -- the TRULY SPARSE top-k wire: the same wire stage with a
+  compact-gather epilogue. Selection is EXACT-k (``jax.lax.top_k`` on
+  |payload|, ties broken toward the lower index -- identically in the jnp
+  oracle), and the tile emits ``(k int8 values, k in-chunk positions,
+  one fp32 scale)`` per scale chunk instead of the masked-dense buffer.
+  Only those compact buffers cross the collective; the receive side
+  scatter-accumulates them back to dense (``ref.scatter_compact_dq``)
+  before the W contraction. The EF/recon updates still use the full
+  dense dequant (computed in-tile -- dq never hits the wire), so masking
+  defers signal exactly as in the masked-dense path.
+
+The quantize-mix kernels additionally take ``stale_mix`` (the PIPELINED
+round schedule): the W contraction runs against the INPUT ``recon`` --
+the reconstruction every neighbor had already advanced to at the END of
+the previous round -- instead of ``new_recon``, so the mix consumes
+one-round-stale neighbor information while this round's payload is still
+"in flight". ``new_recon`` advances regardless (both endpoints replay
+the wire), which is what makes stale mixing exactly the
+sequential-with-one-round-delay dynamics.
 
 Replacing the unfused path's full-size fp32 intermediates (the updated
 parameters h, payload, dq, recon') with one HBM read of each input and one
@@ -68,6 +88,8 @@ __all__ = [
     "fused_round_gt_pallas",
     "wire_stage_pallas",
     "wire_stage_gt_pallas",
+    "wire_stage_compact_pallas",
+    "wire_stage_gt_compact_pallas",
 ]
 
 
@@ -107,16 +129,60 @@ def _quantize_ef(x, recon, res, *, error_feedback, difference_coding, topk):
     return q, scale, new_recon, new_res
 
 
+def _topk_gather(payload, topk):
+    """EXACT-k selection of ONE (nodes, chunk) tile: the values and
+    in-chunk positions of the k largest-|.| columns per row
+    (``jax.lax.top_k`` on |payload|; ties broken toward the lower index,
+    deterministically and identically in the jnp oracle). Unlike
+    :func:`_topk_mask` this never keeps threshold ties beyond k -- the
+    compact wire has exactly k slots per chunk."""
+    _, idx = jax.lax.top_k(jnp.abs(payload), topk)  # (n, k) int32
+    vals = jnp.take_along_axis(payload, idx, axis=-1)
+    return vals, idx
+
+
+def _quantize_ef_compact(x, recon, res, *, error_feedback, difference_coding,
+                         topk):
+    """Compact-gather variant of :func:`_quantize_ef`: exact-k selection,
+    int8 quantization of the k SURVIVORS only, and the dense dq scattered
+    back in-tile for the recon/EF updates (dq never crosses the wire).
+    Returns (q (n, k) as fp32 ints, pos (n, k) int32, scale (n, 1),
+    new_recon, new_res)."""
+    base = recon if difference_coding else jnp.zeros_like(recon)
+    payload = x - base
+    if error_feedback:
+        payload = payload + res
+
+    vals, pos = _topk_gather(payload, topk)
+    scale = jnp.max(jnp.abs(vals), axis=1, keepdims=True) / 127.0  # (n, 1)
+    safe = jnp.where(scale > 0, scale, 1.0)
+    q = jnp.clip(jnp.round(vals / safe), -127, 127)  # (n, k)
+
+    rows = jax.lax.broadcasted_iota(jnp.int32, pos.shape, 0)
+    dq = jnp.zeros_like(payload).at[rows, pos].add(q * scale)
+
+    new_recon = base + dq
+    new_res = payload - dq if error_feedback else res
+    return q, pos, scale, new_recon, new_res
+
+
 def _quantize_mix(x, recon, res, woff, wself, *, error_feedback,
-                  difference_coding, topk=None):
+                  difference_coding, topk=None, stale_mix=False):
     """The shared in-VMEM stage: difference-code, int8-quantize (top-k
     sparsified when ``topk`` is set), W-row mix, and error-feedback update
-    of ONE (nodes, chunk) tile. Returns (mixed, new_recon, new_res, scale)."""
+    of ONE (nodes, chunk) tile. Returns (mixed, new_recon, new_res, scale).
+
+    ``stale_mix`` (the pipelined round schedule) contracts W against the
+    INPUT recon -- the neighbor reconstruction as of the END of the
+    previous round -- instead of ``new_recon``; the recon/EF updates are
+    unchanged, so the wire semantics are identical, only the mix consumes
+    one-round-stale neighbor information."""
     _, scale, new_recon, new_res = _quantize_ef(
         x, recon, res, error_feedback=error_feedback,
         difference_coding=difference_coding, topk=topk,
     )
-    mixed = jnp.dot(woff, new_recon, preferred_element_type=jnp.float32) + wself * x
+    nbr = recon if stale_mix else new_recon
+    mixed = jnp.dot(woff, nbr, preferred_element_type=jnp.float32) + wself * x
     return mixed, new_recon, new_res, scale
 
 
@@ -134,6 +200,7 @@ def _kernel(
     error_feedback,
     difference_coding,
     topk,
+    stale_mix,
 ):
     mixed, nrecon, nres, scale = _quantize_mix(
         x_ref[...],
@@ -144,6 +211,7 @@ def _kernel(
         error_feedback=error_feedback,
         difference_coding=difference_coding,
         topk=topk,
+        stale_mix=stale_mix,
     )
     mixed_ref[...] = mixed
     nrecon_ref[...] = nrecon
@@ -167,6 +235,7 @@ def _fused_round_kernel(
     error_feedback,
     difference_coding,
     topk,
+    stale_mix,
 ):
     # DSGD local update fused ahead of the gossip stage: the half-updated
     # parameters h never touch HBM.
@@ -180,6 +249,7 @@ def _fused_round_kernel(
         error_feedback=error_feedback,
         difference_coding=difference_coding,
         topk=topk,
+        stale_mix=stale_mix,
     )
     mixed_ref[...] = mixed
     nrecon_ref[...] = nrecon
@@ -211,6 +281,7 @@ def _fused_round_gt_kernel(
     error_feedback,
     difference_coding,
     topk,
+    stale_mix,
 ):
     # DSGT (adapt-then-combine ordering): tracker absorbs the gradient
     # innovation, parameters step against the updated tracker, and BOTH
@@ -231,6 +302,7 @@ def _fused_round_gt_kernel(
         error_feedback=error_feedback,
         difference_coding=difference_coding,
         topk=topk,
+        stale_mix=stale_mix,
     )
     mx, nrx, nsx, scx = _quantize_mix(
         h,
@@ -241,6 +313,7 @@ def _fused_round_gt_kernel(
         error_feedback=error_feedback,
         difference_coding=difference_coding,
         topk=topk,
+        stale_mix=stale_mix,
     )
     mx_ref[...] = mx
     mt_ref[...] = mt
@@ -283,12 +356,14 @@ def gossip_mix_pallas(
     error_feedback: bool = True,
     difference_coding: bool = True,
     topk: int | None = None,
+    stale_mix: bool = False,
     interpret: bool = False,
 ):
     """x, recon, res: (n, t) fp32 with t % scale_chunk == 0; w_off (n, n);
     w_self (n,). Returns (mixed, new_recon, new_res, scales (n, t//chunk)).
     ``topk`` keeps only the k largest-|.| payload columns per scale chunk
-    (EF absorbs the truncation)."""
+    (EF absorbs the truncation); ``stale_mix`` mixes against the INPUT
+    recon (the pipelined schedule's one-round-stale neighbor info)."""
     n, t = x.shape
     n_chunks = _check_chunk(t, scale_chunk)
     _check_topk(topk)
@@ -296,7 +371,7 @@ def gossip_mix_pallas(
 
     kernel = functools.partial(
         _kernel, error_feedback=error_feedback, difference_coding=difference_coding,
-        topk=topk,
+        topk=topk, stale_mix=stale_mix,
     )
     return pl.pallas_call(
         kernel,
@@ -326,12 +401,13 @@ def fused_round_pallas(
     error_feedback: bool = True,
     difference_coding: bool = True,
     topk: int | None = None,
+    stale_mix: bool = False,
     interpret: bool = False,
 ):
     """DSGD round megakernel: ``h = x - alpha * g`` then quantize-mix-EF of
-    h (top-k sparsified when ``topk`` is set), in ONE pass. x, g, recon,
-    res: (n, t) fp32; alpha: scalar. Returns (mixed, new_recon, new_res,
-    scales)."""
+    h (top-k sparsified when ``topk`` is set; mixed against the input
+    recon when ``stale_mix``), in ONE pass. x, g, recon, res: (n, t)
+    fp32; alpha: scalar. Returns (mixed, new_recon, new_res, scales)."""
     n, t = x.shape
     n_chunks = _check_chunk(t, scale_chunk)
     _check_topk(topk)
@@ -342,6 +418,7 @@ def fused_round_pallas(
         error_feedback=error_feedback,
         difference_coding=difference_coding,
         topk=topk,
+        stale_mix=stale_mix,
     )
     return pl.pallas_call(
         kernel,
@@ -383,13 +460,15 @@ def fused_round_gt_pallas(
     error_feedback: bool = True,
     difference_coding: bool = True,
     topk: int | None = None,
+    stale_mix: bool = False,
     interpret: bool = False,
 ):
     """DSGT round megakernel: tracker arithmetic + parameter update + two
     quantize-mix-EF stages (params and tracker) in ONE pass. All array
     operands (n, tot) fp32 except w_off (n, n) / w_self (n,); alpha scalar.
-    Returns (mixed_x, mixed_t, new_recon_x, new_res_x, new_recon_t,
-    new_res_t, scales_x, scales_t)."""
+    ``stale_mix`` mixes both wires against their input recons. Returns
+    (mixed_x, mixed_t, new_recon_x, new_res_x, new_recon_t, new_res_t,
+    scales_x, scales_t)."""
     n, tot = x.shape
     n_chunks = _check_chunk(tot, scale_chunk)
     _check_topk(topk)
@@ -400,6 +479,7 @@ def fused_round_gt_pallas(
         error_feedback=error_feedback,
         difference_coding=difference_coding,
         topk=topk,
+        stale_mix=stale_mix,
     )
     buf = jax.ShapeDtypeStruct((n, tot), jnp.float32)
     sc = jax.ShapeDtypeStruct((n, n_chunks), jnp.float32)
@@ -607,6 +687,221 @@ def wire_stage_gt_pallas(
         in_specs=[tile] * 8 + [scalar],
         out_specs=[tile, tile, tile, col, tile, tile, tile, col, tile, tile],
         out_shape=[buf, buf, qb, sc, buf, buf, qb, sc, buf, buf],
+        interpret=interpret,
+    )(x, t, g, g_prev, recon_x, res_x, recon_t, res_t,
+      jnp.asarray(alpha, jnp.float32).reshape(1, 1))
+
+
+# ---------------------------------------------------------------------------
+# Compact-gather wire-stage kernels: the TRULY SPARSE top-k wire
+# ---------------------------------------------------------------------------
+
+
+def _check_compact(topk, scale_chunk: int) -> None:
+    if topk is None or not (1 <= topk < scale_chunk):
+        raise ValueError(
+            f"the compact wire needs 1 <= topk < scale_chunk, got "
+            f"topk={topk}, scale_chunk={scale_chunk} (use the dense wire "
+            "stage when the payload is not sparsified)"
+        )
+
+
+def _wire_stage_compact_kernel(
+    x_ref,
+    g_ref,
+    recon_ref,
+    res_ref,
+    alpha_ref,
+    h_ref,
+    q_ref,
+    pos_ref,
+    scale_ref,
+    nrecon_ref,
+    nres_ref,
+    *,
+    error_feedback,
+    difference_coding,
+    topk,
+    pos_dtype,
+):
+    # The compact-gather epilogue: the tile still computes the DENSE dq for
+    # its own recon/EF updates, but what it emits for the wire is exactly
+    # (k int8 values, k in-chunk positions, 1 fp32 scale) per chunk -- the
+    # bytes flat_wire_bytes accounts are the bytes that cross the
+    # collective.
+    h = x_ref[...] - alpha_ref[0, 0] * g_ref[...]
+    q, pos, scale, nrecon, nres = _quantize_ef_compact(
+        h,
+        recon_ref[...],
+        res_ref[...],
+        error_feedback=error_feedback,
+        difference_coding=difference_coding,
+        topk=topk,
+    )
+    h_ref[...] = h
+    q_ref[...] = q.astype(jnp.int8)
+    pos_ref[...] = pos.astype(pos_dtype)
+    scale_ref[...] = scale
+    nrecon_ref[...] = nrecon
+    nres_ref[...] = nres
+
+
+def _wire_stage_gt_compact_kernel(
+    x_ref,
+    t_ref,
+    g_ref,
+    gp_ref,
+    rx_ref,
+    sx_ref,
+    rt_ref,
+    st_ref,
+    alpha_ref,
+    h_ref,
+    th_ref,
+    qx_ref,
+    px_ref,
+    scx_ref,
+    nrx_ref,
+    nsx_ref,
+    qt_ref,
+    pt_ref,
+    sct_ref,
+    nrt_ref,
+    nst_ref,
+    *,
+    error_feedback,
+    difference_coding,
+    topk,
+    pos_dtype,
+):
+    # DSGT compact wire stage: tracker arithmetic + parameter update + BOTH
+    # wires' compact-gather quantize-EF in one program.
+    t_half = t_ref[...] + g_ref[...] - gp_ref[...]
+    h = x_ref[...] - alpha_ref[0, 0] * t_half
+    qt, pt, sct, nrt, nst = _quantize_ef_compact(
+        t_half, rt_ref[...], st_ref[...],
+        error_feedback=error_feedback, difference_coding=difference_coding,
+        topk=topk,
+    )
+    qx, px, scx, nrx, nsx = _quantize_ef_compact(
+        h, rx_ref[...], sx_ref[...],
+        error_feedback=error_feedback, difference_coding=difference_coding,
+        topk=topk,
+    )
+    h_ref[...] = h
+    th_ref[...] = t_half
+    qx_ref[...] = qx.astype(jnp.int8)
+    px_ref[...] = px.astype(pos_dtype)
+    scx_ref[...] = scx
+    nrx_ref[...] = nrx
+    nsx_ref[...] = nsx
+    qt_ref[...] = qt.astype(jnp.int8)
+    pt_ref[...] = pt.astype(pos_dtype)
+    sct_ref[...] = sct
+    nrt_ref[...] = nrt
+    nst_ref[...] = nst
+
+
+def wire_stage_compact_pallas(
+    x: jnp.ndarray,
+    g: jnp.ndarray,
+    recon: jnp.ndarray,
+    res: jnp.ndarray,
+    alpha: jnp.ndarray,
+    *,
+    scale_chunk: int = 512,
+    error_feedback: bool = True,
+    difference_coding: bool = True,
+    topk: int | None = None,
+    interpret: bool = False,
+):
+    """DSGD wire stage with the compact-gather epilogue: local update +
+    difference coding + EXACT-k selection + int8 quantize + EF in ONE
+    pass. Returns (h, q int8 (n, n_chunks*k), pos (n, n_chunks*k)
+    int16/int32, scales (n, n_chunks), new_recon, new_res); the caller
+    moves (q, pos, scales) over the wire and the receiver rebuilds the
+    dense dq by scatter-accumulate (``ref.scatter_compact_dq``)."""
+    from repro.core.packing import compact_pos_dtype
+
+    n, t = x.shape
+    n_chunks = _check_chunk(t, scale_chunk)
+    _check_compact(topk, scale_chunk)
+    tile, _, col, _, scalar = _specs(n, scale_chunk)
+    kblock = pl.BlockSpec((n, topk), lambda c: (0, c))
+    pos_dtype = compact_pos_dtype(scale_chunk)
+
+    kernel = functools.partial(
+        _wire_stage_compact_kernel,
+        error_feedback=error_feedback,
+        difference_coding=difference_coding,
+        topk=topk,
+        pos_dtype=pos_dtype,
+    )
+    buf = jax.ShapeDtypeStruct((n, t), jnp.float32)
+    return pl.pallas_call(
+        kernel,
+        grid=(n_chunks,),
+        in_specs=[tile, tile, tile, tile, scalar],
+        out_specs=[tile, kblock, kblock, col, tile, tile],
+        out_shape=[
+            buf,
+            jax.ShapeDtypeStruct((n, n_chunks * topk), jnp.int8),
+            jax.ShapeDtypeStruct((n, n_chunks * topk), pos_dtype),
+            jax.ShapeDtypeStruct((n, n_chunks), jnp.float32),
+            buf,
+            buf,
+        ],
+        interpret=interpret,
+    )(x, g, recon, res, jnp.asarray(alpha, jnp.float32).reshape(1, 1))
+
+
+def wire_stage_gt_compact_pallas(
+    x: jnp.ndarray,
+    t: jnp.ndarray,
+    g: jnp.ndarray,
+    g_prev: jnp.ndarray,
+    recon_x: jnp.ndarray,
+    res_x: jnp.ndarray,
+    recon_t: jnp.ndarray,
+    res_t: jnp.ndarray,
+    alpha: jnp.ndarray,
+    *,
+    scale_chunk: int = 512,
+    error_feedback: bool = True,
+    difference_coding: bool = True,
+    topk: int | None = None,
+    interpret: bool = False,
+):
+    """DSGT wire stage with the compact-gather epilogue on BOTH wires.
+    Returns (h, t_half, q_x, pos_x, scales_x, new_recon_x, new_res_x,
+    q_t, pos_t, scales_t, new_recon_t, new_res_t)."""
+    from repro.core.packing import compact_pos_dtype
+
+    n, tot = x.shape
+    n_chunks = _check_chunk(tot, scale_chunk)
+    _check_compact(topk, scale_chunk)
+    tile, _, col, _, scalar = _specs(n, scale_chunk)
+    kblock = pl.BlockSpec((n, topk), lambda c: (0, c))
+    pos_dtype = compact_pos_dtype(scale_chunk)
+
+    kernel = functools.partial(
+        _wire_stage_gt_compact_kernel,
+        error_feedback=error_feedback,
+        difference_coding=difference_coding,
+        topk=topk,
+        pos_dtype=pos_dtype,
+    )
+    buf = jax.ShapeDtypeStruct((n, tot), jnp.float32)
+    qb = jax.ShapeDtypeStruct((n, n_chunks * topk), jnp.int8)
+    pb = jax.ShapeDtypeStruct((n, n_chunks * topk), pos_dtype)
+    sc = jax.ShapeDtypeStruct((n, n_chunks), jnp.float32)
+    return pl.pallas_call(
+        kernel,
+        grid=(n_chunks,),
+        in_specs=[tile] * 8 + [scalar],
+        out_specs=[tile, tile, kblock, kblock, col, tile, tile,
+                   kblock, kblock, col, tile, tile],
+        out_shape=[buf, buf, qb, pb, sc, buf, buf, qb, pb, sc, buf, buf],
         interpret=interpret,
     )(x, t, g, g_prev, recon_x, res_x, recon_t, res_t,
       jnp.asarray(alpha, jnp.float32).reshape(1, 1))

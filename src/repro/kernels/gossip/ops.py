@@ -19,12 +19,14 @@ from repro.kernels.gossip.gossip import (
     fused_round_gt_pallas,
     fused_round_pallas,
     gossip_mix_pallas,
+    wire_stage_compact_pallas,
+    wire_stage_gt_compact_pallas,
     wire_stage_gt_pallas,
     wire_stage_pallas,
 )
 
 __all__ = ["gossip_mix", "fused_round", "fused_round_gt", "wire_stage",
-           "wire_stage_gt"]
+           "wire_stage_gt", "wire_stage_compact", "wire_stage_gt_compact"]
 
 
 def _interpret() -> bool:
@@ -37,10 +39,10 @@ def _interpret() -> bool:
 @functools.partial(
     jax.jit,
     static_argnames=("scale_chunk", "error_feedback", "difference_coding",
-                     "topk", "interpret"),
+                     "topk", "stale_mix", "interpret"),
 )
 def _gossip_mix(x, recon, res, w_off, w_self, scale_chunk, error_feedback,
-                difference_coding, topk, interpret):
+                difference_coding, topk, stale_mix, interpret):
     return gossip_mix_pallas(
         x,
         recon,
@@ -51,6 +53,7 @@ def _gossip_mix(x, recon, res, w_off, w_self, scale_chunk, error_feedback,
         error_feedback=error_feedback,
         difference_coding=difference_coding,
         topk=topk,
+        stale_mix=stale_mix,
         interpret=interpret,
     )
 
@@ -65,6 +68,7 @@ def gossip_mix(
     error_feedback: bool = True,
     difference_coding: bool = True,
     topk: int | None = None,
+    stale_mix: bool = False,
 ) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray, jnp.ndarray]:
     """One fused quantize -> W-row mix -> dequant + EF gossip round on the
     flat node-stacked state.
@@ -106,21 +110,24 @@ def gossip_mix(
     delta against ``recon``; ``error_feedback=False`` passes ``res``
     through untouched; ``topk=k`` ships only the k largest-|payload|
     columns per scale chunk (EF absorbs the truncation -- sub-int8 wire
-    bytes, see ``packing.flat_wire_bytes``).
+    bytes, see ``packing.flat_wire_bytes``); ``stale_mix=True`` mixes
+    against the INPUT recon (the pipelined schedule's one-round-stale
+    neighbor information).
     """
     return _gossip_mix(
         x, recon, res, w_off, w_self, scale_chunk, error_feedback,
-        difference_coding, topk, _interpret(),
+        difference_coding, topk, stale_mix, _interpret(),
     )
 
 
 @functools.partial(
     jax.jit,
     static_argnames=("scale_chunk", "error_feedback", "difference_coding",
-                     "topk", "interpret"),
+                     "topk", "stale_mix", "interpret"),
 )
 def _fused_round(x, g, recon, res, w_off, w_self, alpha, scale_chunk,
-                 error_feedback, difference_coding, topk, interpret):
+                 error_feedback, difference_coding, topk, stale_mix,
+                 interpret):
     return fused_round_pallas(
         x,
         g,
@@ -133,6 +140,7 @@ def _fused_round(x, g, recon, res, w_off, w_self, alpha, scale_chunk,
         error_feedback=error_feedback,
         difference_coding=difference_coding,
         topk=topk,
+        stale_mix=stale_mix,
         interpret=interpret,
     )
 
@@ -149,6 +157,7 @@ def fused_round(
     error_feedback: bool = True,
     difference_coding: bool = True,
     topk: int | None = None,
+    stale_mix: bool = False,
 ) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray, jnp.ndarray]:
     """DSGD round megakernel: ``h = x - alpha * g`` fused ahead of
     :func:`gossip_mix` in ONE Pallas pass -- one kernel call is a whole
@@ -156,23 +165,23 @@ def fused_round(
 
     ``g`` is the flat gradient buffer (same (n, t) layout as x, packed by
     ``core.packing.pack_like``); ``alpha`` the scalar step size. Remaining
-    operands, outputs, EF and ``topk`` semantics exactly as
-    :func:`gossip_mix` applied to h.
+    operands, outputs, EF, ``topk`` and ``stale_mix`` semantics exactly
+    as :func:`gossip_mix` applied to h.
     """
     return _fused_round(
         x, g, recon, res, w_off, w_self, alpha, scale_chunk, error_feedback,
-        difference_coding, topk, _interpret(),
+        difference_coding, topk, stale_mix, _interpret(),
     )
 
 
 @functools.partial(
     jax.jit,
     static_argnames=("scale_chunk", "error_feedback", "difference_coding",
-                     "topk", "interpret"),
+                     "topk", "stale_mix", "interpret"),
 )
 def _fused_round_gt(x, t, g, g_prev, recon_x, res_x, recon_t, res_t, w_off,
                     w_self, alpha, scale_chunk, error_feedback,
-                    difference_coding, topk, interpret):
+                    difference_coding, topk, stale_mix, interpret):
     return fused_round_gt_pallas(
         x,
         t,
@@ -189,6 +198,7 @@ def _fused_round_gt(x, t, g, g_prev, recon_x, res_x, recon_t, res_t, w_off,
         error_feedback=error_feedback,
         difference_coding=difference_coding,
         topk=topk,
+        stale_mix=stale_mix,
         interpret=interpret,
     )
 
@@ -209,6 +219,7 @@ def fused_round_gt(
     error_feedback: bool = True,
     difference_coding: bool = True,
     topk: int | None = None,
+    stale_mix: bool = False,
 ) -> Tuple[jnp.ndarray, ...]:
     """DSGT round megakernel: tracker arithmetic ``t_half = t + g - g_prev``,
     parameter update ``h = x - alpha * t_half``, and the quantize-mix-EF
@@ -218,11 +229,13 @@ def fused_round_gt(
     states for the parameter and tracker wires (both travel int8). Returns
     ``(mixed_x, mixed_t, new_recon_x, new_res_x, new_recon_t, new_res_t,
     scales_x, scales_t)``; store ``g`` as the next round's ``g_prev``. See
-    ``ref.fused_round_gt_ref`` for the exact update equations.
+    ``ref.fused_round_gt_ref`` for the exact update equations;
+    ``stale_mix`` mixes both wires against their input recons.
     """
     return _fused_round_gt(
         x, t, g, g_prev, recon_x, res_x, recon_t, res_t, w_off, w_self, alpha,
-        scale_chunk, error_feedback, difference_coding, topk, _interpret(),
+        scale_chunk, error_feedback, difference_coding, topk, stale_mix,
+        _interpret(),
     )
 
 
@@ -297,6 +310,83 @@ def wire_stage_gt(
     Returns (h, t_half, q_x, scales_x, new_recon_x, new_res_x, q_t,
     scales_t, new_recon_t, new_res_t)."""
     return _wire_stage_gt(
+        x, t, g, g_prev, recon_x, res_x, recon_t, res_t, alpha, scale_chunk,
+        error_feedback, difference_coding, topk, _interpret(),
+    )
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("scale_chunk", "error_feedback", "difference_coding",
+                     "topk", "interpret"),
+)
+def _wire_stage_compact(x, g, recon, res, alpha, scale_chunk, error_feedback,
+                        difference_coding, topk, interpret):
+    return wire_stage_compact_pallas(
+        x, g, recon, res, alpha, scale_chunk=scale_chunk,
+        error_feedback=error_feedback, difference_coding=difference_coding,
+        topk=topk, interpret=interpret,
+    )
+
+
+def wire_stage_compact(
+    x: jnp.ndarray,
+    g: jnp.ndarray,
+    recon: jnp.ndarray,
+    res: jnp.ndarray,
+    alpha: jnp.ndarray,
+    scale_chunk: int = 512,
+    error_feedback: bool = True,
+    difference_coding: bool = True,
+    topk: int | None = None,
+) -> Tuple[jnp.ndarray, ...]:
+    """DSGD wire stage with the compact-gather epilogue (the truly sparse
+    top-k wire): local update + difference coding + EXACT-k selection +
+    int8 quantize + EF in ONE Pallas pass. Returns (h, q int8
+    (n, n_chunks*k), pos int16/int32, scales, new_recon, new_res); only
+    (q, pos, scales) cross the collective and
+    ``ref.scatter_compact_dq`` rebuilds the dense dq on the receiver."""
+    return _wire_stage_compact(
+        x, g, recon, res, alpha, scale_chunk, error_feedback,
+        difference_coding, topk, _interpret(),
+    )
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("scale_chunk", "error_feedback", "difference_coding",
+                     "topk", "interpret"),
+)
+def _wire_stage_gt_compact(x, t, g, g_prev, recon_x, res_x, recon_t, res_t,
+                           alpha, scale_chunk, error_feedback,
+                           difference_coding, topk, interpret):
+    return wire_stage_gt_compact_pallas(
+        x, t, g, g_prev, recon_x, res_x, recon_t, res_t, alpha,
+        scale_chunk=scale_chunk, error_feedback=error_feedback,
+        difference_coding=difference_coding, topk=topk, interpret=interpret,
+    )
+
+
+def wire_stage_gt_compact(
+    x: jnp.ndarray,
+    t: jnp.ndarray,
+    g: jnp.ndarray,
+    g_prev: jnp.ndarray,
+    recon_x: jnp.ndarray,
+    res_x: jnp.ndarray,
+    recon_t: jnp.ndarray,
+    res_t: jnp.ndarray,
+    alpha: jnp.ndarray,
+    scale_chunk: int = 512,
+    error_feedback: bool = True,
+    difference_coding: bool = True,
+    topk: int | None = None,
+) -> Tuple[jnp.ndarray, ...]:
+    """DSGT wire stage with the compact-gather epilogue on BOTH wires, in
+    ONE Pallas pass. Returns (h, t_half, q_x, pos_x, scales_x,
+    new_recon_x, new_res_x, q_t, pos_t, scales_t, new_recon_t,
+    new_res_t)."""
+    return _wire_stage_gt_compact(
         x, t, g, g_prev, recon_x, res_x, recon_t, res_t, alpha, scale_chunk,
         error_feedback, difference_coding, topk, _interpret(),
     )

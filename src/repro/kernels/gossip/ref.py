@@ -19,7 +19,10 @@ from __future__ import annotations
 
 from typing import Tuple
 
+import jax
 import jax.numpy as jnp
+
+from repro.core.packing import compact_pos_dtype
 
 __all__ = [
     "gossip_mix_ref",
@@ -27,6 +30,9 @@ __all__ = [
     "fused_round_gt_ref",
     "wire_stage_ref",
     "wire_stage_gt_ref",
+    "wire_stage_compact_ref",
+    "wire_stage_gt_compact_ref",
+    "scatter_compact_dq",
 ]
 
 
@@ -46,6 +52,62 @@ def _quantize_ef_chunks(payload, scale_chunk: int, topk):
     return q, scales, dq
 
 
+def _quantize_ef_compact_chunks(payload, scale_chunk: int, topk: int):
+    """Compact-gather quantize core: EXACT-k selection per (node, chunk)
+    via ``jax.lax.top_k`` on |payload| (ties broken toward the lower
+    index -- bit-identical to the kernel's per-tile epilogue), int8
+    quantization of the survivors, and the dense dq scattered back for
+    the sender-side recon/EF updates. Returns (q (n, C*k) fp32 ints,
+    pos (n, C*k) int32, scales (n, C), dq (n, t))."""
+    n, t = payload.shape
+    c = t // scale_chunk
+    p2 = payload.reshape(n * c, scale_chunk)
+    _, pos = jax.lax.top_k(jnp.abs(p2), topk)  # (n*c, k) int32
+    vals = jnp.take_along_axis(p2, pos, axis=-1)
+    scales = jnp.max(jnp.abs(vals), axis=-1, keepdims=True) / 127.0
+    safe = jnp.where(scales > 0, scales, 1.0)
+    q = jnp.clip(jnp.round(vals / safe), -127, 127)
+    rows = jax.lax.broadcasted_iota(jnp.int32, pos.shape, 0)
+    dq = jnp.zeros_like(p2).at[rows, pos].add(q * scales).reshape(n, t)
+    return (q.reshape(n, c * topk), pos.reshape(n, c * topk),
+            scales.reshape(n, c), dq)
+
+
+def scatter_compact_dq(
+    q: jnp.ndarray,
+    pos: jnp.ndarray,
+    scales: jnp.ndarray,
+    scale_chunk: int,
+    total: int,
+) -> jnp.ndarray:
+    """RECEIVE-side scatter-accumulate of the compact top-k wire: rebuild
+    the dense dequantized payload from exactly what crossed the
+    collective.
+
+    Args:
+      q: (rows, n_chunks * k) int8 values.
+      pos: (rows, n_chunks * k) int16/int32 in-chunk positions.
+      scales: (rows, n_chunks) fp32 per-chunk scales.
+      scale_chunk / total: the layout geometry.
+
+    Returns the (rows, total) fp32 dense dq -- exactly equal to the
+    masked-dense ``dq`` of :func:`_quantize_ef_compact_chunks` (lossless
+    round trip; property-tested in tests/test_schedule.py) -- which feeds
+    the running ``mix_recon`` accumulator."""
+    rows, ck = q.shape
+    if total % scale_chunk:
+        raise ValueError(f"total {total} not a multiple of scale_chunk {scale_chunk}")
+    c = total // scale_chunk
+    if ck % c:
+        raise ValueError(f"compact width {ck} not a multiple of n_chunks {c}")
+    k = ck // c
+    v3 = q.astype(jnp.float32).reshape(rows, c, k) * scales[:, :, None]
+    cols = pos.astype(jnp.int32).reshape(rows, c, k) + (
+        jnp.arange(c, dtype=jnp.int32) * scale_chunk)[None, :, None]
+    r = jax.lax.broadcasted_iota(jnp.int32, cols.shape, 0)
+    return jnp.zeros((rows, total), jnp.float32).at[r, cols].add(v3)
+
+
 def gossip_mix_ref(
     x: jnp.ndarray,
     recon: jnp.ndarray,
@@ -57,6 +119,7 @@ def gossip_mix_ref(
     error_feedback: bool = True,
     difference_coding: bool = True,
     topk: int | None = None,
+    stale_mix: bool = False,
 ) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray, jnp.ndarray]:
     """One compressed gossip round on flat buffers.
 
@@ -71,6 +134,10 @@ def gossip_mix_ref(
         go on the wire (ties at the threshold kept); with error feedback
         the truncated mass is absorbed by the residual, so top-k gossip
         still contracts to consensus (property-tested).
+      stale_mix: mix against the INPUT recon (the neighbor reconstruction
+        as of the END of the previous round) instead of ``new_recon`` --
+        the pipelined round schedule's one-round-stale dynamics. recon/EF
+        updates are unchanged.
 
     Returns:
       (mixed, new_recon, new_res, scales) with scales (n, t // scale_chunk).
@@ -85,7 +152,8 @@ def gossip_mix_ref(
 
     new_recon = base + dq
     new_res = payload - dq if error_feedback else res
-    mixed = w_off @ new_recon + w_self[:, None] * x
+    nbr = recon if stale_mix else new_recon
+    mixed = w_off @ nbr + w_self[:, None] * x
     return mixed, new_recon, new_res, scales
 
 
@@ -102,6 +170,7 @@ def fused_round_ref(
     error_feedback: bool = True,
     difference_coding: bool = True,
     topk: int | None = None,
+    stale_mix: bool = False,
 ) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray, jnp.ndarray]:
     """DSGD round oracle: the local update ``h = x - alpha * g`` followed
     by one compressed gossip round on h (adapt-then-combine ordering).
@@ -120,6 +189,7 @@ def fused_round_ref(
         error_feedback=error_feedback,
         difference_coding=difference_coding,
         topk=topk,
+        stale_mix=stale_mix,
     )
 
 
@@ -140,6 +210,7 @@ def fused_round_gt_ref(
     error_feedback: bool = True,
     difference_coding: bool = True,
     topk: int | None = None,
+    stale_mix: bool = False,
 ) -> Tuple[jnp.ndarray, ...]:
     """DSGT round oracle (adapt-then-combine gradient tracking):
 
@@ -167,6 +238,7 @@ def fused_round_gt_ref(
         error_feedback=error_feedback,
         difference_coding=difference_coding,
         topk=topk,
+        stale_mix=stale_mix,
     )
     mx, nrx, nsx, scx = gossip_mix_ref(
         h,
@@ -178,6 +250,7 @@ def fused_round_gt_ref(
         error_feedback=error_feedback,
         difference_coding=difference_coding,
         topk=topk,
+        stale_mix=stale_mix,
     )
     return mx, mt, nrx, nsx, nrt, nst, scx, sct
 
@@ -244,3 +317,75 @@ def wire_stage_gt_ref(
     )
     del ht  # == t_half (zero gradient)
     return h, t_half, qx, scx, nrx, nsx, qt, sct, nrt, nst
+
+
+def wire_stage_compact_ref(
+    x: jnp.ndarray,
+    g: jnp.ndarray,
+    recon: jnp.ndarray,
+    res: jnp.ndarray,
+    alpha: jnp.ndarray,
+    *,
+    scale_chunk: int,
+    error_feedback: bool = True,
+    difference_coding: bool = True,
+    topk: int | None = None,
+) -> Tuple[jnp.ndarray, ...]:
+    """DSGD compact wire-stage oracle: local update + difference coding +
+    EXACT-k selection + int8 quantize + EF. Returns (h, q int8
+    (n, n_chunks*k), pos int16/int32 (n, n_chunks*k), scales
+    (n, n_chunks), new_recon, new_res) -- only (q, pos, scales) cross the
+    wire; :func:`scatter_compact_dq` rebuilds the dense dq on the
+    receiver."""
+    n, t = x.shape
+    if t % scale_chunk:
+        raise ValueError(f"total {t} not a multiple of scale_chunk {scale_chunk}")
+    if topk is None or not (1 <= topk < scale_chunk):
+        raise ValueError(
+            f"the compact wire needs 1 <= topk < scale_chunk, got "
+            f"topk={topk}, scale_chunk={scale_chunk}"
+        )
+    h = x - alpha * g
+    base = recon if difference_coding else jnp.zeros_like(recon)
+    payload = h - base + (res if error_feedback else 0.0)
+    q, pos, scales, dq = _quantize_ef_compact_chunks(payload, scale_chunk, topk)
+    new_recon = base + dq
+    new_res = payload - dq if error_feedback else res
+    return (h, q.astype(jnp.int8), pos.astype(compact_pos_dtype(scale_chunk)),
+            scales, new_recon, new_res)
+
+
+def wire_stage_gt_compact_ref(
+    x: jnp.ndarray,
+    t: jnp.ndarray,
+    g: jnp.ndarray,
+    g_prev: jnp.ndarray,
+    recon_x: jnp.ndarray,
+    res_x: jnp.ndarray,
+    recon_t: jnp.ndarray,
+    res_t: jnp.ndarray,
+    alpha: jnp.ndarray,
+    *,
+    scale_chunk: int,
+    error_feedback: bool = True,
+    difference_coding: bool = True,
+    topk: int | None = None,
+) -> Tuple[jnp.ndarray, ...]:
+    """DSGT compact wire-stage oracle: tracker arithmetic + parameter
+    update + both wires' compact-gather quantize-EF. Returns (h, t_half,
+    q_x, pos_x, scales_x, new_recon_x, new_res_x, q_t, pos_t, scales_t,
+    new_recon_t, new_res_t)."""
+    t_half = t + g - g_prev
+    zeros = jnp.zeros_like(g)
+    ht, qt, pt, sct, nrt, nst = wire_stage_compact_ref(
+        t_half, zeros, recon_t, res_t, alpha, scale_chunk=scale_chunk,
+        error_feedback=error_feedback, difference_coding=difference_coding,
+        topk=topk,
+    )
+    h, qx, px, scx, nrx, nsx = wire_stage_compact_ref(
+        x, t_half, recon_x, res_x, alpha, scale_chunk=scale_chunk,
+        error_feedback=error_feedback, difference_coding=difference_coding,
+        topk=topk,
+    )
+    del ht  # == t_half (zero gradient)
+    return h, t_half, qx, px, scx, nrx, nsx, qt, pt, sct, nrt, nst

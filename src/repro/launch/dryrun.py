@@ -42,7 +42,7 @@ from repro.configs import (  # noqa: E402
     supports_shape,
     train_input_specs,
 )
-from repro.core.engine import engine_names, get_engine  # noqa: E402
+from repro.core.engine import engine_names, get_engine, schedule_names  # noqa: E402
 from repro.core.fl import FLConfig, FLState, make_fl_round  # noqa: E402
 from repro.core.schedules import inv_sqrt  # noqa: E402
 from repro.launch.hlo_analysis import analyze_hlo  # noqa: E402
@@ -66,7 +66,8 @@ def _stack_nodes_sds(tree, n_nodes: int):
 def build_train_lowering(arch: str, shape_name: str, mesh, q: int, algorithm: str = "dsgt",
                          wire_dtype=None, pod_gossip_every: int = 1, impl: str = "ref",
                          pad_heads: int = 0, fl_engine: str = "tree",
-                         scale_chunk: int = 512, topk=None):
+                         scale_chunk: int = 512, topk=None,
+                         fl_schedule: str = "sequential"):
     """Lower one FL round (Q local steps + gossip) for the given mesh.
 
     ``fl_engine`` names a registered GossipEngine (the registry in
@@ -89,7 +90,14 @@ def build_train_lowering(arch: str, shape_name: str, mesh, q: int, algorithm: st
                            property survives the mesh.
 
     ``topk`` masks the fused engines' payload to k columns per scale
-    chunk (sub-int8 wire).
+    chunk; on the sharded engine it also turns on the COMPACT wire (the
+    collective moves k int8 values + k positions + scales per chunk
+    instead of the masked-dense buffer). ``fl_schedule`` selects the
+    round's time layout through the RoundSchedule registry:
+    "sequential" (produce -> collective -> mix) or "pipelined" (the
+    collective for round r's payload is issued before round r+1's
+    local-step scan and the mix consumes one-round-stale neighbor
+    information; fused engines only).
     """
     import dataclasses as _dc
 
@@ -117,7 +125,7 @@ def build_train_lowering(arch: str, shape_name: str, mesh, q: int, algorithm: st
     engine = engine_cls.from_mesh(
         mesh, naxes, stacked_sds, specs=pspecs, wire_dtype=wire_dtype,
         axes_subset=("data",) if hier else None, scale_chunk=scale_chunk,
-        topk=topk,
+        topk=topk, round_schedule=fl_schedule,
     )
     round_fn = make_fl_round(
         bundle.loss_fn, None, inv_sqrt(0.02), fl_cfg, engine=engine
@@ -127,11 +135,18 @@ def build_train_lowering(arch: str, shape_name: str, mesh, q: int, algorithm: st
     if engine.layout is None:
         buf_sds, buf_specs = stacked_sds, pspecs
     else:
-        buf_sds = jax.ShapeDtypeStruct((nodes, engine.layout.total), jnp.float32)
+        buf_sds = jax.ShapeDtypeStruct(
+            (nodes, engine.layout.total),
+            jnp.dtype(engine.layout.storage_dtype),
+        )
         buf_specs = P(tuple(naxes), None)
-    keys = engine.comm_keys(fl_cfg)
-    comm_sds = {k: buf_sds for k in keys} or None
-    comm_specs = {k: buf_specs for k in keys} or None
+    # comm buffers from the engine's own contract (shapes/dtypes differ
+    # per schedule and wire: in-flight int8 payloads, positions, scales)
+    comm_sds = engine.comm_state_sds(fl_cfg)
+    comm_specs = (
+        None if comm_sds is None
+        else {k: P(tuple(naxes), None) for k in comm_sds}
+    )
     if algorithm == "dsgt":
         state_sds = FLState(int_sds, buf_sds, buf_sds, buf_sds, comm_sds)
         state_specs = FLState(P(), buf_specs, buf_specs, buf_specs, comm_specs)
@@ -253,6 +268,7 @@ def run_pair(
     pad_heads: int = 0,
     fl_engine: str = "tree",
     topk=None,
+    fl_schedule: str = "sequential",
 ) -> Dict[str, Any]:
     """Lower + compile one pair; return the dry-run record."""
     mesh = make_production_mesh(multi_pod=(mesh_kind == "multi"))
@@ -269,7 +285,7 @@ def run_pair(
         if shape.kind == "train":
             jitted, args, cfg = build_train_lowering(
                 arch, shape_name, mesh, q, algorithm, wd, pod_gossip_every, impl,
-                pad_heads, fl_engine, topk=topk,
+                pad_heads, fl_engine, topk=topk, fl_schedule=fl_schedule,
             )
             lowered = jitted.lower(*args)
         elif shape.kind == "prefill":
@@ -299,6 +315,7 @@ def run_pair(
         "algorithm": algorithm if shape.kind == "train" else None,
         "impl": impl,
         "fl_engine": fl_engine if shape.kind == "train" else None,
+        "fl_schedule": fl_schedule if shape.kind == "train" else None,
         "topk": topk if shape.kind == "train" else None,
         "wire_dtype": wire_dtype,
         "pod_gossip_every": pod_gossip_every,
@@ -346,7 +363,14 @@ def main() -> None:
                          "docs/ARCHITECTURE.md)")
     ap.add_argument("--topk", type=int, default=None,
                     help="fused engines: ship only the k largest payload "
-                         "columns per scale chunk (sub-int8 wire)")
+                         "columns per scale chunk (compact sparse wire on "
+                         "the sharded engine)")
+    ap.add_argument("--fl-schedule", default="sequential",
+                    choices=schedule_names(),
+                    help="round time layout, resolved through the "
+                         "RoundSchedule registry: pipelined overlaps the "
+                         "collective with the next round's local steps "
+                         "(fused engines only)")
     ap.add_argument("--pad-heads", type=int, default=0,
                     help="pad q heads to a multiple of this (16 = TP degree)")
     ap.add_argument("--out", default=None, help="directory for the JSON record")
@@ -356,7 +380,7 @@ def main() -> None:
         args.arch, args.shape, args.mesh, q=args.q, algorithm=args.algorithm,
         wire_dtype=args.wire_dtype, pod_gossip_every=args.pod_gossip_every,
         impl=args.impl, pad_heads=args.pad_heads, fl_engine=args.fl_engine,
-        topk=args.topk,
+        topk=args.topk, fl_schedule=args.fl_schedule,
     )
     print(json.dumps(rec, indent=2))
     if args.out:
@@ -368,6 +392,8 @@ def main() -> None:
             suffix += f"_{args.fl_engine}"
         if args.topk:
             suffix += f"_topk{args.topk}"
+        if args.fl_schedule != "sequential":
+            suffix += f"_{args.fl_schedule}"
         if args.pad_heads:
             suffix += f"_hpad{args.pad_heads}"
         if args.wire_dtype:

@@ -27,7 +27,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs import FLRunConfig, get_config
-from repro.core.engine import engine_names
+from repro.core.engine import engine_names, schedule_names
 from repro.data.tokens import make_fl_token_batches
 from repro.models import build_model
 from repro.training.checkpoint import save_fl_state
@@ -55,6 +55,15 @@ def main() -> None:
     ap.add_argument("--topk", type=int, default=None,
                     help="fused engines: k largest payload columns per "
                          "scale chunk on the wire")
+    ap.add_argument("--fl-schedule", default="sequential",
+                    choices=schedule_names(),
+                    help="round time layout (RoundSchedule registry): "
+                         "pipelined overlaps the collective with the next "
+                         "round's local steps, mixing one-round stale "
+                         "(fused engines only)")
+    ap.add_argument("--storage-dtype", default=None,
+                    help="flat engine: buffer storage dtype (e.g. "
+                         "bfloat16); fp32 stays in the mix accumulator")
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--checkpoint", default=None)
     ap.add_argument("--log-every", type=int, default=5)
@@ -94,6 +103,7 @@ def main() -> None:
         bundle.loss_fn, params, run, step_batches(), rounds=args.rounds,
         log_every=args.log_every, engine=args.fl_engine,
         scale_chunk=args.scale_chunk, topk=args.topk,
+        round_schedule=args.fl_schedule, storage_dtype=args.storage_dtype,
     )
     hist = result.history
     first, last = hist.rows()[0], hist.last()
@@ -102,6 +112,7 @@ def main() -> None:
             {
                 "arch": cfg.name,
                 "fl_engine": args.fl_engine,
+                "fl_schedule": args.fl_schedule,
                 "algorithm": args.algorithm,
                 "q": args.q,
                 "rounds": args.rounds,

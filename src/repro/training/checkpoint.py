@@ -31,7 +31,13 @@ from typing import Any, Optional
 import jax
 import numpy as np
 
-from repro.core.engine import GossipEngine, engine_names, get_engine
+from repro.core.engine import (
+    GossipEngine,
+    engine_names,
+    get_engine,
+    get_schedule,
+    schedule_names,
+)
 from repro.core.fl import FLState
 
 PyTree = Any
@@ -58,6 +64,12 @@ def save_fl_state(path: str, state: FLState, extra: Optional[dict] = None,
     }
     if engine is not None:
         manifest["engine"] = engine.name
+        # the schedule is part of the comm-state contract: a PIPELINED
+        # checkpoint carries the in-flight wire_* payload buffers, and a
+        # restore must rebuild mix_recon against them (engine.restore_comm)
+        schedule = getattr(engine, "round_schedule", None)
+        if schedule is not None:
+            manifest["round_schedule"] = schedule.name
     if state.comm is not None:
         manifest["comm_keys"] = sorted(state.comm)
     if extra:
@@ -86,6 +98,15 @@ def load_fl_state(path: str, template: FLState,
                 f"is not in the registry {engine_names()}"
             )
         get_engine(saved_engine)  # resolvable, not just named
+    saved_schedule = manifest.get("round_schedule")
+    if saved_schedule is not None:
+        if saved_schedule not in schedule_names():
+            raise ValueError(
+                f"checkpoint was written under round schedule "
+                f"{saved_schedule!r}, which is not in the registry "
+                f"{schedule_names()}"
+            )
+        get_schedule(saved_schedule)
     data = np.load(os.path.join(path, "state.npz"))
     saved_comm_keys = set(manifest.get("comm_keys") or ())
     if not saved_comm_keys:  # legacy manifest: derive from the npz contents

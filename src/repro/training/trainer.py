@@ -29,7 +29,53 @@ from repro.training.metrics import MetricHistory, comm_bytes_per_gossip
 
 PyTree = Any
 
-__all__ = ["TrainResult", "train_decentralized", "make_schedule", "stack_for_nodes"]
+__all__ = ["AdaptiveTopK", "TrainResult", "train_decentralized",
+           "make_schedule", "stack_for_nodes"]
+
+
+class AdaptiveTopK:
+    """Error-triggered wire densification: the ONE owner of the adaptive-k
+    round-to-round logic (used by ``train_decentralized`` and the EHR
+    example -- do not hand-roll the switch).
+
+    Spec ``(k_sparse, k_dense, threshold)``: rounds run the sparse wire
+    until the ``ef_residual_rms`` metric (the mass the wire is deferring)
+    crosses ``threshold``; then the NEXT round runs the densified twin
+    (``dense_topk`` collapses to None -- plain dense int8 -- when k_dense
+    covers the whole scale chunk) until the residual drains. Build BOTH
+    engines/round functions up front (identical comm-state contract, so
+    they advance the same state; k is a compile-time kernel constant, so
+    adapting is a function switch, never a recompile), then per round:
+
+        fn = ctl.pick(sparse_fn, dense_fn)
+        state, m = fn(state, batches)        # ctl.current_k ran this round
+        ctl.update(float(m["ef_residual_rms"]))
+    """
+
+    def __init__(self, spec, scale_chunk: int):
+        k_sparse, k_dense, threshold = spec
+        self.k_sparse = int(k_sparse)
+        self.k_dense = int(k_dense)
+        self.threshold = float(threshold)
+        #: topk= for the densified twin engine (None = dense int8)
+        self.dense_topk = None if self.k_dense >= scale_chunk else self.k_dense
+        self._use_dense = False
+        self.rounds = 0
+        self.dense_rounds = 0
+
+    @property
+    def current_k(self) -> int:
+        """The k THIS round ships (valid until :meth:`update` is called)."""
+        return self.k_dense if self._use_dense else self.k_sparse
+
+    def pick(self, sparse_fn, dense_fn):
+        return dense_fn if self._use_dense else sparse_fn
+
+    def update(self, ef_residual_rms: float) -> None:
+        """Account the round just run and arm the next one."""
+        self.rounds += 1
+        self.dense_rounds += int(self._use_dense)
+        self._use_dense = ef_residual_rms > self.threshold
 
 
 @dataclasses.dataclass
@@ -86,6 +132,9 @@ def train_decentralized(
     engine="tree",
     scale_chunk: Optional[int] = None,
     topk: Optional[int] = None,
+    round_schedule: Optional[str] = None,
+    storage_dtype=None,
+    topk_schedule: Optional[Tuple[int, int, float]] = None,
 ) -> TrainResult:
     """Train for ``rounds`` communication rounds.
 
@@ -99,7 +148,21 @@ def train_decentralized(
     :class:`GossipEngine`. Flat/fused engines pack the state; the tree
     view is restored at the eval/consensus boundary via
     ``engine.params_view``. ``scale_chunk`` / ``topk`` configure the
-    fused engines' int8 / top-k wire.
+    fused engines' int8 / top-k wire; ``round_schedule``
+    ("sequential" | "pipelined") selects the round's time layout
+    (pipelined overlaps the collective with the next round's local
+    steps, mixing one-round stale); ``storage_dtype`` keeps the flat
+    engine's packed buffer in bf16 (fp32 stays only in the mix
+    accumulator).
+
+    ``topk_schedule = (k_sparse, k_dense, residual_rms_threshold)`` is
+    the adaptive-k hook: rounds run with the sparse wire until the
+    EF-residual RMS (the ``ef_residual_rms`` metric) crosses the
+    threshold, then the NEXT round densifies to ``k_dense`` (>= the
+    scale chunk disables masking entirely) until the residual drains.
+    Both variants are built once and jitted once -- k is a compile-time
+    kernel constant, so adapting means switching between two round
+    functions over the SAME state, not recompiling.
     """
     w = mixing_matrix(run.topology, run.n_nodes)
     check_assumption1(w)
@@ -111,7 +174,9 @@ def train_decentralized(
     )
     if isinstance(engine, GossipEngine):
         knobs = {"wire_dtype": wire_dtype, "scale_chunk": scale_chunk,
-                 "topk": topk}
+                 "topk": topk, "round_schedule": round_schedule,
+                 "storage_dtype": storage_dtype,
+                 "topk_schedule": topk_schedule}
         set_knobs = sorted(k for k, v in knobs.items() if v is not None)
         if set_knobs:
             raise ValueError(
@@ -121,32 +186,50 @@ def train_decentralized(
             )
         params0 = stacked if engine.layout is None else engine_pack(engine, stacked)
     else:
-        engine, params0 = get_engine(engine).simulated(
-            w, stacked, wire_dtype=wire_dtype,
+        if topk_schedule is not None:
+            if topk is not None:
+                raise ValueError("pass either topk or topk_schedule, not both")
+            topk = int(topk_schedule[0])  # start on the sparse wire
+        build = get_engine(engine).simulated
+        kw = dict(
+            wire_dtype=wire_dtype,
             scale_chunk=512 if scale_chunk is None else scale_chunk,
-            topk=topk,
+            round_schedule=round_schedule, storage_dtype=storage_dtype,
         )
+        engine, params0 = build(w, stacked, topk=topk, **kw)
     schedule = make_schedule(run)
     round_fn = jax.jit(make_fl_round(loss_fn, None, schedule, cfg, engine=engine))
+    adaptive, dense_fn = None, None
+    if topk_schedule is not None:
+        adaptive = AdaptiveTopK(topk_schedule, engine.scale_chunk)
+        # the densified twin: same comm-state contract (comm_keys do not
+        # depend on k), so both round functions advance the SAME state
+        dense_engine, _ = build(w, stacked, topk=adaptive.dense_topk, **kw)
+        dense_fn = jax.jit(
+            make_fl_round(loss_fn, None, schedule, cfg, engine=dense_engine)
+        )
     state = init_fl_state(cfg, params0, engine=engine)
 
-    bytes_per_round = engine.wire_bytes(cfg)
-    if bytes_per_round is None:
-        bytes_per_round = comm_bytes_per_gossip(
+    fallback_bytes = engine.wire_bytes(cfg)
+    if fallback_bytes is None:
+        fallback_bytes = comm_bytes_per_gossip(
             params_single, run.topology, run.n_nodes,
             wire_dtype=str(np.dtype(wire_dtype)) if wire_dtype else None,
         )
     history = MetricHistory()
     t0 = time.time()
+    cum_bytes = 0.0
     for rnd in range(1, rounds + 1):
         qs = [next(step_batches) for _ in range(run.q)]
         batches = jax.tree_util.tree_map(lambda *xs: np.stack(xs), *qs)
-        state, m = round_fn(state, batches)
+        fn = adaptive.pick(round_fn, dense_fn) if adaptive else round_fn
+        state, m = fn(state, batches)
+        cum_bytes += float(m.get("wire_bytes", fallback_bytes))
         row = {
             "round": rnd,
             "iteration": int(state.step),
             "comm_rounds": rnd,
-            "comm_bytes": rnd * bytes_per_round,
+            "comm_bytes": cum_bytes,
             "loss": float(m["loss"]),
             "local_loss": float(m["local_loss"]),
             "grad_norm_sq": float(m["grad_norm_sq"]),
@@ -154,6 +237,10 @@ def train_decentralized(
             "alpha": float(m["alpha"]),
             "wall_s": time.time() - t0,
         }
+        if adaptive is not None:
+            row["topk"] = float(adaptive.current_k)
+            row["ef_residual_rms"] = float(m["ef_residual_rms"])
+            adaptive.update(float(m["ef_residual_rms"]))
         if eval_fn is not None and (rnd % eval_every == 0 or rnd == rounds):
             row.update({f"eval_{k}": v for k, v in eval_fn(_consensus(engine, state)).items()})
         history.append(**row)

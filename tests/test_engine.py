@@ -138,11 +138,15 @@ def test_topk_wire_bytes_below_int8():
     dense = flat_wire_bytes(layout, 3, 8)
     sparse = flat_wire_bytes(layout, 3, 8, topk=2)
     assert sparse < dense
-    # per chunk: 2 int8 + min(4, 1) position bytes + 4 B scale
+    # the REALIZED compact encoding: 2 int8 values + 2 int16 positions +
+    # 4 B scale per chunk (what wire_stage_compact's collective operands
+    # actually are -- asserted against the jaxpr in tests/test_schedule.py)
     n_chunks = layout.total // 8
-    assert sparse == 3 * n_chunks * (2 + 1 + 4)
+    assert sparse == 3 * n_chunks * (2 + 2 * 2 + 4)
     # degenerate k >= chunk falls back to dense accounting
     assert flat_wire_bytes(layout, 3, 8, topk=8) == dense
+    # the cap: a compact encoding that would exceed dense ships dense
+    assert flat_wire_bytes(layout, 1, 8, topk=7) == flat_wire_bytes(layout, 1, 8)
 
 
 def test_fused_engine_wire_bytes_metric_drops_with_topk():

@@ -1,0 +1,128 @@
+"""Bench-regression guard: diff a fresh gossip-bench JSON against the
+committed baseline and FAIL on real regressions.
+
+    python tools/bench_guard.py --baseline benchmarks/BENCH_gossip_smoke.json \
+        --fresh BENCH_gossip_smoke_fresh.json [--wire-tol 0.25] [--latency-tol 0.25]
+
+What is guarded, and why only that:
+
+* **Wire bytes** (every ``*wire_bytes*`` / ``*_bytes*`` field): these are
+  deterministic functions of the encoding (``packing.flat_wire_bytes`` ==
+  the collective operand sizes), so ANY growth beyond ``--wire-tol``
+  (default 25%) is a genuine wire regression, not noise.
+* **Latency ratios** (``speedup_*`` / ``*_reduction*`` fields):
+  absolute microseconds on a shared CI runner swing far more than any
+  real code change, but the bench times its variants INTERLEAVED, so the
+  RATIOS are noise-robust; a ratio dropping below
+  ``baseline * (1 - latency_tol)`` means the optimized path lost ground
+  against its own baseline on the same box. MODELED columns
+  (``overlap_model_*``) are differences of small timings -- they amplify
+  noise and are reported for reading, never gated (see
+  ``_is_ratio_field``). Absolute ``us_*`` columns are likewise ungated.
+
+Rows are matched by ``name`` and compared only when their shape knobs
+(n_nodes / total_params) agree -- a smoke-shape fresh run silently skips
+rows against a full-shape baseline rather than comparing apples to
+oranges (keep a smoke baseline committed for the smoke CI job).
+
+Exit code 1 on any regression; prints a table either way.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+SHAPE_KEYS = ("n_nodes", "total_params", "n_leaves", "scale_chunk", "topk",
+              "q", "degree")
+
+
+def _is_wire_field(key: str) -> bool:
+    return "bytes" in key and isinstance(key, str)
+
+
+def _is_ratio_field(key: str) -> bool:
+    # Directly MEASURED ratios only. Modeled columns (overlap_model_*)
+    # are differences of small timings -- noise-amplifying -- and are
+    # reported for reading, not gated.
+    return key.startswith("speedup_") or "_reduction" in key
+
+
+def compare(baseline: dict, fresh: dict, wire_tol: float,
+            latency_tol: float) -> list:
+    base_rows = {r["name"]: r for r in baseline["rows"]}
+    failures = []
+    checked = 0
+    for row in fresh["rows"]:
+        base = base_rows.get(row["name"])
+        if base is None:
+            print(f"  [new row]   {row['name']} (no baseline -- skipped)")
+            continue
+        mismatched = [k for k in SHAPE_KEYS
+                      if base.get(k) != row.get(k)]
+        if mismatched:
+            print(f"  [skip]      {row['name']}: shape knobs differ "
+                  f"({', '.join(mismatched)}) -- baseline is a different "
+                  "configuration")
+            continue
+        for key, fresh_v in row.items():
+            base_v = base.get(key)
+            if not isinstance(fresh_v, (int, float)) or \
+                    not isinstance(base_v, (int, float)):
+                continue
+            if key in SHAPE_KEYS:
+                continue
+            if _is_wire_field(key):
+                limit = base_v * (1.0 + wire_tol)
+                ok = fresh_v <= limit
+                kind = f"wire  (<= {limit:.0f})"
+            elif _is_ratio_field(key):
+                limit = base_v * (1.0 - latency_tol)
+                ok = fresh_v >= limit
+                kind = f"ratio (>= {limit:.2f})"
+            else:
+                continue  # absolute latencies: too noisy on shared runners
+            checked += 1
+            status = "ok " if ok else "REGRESSION"
+            print(f"  [{status}] {row['name']}.{key}: "
+                  f"baseline={base_v:.4g} fresh={fresh_v:.4g} {kind}")
+            if not ok:
+                failures.append((row["name"], key, base_v, fresh_v))
+    if checked == 0:
+        print("  WARNING: no comparable fields found -- baseline and fresh "
+              "runs share no matching rows/shapes")
+        failures.append(("<none>", "no_comparable_fields", 0, 0))
+    return failures
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--baseline", required=True)
+    ap.add_argument("--fresh", required=True)
+    ap.add_argument("--wire-tol", type=float, default=0.25,
+                    help="max tolerated wire-byte growth (fraction)")
+    ap.add_argument("--latency-tol", type=float, default=0.25,
+                    help="max tolerated drop of a speedup/reduction ratio "
+                         "(fraction); raise for tiny smoke shapes")
+    args = ap.parse_args()
+
+    with open(args.baseline) as f:
+        baseline = json.load(f)
+    with open(args.fresh) as f:
+        fresh = json.load(f)
+    print(f"bench guard: {args.fresh} vs baseline {args.baseline} "
+          f"(wire tol {args.wire_tol:.0%}, latency-ratio tol "
+          f"{args.latency_tol:.0%})")
+    failures = compare(baseline, fresh, args.wire_tol, args.latency_tol)
+    if failures:
+        print(f"\n{len(failures)} regression(s):")
+        for name, key, b, f_ in failures:
+            print(f"  {name}.{key}: {b:.4g} -> {f_:.4g}")
+        return 1
+    print("\nno regressions")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
