@@ -1,0 +1,170 @@
+"""Node-churn robustness experiment -> experiments/churn_ehr.json.
+
+Quantifies what TIME-VARYING topology costs in model quality on the
+paper's 20-hospital cohort: FD-DSGT with the fused engine under the
+``node_churn`` TopologyProgram (core.dynamics) at several node-downtime
+fractions -- every round, each hospital is offline with probability
+``p_down`` in persistent blocks of ``mean_downtime`` rounds, its mixing
+weight folded into its self-loop while it keeps taking local steps.
+The equal-iteration-budget comparison against the static graph is the
+headline: how much balanced accuracy does a churning referral network
+cost, and where does it fall off a cliff?
+
+Why moderate churn is cheap here: a down node only pauses its CONSENSUS
+progress, not its optimization -- with EF-compressed gossip the
+difference-coded wire re-injects the missed mass when the node returns,
+and the effective (expected) mixing matrix W_eff = E[W_r] still
+satisfies Assumption 1 with a spectral gap shrunk by roughly the uptime
+fraction squared (both endpoints must be up), so consensus equilibrates
+higher but does not diverge until the graph is offline most of the time.
+
+Also reports an ``edge_failure`` row at matched expected edge loss, to
+separate "whole nodes vanish" from "individual links flap" at the same
+average connectivity.
+
+Usage: PYTHONPATH=src python benchmarks/churn_ehr.py \
+           [--rounds 120] [--q 10] [--out experiments/churn_ehr.json]
+       PYTHONPATH=src python benchmarks/churn_ehr.py --smoke   # tiny CI run
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.ehr_mlp import class_weights
+from repro.core import (
+    FLConfig,
+    get_engine,
+    init_fl_state,
+    make_fl_round,
+    mixing_matrix,
+)
+from repro.core.schedules import inv_sqrt
+from repro.data.ehr import generate_ehr_cohort, make_node_batcher
+from repro.models.mlp import make_mlp_loss, mlp_balanced_accuracy, mlp_init
+from repro.training.trainer import stack_for_nodes
+
+#: downtime fractions swept (0.0 == the static graph baseline)
+DOWNTIME_FRACTIONS = (0.0, 0.1, 0.25, 0.5)
+MEAN_DOWNTIME = 5  # rounds per outage block
+
+
+def run_cell(program: str | None, rounds: int, q: int, seed: int = 0) -> dict:
+    """One program cell: FD-DSGT, fused engine, hospital graph."""
+    n = 20
+    data = generate_ehr_cohort(seed=seed)
+    w = mixing_matrix("hospital20", n)
+    batcher = make_node_batcher(data, m=20, seed=seed + 1)
+    params = stack_for_nodes(mlp_init(jax.random.key(seed)), n)
+    cfg = FLConfig(algorithm="dsgt", q=q, n_nodes=n)
+    engine, state0 = get_engine("fused").simulated(
+        w, params, scale_chunk=512, impl="pallas", topology_program=program,
+    )
+    loss_fn = make_mlp_loss(class_weights("balanced"))
+    round_fn = jax.jit(
+        make_fl_round(loss_fn, None, inv_sqrt(0.02), cfg, engine=engine)
+    )
+    state = init_fl_state(cfg, state0, engine=engine)
+    m, edge_fracs = {}, []
+    for _ in range(rounds):
+        qs = [next(batcher) for _ in range(q)]
+        batches = jax.tree_util.tree_map(lambda *xs: np.stack(xs), *qs)
+        state, m = round_fn(state, batches)
+        if "edge_fraction" in m:
+            edge_fracs.append(float(m["edge_fraction"]))
+    consensus = jax.tree_util.tree_map(
+        lambda p: jnp.mean(p, axis=0), engine.params_view(state.params)
+    )
+    xall = jnp.asarray(np.concatenate(data.features))
+    yall = jnp.asarray(np.concatenate(data.labels))
+    return {
+        "program": engine.topology_program.spec(),
+        "rounds": rounds,
+        "q": q,
+        "iterations": int(state.step),
+        "bal_acc": float(mlp_balanced_accuracy(consensus, xall, yall)),
+        "final_loss": float(m["loss"]),
+        "consensus_err": float(m["consensus_err"]),
+        "mean_edge_fraction": (
+            float(np.mean(edge_fracs)) if edge_fracs else 1.0
+        ),
+    }
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--rounds", type=int, default=120,
+                    help="comm rounds per cell (equal budget everywhere)")
+    ap.add_argument("--q", type=int, default=10)
+    ap.add_argument("--out", default="experiments/churn_ehr.json")
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny CI run: few rounds, numbers NOT "
+                         "representative -- exercises every cell and the "
+                         "JSON schema")
+    args = ap.parse_args()
+    rounds = 6 if args.smoke else args.rounds
+
+    cells = []
+    for p_down in DOWNTIME_FRACTIONS:
+        program = (
+            None if p_down == 0.0 else
+            f"node_churn:p_down={p_down},mean_downtime={MEAN_DOWNTIME},seed=0"
+        )
+        cell = run_cell(program, rounds, args.q)
+        cell["p_down"] = p_down
+        cells.append(cell)
+        print(f"p_down={p_down:4.2f} edges_up~{cell['mean_edge_fraction']:.2f} "
+              f"bal_acc={cell['bal_acc']:.3f} "
+              f"cons_err={cell['consensus_err']:.2e}")
+
+    # matched-average-connectivity link-flap comparison: a node-churn
+    # fraction p isolates an edge with prob 1-(1-p)^2; pick the middle
+    # sweep point's equivalent per-edge failure rate
+    p_mid = DOWNTIME_FRACTIONS[2]
+    p_edge = round(1.0 - (1.0 - p_mid) ** 2, 4)
+    flap = run_cell(f"edge_failure:p={p_edge},seed=0", rounds, args.q)
+    flap["p_down"] = None
+    flap["matched_to_p_down"] = p_mid
+    cells.append(flap)
+    print(f"edge_failure p={p_edge} (matched to p_down={p_mid}) "
+          f"bal_acc={flap['bal_acc']:.3f}")
+
+    static_acc = cells[0]["bal_acc"]
+    record = {
+        "experiment": "node_churn_ehr",
+        "cohort": "hospital20 (2103 AD / 7919 MCI, 42 features)",
+        "algorithm": "dsgt (fused engine, int8 wire, class-weighted loss)",
+        "alpha": "0.02/sqrt(r)",
+        "mean_downtime_rounds": MEAN_DOWNTIME,
+        "smoke": bool(args.smoke),
+        "note": "equal iteration budget per cell; node_churn masks ALL "
+                "of a down hospital's links for persistent blocks "
+                "(weight folded into its self-loop; it keeps local-"
+                "stepping), edge_failure flaps individual links i.i.d. "
+                "per round at the matched expected edge loss. The "
+                "program gates mixing inside ONE compiled round "
+                "function -- zero recompiles, zero extra collectives "
+                "(tests/test_dynamics.py).",
+        "cells": cells,
+        "summary": {
+            str(c["p_down"]): {
+                "bal_acc": c["bal_acc"],
+                "bal_acc_delta_vs_static": c["bal_acc"] - static_acc,
+            }
+            for c in cells if c["p_down"] is not None
+        },
+    }
+    os.makedirs(os.path.dirname(args.out), exist_ok=True)
+    with open(args.out, "w") as f:
+        json.dump(record, f, indent=2)
+    print(f"wrote {args.out}")
+
+
+if __name__ == "__main__":
+    main()

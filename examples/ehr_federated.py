@@ -45,6 +45,7 @@ from repro.core import (
     mixing_matrix,
 )
 from repro.configs.ehr_mlp import CLASS_WEIGHT, class_weights, topk_schedule
+from repro.core.dynamics import program_names
 from repro.core.engine import schedule_names
 from repro.core.schedules import inv_sqrt
 from repro.data.ehr import generate_ehr_cohort, make_node_batcher
@@ -60,7 +61,7 @@ from repro.training.trainer import AdaptiveTopK, stack_for_nodes
 def run_fused_engine(rounds: int, q: int, scale_chunk: int = 512, seed: int = 0,
                      fl_engine: str = "fused", topk=None,
                      class_weight=CLASS_WEIGHT, fl_schedule="sequential",
-                     topk_schedule=None):
+                     topk_schedule=None, topology_program=None):
     """FD-DSGT on a registry engine: one megakernel call per comm round
     on the default ``fused`` engine, with the class-weighted loss
     (``configs.ehr_mlp.class_weights``) unless ``class_weight=None`` --
@@ -68,9 +69,13 @@ def run_fused_engine(rounds: int, q: int, scale_chunk: int = 512, seed: int = 0,
 
     ``fl_schedule="pipelined"`` runs the overlapped round schedule
     (collective in flight across the Q local steps, one-round-stale
-    mixing); ``topk_schedule=(k_sparse, k_dense, threshold)`` runs the
+    mixing); ``topk_schedule=(k_sparse, k_dense, high[, low])`` runs the
     adaptive-k wire -- sparse k until the EF-residual RMS crosses the
-    threshold, then temporarily dense."""
+    high threshold, then dense until it drains below the low one (the
+    hysteresis band); ``topology_program`` (a registry spec like
+    "node_churn:p_down=0.2,mean_downtime=5") makes the hospital graph
+    TIME-VARYING -- per-round link/node outages with dropped weight
+    folded into the self-loops, inside the one compiled round."""
     if rounds < 1:
         raise ValueError("--fused-rounds must be >= 1")
     if topk_schedule is not None and topk is not None:
@@ -88,7 +93,7 @@ def run_fused_engine(rounds: int, q: int, scale_chunk: int = 512, seed: int = 0,
         topk = adaptive.k_sparse
     engine, state0 = get_engine(fl_engine).simulated(
         w, params, scale_chunk=scale_chunk, topk=topk, impl="pallas",
-        round_schedule=fl_schedule,
+        round_schedule=fl_schedule, topology_program=topology_program,
     )
     loss_fn = make_mlp_loss(class_weights(class_weight))
     round_fn = jax.jit(
@@ -102,6 +107,7 @@ def run_fused_engine(rounds: int, q: int, scale_chunk: int = 512, seed: int = 0,
         dense_engine, _ = get_engine(fl_engine).simulated(
             w, params, scale_chunk=scale_chunk, topk=adaptive.dense_topk,
             impl="pallas", round_schedule=fl_schedule,
+            topology_program=topology_program,
         )
         dense_fn = jax.jit(
             make_fl_round(loss_fn, None, inv_sqrt(0.02), cfg,
@@ -129,8 +135,10 @@ def run_fused_engine(rounds: int, q: int, scale_chunk: int = 512, seed: int = 0,
         "fp32" if engine_bytes is None else f"top-{topk}" if topk else "int8"
     )
 
+    graph_note = (f"hospital graph x {engine.topology_program.spec()}"
+                  if engine.dynamic_topology else "hospital graph")
     print(f"\n{fl_engine} engine (FD-DSGT, Q={q}, schedule={fl_schedule}, "
-          f"hospital graph, class_weight={class_weight}, {layout_note}):")
+          f"{graph_note}, class_weight={class_weight}, {layout_note}):")
     m = None
     for rnd in range(1, rounds + 1):
         qs = [next(batcher) for _ in range(q)]
@@ -142,10 +150,12 @@ def run_fused_engine(rounds: int, q: int, scale_chunk: int = 512, seed: int = 0,
             k_note = (f" k={adaptive.current_k} "
                       f"resid={float(m['ef_residual_rms']):.1e}"
                       if adaptive is not None else "")
+            churn_note = (f" edges_up={float(m['edge_fraction']):.0%}"
+                          if "edge_fraction" in m else "")
             print(f"  [round {rnd:4d}] loss={float(m['loss']):.4f} "
                   f"consensus_err={float(m['consensus_err']):.2e} "
                   f"comm_bytes/round={per_round:,.0f} ({wire_label} wire) "
-                  f"vs {fp32_bytes:,.0f} (fp32 wire){k_note}")
+                  f"vs {fp32_bytes:,.0f} (fp32 wire){k_note}{churn_note}")
         if adaptive is not None:
             adaptive.update(float(m["ef_residual_rms"]))
     if adaptive is not None:
@@ -198,10 +208,17 @@ def main() -> None:
                          "the collective with the next round's local steps "
                          "(one-round-stale mixing)")
     ap.add_argument("--topk-schedule", default=None,
-                    help="adaptive k as 'k_sparse:k_dense:threshold' or "
+                    help="adaptive k as 'k_sparse:k_dense:high[:low]' or "
                          "'config' for configs.ehr_mlp.TOPK_SCHEDULE -- "
-                         "densifies the wire while the EF-residual RMS "
-                         "exceeds the threshold")
+                         "densifies the wire when the EF-residual RMS "
+                         "exceeds the high threshold, re-sparsifies only "
+                         "below the low one (hysteresis)")
+    ap.add_argument("--fl-topology-program", default=None,
+                    help="per-round graph dynamics for part 2 "
+                         f"(TopologyProgram registry: "
+                         f"{', '.join(program_names())}); e.g. "
+                         "'node_churn:p_down=0.2,mean_downtime=5' makes "
+                         "the hospital graph time-varying")
     ap.add_argument("--class-weight", default=CLASS_WEIGHT,
                     help="part-2 loss weighting: 'balanced' (inverse "
                          "frequency, lifts balanced accuracy off the ~0.6 "
@@ -239,7 +256,8 @@ def main() -> None:
                              class_weight=None if args.class_weight == "none"
                              else args.class_weight,
                              fl_schedule=args.fl_schedule,
-                             topk_schedule=tks)
+                             topk_schedule=tks,
+                             topology_program=args.fl_topology_program)
 
     print("\nPaper claims validated:")
     print("  * FD variants converge with ~2 orders of magnitude fewer comm rounds")

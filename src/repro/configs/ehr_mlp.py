@@ -32,30 +32,40 @@ CONFIG = ModelConfig(
 CLASS_WEIGHT = "balanced"
 
 # Adaptive top-k wire (the error-triggered refresh of the ROADMAP):
-# (k_sparse, k_dense, ef_residual_rms_threshold). Rounds ship the sparse
-# k until the EF-residual RMS -- the mass the wire is deferring -- crosses
-# the threshold, then the next round densifies to k_dense until it
-# drains. k_dense >= scale_chunk means "temporarily dense int8". The
-# threshold is calibrated on the 20-hospital cohort: the first rounds
-# (recon cold, payload = full params) sit well above it, steady-state EF
-# residuals well below, so both wire widths are exercised in the e2e run.
+# (k_sparse, k_dense, densify_high[, resparsify_low]). Rounds ship the
+# sparse k until the EF-residual RMS -- the mass the wire is deferring --
+# crosses densify_high, then densify to k_dense until it drains BELOW
+# resparsify_low (default densify_high / 2). The two-threshold
+# hysteresis band keeps k from duty-cycling around a single line
+# (training.trainer.AdaptiveTopK). k_dense >= scale_chunk means
+# "temporarily dense int8". Calibrated on the 20-hospital cohort: the
+# first rounds (recon cold, payload = full params) sit well above the
+# high threshold, steady-state EF residuals well below the low one, so
+# both wire widths are exercised in the e2e run.
 TOPK_SCHEDULE = (64, 512, 3e-3)
 
 
 def topk_schedule(spec=TOPK_SCHEDULE):
-    """Validate an adaptive-k spec to (k_sparse, k_dense, threshold), or
-    pass None through (fixed-k wire). Feed the result to
+    """Validate an adaptive-k spec to (k_sparse, k_dense, high[, low]),
+    or pass None through (fixed-k wire). Feed the result to
     ``training.trainer.train_decentralized(topk_schedule=...)``."""
     if spec is None:
         return None
-    k_sparse, k_dense, thresh = spec
-    k_sparse, k_dense, thresh = int(k_sparse), int(k_dense), float(thresh)
-    if not (1 <= k_sparse <= k_dense) or thresh <= 0:
+    if len(spec) not in (3, 4):
         raise ValueError(
-            f"topk_schedule needs 1 <= k_sparse <= k_dense and a positive "
-            f"threshold, got {spec!r}"
+            f"topk_schedule needs (k_sparse, k_dense, high[, low]), got "
+            f"{spec!r}"
         )
-    return (k_sparse, k_dense, thresh)
+    k_sparse, k_dense = int(spec[0]), int(spec[1])
+    thresholds = tuple(float(v) for v in spec[2:])
+    low = thresholds[1] if len(thresholds) == 2 else thresholds[0] / 2.0
+    if (not (1 <= k_sparse <= k_dense) or thresholds[0] <= 0
+            or not (0 < low <= thresholds[0])):
+        raise ValueError(
+            f"topk_schedule needs 1 <= k_sparse <= k_dense and a "
+            f"positive densify_high >= resparsify_low > 0, got {spec!r}"
+        )
+    return (k_sparse, k_dense) + thresholds
 
 
 def class_weights(class_weight=CLASS_WEIGHT):

@@ -7,6 +7,10 @@ Public API:
     mixing    — gossip backends (dense-W simulated, ppermute mesh, all-gather)
     engine    — the GossipEngine protocol + registry (tree / flat / fused /
                 sharded_fused) behind make_fl_round(engine=...)
+    dynamics  — TopologyProgram registry: per-round time-varying graphs
+                (node churn, link failure) as the third pluggable round
+                axis (engine = WHAT moves, schedule = WHEN, program =
+                over WHICH graph)
     fl        — FLState + DSGD/DSGT/FD round builders + baselines
     schedules — alpha^r schedules (paper's 0.02/sqrt(r), Theorem 1 rate, ...)
 """
@@ -17,6 +21,20 @@ from repro.core.compression import (
     make_compressed_dense_gossip,
     make_compressed_flat_gossip,
     quantize_int8,
+)
+from repro.core.dynamics import (
+    EdgeFailureProgram,
+    NodeChurnProgram,
+    RGGRewireProgram,
+    RoundRobinSubgraphsProgram,
+    StaticProgram,
+    TopologyProgram,
+    get_program,
+    parse_program,
+    program_names,
+    register_program,
+    resolve_program,
+    validate_program,
 )
 from repro.core.engine import (
     FlatEngine,
@@ -104,6 +122,18 @@ __all__ = [
     "get_schedule",
     "schedule_names",
     "resolve_schedule",
+    "TopologyProgram",
+    "StaticProgram",
+    "EdgeFailureProgram",
+    "NodeChurnProgram",
+    "RoundRobinSubgraphsProgram",
+    "RGGRewireProgram",
+    "register_program",
+    "get_program",
+    "program_names",
+    "parse_program",
+    "resolve_program",
+    "validate_program",
     "compact_pos_dtype",
     "consensus_params",
     "init_fl_state",

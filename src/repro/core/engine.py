@@ -84,6 +84,11 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import Mesh, PartitionSpec as P
 
+from repro.core.dynamics import (
+    STATIC,
+    TopologyProgram,
+    resolve_program,
+)
 from repro.core.fl import (
     FLConfig,
     FLState,
@@ -104,6 +109,8 @@ from repro.core.mixing import (
 )
 from repro.core.packing import (
     FlatLayout,
+    bitmap_bytes_per_chunk,
+    compact_index_bytes,
     compact_pos_dtype,
     flat_wire_bytes,
     pack,
@@ -344,13 +351,57 @@ class GossipEngine(abc.ABC):
     #: was built pipelined -- the schedule is part of the comm-state
     #: contract, so it is fixed at construction)
     round_schedule: RoundSchedule = _SCHEDULES["sequential"]
+    #: the engine's :class:`~repro.core.dynamics.TopologyProgram` -- the
+    #: THIRD round axis (engine = WHAT moves, schedule = WHEN, program =
+    #: over WHICH graph). Fixed at construction like the schedule: a
+    #: dynamic program adds the ``topo_round`` / ``topo_key`` counters to
+    #: the comm-state contract and turns the mixing weights into traced
+    #: per-round operands of the ONE compiled round function.
+    topology_program: TopologyProgram = STATIC
+
+    # -- dynamic-topology contract -----------------------------------------
+
+    @property
+    def dynamic_topology(self) -> bool:
+        return not self.topology_program.is_static
+
+    def _topo_keys(self) -> Tuple[str, ...]:
+        """Comm keys a dynamic program contributes: the program counter
+        (round index the NEXT comm step will mix under) and the program's
+        base RNG key -- both checkpointed, so a mid-churn restore replays
+        the identical graph sequence."""
+        return ("topo_round", "topo_key") if self.dynamic_topology else ()
+
+    @staticmethod
+    def _topo_sds() -> Dict[str, jax.ShapeDtypeStruct]:
+        return {
+            "topo_round": jax.ShapeDtypeStruct((), jnp.int32),
+            "topo_key": jax.ShapeDtypeStruct((2,), jnp.uint32),
+        }
+
+    def _topo_init(self) -> Dict[str, jnp.ndarray]:
+        return {
+            "topo_round": jnp.int32(0),
+            "topo_key": jnp.asarray(self.topology_program.init_key()),
+        }
+
+    def mix_dynamic(self, buf: PyTree, w_off_r: jnp.ndarray,
+                    w_diag_r: jnp.ndarray) -> PyTree:
+        """Exact-wire mixing against a TRACED per-round W (engines that
+        support dynamic programs on the exact-wire path override this;
+        the fused engines take the per-round W as kernel operands
+        instead)."""
+        raise NotImplementedError(
+            f"the {self.name!r} engine does not support dynamic topology "
+            "programs on this build"
+        )
 
     # -- protocol ----------------------------------------------------------
 
     def comm_keys(self, cfg: FLConfig) -> Tuple[str, ...]:
         """Names of the engine's extra wire-state buffers in
         ``FLState.comm`` (shapes/dtypes per :meth:`comm_state_sds`)."""
-        return ()
+        return self._topo_keys()
 
     def comm_state_sds(
         self, cfg: FLConfig
@@ -360,25 +411,31 @@ class GossipEngine(abc.ABC):
         keys = self.comm_keys(cfg)
         if not keys:
             return None
-        if self.layout is None:
+        topo = self._topo_sds()
+        buf_keys = [k for k in keys if k not in topo]
+        if buf_keys and self.layout is None:
             raise NotImplementedError(
                 f"{type(self).__name__} declares comm buffers but no layout"
             )
-        sds = jax.ShapeDtypeStruct(
-            (cfg.n_nodes, self.layout.total), jnp.float32
+        sds = (
+            jax.ShapeDtypeStruct((cfg.n_nodes, self.layout.total), jnp.float32)
+            if self.layout is not None else None
         )
-        return {k: sds for k in keys}
+        return {k: topo[k] if k in topo else sds for k in keys}
 
     def init_comm_state(
         self, cfg: FLConfig, params: PyTree
     ) -> Optional[Dict[str, jnp.ndarray]]:
         """Zero-initialized wire state (zeros = the first round
         effectively transmits the full parameters, and a pipelined
-        engine's first in-flight payload dequantizes to nothing)."""
+        engine's first in-flight payload dequantizes to nothing); a
+        dynamic program's counter starts at round 0 with its base key."""
         sds = self.comm_state_sds(cfg)
         if sds is None:
             return None
-        return {k: jnp.zeros(s.shape, s.dtype) for k, s in sds.items()}
+        comm = {k: jnp.zeros(s.shape, s.dtype) for k, s in sds.items()}
+        comm.update({k: v for k, v in self._topo_init().items() if k in comm})
+        return comm
 
     def local_step(self, params: PyTree, grads: PyTree, alpha) -> PyTree:
         """Eq. 4 in the engine's state representation (works unchanged for
@@ -446,16 +503,41 @@ class GossipEngine(abc.ABC):
         (identity for engines whose comm buffers are all independent)."""
         return comm
 
+    def is_derived_comm_key(self, key: str) -> bool:
+        """True for comm buffers that are DERIVED from the independent
+        ones (:meth:`restore_comm` rebuilds them from recon): a
+        checkpoint's derived keys may safely be dropped when the restore
+        template's comm contract no longer carries them -- e.g. a STATIC
+        sharded checkpoint's ``mix_recon`` seeding a dynamic-topology run
+        whose contract replaced it with per-direction accumulators."""
+        return False
+
     def make_comm_step(self, eval_grads, schedule, cfg: FLConfig):
         """Default EXACT-WIRE comm step: ``self.mix`` applies W, then the
-        optimizer update (mix-then-adapt, the paper's Eqs. 2/3)."""
-        mix = self.mix
+        optimizer update (mix-then-adapt, the paper's Eqs. 2/3). Under a
+        dynamic :class:`~repro.core.dynamics.TopologyProgram` the round's
+        W is a TRACED operand -- derived from the ``topo_round`` /
+        ``topo_key`` counters in ``FLState.comm`` and applied through
+        :meth:`mix_dynamic` -- so ONE compiled round function serves
+        every round of the program."""
         wire = self.wire_bytes(cfg)
+        prog = self.topology_program
 
         def comm_step(state: FLState, batch: PyTree):
             step = state.step + 1
             alpha = schedule(step)
             losses, grads = eval_grads(state.params, batch)
+
+            edge_fraction = None
+            if prog.is_static:
+                mix, comm = self.mix, state.comm
+            else:
+                r, key = state.comm["topo_round"], state.comm["topo_key"]
+                w_off_r, w_diag_r = prog.round_weights(r, key)
+                mix = lambda buf: self.mix_dynamic(buf, w_off_r, w_diag_r)
+                edge_fraction = prog.edge_fraction(w_off_r)
+                comm = dict(state.comm)
+                comm["topo_round"] = r + 1
 
             # adapt at fp32, store back at the state dtype (bf16 flat
             # storage narrows only what is STORED, never the arithmetic)
@@ -466,7 +548,7 @@ class GossipEngine(abc.ABC):
 
             if cfg.algorithm == "dsgd":
                 params = _tm(adapt, mix(state.params), grads)
-                new_state = state._replace(step=step, params=params)
+                new_state = state._replace(step=step, params=params, comm=comm)
             else:
                 tracker = _tm(
                     lambda wt, gn, gp: wt + gn.astype(wt.dtype) - gp,
@@ -480,6 +562,7 @@ class GossipEngine(abc.ABC):
                     prev_grad=_tm(
                         lambda g, p: g.astype(p.dtype), grads, state.prev_grad
                     ),
+                    comm=comm,
                 )
 
             metrics = {
@@ -491,6 +574,8 @@ class GossipEngine(abc.ABC):
             }
             if wire is not None:
                 metrics["wire_bytes"] = jnp.float32(wire)
+            if edge_fraction is not None:
+                metrics["edge_fraction"] = edge_fraction
             return new_state, metrics
 
         return comm_step
@@ -561,21 +646,29 @@ class TreeEngine(GossipEngine):
     @classmethod
     def simulated(cls, w: np.ndarray, stacked_params: PyTree, *,
                   wire_dtype=None, topk=None, round_schedule=None,
-                  storage_dtype=None, **_ignored):
+                  storage_dtype=None, topology_program=None, **_ignored):
         """Single-host build: dense-W backend; state stays the input tree."""
         _reject_topk(topk, cls.name)
         _require_sequential(round_schedule, cls.name)
         _reject_storage_dtype(storage_dtype, cls.name)
+        _reject_dynamic_program(
+            topology_program, cls.name,
+            "engine bakes W into its tree-level gossip backend",
+        )
         return cls(make_dense_gossip(w, wire_dtype)), stacked_params
 
     @classmethod
     def from_mesh(cls, mesh: Mesh, node_axes: Sequence[str], stacked_sds,
                   *, specs=None, wire_dtype=None, axes_subset=None,
                   topk=None, round_schedule=None, storage_dtype=None,
-                  **_ignored):
+                  topology_program=None, **_ignored):
         _reject_topk(topk, cls.name)
         _require_sequential(round_schedule, cls.name)
         _reject_storage_dtype(storage_dtype, cls.name)
+        _reject_dynamic_program(
+            topology_program, cls.name,
+            "engine bakes W into its tree-level gossip backend",
+        )
         if specs is None:
             raise ValueError("tree engine from_mesh needs the param specs")
         return cls(
@@ -601,9 +694,17 @@ class FlatEngine(GossipEngine):
     name = "flat"
 
     def __init__(self, mix_fn: Callable[[jnp.ndarray], jnp.ndarray],
-                 layout: FlatLayout):
+                 layout: FlatLayout, *, topology_program=None,
+                 wire_dtype=None):
         self._mix = mix_fn
         self.layout = layout
+        self.topology_program = resolve_program(topology_program)
+        self._wire_dtype = wire_dtype
+        if self.dynamic_topology and not self.topology_program.bound:
+            raise ValueError(
+                "a dynamic FlatEngine needs the program bound to the base "
+                "W (use FlatEngine.simulated, which binds it)"
+            )
 
     @property
     def storage_dtype(self):
@@ -611,6 +712,18 @@ class FlatEngine(GossipEngine):
 
     def mix(self, flat: jnp.ndarray) -> jnp.ndarray:
         return self._mix(flat)
+
+    def mix_dynamic(self, flat: jnp.ndarray, w_off_r: jnp.ndarray,
+                    w_diag_r: jnp.ndarray) -> jnp.ndarray:
+        """Dense flat mixing against the TRACED per-round W: same
+        fp32-accumulate / wire-dtype semantics as ``make_dense_flat_mix``
+        with the traced ``(w_off_r, w_diag_r)`` in place of the baked
+        constants -- one matmul, no recompiles across rounds."""
+        from repro.core.mixing import _wire
+
+        xf = flat.astype(jnp.float32)
+        sent = _wire(xf, self._wire_dtype)
+        return (w_off_r @ sent + w_diag_r[:, None] * xf).astype(flat.dtype)
 
     def check_params(self, cfg: FLConfig, params: PyTree) -> None:
         _check_flat_params(cfg, params, self.name)
@@ -621,20 +734,27 @@ class FlatEngine(GossipEngine):
     @classmethod
     def simulated(cls, w: np.ndarray, stacked_params: PyTree, *,
                   scale_chunk: int = 1, wire_dtype=None, topk=None,
-                  round_schedule=None, storage_dtype=None, **_ignored):
+                  round_schedule=None, storage_dtype=None,
+                  topology_program=None, **_ignored):
         _reject_topk(topk, cls.name)
         _require_sequential(round_schedule, cls.name)
+        prog = resolve_program(topology_program).bind(w)
         flat, layout = pack(stacked_params, pad_to=scale_chunk,
                             buffer_dtype=storage_dtype or jnp.float32)
-        return cls(make_dense_flat_mix(w, wire_dtype), layout), flat
+        return cls(make_dense_flat_mix(w, wire_dtype), layout,
+                   topology_program=prog, wire_dtype=wire_dtype), flat
 
     @classmethod
     def from_mesh(cls, mesh: Mesh, node_axes: Sequence[str], stacked_sds,
                   *, wire_dtype=None, axes_subset=None, scale_chunk: int = 512,
                   topk=None, round_schedule=None, storage_dtype=None,
-                  **_ignored):
+                  topology_program=None, **_ignored):
         _reject_topk(topk, cls.name)
         _require_sequential(round_schedule, cls.name)
+        _reject_dynamic_program(
+            topology_program, cls.name,
+            "engine's mesh build mixes through a baked ppermute backend",
+        )
         layout = pack_layout(stacked_sds, pad_to=scale_chunk,
                              storage_dtype=storage_dtype or jnp.float32)
         return cls(
@@ -667,6 +787,20 @@ def _reject_topk(topk, name: str) -> None:
             f"{name!r} engine ships an exact wire -- use 'fused' or "
             "'sharded_fused'"
         )
+
+
+def _reject_dynamic_program(program, name: str, reason: str) -> TopologyProgram:
+    """Resolve a topology-program spec and refuse non-static programs on
+    builds that cannot trace per-round weights (returns the resolved
+    STATIC program otherwise, so callers can store it uniformly)."""
+    prog = resolve_program(program)
+    if not prog.is_static:
+        raise ValueError(
+            f"topology program {prog.spec()!r} needs traced per-round "
+            f"mixing weights; the {name!r} {reason} -- use the 'fused' "
+            "engine (any W) or 'sharded_fused' on the circulant wire"
+        )
+    return prog
 
 
 def _reject_storage_dtype(storage_dtype, name: str) -> None:
@@ -707,7 +841,7 @@ class _FusedBase(GossipEngine):
     def __init__(self, layout: FlatLayout, *, scale_chunk: int = 512,
                  topk: Optional[int] = None, error_feedback: bool = True,
                  difference_coding: bool = True, impl: str = "pallas",
-                 round_schedule=None):
+                 round_schedule=None, topology_program=None):
         if impl not in ("pallas", "jnp"):
             raise ValueError(f"unknown impl {impl!r}")
         if scale_chunk < 1:
@@ -728,10 +862,22 @@ class _FusedBase(GossipEngine):
         self.difference_coding = difference_coding
         self.impl = impl
         self.round_schedule = resolve_schedule(round_schedule)
+        self.topology_program = resolve_program(topology_program)
 
     @property
     def pipelined(self) -> bool:
         return self.round_schedule.name == "pipelined"
+
+    def _round_topology(self, comm: Dict[str, jnp.ndarray]):
+        """The dynamic round's traced mixing weights for the fused
+        kernels: ``(w_off_r (n, n), w_self_r (n,), new_comm,
+        edge_fraction)`` -- the per-round W is a kernel OPERAND, the
+        counter advance rides in the returned comm dict."""
+        prog = self.topology_program
+        r, key = comm["topo_round"], comm["topo_key"]
+        w_off_r, w_diag_r = prog.round_weights(r, key)
+        new_comm = {"topo_round": r + 1, "topo_key": key}
+        return w_off_r, w_diag_r, new_comm, prog.edge_fraction(w_off_r)
 
     def check_params(self, cfg: FLConfig, params: PyTree) -> None:
         _check_flat_params(cfg, params, self.name)
@@ -772,12 +918,15 @@ class FusedEngine(_FusedBase):
     def __init__(self, w: np.ndarray, layout: FlatLayout, **kw):
         super().__init__(layout, **kw)
         self.w = np.asarray(w, dtype=np.float64)
+        # binding validates per-round Assumption 1 over a sample of the
+        # program's emitted rounds (core.dynamics.validate_program)
+        self.topology_program.bind(self.w)
 
     def comm_keys(self, cfg: FLConfig) -> Tuple[str, ...]:
         keys = ("recon", "residual")
         if cfg.algorithm == "dsgt":
             keys += ("recon_t", "residual_t")
-        return keys
+        return keys + self._topo_keys()
 
     def wire_bytes(self, cfg: FLConfig) -> float:
         wires = 2 if cfg.algorithm == "dsgt" else 1
@@ -799,6 +948,7 @@ class FusedEngine(_FusedBase):
         # sharded pipelined round.
         kw = dict(self._kernel_kwargs(), stale_mix=self.pipelined)
         egress = self.wire_bytes(cfg)
+        dynamic = self.dynamic_topology
 
         def comm_step(state: FLState, batch: PyTree):
             if state.comm is None:
@@ -810,26 +960,37 @@ class FusedEngine(_FusedBase):
             losses, grads = eval_grads(state.params, batch)
             grads = grads.astype(jnp.float32)
 
+            # Dynamic topology: the kernels already take (w_off, w_self)
+            # as runtime operands, so the per-round W is simply the traced
+            # program output -- same kernel, same compilation, all rounds.
+            edge_fraction = None
+            if dynamic:
+                w_off_r, w_self_r, topo_comm, edge_fraction = (
+                    self._round_topology(state.comm)
+                )
+            else:
+                w_off_r, w_self_r, topo_comm = w_off, w_self, {}
+
             if cfg.algorithm == "dsgd":
                 mixed, recon, res, _ = fused_round(
                     state.params, grads, state.comm["recon"],
-                    state.comm["residual"], w_off, w_self, alpha, **kw,
+                    state.comm["residual"], w_off_r, w_self_r, alpha, **kw,
                 )
                 new_state = state._replace(
                     step=step, params=mixed,
-                    comm={"recon": recon, "residual": res},
+                    comm={"recon": recon, "residual": res, **topo_comm},
                 )
             else:
                 mx, mt, nrx, nsx, nrt, nst, _, _ = fused_round_gt(
                     state.params, state.tracker, grads, state.prev_grad,
                     state.comm["recon"], state.comm["residual"],
                     state.comm["recon_t"], state.comm["residual_t"],
-                    w_off, w_self, alpha, **kw,
+                    w_off_r, w_self_r, alpha, **kw,
                 )
                 new_state = FLState(
                     step=step, params=mx, tracker=mt, prev_grad=grads,
                     comm={"recon": nrx, "residual": nsx,
-                          "recon_t": nrt, "residual_t": nst},
+                          "recon_t": nrt, "residual_t": nst, **topo_comm},
                 )
 
             metrics = {
@@ -841,6 +1002,8 @@ class FusedEngine(_FusedBase):
                 "wire_bytes": jnp.float32(egress),
                 "ef_residual_rms": self._residual_rms(new_state.comm),
             }
+            if edge_fraction is not None:
+                metrics["edge_fraction"] = edge_fraction
             return new_state, metrics
 
         return comm_step
@@ -862,21 +1025,23 @@ class FusedEngine(_FusedBase):
                   scale_chunk: int = 512, topk=None, impl: str = "pallas",
                   error_feedback: bool = True, difference_coding: bool = True,
                   wire_dtype=None, round_schedule=None, storage_dtype=None,
-                  **_ignored):
+                  topology_program=None, **_ignored):
         _reject_wire_dtype(wire_dtype)
         _reject_storage_dtype(storage_dtype, cls.name)
         flat, layout = pack(stacked_params, pad_to=scale_chunk)
         return cls(w, layout, scale_chunk=scale_chunk, topk=topk, impl=impl,
                    error_feedback=error_feedback,
                    difference_coding=difference_coding,
-                   round_schedule=round_schedule), flat
+                   round_schedule=round_schedule,
+                   topology_program=topology_program), flat
 
     @classmethod
     def from_mesh(cls, mesh: Mesh, node_axes: Sequence[str], stacked_sds,
                   *, wire_dtype=None, axes_subset=None, scale_chunk: int = 512,
                   topk=None, impl: str = "jnp", error_feedback: bool = True,
                   difference_coding: bool = True, self_weight=None,
-                  round_schedule=None, storage_dtype=None, **_ignored):
+                  round_schedule=None, storage_dtype=None,
+                  topology_program=None, **_ignored):
         """Mesh build: W is the dense equivalent of the circulant torus the
         ppermute backend realizes over the node axes (directions restricted
         to ``axes_subset`` for hierarchical gossip). ``impl`` defaults to
@@ -891,7 +1056,8 @@ class FusedEngine(_FusedBase):
         return cls(w, layout, scale_chunk=scale_chunk, topk=topk, impl=impl,
                    error_feedback=error_feedback,
                    difference_coding=difference_coding,
-                   round_schedule=round_schedule)
+                   round_schedule=round_schedule,
+                   topology_program=topology_program)
 
 
 @register_engine
@@ -961,10 +1127,25 @@ class ShardedFusedEngine(_FusedBase):
                 raise ValueError(
                     f"compact encoding of topk={self.topk} costs more than "
                     f"the dense int8 chunk ({self.topk} values + "
-                    f"{self.topk} positions > {self.scale_chunk} columns); "
-                    "ship the dense wire (compact=False) or lower topk"
+                    f"{compact_index_bytes(self.scale_chunk, self.topk)} "
+                    f"index bytes > {self.scale_chunk} columns); ship the "
+                    "dense wire (compact=False) or lower topk"
                 )
         self.compact_wire = bool(compact)
+        # The index encoding that actually crosses the collective: the
+        # cheaper of explicit positions (k x int16/int32) and the
+        # presence bitmap (chunk/8 B, byte-aligned chunks) -- the SAME
+        # boundary packing.compact_index_bytes accounts, so flat_wire_bytes
+        # IS the operand bytes. Bitmap wins for k > chunk/16.
+        self.wire_encoding = "dense"
+        if self.compact_wire:
+            pos_b = self.topk * jnp.dtype(
+                compact_pos_dtype(self.scale_chunk)
+            ).itemsize
+            bb = bitmap_bytes_per_chunk(self.scale_chunk)
+            self.wire_encoding = (
+                "bitmap" if (bb is not None and bb < pos_b) else "positions"
+            )
         self.mesh = mesh
         self.node_axes = tuple(node_axes)
         self.n_nodes = int(np.prod([mesh.shape[a] for a in self.node_axes]))
@@ -984,27 +1165,88 @@ class ShardedFusedEngine(_FusedBase):
                 )
             self.w_dense = w
             self.w_self, self.dirs = None, None
+        if self.dynamic_topology:
+            # Dynamic programs gate the CIRCULANT wire: the ppermutes run
+            # every round unchanged (zero extra collectives) and a dropped
+            # link only zeroes its mixing contribution; the running
+            # neighbor term generalizes from ONE pre-weighted mix_recon to
+            # one UNWEIGHTED accumulator per torus direction (each tracks
+            # that neighbor's reconstruction exactly), weighted per round
+            # by the program's traced gate. The dense all-gather wire has
+            # no per-direction structure to gate -- use 'fused' there.
+            if self.dirs is None:
+                raise ValueError(
+                    f"topology program "
+                    f"{self.topology_program.spec()!r} on the sharded "
+                    "engine needs the circulant ppermute wire (w=None); "
+                    "for an arbitrary dense W under churn use the 'fused' "
+                    "engine"
+                )
+        self.topology_program.bind(self.dense_equivalent())
+        # per-direction sender index: node i receives from _dir_src[d][i]
+        # (row-major node order, identical to dense_equivalent)
+        self._dir_src: Tuple[np.ndarray, ...] = ()
+        if self.dirs is not None:
+            names = list(self.node_axes)
+            sizes = [self.mesh.shape[a] for a in names]
+            idx = np.arange(self.n_nodes).reshape(sizes)
+            self._dir_src = tuple(
+                np.roll(idx, shift, axis=names.index(axis_name)).reshape(-1)
+                for axis_name, shift, _ in self.dirs
+            )
 
     def _compact_is_economic(self) -> bool:
-        """True when the compact (values + positions + scale) chunk is no
-        larger than the dense int8 chunk -- the regime where the compact
-        wire is THE wire and ``flat_wire_bytes``'s dense cap never binds."""
-        pos = jnp.dtype(compact_pos_dtype(self.scale_chunk)).itemsize
-        return (self.topk is not None
-                and self.topk * (1 + pos) <= self.scale_chunk)
+        """True when the compact (values + cheapest index encoding +
+        scale) chunk is no larger than the dense int8 chunk -- the regime
+        where the compact wire is THE wire and ``flat_wire_bytes``'s
+        dense cap never binds. The index encoding is the cheaper of
+        explicit positions and the presence bitmap
+        (``packing.compact_index_bytes``)."""
+        if self.topk is None:
+            return False
+        idx = compact_index_bytes(self.scale_chunk, self.topk)
+        return self.topk + idx <= self.scale_chunk
 
     # -- comm-state contract ----------------------------------------------
 
     def _wire_key_names(self, suffix: str = "") -> Tuple[str, ...]:
         """Names of ONE wire's in-flight payload buffers (pipelined only):
-        the int8 values, the positions (compact wire), and the scales --
-        exactly what crosses the collective, double-buffered in
+        the int8 values, the index encoding (compact wire: explicit
+        positions or the presence bitmap, per ``wire_encoding``), and the
+        scales -- exactly what crosses the collective, double-buffered in
         ``FLState.comm`` for one round."""
-        names = (("wire_q", "wire_pos", "wire_scales") if self.compact_wire
-                 else ("wire_q", "wire_scales"))
+        if not self.compact_wire:
+            names = ("wire_q", "wire_scales")
+        elif self.wire_encoding == "bitmap":
+            names = ("wire_q", "wire_bits", "wire_scales")
+        else:
+            names = ("wire_q", "wire_pos", "wire_scales")
         return tuple(n + suffix for n in names)
 
+    def _nbr_key_names(self, suffix: str = "") -> Tuple[str, ...]:
+        """Dynamic-topology accumulators: one per torus direction, each
+        tracking THAT neighbor's reconstruction (sum of every dq that
+        crossed from it). Replaces the single pre-weighted ``mix_recon``
+        -- under a per-round W the weights cannot be folded into the
+        running sum, so the weighting moves to mix time (the traced
+        gate). Present only with difference coding (without it the mix
+        term is rebuilt from the current round's wire alone)."""
+        if not (self.dynamic_topology and self.difference_coding):
+            return ()
+        return tuple(
+            f"nbr_recon_{d}{suffix}" for d in range(len(self.dirs))
+        )
+
     def comm_keys(self, cfg: FLConfig) -> Tuple[str, ...]:
+        if self.dynamic_topology:
+            keys = ("recon", "residual") + self._nbr_key_names("")
+            if self.pipelined:
+                keys += self._wire_key_names("")
+            if cfg.algorithm == "dsgt":
+                keys += ("recon_t", "residual_t") + self._nbr_key_names("_t")
+                if self.pipelined:
+                    keys += self._wire_key_names("_t")
+            return keys + self._topo_keys()
         keys = ("recon", "residual", "mix_recon")
         if self.pipelined:
             keys += self._wire_key_names("")
@@ -1020,8 +1262,11 @@ class ShardedFusedEngine(_FusedBase):
         n, t = cfg.n_nodes, self.layout.total
         n_chunks = t // self.scale_chunk
         pos_dtype = compact_pos_dtype(self.scale_chunk)
+        topo = self._topo_sds()
 
         def buf(key):
+            if key in topo:
+                return topo[key]
             if key.startswith("wire_q"):
                 width = n_chunks * self.topk if self.compact_wire else t
                 return jax.ShapeDtypeStruct((n, width), jnp.int8)
@@ -1029,12 +1274,24 @@ class ShardedFusedEngine(_FusedBase):
                 return jax.ShapeDtypeStruct(
                     (n, n_chunks * self.topk), pos_dtype
                 )
+            if key.startswith("wire_bits"):
+                return jax.ShapeDtypeStruct(
+                    (n, n_chunks * (self.scale_chunk // 8)), jnp.uint8
+                )
             if key.startswith("wire_scales"):
                 return jax.ShapeDtypeStruct((n, n_chunks), jnp.float32)
             return jax.ShapeDtypeStruct((n, t), jnp.float32)
 
         keys = self.comm_keys(cfg)
         return {k: buf(k) for k in keys} or None
+
+    def is_derived_comm_key(self, key: str) -> bool:
+        """The neighbor-mix accumulators -- ``mix_recon[_t]`` (static) and
+        ``nbr_recon_{d}[_t]`` (dynamic) -- are all rebuilt from recon by
+        :meth:`restore_comm`, so either contract's checkpoint can seed
+        the other (modulo the topology-program equality check in
+        ``training.checkpoint``)."""
+        return key.startswith("mix_recon") or key.startswith("nbr_recon_")
 
     def dense_equivalent(self) -> np.ndarray:
         """The dense W this engine realizes (the ``FusedEngine`` oracle)."""
@@ -1070,6 +1327,13 @@ class ShardedFusedEngine(_FusedBase):
         per-shard rows inside shard_map, or the full (n, .) buffers at
         restore time)."""
         if self.compact_wire:
+            if self.wire_encoding == "bitmap":
+                from repro.kernels.gossip.ref import scatter_bitmap_dq
+
+                vals, bits, scales = wire
+                return scatter_bitmap_dq(
+                    vals, bits, scales, self.scale_chunk, self.layout.total
+                )
             from repro.kernels.gossip.ref import scatter_compact_dq
 
             q, pos, scales = wire
@@ -1104,6 +1368,23 @@ class ShardedFusedEngine(_FusedBase):
                     tuple(jnp.asarray(comm[k]) for k in names)
                 )
             return recon
+
+        if self.dynamic_topology:
+            # per-direction accumulators are DERIVED the same way
+            # mix_recon is: nbr_recon_d[i] tracks neighbor src_d(i)'s
+            # reconstruction at the same wire lag, i.e. a row permutation
+            # of the (restored) full recon matrix
+            def rebuild(suffix: str) -> None:
+                eff = effective_recon(
+                    "recon" + suffix, suffix
+                )
+                for d, name in enumerate(self._nbr_key_names(suffix)):
+                    comm[name] = eff[self._dir_src[d]]
+
+            rebuild("")
+            if "recon_t" in comm:
+                rebuild("_t")
+            return comm
 
         comm["mix_recon"] = w_off @ effective_recon("recon", "")
         if "recon_t" in comm:
@@ -1144,6 +1425,41 @@ class ShardedFusedEngine(_FusedBase):
         row = _allgather_row(self.mesh, self.node_axes, w_off_rows)  # (n,)
         return (row @ dq)[None]
 
+    # -- dynamic-topology machinery ----------------------------------------
+
+    def _recv_dqs(self, wire: Tuple[jnp.ndarray, ...]):
+        """Per-direction receive: the SAME ppermutes as :meth:`_wire_mix`
+        (one per wire buffer per direction -- churn adds zero
+        collectives), returning each direction's dense dequantized
+        payload UNWEIGHTED so the per-round gate can weight it at mix
+        time."""
+        out = []
+        for axis_name, shift, _weight in self.dirs:
+            size = self.mesh.shape[axis_name]
+            perm = [(i, (i + shift) % size) for i in range(size)]
+            recv = tuple(
+                jax.lax.ppermute(b, axis_name, perm) for b in wire
+            )
+            out.append(self._dq_full(recv))
+        return out
+
+    def _dir_gates(self, comm: Dict[str, jnp.ndarray]):
+        """The round's traced per-direction mixing weights, derived
+        OUTSIDE the shard_map (tiny (n, n) arithmetic): ``dgate (n, D)``
+        where ``dgate[i, d] = W_r[i, src_d(i)]`` (zero when the link is
+        down), ``ddiag (n, 1)`` the folded self weights, the advanced
+        topo comm entries, and the edge_fraction metric."""
+        prog = self.topology_program
+        r, key = comm["topo_round"], comm["topo_key"]
+        w_off_r, w_diag_r = prog.round_weights(r, key)
+        ar = jnp.arange(self.n_nodes)
+        dgate = jnp.stack(
+            [w_off_r[ar, jnp.asarray(src)] for src in self._dir_src], axis=1
+        ).astype(jnp.float32)
+        ddiag = w_diag_r.reshape(self.n_nodes, 1).astype(jnp.float32)
+        topo_comm = {"topo_round": r + 1, "topo_key": key}
+        return dgate, ddiag, topo_comm, prog.edge_fraction(w_off_r)
+
     def _make_produce(self):
         """The wire-stage kernels (compact or dense epilogue), normalized
         to return the wire payload as ONE tuple matching
@@ -1165,19 +1481,35 @@ class ShardedFusedEngine(_FusedBase):
         kw = self._kernel_kwargs()
 
         if self.compact_wire:
+            # The kernels emit explicit positions; the bitmap encoding is
+            # a cheap jnp re-encode INSIDE the shard_map body, before the
+            # collective -- so the pallas_call count is unchanged and the
+            # collective operands are the bitmap buffers.
+            if self.wire_encoding == "bitmap":
+                from repro.kernels.gossip.ref import compact_to_bitmap
+
+                def encode(q, pos, sc):
+                    vals, bits = compact_to_bitmap(
+                        q, pos, self.scale_chunk, self.topk
+                    )
+                    return vals, bits, sc
+            else:
+                def encode(q, pos, sc):
+                    return q, pos, sc
+
             def produce(x, g, recon, res, alpha):
                 h, q, pos, sc, nrecon, nres = wire_stage_compact(
                     x, g, recon, res, alpha, **kw
                 )
-                return h, (q, pos, sc), nrecon, nres
+                return h, encode(q, pos, sc), nrecon, nres
 
             def produce_gt(x, t, g, gp, rx, sx, rt, st, alpha):
                 (h, th, qx, px, scx, nrx, nsx,
                  qt, pt, sct, nrt, nst) = wire_stage_gt_compact(
                     x, t, g, gp, rx, sx, rt, st, alpha, **kw
                 )
-                return (h, th, (qx, px, scx), nrx, nsx,
-                        (qt, pt, sct), nrt, nst)
+                return (h, th, encode(qx, px, scx), nrx, nsx,
+                        encode(qt, pt, sct), nrt, nst)
         else:
             def produce(x, g, recon, res, alpha):
                 h, q, sc, nrecon, nres = wire_stage(
@@ -1227,7 +1559,182 @@ class ShardedFusedEngine(_FusedBase):
             "ef_residual_rms": self._residual_rms(new_state.comm),
         }
 
+    def _mix_dirs_dynamic(self, dqs, nbrs, dgate):
+        """Fold one wire's per-direction dq into the neighbor-recon
+        accumulators and weight by the round's gate: ``mix_i = sum_d
+        dgate[i, d] * nbr_recon_d'`` == the dense ``W_r_off @ recon'``
+        row exactly. Without difference coding the neighbor recon IS this
+        round's dq (nothing accumulates)."""
+        dc = self.difference_coding
+        mix, new_nbrs = None, []
+        for d in range(len(self.dirs)):
+            nb = (nbrs[d] + dqs[d]) if dc else dqs[d]
+            if dc:
+                new_nbrs.append(nb)
+            term = dgate[:, d:d + 1] * nb
+            mix = term if mix is None else mix + term
+        return mix, tuple(new_nbrs)
+
+    def _make_dynamic_round(self, eval_grads, schedule, cfg: FLConfig,
+                            pipelined: bool):
+        """ONE builder for both dynamic-topology round layouts -- the
+        sequential and pipelined rounds differ ONLY in where the
+        per-direction dqs come from (in-body ppermutes vs the ingested
+        in-flight wire) and in whether this round's wire rides out in
+        comm, so both are parameterized here instead of maintained as
+        near-duplicate bodies (the static schedules share
+        ``_assemble_round`` the same way). Wire stage and ppermute count
+        are identical to the static engine (churn adds zero collectives,
+        zero recompiles); the mix is weighted by the round's traced gate
+        against per-direction neighbor-recon accumulators. Returns
+        ``(ingest_or_None, comm_step(state, batch, stale))``."""
+        self._round_constants(cfg)  # shape validation only
+        produce, produce_gt = self._make_produce()
+        egress = self.wire_bytes(cfg)
+        spec = P(self.node_axes, None)
+        n_dirs = len(self.dirs)
+        nbr_keys = self._nbr_key_names("")
+        nbr_keys_t = self._nbr_key_names("_t")
+        nnbr = len(nbr_keys)
+        # pipelined extras: D ingested-dq operands per wire, and this
+        # round's wire buffers appended to the outputs / comm keys
+        wire_keys = self._wire_key_names("") if pipelined else ()
+        wire_keys_t = self._wire_key_names("_t") if pipelined else ()
+        n_adds = n_dirs if pipelined else 0
+        n_wire = len(wire_keys)
+
+        def mix_one(wire, nbrs, adds, dgate):
+            dqs = adds if pipelined else self._recv_dqs(wire)
+            return self._mix_dirs_dynamic(dqs, nbrs, dgate)
+
+        def body(x, g, recon, res, *rest):
+            nbrs = rest[:nnbr]
+            adds = rest[nnbr:nnbr + n_adds]
+            dgate, ddiag, alpha = rest[nnbr + n_adds:]
+            h, wire, nrecon, nres = produce(x, g, recon, res, alpha)
+            mix, new_nbrs = mix_one(wire, nbrs, adds, dgate)
+            out = (ddiag * h + mix, nrecon, nres) + new_nbrs
+            return out + (wire if pipelined else ())
+
+        def body_gt(x, t, g, gp, rx, sx, rt, st, *rest):
+            nbrs_x = rest[:nnbr]
+            nbrs_t = rest[nnbr:2 * nnbr]
+            adds_x = rest[2 * nnbr:2 * nnbr + n_adds]
+            adds_t = rest[2 * nnbr + n_adds:2 * nnbr + 2 * n_adds]
+            dgate, ddiag, alpha = rest[2 * nnbr + 2 * n_adds:]
+            (h, t_half, wire_x, nrx, nsx, wire_t, nrt, nst) = produce_gt(
+                x, t, g, gp, rx, sx, rt, st, alpha
+            )
+            mix_x, new_x = mix_one(wire_x, nbrs_x, adds_x, dgate)
+            mix_t, new_t = mix_one(wire_t, nbrs_t, adds_t, dgate)
+            out = ((ddiag * h + mix_x, ddiag * t_half + mix_t,
+                    nrx, nsx, nrt, nst) + new_x + new_t)
+            return out + ((wire_x + wire_t) if pipelined else ())
+
+        sm_dsgd = _shard_map(
+            body, mesh=self.mesh,
+            in_specs=(spec,) * (4 + nnbr + n_adds) + (spec, spec, P()),
+            out_specs=(spec,) * (3 + nnbr + n_wire),
+        )
+        sm_dsgt = _shard_map(
+            body_gt, mesh=self.mesh,
+            in_specs=(spec,) * (8 + 2 * nnbr + 2 * n_adds)
+            + (spec, spec, P()),
+            out_specs=(spec,) * (6 + 2 * nnbr + 2 * n_wire),
+        )
+
+        ingest = None
+        if pipelined:
+            def ingest_body(*wire):
+                return tuple(self._recv_dqs(tuple(wire)))
+
+            sm_ingest = _shard_map(
+                ingest_body, mesh=self.mesh,
+                in_specs=(spec,) * n_wire, out_specs=(spec,) * n_dirs,
+            )
+
+            def ingest(state: FLState):
+                if state.comm is None or wire_keys[0] not in state.comm:
+                    raise ValueError(
+                        "pipelined rounds need init_fl_state(..., "
+                        "engine=...) with the pipelined engine (in-flight "
+                        "wire buffers)"
+                    )
+                stale = {"dqs": sm_ingest(
+                    *[state.comm[k] for k in wire_keys]
+                )}
+                if cfg.algorithm == "dsgt":
+                    stale["dqs_t"] = sm_ingest(
+                        *[state.comm[k] for k in wire_keys_t]
+                    )
+                return stale
+
+        def comm_step(state: FLState, batch: PyTree, stale):
+            if state.comm is None:
+                raise ValueError(
+                    "fused rounds need init_fl_state(..., engine=...)"
+                )
+            step = state.step + 1
+            alpha = schedule(step)
+            losses, grads = eval_grads(state.params, batch)
+            grads = grads.astype(jnp.float32)
+            alpha32 = jnp.asarray(alpha, jnp.float32)
+            dgate, ddiag, topo_comm, edge_fraction = self._dir_gates(
+                state.comm
+            )
+            adds = tuple(stale["dqs"]) if pipelined else ()
+
+            if cfg.algorithm == "dsgd":
+                outs = sm_dsgd(
+                    state.params, grads, state.comm["recon"],
+                    state.comm["residual"],
+                    *[state.comm[k] for k in nbr_keys],
+                    *adds, dgate, ddiag, alpha32,
+                )
+                mixed, nrecon, nres = outs[:3]
+                comm = {"recon": nrecon, "residual": nres, **topo_comm}
+                # output order == key order by construction of the bodies
+                comm.update(zip(nbr_keys + wire_keys, outs[3:]))
+                new_state = state._replace(step=step, params=mixed, comm=comm)
+            else:
+                adds_t = tuple(stale["dqs_t"]) if pipelined else ()
+                outs = sm_dsgt(
+                    state.params, state.tracker, grads, state.prev_grad,
+                    state.comm["recon"], state.comm["residual"],
+                    state.comm["recon_t"], state.comm["residual_t"],
+                    *[state.comm[k] for k in nbr_keys],
+                    *[state.comm[k] for k in nbr_keys_t],
+                    *adds, *adds_t, dgate, ddiag, alpha32,
+                )
+                (mx, mt, nrx, nsx, nrt, nst) = outs[:6]
+                comm = {"recon": nrx, "residual": nsx,
+                        "recon_t": nrt, "residual_t": nst, **topo_comm}
+                comm.update(zip(
+                    nbr_keys + nbr_keys_t + wire_keys + wire_keys_t,
+                    outs[6:],
+                ))
+                new_state = FLState(
+                    step=step, params=mx, tracker=mt, prev_grad=grads,
+                    comm=comm,
+                )
+
+            metrics = self._metrics(
+                cfg, losses, grads, alpha, new_state, egress
+            )
+            metrics["edge_fraction"] = edge_fraction
+            return new_state, metrics
+
+        return ingest, comm_step
+
+    def _make_comm_step_dynamic(self, eval_grads, schedule, cfg: FLConfig):
+        _, comm_step = self._make_dynamic_round(
+            eval_grads, schedule, cfg, pipelined=False
+        )
+        return lambda state, batch: comm_step(state, batch, None)
+
     def make_comm_step(self, eval_grads, schedule, cfg: FLConfig):
+        if self.dynamic_topology:
+            return self._make_comm_step_dynamic(eval_grads, schedule, cfg)
         w_diag, w_off = self._round_constants(cfg)
         produce, produce_gt = self._make_produce()
         egress = self.wire_bytes(cfg)
@@ -1315,6 +1822,19 @@ class ShardedFusedEngine(_FusedBase):
 
         return comm_step
 
+    def _make_pipelined_round_dynamic(self, eval_grads, schedule,
+                                      cfg: FLConfig):
+        """Dynamic-topology pipelined round: ingest ppermutes the
+        IN-FLIGHT wire per direction (before the local-step scan, exactly
+        like the static path) but returns the per-direction dq
+        UNWEIGHTED; the comm step folds each into its neighbor-recon
+        accumulator and weights by THIS round's traced gate -- one-round-
+        stale neighbor state mixed over the current round's graph,
+        matching the fused engine's ``stale_mix`` with per-round W."""
+        return self._make_dynamic_round(
+            eval_grads, schedule, cfg, pipelined=True
+        )
+
     def make_pipelined_round(self, eval_grads, schedule, cfg: FLConfig):
         """The split round: ``ingest`` runs the collective on the
         IN-FLIGHT payload buffers (``wire_*`` in ``FLState.comm``) --
@@ -1328,6 +1848,10 @@ class ShardedFusedEngine(_FusedBase):
             raise ValueError(
                 "engine was built with round_schedule='sequential'; build "
                 "it with round_schedule='pipelined'"
+            )
+        if self.dynamic_topology:
+            return self._make_pipelined_round_dynamic(
+                eval_grads, schedule, cfg
             )
         w_diag, w_off = self._round_constants(cfg)
         produce, produce_gt = self._make_produce()
@@ -1451,7 +1975,7 @@ class ShardedFusedEngine(_FusedBase):
                   topk=None, impl: str = "pallas", w=None,
                   error_feedback: bool = True, difference_coding: bool = True,
                   self_weight=None, compact=None, round_schedule=None,
-                  storage_dtype=None, **_ignored):
+                  storage_dtype=None, topology_program=None, **_ignored):
         _reject_wire_dtype(wire_dtype)
         _reject_storage_dtype(storage_dtype, cls.name)
         layout = pack_layout(stacked_sds, pad_to=scale_chunk)
@@ -1459,4 +1983,5 @@ class ShardedFusedEngine(_FusedBase):
                    self_weight=self_weight, scale_chunk=scale_chunk,
                    topk=topk, impl=impl, error_feedback=error_feedback,
                    difference_coding=difference_coding, compact=compact,
-                   round_schedule=round_schedule)
+                   round_schedule=round_schedule,
+                   topology_program=topology_program)

@@ -101,7 +101,11 @@ class FLState(NamedTuple):
     wire state (``engine.comm_keys``): ``{"recon", "residual"}`` (n, total)
     fp32 buffers for the parameter wire, ``{"recon_t", "residual_t"}`` for
     DSGT's tracker wire, and the sharded engine's running neighbor-mix
-    accumulators ``{"mix_recon", "mix_recon_t"}``."""
+    accumulators ``{"mix_recon", "mix_recon_t"}`` (per-direction
+    ``nbr_recon_{d}`` twins under a dynamic topology program). A dynamic
+    :class:`~repro.core.dynamics.TopologyProgram` additionally carries its
+    round counter and base RNG key here (``topo_round``, ``topo_key``), so
+    checkpointed restores replay the identical graph sequence."""
 
     step: jnp.ndarray  # () int32, global iteration r (counts local steps too)
     params: PyTree  # each leaf (nodes, ...)

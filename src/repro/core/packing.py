@@ -40,6 +40,8 @@ __all__ = [
     "unpack",
     "flat_wire_bytes",
     "compact_pos_dtype",
+    "compact_index_bytes",
+    "bitmap_bytes_per_chunk",
 ]
 
 
@@ -208,6 +210,25 @@ def compact_pos_dtype(scale_chunk: int):
     return jnp.int16 if scale_chunk <= 2 ** 15 else jnp.int32
 
 
+def bitmap_bytes_per_chunk(scale_chunk: int) -> int | None:
+    """Bytes of one chunk's presence bitmap, or None when the bitmap
+    encoding is unavailable (chunk not byte-aligned). The SAME predicate
+    gates the engine's encoding choice and the accounting."""
+    return scale_chunk // 8 if scale_chunk % 8 == 0 else None
+
+
+def compact_index_bytes(scale_chunk: int, topk: int) -> int:
+    """Index bytes ONE chunk's compact top-k payload ships: the cheaper
+    of explicit positions (k x int16/int32, :func:`compact_pos_dtype`)
+    and the presence bitmap (chunk/8 B, byte-aligned chunks only). The
+    bitmap wins for k > chunk/16 (int16 positions) -- the boundary the
+    sharded engine's ``wire_encoding`` mirrors exactly, so the accounted
+    bytes ARE the collective operand bytes."""
+    explicit = topk * jnp.dtype(compact_pos_dtype(scale_chunk)).itemsize
+    bitmap = bitmap_bytes_per_chunk(scale_chunk)
+    return explicit if bitmap is None else min(explicit, bitmap)
+
+
 def flat_wire_bytes(
     layout: FlatLayout, degree: int, scale_chunk: int = 0,
     topk: int | None = None,
@@ -219,19 +240,19 @@ def flat_wire_bytes(
     (``scale_chunk=0``: one scale per node).
 
     Top-k sparsified (``topk=k``): the COMPACT encoding the wire-stage
-    kernels actually emit (``kernels.gossip.wire_stage_compact``) -- per
-    scale chunk, exactly k int8 values + k in-chunk positions
-    (:func:`compact_pos_dtype`: 2 B below 32k-wide chunks, 4 B above) +
-    the 4 B scale, capped at the dense chunk bytes (a sender whose
-    compact encoding would exceed dense just ships dense). This is no
-    longer a model: the collective's operand shapes ARE these buffers
-    (asserted in tests/test_schedule.py). A presence-bitmap encoding
-    (ceil(chunk/8) B) would beat explicit positions for k > chunk/16;
-    it is not implemented, so it is not accounted.
+    kernels actually emit (``kernels.gossip.wire_stage_compact`` + the
+    engine's encoding epilogue) -- per scale chunk, exactly k int8 values
+    + the CHEAPER index encoding (:func:`compact_index_bytes`: explicit
+    int16/int32 positions vs the chunk/8-byte presence bitmap, picked
+    per (k, chunk)) + the 4 B scale, capped at the dense chunk bytes (a
+    sender whose compact encoding would exceed dense just ships dense).
+    This is not a model: the collective's operand shapes ARE these
+    buffers (asserted against the jaxpr in tests/test_schedule.py and
+    tests/test_dynamics.py).
     """
     n_scales = 1 if scale_chunk <= 0 else -(-layout.total // scale_chunk)
     if topk is None or scale_chunk <= 0 or topk >= scale_chunk:
         return degree * (layout.total + 4 * n_scales)
-    index_bytes = topk * jnp.dtype(compact_pos_dtype(scale_chunk)).itemsize
+    index_bytes = compact_index_bytes(scale_chunk, topk)
     per_chunk = min(topk + index_bytes + 4, scale_chunk + 4)
     return degree * (n_scales * per_chunk)

@@ -33,6 +33,8 @@ __all__ = [
     "wire_stage_compact_ref",
     "wire_stage_gt_compact_ref",
     "scatter_compact_dq",
+    "compact_to_bitmap",
+    "scatter_bitmap_dq",
 ]
 
 
@@ -106,6 +108,94 @@ def scatter_compact_dq(
         jnp.arange(c, dtype=jnp.int32) * scale_chunk)[None, :, None]
     r = jax.lax.broadcasted_iota(jnp.int32, cols.shape, 0)
     return jnp.zeros((rows, total), jnp.float32).at[r, cols].add(v3)
+
+
+def compact_to_bitmap(
+    q: jnp.ndarray,
+    pos: jnp.ndarray,
+    scale_chunk: int,
+    topk: int,
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Re-encode one compact top-k payload with a PRESENCE BITMAP index:
+    explicit in-chunk positions cost ``k x 2`` bytes (int16), the bitmap
+    a flat ``chunk/8`` bytes -- cheaper whenever ``k > chunk/16``
+    (``packing.compact_index_bytes`` picks the same boundary, so the
+    accounting is the bytes that actually cross).
+
+    Args:
+      q: (rows, n_chunks * k) int8 values in |value|-descending top_k
+        order (what the compact wire-stage kernels emit).
+      pos: (rows, n_chunks * k) int16/int32 in-chunk positions.
+      scale_chunk / topk: the encoding geometry (chunk must be a
+        multiple of 8 -- byte-aligned bitmaps only).
+
+    Returns ``(vals, bits)``: the SAME k values per chunk re-sorted into
+    ascending-position order (rows, n_chunks * k) int8 -- the order the
+    bitmap decode implies -- and the packed LSB-first presence bitmap
+    (rows, n_chunks * chunk // 8) uint8. Lossless:
+    :func:`scatter_bitmap_dq` rebuilds exactly
+    :func:`scatter_compact_dq`'s dense payload (property-tested)."""
+    if scale_chunk % 8:
+        raise ValueError(
+            f"bitmap wire needs a byte-aligned chunk, got {scale_chunk}"
+        )
+    rows, ck = q.shape
+    if ck % topk:
+        raise ValueError(f"compact width {ck} not a multiple of k={topk}")
+    c = ck // topk
+    p3 = pos.astype(jnp.int32).reshape(rows, c, topk)
+    v3 = q.reshape(rows, c, topk)
+    order = jnp.argsort(p3, axis=-1)
+    vals = jnp.take_along_axis(v3, order, axis=-1)
+    # uint8 throughout: this runs on the per-round wire path inside the
+    # shard_map body, and the positions of a byte's 8 bits are disjoint,
+    # so the weighted sum never exceeds 255 -- a wider one-hot would move
+    # 4x the dense payload's bytes just to pack k bits per chunk
+    one_hot = jnp.zeros((rows, c, scale_chunk), jnp.uint8)
+    r_i = jax.lax.broadcasted_iota(jnp.int32, p3.shape, 0)
+    c_i = jax.lax.broadcasted_iota(jnp.int32, p3.shape, 1)
+    one_hot = one_hot.at[r_i, c_i, p3].set(1)
+    weights = (jnp.uint8(1) << jnp.arange(8, dtype=jnp.uint8))
+    bits = jnp.sum(
+        one_hot.reshape(rows, c, scale_chunk // 8, 8) * weights,
+        axis=-1, dtype=jnp.uint8,
+    )
+    return vals.reshape(rows, ck), bits.reshape(rows, c * (scale_chunk // 8))
+
+
+def scatter_bitmap_dq(
+    vals: jnp.ndarray,
+    bits: jnp.ndarray,
+    scales: jnp.ndarray,
+    scale_chunk: int,
+    total: int,
+) -> jnp.ndarray:
+    """RECEIVE-side decode of the bitmap compact wire: rebuild the dense
+    dequantized payload from (k ascending-position int8 values, packed
+    presence bitmap, fp32 scales) -- the bitmap twin of
+    :func:`scatter_compact_dq`, and exactly equal to it.
+
+    Decode: unpack the LSB-first bits, prefix-sum them along the chunk to
+    map each present column to its slot in the ascending-position value
+    list, and gather."""
+    rows, ck = vals.shape
+    if total % scale_chunk or scale_chunk % 8:
+        raise ValueError(
+            f"bad geometry: total={total}, scale_chunk={scale_chunk}"
+        )
+    c = total // scale_chunk
+    if ck % c:
+        raise ValueError(f"compact width {ck} not a multiple of n_chunks {c}")
+    k = ck // c
+    b3 = bits.reshape(rows, c, scale_chunk // 8)
+    shifts = jnp.arange(8, dtype=jnp.uint32)
+    present = (
+        (b3[..., None].astype(jnp.uint32) >> shifts) & jnp.uint32(1)
+    ).reshape(rows, c, scale_chunk).astype(jnp.int32)
+    slot = jnp.cumsum(present, axis=-1) - 1  # index into the value list
+    v3 = vals.astype(jnp.float32).reshape(rows, c, k) * scales[:, :, None]
+    gathered = jnp.take_along_axis(v3, jnp.clip(slot, 0, k - 1), axis=-1)
+    return jnp.where(present > 0, gathered, 0.0).reshape(rows, total)
 
 
 def gossip_mix_ref(

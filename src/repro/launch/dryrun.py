@@ -42,6 +42,7 @@ from repro.configs import (  # noqa: E402
     supports_shape,
     train_input_specs,
 )
+from repro.core.dynamics import program_names  # noqa: E402
 from repro.core.engine import engine_names, get_engine, schedule_names  # noqa: E402
 from repro.core.fl import FLConfig, FLState, make_fl_round  # noqa: E402
 from repro.core.schedules import inv_sqrt  # noqa: E402
@@ -67,7 +68,8 @@ def build_train_lowering(arch: str, shape_name: str, mesh, q: int, algorithm: st
                          wire_dtype=None, pod_gossip_every: int = 1, impl: str = "ref",
                          pad_heads: int = 0, fl_engine: str = "tree",
                          scale_chunk: int = 512, topk=None,
-                         fl_schedule: str = "sequential"):
+                         fl_schedule: str = "sequential",
+                         fl_topology_program: Optional[str] = None):
     """Lower one FL round (Q local steps + gossip) for the given mesh.
 
     ``fl_engine`` names a registered GossipEngine (the registry in
@@ -97,7 +99,12 @@ def build_train_lowering(arch: str, shape_name: str, mesh, q: int, algorithm: st
     "sequential" (produce -> collective -> mix) or "pipelined" (the
     collective for round r's payload is issued before round r+1's
     local-step scan and the mix consumes one-round-stale neighbor
-    information; fused engines only).
+    information; fused engines only). ``fl_topology_program`` selects the
+    per-round graph dynamics through the TopologyProgram registry
+    (``repro.core.dynamics``; e.g. "node_churn:p_down=0.2"): the round's
+    mixing weights become traced operands of the one compiled round --
+    churn adds zero recompiles and zero collectives (fused engines; the
+    sharded engine gates its circulant ppermute wire).
     """
     import dataclasses as _dc
 
@@ -126,6 +133,7 @@ def build_train_lowering(arch: str, shape_name: str, mesh, q: int, algorithm: st
         mesh, naxes, stacked_sds, specs=pspecs, wire_dtype=wire_dtype,
         axes_subset=("data",) if hier else None, scale_chunk=scale_chunk,
         topk=topk, round_schedule=fl_schedule,
+        topology_program=fl_topology_program,
     )
     round_fn = make_fl_round(
         bundle.loss_fn, None, inv_sqrt(0.02), fl_cfg, engine=engine
@@ -141,11 +149,16 @@ def build_train_lowering(arch: str, shape_name: str, mesh, q: int, algorithm: st
         )
         buf_specs = P(tuple(naxes), None)
     # comm buffers from the engine's own contract (shapes/dtypes differ
-    # per schedule and wire: in-flight int8 payloads, positions, scales)
+    # per schedule and wire: in-flight int8 payloads, positions, scales).
+    # Node-stacked (rank >= 2) buffers shard over the node axes; the
+    # topology program's scalar counters (topo_round, topo_key) replicate.
     comm_sds = engine.comm_state_sds(fl_cfg)
     comm_specs = (
         None if comm_sds is None
-        else {k: P(tuple(naxes), None) for k in comm_sds}
+        else {
+            k: P(tuple(naxes), None) if len(s.shape) >= 2 else P()
+            for k, s in comm_sds.items()
+        }
     )
     if algorithm == "dsgt":
         state_sds = FLState(int_sds, buf_sds, buf_sds, buf_sds, comm_sds)
@@ -269,6 +282,7 @@ def run_pair(
     fl_engine: str = "tree",
     topk=None,
     fl_schedule: str = "sequential",
+    fl_topology_program: Optional[str] = None,
 ) -> Dict[str, Any]:
     """Lower + compile one pair; return the dry-run record."""
     mesh = make_production_mesh(multi_pod=(mesh_kind == "multi"))
@@ -286,6 +300,7 @@ def run_pair(
             jitted, args, cfg = build_train_lowering(
                 arch, shape_name, mesh, q, algorithm, wd, pod_gossip_every, impl,
                 pad_heads, fl_engine, topk=topk, fl_schedule=fl_schedule,
+                fl_topology_program=fl_topology_program,
             )
             lowered = jitted.lower(*args)
         elif shape.kind == "prefill":
@@ -316,6 +331,9 @@ def run_pair(
         "impl": impl,
         "fl_engine": fl_engine if shape.kind == "train" else None,
         "fl_schedule": fl_schedule if shape.kind == "train" else None,
+        "fl_topology_program": (
+            fl_topology_program if shape.kind == "train" else None
+        ),
         "topk": topk if shape.kind == "train" else None,
         "wire_dtype": wire_dtype,
         "pod_gossip_every": pod_gossip_every,
@@ -371,6 +389,14 @@ def main() -> None:
                          "RoundSchedule registry: pipelined overlaps the "
                          "collective with the next round's local steps "
                          "(fused engines only)")
+    ap.add_argument("--fl-topology-program", default=None,
+                    help="per-round graph dynamics, resolved through the "
+                         "TopologyProgram registry "
+                         f"({', '.join(program_names())}); spec syntax "
+                         "name:k=v,... e.g. "
+                         "'node_churn:p_down=0.2,mean_downtime=5' -- "
+                         "fused engines take any W, the sharded engine "
+                         "gates its circulant ppermute wire")
     ap.add_argument("--pad-heads", type=int, default=0,
                     help="pad q heads to a multiple of this (16 = TP degree)")
     ap.add_argument("--out", default=None, help="directory for the JSON record")
@@ -381,6 +407,7 @@ def main() -> None:
         wire_dtype=args.wire_dtype, pod_gossip_every=args.pod_gossip_every,
         impl=args.impl, pad_heads=args.pad_heads, fl_engine=args.fl_engine,
         topk=args.topk, fl_schedule=args.fl_schedule,
+        fl_topology_program=args.fl_topology_program,
     )
     print(json.dumps(rec, indent=2))
     if args.out:
@@ -394,6 +421,8 @@ def main() -> None:
             suffix += f"_topk{args.topk}"
         if args.fl_schedule != "sequential":
             suffix += f"_{args.fl_schedule}"
+        if args.fl_topology_program:
+            suffix += "_" + args.fl_topology_program.split(":")[0]
         if args.pad_heads:
             suffix += f"_hpad{args.pad_heads}"
         if args.wire_dtype:

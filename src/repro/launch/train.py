@@ -27,6 +27,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs import FLRunConfig, get_config
+from repro.core.dynamics import program_names
 from repro.core.engine import engine_names, schedule_names
 from repro.data.tokens import make_fl_token_batches
 from repro.models import build_model
@@ -64,6 +65,12 @@ def main() -> None:
     ap.add_argument("--storage-dtype", default=None,
                     help="flat engine: buffer storage dtype (e.g. "
                          "bfloat16); fp32 stays in the mix accumulator")
+    ap.add_argument("--fl-topology-program", default=None,
+                    help="per-round graph dynamics (TopologyProgram "
+                         f"registry: {', '.join(program_names())}); spec "
+                         "syntax name:k=v,... e.g. "
+                         "'edge_failure:p=0.2,seed=0' -- flat/fused "
+                         "engines; metrics gain edge_fraction")
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--checkpoint", default=None)
     ap.add_argument("--log-every", type=int, default=5)
@@ -104,6 +111,7 @@ def main() -> None:
         log_every=args.log_every, engine=args.fl_engine,
         scale_chunk=args.scale_chunk, topk=args.topk,
         round_schedule=args.fl_schedule, storage_dtype=args.storage_dtype,
+        topology_program=args.fl_topology_program,
     )
     hist = result.history
     first, last = hist.rows()[0], hist.last()
@@ -113,6 +121,7 @@ def main() -> None:
                 "arch": cfg.name,
                 "fl_engine": args.fl_engine,
                 "fl_schedule": args.fl_schedule,
+                "fl_topology_program": args.fl_topology_program,
                 "algorithm": args.algorithm,
                 "q": args.q,
                 "rounds": args.rounds,

@@ -31,6 +31,7 @@ from typing import Any, Optional
 import jax
 import numpy as np
 
+from repro.core.dynamics import parse_program
 from repro.core.engine import (
     GossipEngine,
     engine_names,
@@ -70,6 +71,13 @@ def save_fl_state(path: str, state: FLState, extra: Optional[dict] = None,
         schedule = getattr(engine, "round_schedule", None)
         if schedule is not None:
             manifest["round_schedule"] = schedule.name
+        # so is the topology program: the comm counters (topo_round /
+        # topo_key) only mean something under the SAME program -- the
+        # recorded spec lets a mid-churn restore rebuild the engine and
+        # replay the identical graph sequence
+        program = getattr(engine, "topology_program", None)
+        if program is not None:
+            manifest["topology_program"] = program.spec()
     if state.comm is not None:
         manifest["comm_keys"] = sorted(state.comm)
     if extra:
@@ -107,6 +115,31 @@ def load_fl_state(path: str, template: FLState,
                 f"{schedule_names()}"
             )
         get_schedule(saved_schedule)
+    saved_program = manifest.get("topology_program")
+    if saved_program is not None:
+        try:
+            parse_program(saved_program)
+        except ValueError as e:
+            raise ValueError(
+                f"checkpoint was written under topology program "
+                f"{saved_program!r}, which no registered program can "
+                f"rebuild: {e}"
+            ) from None
+        if engine is not None and saved_program != "static":
+            # a STATIC checkpoint may seed a dynamic run (the program
+            # starts from round 0); a DYNAMIC checkpoint's counters are
+            # meaningless under any other program
+            engine_program = getattr(engine, "topology_program", None)
+            if (engine_program is not None
+                    and engine_program.spec() != saved_program):
+                raise ValueError(
+                    f"checkpoint was written under topology program "
+                    f"{saved_program!r} but the restore engine runs "
+                    f"{engine_program.spec()!r}; the topo_round/topo_key "
+                    "counters only replay the identical graph sequence "
+                    "under the same program -- rebuild the engine with "
+                    f"topology_program={saved_program!r}"
+                )
     data = np.load(os.path.join(path, "state.npz"))
     saved_comm_keys = set(manifest.get("comm_keys") or ())
     if not saved_comm_keys:  # legacy manifest: derive from the npz contents
@@ -150,6 +183,17 @@ def load_fl_state(path: str, template: FLState,
     if comm is not None and manifest.get("has_comm", False):
         saved_keys = saved_comm_keys
         extra = saved_keys - set(comm)
+        if extra and engine is not None:
+            # DERIVED buffers (the engine's restore_comm rebuilds them
+            # from recon) may be dropped when the template's comm
+            # contract no longer carries them -- e.g. a static sharded
+            # checkpoint's mix_recon seeding a dynamic-topology run whose
+            # contract replaced it with per-direction accumulators
+            is_derived = getattr(engine, "is_derived_comm_key", None)
+            if is_derived is not None:
+                droppable = {k for k in extra if is_derived(k)}
+                extra -= droppable
+                saved_keys = saved_keys - droppable
         if extra:  # refuse to silently drop wire state (engine= or not)
             raise ValueError(
                 f"checkpoint carries wire state {sorted(extra)} that the "

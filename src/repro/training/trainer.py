@@ -38,14 +38,25 @@ class AdaptiveTopK:
     round-to-round logic (used by ``train_decentralized`` and the EHR
     example -- do not hand-roll the switch).
 
-    Spec ``(k_sparse, k_dense, threshold)``: rounds run the sparse wire
-    until the ``ef_residual_rms`` metric (the mass the wire is deferring)
-    crosses ``threshold``; then the NEXT round runs the densified twin
-    (``dense_topk`` collapses to None -- plain dense int8 -- when k_dense
-    covers the whole scale chunk) until the residual drains. Build BOTH
-    engines/round functions up front (identical comm-state contract, so
-    they advance the same state; k is a compile-time kernel constant, so
-    adapting is a function switch, never a recompile), then per round:
+    Spec ``(k_sparse, k_dense, densify_high[, resparsify_low])``: rounds
+    run the sparse wire until the ``ef_residual_rms`` metric (the mass
+    the wire is deferring) crosses ``densify_high``; then the densified
+    twin runs (``dense_topk`` collapses to None -- plain dense int8 --
+    when k_dense covers the whole scale chunk) until the residual drains
+    BELOW ``resparsify_low`` (default ``densify_high / 2``).
+
+    The two thresholds are a HYSTERESIS band: a single threshold
+    duty-cycles -- densifying drains the residual just under the line,
+    re-sparsifying pushes it back over, so k flaps every round or two
+    around regime changes (observed on the EHR cohort trace;
+    regression-tested in tests/test_schedule.py). With the band, the
+    wire stays dense until the residual is genuinely drained and stays
+    sparse until it genuinely builds back up.
+
+    Build BOTH engines/round functions up front (identical comm-state
+    contract, so they advance the same state; k is a compile-time kernel
+    constant, so adapting is a function switch, never a recompile), then
+    per round:
 
         fn = ctl.pick(sparse_fn, dense_fn)
         state, m = fn(state, batches)        # ctl.current_k ran this round
@@ -53,15 +64,26 @@ class AdaptiveTopK:
     """
 
     def __init__(self, spec, scale_chunk: int):
-        k_sparse, k_dense, threshold = spec
+        if len(spec) == 3:
+            k_sparse, k_dense, high = spec
+            low = float(high) / 2.0
+        else:
+            k_sparse, k_dense, high, low = spec
         self.k_sparse = int(k_sparse)
         self.k_dense = int(k_dense)
-        self.threshold = float(threshold)
+        self.threshold = float(high)  #: densify when rms exceeds this
+        self.low = float(low)  #: re-sparsify only when rms drains below
+        if not (0.0 < self.low <= self.threshold):
+            raise ValueError(
+                f"hysteresis band needs 0 < low <= high, got "
+                f"low={self.low}, high={self.threshold}"
+            )
         #: topk= for the densified twin engine (None = dense int8)
         self.dense_topk = None if self.k_dense >= scale_chunk else self.k_dense
         self._use_dense = False
         self.rounds = 0
         self.dense_rounds = 0
+        self.switches = 0
 
     @property
     def current_k(self) -> int:
@@ -72,10 +94,16 @@ class AdaptiveTopK:
         return dense_fn if self._use_dense else sparse_fn
 
     def update(self, ef_residual_rms: float) -> None:
-        """Account the round just run and arm the next one."""
+        """Account the round just run and arm the next one: densify-high
+        / re-sparsify-low, holding the current wire inside the band."""
         self.rounds += 1
         self.dense_rounds += int(self._use_dense)
-        self._use_dense = ef_residual_rms > self.threshold
+        if self._use_dense:
+            use_dense = ef_residual_rms >= self.low
+        else:
+            use_dense = ef_residual_rms > self.threshold
+        self.switches += int(use_dense != self._use_dense)
+        self._use_dense = use_dense
 
 
 @dataclasses.dataclass
@@ -134,7 +162,8 @@ def train_decentralized(
     topk: Optional[int] = None,
     round_schedule: Optional[str] = None,
     storage_dtype=None,
-    topk_schedule: Optional[Tuple[int, int, float]] = None,
+    topk_schedule: Optional[Tuple[int, ...]] = None,
+    topology_program: Optional[str] = None,
 ) -> TrainResult:
     """Train for ``rounds`` communication rounds.
 
@@ -155,14 +184,24 @@ def train_decentralized(
     engine's packed buffer in bf16 (fp32 stays only in the mix
     accumulator).
 
-    ``topk_schedule = (k_sparse, k_dense, residual_rms_threshold)`` is
-    the adaptive-k hook: rounds run with the sparse wire until the
-    EF-residual RMS (the ``ef_residual_rms`` metric) crosses the
-    threshold, then the NEXT round densifies to ``k_dense`` (>= the
-    scale chunk disables masking entirely) until the residual drains.
-    Both variants are built once and jitted once -- k is a compile-time
-    kernel constant, so adapting means switching between two round
-    functions over the SAME state, not recompiling.
+    ``topk_schedule = (k_sparse, k_dense, densify_high[, resparsify_low])``
+    is the adaptive-k hook: rounds run with the sparse wire until the
+    EF-residual RMS (the ``ef_residual_rms`` metric) crosses
+    ``densify_high``, then densify to ``k_dense`` (>= the scale chunk
+    disables masking entirely) until the residual drains below
+    ``resparsify_low`` (default ``densify_high / 2`` -- the hysteresis
+    band that keeps k from duty-cycling; see
+    :class:`AdaptiveTopK`). Both variants are built once and jitted once
+    -- k is a compile-time kernel constant, so adapting means switching
+    between two round functions over the SAME state, not recompiling.
+
+    ``topology_program`` selects the per-round graph dynamics (the THIRD
+    round axis, ``repro.core.dynamics``): a registry spec string like
+    ``"node_churn:p_down=0.2,mean_downtime=5"`` -- the run's base W is
+    gated per round with dropped-edge weight folded into the self-loops,
+    inside the ONE compiled round function (metrics gain
+    ``edge_fraction``). None (or ``"static"``) keeps the compile-time
+    constant W.
     """
     w = mixing_matrix(run.topology, run.n_nodes)
     check_assumption1(w)
@@ -176,7 +215,8 @@ def train_decentralized(
         knobs = {"wire_dtype": wire_dtype, "scale_chunk": scale_chunk,
                  "topk": topk, "round_schedule": round_schedule,
                  "storage_dtype": storage_dtype,
-                 "topk_schedule": topk_schedule}
+                 "topk_schedule": topk_schedule,
+                 "topology_program": topology_program}
         set_knobs = sorted(k for k, v in knobs.items() if v is not None)
         if set_knobs:
             raise ValueError(
@@ -195,6 +235,7 @@ def train_decentralized(
             wire_dtype=wire_dtype,
             scale_chunk=512 if scale_chunk is None else scale_chunk,
             round_schedule=round_schedule, storage_dtype=storage_dtype,
+            topology_program=topology_program,
         )
         engine, params0 = build(w, stacked, topk=topk, **kw)
     schedule = make_schedule(run)
@@ -237,6 +278,8 @@ def train_decentralized(
             "alpha": float(m["alpha"]),
             "wall_s": time.time() - t0,
         }
+        if "edge_fraction" in m:
+            row["edge_fraction"] = float(m["edge_fraction"])
         if adaptive is not None:
             row["topk"] = float(adaptive.current_k)
             row["ef_residual_rms"] = float(m["ef_residual_rms"])

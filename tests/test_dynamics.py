@@ -1,0 +1,658 @@
+"""TopologyProgram layer: time-varying graphs as the third round axis.
+
+Single-host: registry/spec round trips, per-round Assumption 1 over every
+registered program, engine gating, and the DENSE PER-ROUND-W ORACLE --
+every dynamic engine (flat, fused x {jnp, pallas} x {sequential,
+pipelined}) must match a hand-written round loop that rebuilds W_r from
+``program.weights_np`` each round (the eager twin of the traced gate) --
+plus the zero-recompile property (one jit cache entry across rounds).
+
+Multi-device (subprocess, 8 forced host devices, slow): sharded == fused
+under churn for every program x schedule x wire encoding, the jaxpr
+proof that churn adds ZERO collectives and ZERO extra compilations
+relative to the static engine, the bitmap compact wire's collective
+operand bytes == flat_wire_bytes, and a mid-churn pipelined checkpoint
+restore that replays bit-identically.
+"""
+
+import os
+import subprocess
+import sys
+import textwrap
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (
+    FLConfig,
+    get_engine,
+    init_fl_state,
+    make_fl_round,
+    mixing_matrix,
+    pack,
+    parse_program,
+    program_names,
+    resolve_program,
+)
+from repro.core.dynamics import STATIC, validate_program
+from repro.core.packing import (
+    bitmap_bytes_per_chunk,
+    compact_index_bytes,
+    flat_wire_bytes,
+    pack_like,
+    unpack,
+)
+from repro.core.schedules import constant
+from repro.core.topology import check_assumption1
+from repro.kernels.gossip.ref import fused_round_gt_ref, fused_round_ref
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+#: one spec per registered dynamic program, sized for a 20-node graph
+DYNAMIC_SPECS = (
+    "edge_failure:p=0.3,seed=3",
+    "node_churn:mean_downtime=3,p_down=0.25,seed=1",
+    "round_robin_subgraphs:n_groups=3",
+    "rgg_rewire:jitter=0.15,radius=0,seed=5",
+)
+
+
+def _problem(n, q, seed=0):
+    rng = np.random.default_rng(seed)
+
+    def loss(p, batch):
+        return jnp.sum((p["w"] - batch["t"]) ** 2) + jnp.sum(p["b"] ** 2)
+
+    params = {
+        "w": jnp.asarray(rng.normal(size=(n, 4, 5)), jnp.float32),
+        "b": jnp.asarray(rng.normal(size=(n, 3)), jnp.float32),
+    }
+    batches = {"t": jnp.asarray(rng.normal(size=(q, n, 4, 5)), jnp.float32)}
+    return loss, params, batches
+
+
+# ---------------------------------------------------------------------------
+# registry + spec round trips
+# ---------------------------------------------------------------------------
+
+
+def test_program_registry_and_specs():
+    assert program_names() == (
+        "edge_failure", "node_churn", "rgg_rewire", "round_robin_subgraphs",
+        "static",
+    )
+    assert resolve_program(None).is_static
+    assert resolve_program("static").is_static
+    prog = parse_program("edge_failure:p=0.35,seed=9")
+    assert prog.p == 0.35 and prog.seed == 9
+    assert resolve_program(prog) is prog
+    # canonical spec round trip for every registered program
+    for spec in ("static",) + DYNAMIC_SPECS:
+        p = parse_program(spec)
+        assert parse_program(p.spec()).spec() == p.spec()
+    with pytest.raises(ValueError, match="unknown topology program"):
+        parse_program("does_not_exist:p=1")
+    with pytest.raises(ValueError, match="bad program knob"):
+        parse_program("edge_failure:p")
+    with pytest.raises(ValueError, match="bad knobs"):
+        parse_program("edge_failure:nope=3")
+    with pytest.raises(ValueError, match="p=1.5"):
+        parse_program("edge_failure:p=1.5")
+    # float knobs survive the manifest round trip at FULL precision --
+    # a truncated spec would pass the restore-time equality check while
+    # silently flipping edges near the lost digits
+    hp = parse_program("edge_failure:p=0.1234567891,seed=0")
+    assert parse_program(hp.spec()).p == hp.p == 0.1234567891
+
+
+def test_program_bind_contract():
+    w = mixing_matrix("ring", 8)
+    prog = parse_program("edge_failure:p=0.2,seed=0")
+    with pytest.raises(ValueError, match="unbound"):
+        prog.weights_np(0)
+    prog.bind(w)
+    prog.bind(w)  # idempotent
+    with pytest.raises(ValueError, match="already bound"):
+        prog.bind(mixing_matrix("ring", 4))
+
+
+# ---------------------------------------------------------------------------
+# Assumption 1 on every registered program's emitted rounds (satellite)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("spec", ("static",) + DYNAMIC_SPECS)
+def test_every_program_round_satisfies_assumption1(spec):
+    """Symmetry + double stochasticity must hold EVERY round (a churn
+    round may disconnect -- the gap check is relaxed, never the
+    stochasticity); the active support must stay within the base; the
+    diagonal absorbs exactly the dropped weight."""
+    w = mixing_matrix("hospital20", 20)
+    prog = parse_program(spec).bind(w)  # bind itself validates a sample
+    base_off = np.abs(w - np.diag(np.diag(w))) > 0
+    varied = False
+    for r in range(10):
+        w_r = prog.weights_np(r)
+        diag = check_assumption1(w_r, atol=1e-6, require_connected=False)
+        assert diag["sym_err"] <= 1e-6
+        off_r = w_r - np.diag(np.diag(w_r))
+        assert not (np.abs(off_r) > 0)[~base_off].any()
+        # dropped weight folded into the self-loops, row by row
+        np.testing.assert_allclose(
+            np.diag(w_r), 1.0 - off_r.sum(axis=1), atol=1e-6
+        )
+        varied = varied or not np.allclose(w_r, w)
+    assert varied == (spec != "static")
+    validate_program(prog, w, rounds=10)
+
+
+def test_node_churn_isolates_whole_nodes():
+    w = mixing_matrix("hospital20", 20)
+    prog = parse_program("node_churn:p_down=0.4,mean_downtime=2,seed=2")
+    prog.bind(w)
+    seen_isolated = False
+    for r in range(8):
+        w_r = prog.weights_np(r)
+        off = w_r - np.diag(np.diag(w_r))
+        row_deg = (np.abs(off) > 0).sum(axis=1)
+        isolated = row_deg == 0
+        seen_isolated = seen_isolated or isolated.any()
+        # a down node is fully down: self-loop weight exactly 1
+        np.testing.assert_allclose(np.diag(w_r)[isolated], 1.0)
+        # persistence: rounds in the same block share the outage pattern
+        w_same_block = prog.weights_np((r // 3) * 3)
+    assert seen_isolated
+
+
+def test_round_robin_union_is_base_graph():
+    w = mixing_matrix("hospital20", 20)
+    g = 3
+    prog = parse_program(f"round_robin_subgraphs:n_groups={g}").bind(w)
+    base_off = np.abs(w - np.diag(np.diag(w))) > 0
+    union = np.zeros_like(base_off)
+    for r in range(g):
+        w_r = prog.weights_np(r)
+        union |= np.abs(w_r - np.diag(np.diag(w_r))) > 0
+        # cycling: round r+g is identical
+        np.testing.assert_array_equal(prog.weights_np(r + g), w_r)
+    np.testing.assert_array_equal(union, base_off)
+
+
+def test_gate_is_identical_eager_and_jit():
+    """The graph sequence is a pure function of (seed, round): the
+    counter-based hash must produce identical bits eagerly and under jit
+    (the legacy threefry PRNG does NOT guarantee this once GSPMD
+    partitions the program -- the reason jax.random is banned here)."""
+    w = mixing_matrix("hospital20", 20)
+    for spec in DYNAMIC_SPECS:
+        prog = parse_program(spec).bind(w)
+        key = jnp.asarray(prog.init_key())
+        for r in (0, 3, 17):
+            eager = prog.gate(jnp.int32(r), key)
+            jitted = jax.jit(prog.gate)(jnp.int32(r), key)
+            np.testing.assert_array_equal(np.asarray(eager),
+                                          np.asarray(jitted))
+
+
+# ---------------------------------------------------------------------------
+# engine gating
+# ---------------------------------------------------------------------------
+
+
+def test_static_program_leaves_engines_unchanged():
+    n, q = 8, 1
+    w = mixing_matrix("ring", n)
+    loss, params, batches = _problem(n, q)
+    for name in ("tree", "flat"):
+        eng, st0 = get_engine(name).simulated(
+            w, params, topology_program="static"
+        )
+        assert not eng.dynamic_topology
+        cfg = FLConfig(algorithm="dsgd", q=q, n_nodes=n)
+        comm = eng.init_comm_state(cfg, st0)
+        assert comm is None  # no topo counters on the static path
+    eng, _ = get_engine("fused").simulated(
+        w, params, scale_chunk=8, topology_program=None
+    )
+    assert eng.topology_program.is_static
+    cfg = FLConfig(algorithm="dsgd", q=q, n_nodes=n)
+    assert "topo_round" not in eng.comm_keys(cfg)
+
+
+def test_tree_engine_rejects_dynamic_program():
+    w = mixing_matrix("ring", 4)
+    _, params, _ = _problem(4, 1)
+    with pytest.raises(ValueError, match="traced per-round"):
+        get_engine("tree").simulated(
+            w, params, topology_program="edge_failure:p=0.2"
+        )
+
+
+def test_dynamic_engine_comm_contract():
+    n = 8
+    w = mixing_matrix("ring", n)
+    _, params, _ = _problem(n, 1)
+    eng, flat0 = get_engine("fused").simulated(
+        w, params, scale_chunk=8, impl="jnp",
+        topology_program="edge_failure:p=0.2,seed=1",
+    )
+    cfg = FLConfig(algorithm="dsgt", q=1, n_nodes=n)
+    keys = eng.comm_keys(cfg)
+    assert "topo_round" in keys and "topo_key" in keys
+    comm = eng.init_comm_state(cfg, flat0)
+    assert comm["topo_round"].dtype == jnp.int32
+    assert int(comm["topo_round"]) == 0
+    np.testing.assert_array_equal(
+        np.asarray(comm["topo_key"]),
+        np.asarray(eng.topology_program.init_key()),
+    )
+    sds = eng.comm_state_sds(cfg)
+    assert sds["topo_key"].shape == (2,) and sds["topo_key"].dtype == jnp.uint32
+
+
+# ---------------------------------------------------------------------------
+# the dense per-round-W oracle
+# ---------------------------------------------------------------------------
+
+
+def _oracle_rounds(loss, params, batches, prog, cfg, alpha, rounds, chunk,
+                   engine_kind, pipelined=False):
+    """Hand-written round loop against the PER-ROUND dense W rebuilt from
+    ``program.weights_np`` -- exact-wire mix-then-adapt for the flat
+    engine, the fused-round jnp references (stale_mix for pipelined) for
+    the fused engines."""
+    flat, layout = pack(params, pad_to=chunk)
+    grad_fn = jax.vmap(jax.value_and_grad(loss))
+
+    def eval_grads(fb, batch):
+        losses, grads = grad_fn(unpack(fb, layout), batch)
+        return losses, pack_like(grads, layout)
+
+    q = cfg.q
+    x = flat + 0.0
+    zeros = jnp.zeros_like(x)
+    tr, gp = zeros, zeros
+    rx, sx, rt, st_ = zeros, zeros, zeros, zeros
+    for r in range(rounds):
+        for i in range(q - 1):
+            _, g = eval_grads(x, jax.tree_util.tree_map(lambda b: b[i], batches))
+            x = x - alpha * g
+        _, g = eval_grads(x, jax.tree_util.tree_map(lambda b: b[q - 1], batches))
+        w_r = prog.weights_np(r)
+        w_off = jnp.asarray(w_r - np.diag(np.diag(w_r)), jnp.float32)
+        w_self = jnp.asarray(np.diag(w_r), jnp.float32)
+        if engine_kind == "flat":
+            if cfg.algorithm == "dsgd":
+                x = (w_off @ x + w_self[:, None] * x) - alpha * g
+            else:
+                tr = (w_off @ tr + w_self[:, None] * tr) + g - gp
+                x = (w_off @ x + w_self[:, None] * x) - alpha * tr
+                gp = g
+        elif cfg.algorithm == "dsgd":
+            x, rx, sx, _ = fused_round_ref(
+                x, g, rx, sx, w_off, w_self, jnp.float32(alpha),
+                scale_chunk=chunk, stale_mix=pipelined,
+            )
+        else:
+            x, tr, rx, sx, rt, st_, _, _ = fused_round_gt_ref(
+                x, tr, g, gp, rx, sx, rt, st_, w_off, w_self,
+                jnp.float32(alpha), scale_chunk=chunk, stale_mix=pipelined,
+            )
+            gp = g
+    return x
+
+
+@pytest.mark.parametrize("spec", DYNAMIC_SPECS)
+@pytest.mark.parametrize("algorithm", ["dsgd", "dsgt"])
+def test_flat_dynamic_matches_per_round_w_oracle(spec, algorithm):
+    n, q, chunk, rounds = 8, 2, 8, 4
+    w = mixing_matrix("ring", n)
+    loss, params, batches = _problem(n, q)
+    cfg = FLConfig(algorithm=algorithm, q=q, n_nodes=n)
+    eng, flat0 = get_engine("flat").simulated(
+        w, params, scale_chunk=chunk, topology_program=spec
+    )
+    rf = jax.jit(make_fl_round(loss, None, constant(0.05), cfg, engine=eng))
+    st = init_fl_state(cfg, flat0, engine=eng)
+    for _ in range(rounds):
+        st, m = rf(st, batches)
+    assert rf._cache_size() == 1  # churn adds ZERO recompiles
+    assert 0.0 <= float(m["edge_fraction"]) <= 1.0
+    oracle = _oracle_rounds(loss, params, batches, eng.topology_program,
+                            cfg, 0.05, rounds, chunk, "flat")
+    np.testing.assert_allclose(np.asarray(st.params), np.asarray(oracle),
+                               atol=1e-5)
+
+
+@pytest.mark.parametrize("spec", DYNAMIC_SPECS)
+@pytest.mark.parametrize("algorithm", ["dsgd", "dsgt"])
+@pytest.mark.parametrize("schedule", ["sequential", "pipelined"])
+def test_fused_dynamic_matches_per_round_w_oracle(spec, algorithm, schedule):
+    n, q, chunk, rounds = 8, 2, 8, 4
+    w = mixing_matrix("ring", n)
+    loss, params, batches = _problem(n, q)
+    cfg = FLConfig(algorithm=algorithm, q=q, n_nodes=n)
+    eng, flat0 = get_engine("fused").simulated(
+        w, params, scale_chunk=chunk, impl="pallas", topology_program=spec,
+        round_schedule=schedule,
+    )
+    rf = jax.jit(make_fl_round(loss, None, constant(0.05), cfg, engine=eng))
+    st = init_fl_state(cfg, flat0, engine=eng)
+    for _ in range(rounds):
+        st, m = rf(st, batches)
+    assert rf._cache_size() == 1  # churn adds ZERO recompiles
+    assert int(st.comm["topo_round"]) == rounds
+    oracle = _oracle_rounds(loss, params, batches, eng.topology_program,
+                            cfg, 0.05, rounds, chunk, "fused",
+                            pipelined=(schedule == "pipelined"))
+    np.testing.assert_allclose(np.asarray(st.params), np.asarray(oracle),
+                               atol=1e-5)
+
+
+def test_fused_dynamic_topk_still_matches_oracle():
+    """top-k sparsification composes with churn (EF absorbs both)."""
+    n, q, chunk, rounds, topk = 8, 1, 8, 4, 3
+    w = mixing_matrix("ring", n)
+    loss, params, batches = _problem(n, q)
+    cfg = FLConfig(algorithm="dsgd", q=q, n_nodes=n)
+    eng, flat0 = get_engine("fused").simulated(
+        w, params, scale_chunk=chunk, impl="pallas", topk=topk,
+        topology_program="edge_failure:p=0.4,seed=3",
+    )
+    rf = jax.jit(make_fl_round(loss, None, constant(0.05), cfg, engine=eng))
+    st = init_fl_state(cfg, flat0, engine=eng)
+    for _ in range(rounds):
+        st, _ = rf(st, batches)
+    prog = eng.topology_program
+    flat, layout = pack(params, pad_to=chunk)
+    grad_fn = jax.vmap(jax.value_and_grad(loss))
+    x = flat + 0.0
+    rx = jnp.zeros_like(x)
+    sx = jnp.zeros_like(x)
+    for r in range(rounds):
+        _, grads = grad_fn(unpack(x, layout),
+                           jax.tree_util.tree_map(lambda b: b[0], batches))
+        g = pack_like(grads, layout)
+        w_r = prog.weights_np(r)
+        x, rx, sx, _ = fused_round_ref(
+            x, g, rx, sx,
+            jnp.asarray(w_r - np.diag(np.diag(w_r)), jnp.float32),
+            jnp.asarray(np.diag(w_r), jnp.float32),
+            jnp.float32(0.05), scale_chunk=chunk, topk=topk,
+        )
+    np.testing.assert_allclose(np.asarray(st.params), np.asarray(x),
+                               atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# bitmap compact-wire encoding (satellite)
+# ---------------------------------------------------------------------------
+
+
+def test_flat_wire_bytes_picks_cheaper_index_encoding():
+    tree = {"a": jnp.zeros((4, 1000)), "b": jnp.zeros((4, 100))}
+    _, layout = pack(tree, pad_to=512)
+    n_chunks = layout.total // 512
+    # k=64 on 512-wide chunks: bitmap (64 B) beats int16 positions (128 B)
+    assert compact_index_bytes(512, 64) == 64
+    assert flat_wire_bytes(layout, 1, 512, 64) == n_chunks * (64 + 64 + 4)
+    # the modeled 3.9x at k=64/512 is REALIZED by the bitmap encoding
+    dense = flat_wire_bytes(layout, 1, 512)
+    assert dense / flat_wire_bytes(layout, 1, 512, 64) == pytest.approx(
+        3.9, abs=0.05
+    )
+    # tiny k on wide chunks: explicit positions win
+    assert compact_index_bytes(512, 8) == 16
+    assert flat_wire_bytes(layout, 1, 512, 8) == n_chunks * (8 + 16 + 4)
+    # non-byte-aligned chunks have no bitmap
+    assert bitmap_bytes_per_chunk(12) is None
+    assert compact_index_bytes(12, 6) == 12
+
+
+def test_bitmap_round_trip_property():
+    pytest.importorskip("hypothesis", reason="property tests need hypothesis")
+    from hypothesis import given, settings, strategies as st
+
+    from repro.kernels.gossip.ref import (
+        _quantize_ef_compact_chunks,
+        compact_to_bitmap,
+        scatter_bitmap_dq,
+        scatter_compact_dq,
+    )
+    from repro.core.packing import compact_pos_dtype
+
+    @settings(max_examples=30, deadline=None)
+    @given(
+        seed=st.integers(0, 1000),
+        k=st.sampled_from([1, 3, 8, 15]),
+        structure=st.sampled_from(["normal", "ties", "sparse", "zeros"]),
+    )
+    def check(seed, k, structure):
+        n, chunk, c = 4, 16, 3
+        t = c * chunk
+        rng = np.random.default_rng(seed)
+        if structure == "normal":
+            payload = rng.normal(size=(n, t))
+        elif structure == "ties":
+            payload = rng.integers(-3, 4, size=(n, t)).astype(np.float64)
+        elif structure == "sparse":
+            payload = rng.normal(size=(n, t)) * (rng.random((n, t)) < 0.1)
+        else:
+            payload = np.zeros((n, t))
+        payload = jnp.asarray(payload, jnp.float32)
+        q, pos, scales, dq = _quantize_ef_compact_chunks(payload, chunk, k)
+        q8 = q.astype(jnp.int8)
+        p16 = pos.astype(compact_pos_dtype(chunk))
+        vals, bits = compact_to_bitmap(q8, p16, chunk, k)
+        assert vals.dtype == jnp.int8 and bits.dtype == jnp.uint8
+        assert bits.shape == (n, c * chunk // 8)
+        rebuilt = scatter_bitmap_dq(vals, bits, scales, chunk, t)
+        # bitmap decode == positions decode == the sender's dense dq
+        np.testing.assert_array_equal(
+            np.asarray(rebuilt),
+            np.asarray(scatter_compact_dq(q8, p16, scales, chunk, t)),
+        )
+        np.testing.assert_array_equal(np.asarray(rebuilt), np.asarray(dq))
+
+    check()
+
+
+# ---------------------------------------------------------------------------
+# sharded: churn == fused oracle, zero extra collectives / compiles,
+# bitmap operand bytes, mid-churn pipelined restore (subprocess, 8 devices)
+# ---------------------------------------------------------------------------
+
+
+def _run(script: str, timeout: int = 1200) -> str:
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(REPO, "src")
+    proc = subprocess.run(
+        [sys.executable, "-c", script], env=env, capture_output=True,
+        text=True, timeout=timeout,
+    )
+    assert proc.returncode == 0, proc.stderr[-4000:]
+    return proc.stdout
+
+
+_SHARDED_SCRIPT = textwrap.dedent(
+    """
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    import jax, jax.numpy as jnp, numpy as np
+    from jax.sharding import NamedSharding, PartitionSpec as P
+    from repro.core import (FLConfig, FusedEngine, ShardedFusedEngine,
+                            flat_wire_bytes, init_fl_state, make_fl_round,
+                            mixing_matrix, pack)
+    from repro.core.schedules import inv_sqrt
+    from repro.launch.mesh import make_test_mesh, node_axes, n_fl_nodes
+
+    mesh = make_test_mesh((2, 2, 2))
+    naxes = node_axes(mesh); n = n_fl_nodes(mesh)
+    rng = np.random.default_rng(0)
+    q, chunk = 2, 16
+    SPECS = ("edge_failure:p=0.4,seed=3",
+             "node_churn:mean_downtime=2,p_down=0.3,seed=1",
+             "round_robin_subgraphs:n_groups=2",
+             "rgg_rewire:jitter=0.2,radius=0,seed=5")
+
+    def loss(p, batch):
+        return jnp.sum((p["w"] - batch["t"]) ** 2) + jnp.sum(p["b"] ** 2)
+
+    params = {"w": jnp.asarray(rng.normal(size=(n, 4, 5)), jnp.float32),
+              "b": jnp.asarray(rng.normal(size=(n, 3)), jnp.float32)}
+    batches = {"t": jnp.asarray(rng.normal(size=(q, n, 4, 5)), jnp.float32)}
+    flat, layout = pack(params, pad_to=chunk)
+    sched = inv_sqrt(0.05)
+    put = lambda: jax.device_put(flat, NamedSharding(mesh, P(naxes, None)))
+
+    # 1. sharded churn == fused churn (the single-host oracle, itself
+    #    proven against the per-round-W reference in test_dynamics.py)
+    #    over program x algorithm x schedule x {dense int8, compact}
+    def compare(algorithm, topk, schedule, spec):
+        cfg = FLConfig(algorithm=algorithm, q=q, n_nodes=n)
+        sh = ShardedFusedEngine.from_mesh(
+            mesh, naxes, params, scale_chunk=chunk, topk=topk,
+            impl="pallas", round_schedule=schedule, topology_program=spec)
+        fe = FusedEngine(sh.dense_equivalent(), layout, scale_chunk=chunk,
+                         topk=topk, impl="pallas", round_schedule=schedule,
+                         topology_program=spec)
+        rf_f = jax.jit(make_fl_round(loss, None, sched, cfg, engine=fe))
+        st_f = init_fl_state(cfg, flat, engine=fe)
+        with mesh:
+            rf_s = jax.jit(make_fl_round(loss, None, sched, cfg, engine=sh))
+            st_s = init_fl_state(cfg, put(), engine=sh)
+            for _ in range(4):
+                st_f, m_f = rf_f(st_f, batches)
+                st_s, m_s = rf_s(st_s, batches)
+        err = float(jnp.abs(st_f.params - st_s.params).max())
+        assert err < 1e-5, (algorithm, topk, schedule, spec, err)
+        if algorithm == "dsgt":
+            terr = float(jnp.abs(st_f.tracker - st_s.tracker).max())
+            assert terr < 1e-5, (algorithm, topk, schedule, spec, terr)
+        assert float(m_f["edge_fraction"]) == float(m_s["edge_fraction"])
+        assert float(m_f["wire_bytes"]) == float(m_s["wire_bytes"])
+        # churn adds zero RECOMPILES: one cache entry beyond the
+        # first-call sharding commitment, same as the static engine
+        assert rf_s._cache_size() <= 2, rf_s._cache_size()
+
+    for spec in SPECS:
+        for algorithm in ("dsgd", "dsgt"):
+            compare(algorithm, None, "sequential", spec)
+    compare("dsgt", None, "pipelined", SPECS[0])
+    compare("dsgd", None, "pipelined", SPECS[1])
+    compare("dsgt", 4, "sequential", SPECS[1])   # compact bitmap wire
+    compare("dsgd", 4, "pipelined", SPECS[0])
+
+    # 2. jaxpr: churn adds ZERO collectives (same ppermute count as the
+    #    static engine; the gate only zeroes contributions) and the round
+    #    is still ONE wire-stage kernel; the compact wire's collective
+    #    operands are exactly the flat_wire_bytes BITMAP encoding
+    def walk(jaxpr, name, found):
+        for eqn in jaxpr.eqns:
+            if eqn.primitive.name == name:
+                found.append(eqn)
+            for v in eqn.params.values():
+                subs = v if isinstance(v, (list, tuple)) else [v]
+                for sub in subs:
+                    if hasattr(sub, "jaxpr"):
+                        walk(sub.jaxpr, name, found)
+                    elif hasattr(sub, "eqns"):
+                        walk(sub, name, found)
+        return found
+
+    def round_jaxpr(spec, topk, algorithm="dsgt"):
+        cfg = FLConfig(algorithm=algorithm, q=q, n_nodes=n)
+        eng = ShardedFusedEngine.from_mesh(
+            mesh, naxes, params, scale_chunk=chunk, topk=topk,
+            impl="pallas", topology_program=spec)
+        with mesh:
+            rf = make_fl_round(loss, None, sched, cfg, engine=eng)
+            st = init_fl_state(cfg, put(), engine=eng)
+            return eng, jax.make_jaxpr(rf)(st, batches)
+
+    for topk in (None, 4):
+        _, static_jx = round_jaxpr(None, topk)
+        eng, churn_jx = round_jaxpr(SPECS[1], topk)
+        n_static = len(walk(static_jx.jaxpr, "ppermute", []))
+        n_churn = len(walk(churn_jx.jaxpr, "ppermute", []))
+        assert n_churn == n_static, (topk, n_static, n_churn)
+        assert len(walk(churn_jx.jaxpr, "pallas_call", [])) == 1
+        if topk is not None:
+            assert eng.wire_encoding == "bitmap"
+            pp = walk(churn_jx.jaxpr, "ppermute", [])
+            wires = 2
+            dirs = n_static // (3 * wires)
+            one_dir = pp[:3]
+            moved = sum(int(np.prod(e.invars[0].aval.shape))
+                        * e.invars[0].aval.dtype.itemsize for e in one_dir)
+            assert moved == flat_wire_bytes(layout, 1, chunk, 4), moved
+
+    # 3. mid-churn PIPELINED checkpoint restore: counters + in-flight
+    #    wire + per-direction accumulators all land consistently; the
+    #    continued run replays the identical graph sequence
+    import tempfile
+    from repro.training.checkpoint import load_fl_state, save_fl_state
+    cfg = FLConfig(algorithm="dsgt", q=q, n_nodes=n)
+    eng = ShardedFusedEngine.from_mesh(
+        mesh, naxes, params, scale_chunk=chunk, topk=4, impl="pallas",
+        round_schedule="pipelined", topology_program=SPECS[1])
+    with mesh:
+        rf = jax.jit(make_fl_round(loss, None, sched, cfg, engine=eng))
+        st = init_fl_state(cfg, put(), engine=eng)
+        for _ in range(3):
+            st, _ = rf(st, batches)
+        with tempfile.TemporaryDirectory() as d:
+            save_fl_state(d, st, engine=eng)
+            import json as _json
+            manifest = _json.load(open(os.path.join(d, "manifest.json")))
+            assert manifest["topology_program"] == SPECS[1]
+            assert "topo_round" in manifest["comm_keys"]
+            assert any(k.startswith("nbr_recon_")
+                       for k in manifest["comm_keys"])
+            back = load_fl_state(d, init_fl_state(cfg, put(), engine=eng),
+                                 engine=eng)
+        assert int(back.comm["topo_round"]) == 3
+        for _ in range(3):
+            st, _ = rf(st, batches)
+            back, _ = rf(back, batches)
+    err = float(jnp.abs(st.params - back.params).max())
+    assert err < 1e-6, err
+
+    # 4. a STATIC sharded checkpoint seeds a dynamic run: its derived
+    #    mix_recon is dropped (is_derived_comm_key), the per-direction
+    #    accumulators are rebuilt from recon, the program starts at
+    #    round 0
+    cfg = FLConfig(algorithm="dsgd", q=q, n_nodes=n)
+    st_eng = ShardedFusedEngine.from_mesh(
+        mesh, naxes, params, scale_chunk=chunk)
+    with mesh:
+        rf = jax.jit(make_fl_round(loss, None, sched, cfg, engine=st_eng))
+        st = init_fl_state(cfg, put(), engine=st_eng)
+        for _ in range(2):
+            st, _ = rf(st, batches)
+        with tempfile.TemporaryDirectory() as d:
+            save_fl_state(d, st, engine=st_eng)
+            dyn = ShardedFusedEngine.from_mesh(
+                mesh, naxes, params, scale_chunk=chunk,
+                topology_program=SPECS[0])
+            back = load_fl_state(
+                d, init_fl_state(cfg, put(), engine=dyn), engine=dyn)
+        assert "mix_recon" not in back.comm
+        assert int(back.comm["topo_round"]) == 0
+        for d_i, src in enumerate(dyn._dir_src):
+            np.testing.assert_allclose(
+                np.asarray(back.comm[f"nbr_recon_{d_i}"]),
+                np.asarray(back.comm["recon"])[src])
+        rf2 = jax.jit(make_fl_round(loss, None, sched, cfg, engine=dyn))
+        back, _ = rf2(back, batches)
+    print("DYNAMICS-SHARDED-OK")
+    """
+)
+
+
+@pytest.mark.slow
+def test_sharded_dynamics_matrix():
+    out = _run(_SHARDED_SCRIPT)
+    assert "DYNAMICS-SHARDED-OK" in out

@@ -138,11 +138,18 @@ def test_topk_wire_bytes_below_int8():
     dense = flat_wire_bytes(layout, 3, 8)
     sparse = flat_wire_bytes(layout, 3, 8, topk=2)
     assert sparse < dense
-    # the REALIZED compact encoding: 2 int8 values + 2 int16 positions +
-    # 4 B scale per chunk (what wire_stage_compact's collective operands
-    # actually are -- asserted against the jaxpr in tests/test_schedule.py)
+    # the REALIZED compact encoding: 2 int8 values + the CHEAPER index
+    # encoding (here the presence bitmap: 8/8 = 1 B beats 2 int16
+    # positions = 4 B) + 4 B scale per chunk -- what the engine's
+    # collective operands actually are (asserted against the jaxpr in
+    # tests/test_schedule.py and tests/test_dynamics.py)
     n_chunks = layout.total // 8
-    assert sparse == 3 * n_chunks * (2 + 2 * 2 + 4)
+    assert sparse == 3 * n_chunks * (2 + 1 + 4)
+    # explicit positions win only for tiny k on wide chunks (k < chunk/16)
+    _, wide = pack(params, pad_to=64)
+    n_wide = wide.total // 64
+    assert flat_wire_bytes(wide, 1, 64, topk=2) == n_wide * (2 + 2 * 2 + 4)
+    assert flat_wire_bytes(wide, 1, 64, topk=8) == n_wide * (8 + 8 + 4)
     # degenerate k >= chunk falls back to dense accounting
     assert flat_wire_bytes(layout, 3, 8, topk=8) == dense
     # the cap: a compact encoding that would exceed dense ships dense

@@ -220,16 +220,23 @@ def test_uneconomic_compact_wire_refused():
         mesh = make_test_mesh((2, 2, 2))
         naxes = node_axes(mesh); n = n_fl_nodes(mesh)
         params = {"w": jnp.zeros((n, 30), jnp.float32)}
-        # chunk=16: k=4 is economic (4 + 8 <= 16), k=8 is not (8 + 16 > 16)
+        # chunk=16: k=4 is economic via the BITMAP index (4 values + 2
+        # bitmap bytes <= 16); k=8 is economic the same way (8 + 2 <= 16
+        # -- explicit positions alone would cost 8 + 16 > 16); k=15 is
+        # not (15 + 2 > 16)
         eng = ShardedFusedEngine.from_mesh(mesh, naxes, params,
                                            scale_chunk=16, topk=4)
-        assert eng.compact_wire
+        assert eng.compact_wire and eng.wire_encoding == "bitmap"
         eng = ShardedFusedEngine.from_mesh(mesh, naxes, params,
                                            scale_chunk=16, topk=8)
+        assert eng.compact_wire and eng.wire_encoding == "bitmap"
+        eng = ShardedFusedEngine.from_mesh(mesh, naxes, params,
+                                           scale_chunk=16, topk=15)
         assert not eng.compact_wire  # auto-falls back to the dense wire
+        assert eng.wire_encoding == "dense"
         try:
             ShardedFusedEngine.from_mesh(mesh, naxes, params,
-                                         scale_chunk=16, topk=8,
+                                         scale_chunk=16, topk=15,
                                          compact=True)
         except ValueError as e:
             assert "costs more" in str(e)
@@ -347,6 +354,47 @@ def test_topk_schedule_config_knob():
         topk_schedule((32, 8, 0.5))
     with pytest.raises(ValueError, match="k_sparse"):
         topk_schedule((8, 32, -1.0))
+
+
+def test_adaptive_topk_hysteresis_no_duty_cycle():
+    """The two-threshold band: a residual trace that HOVERS around the
+    densify threshold (the EHR cohort's shape after the cold start) must
+    not flap k every round. The old single-threshold rule flips on every
+    crossing; the hysteresis controller switches exactly twice -- up at
+    the cold start, down once genuinely drained."""
+    from repro.training.trainer import AdaptiveTopK
+
+    high, low = 3e-3, 1.5e-3
+    # cold start far above, then a drain that hovers around `high`
+    trace = [9e-3, 3.2e-3, 2.9e-3, 3.1e-3, 2.8e-3, 3.05e-3, 2.6e-3,
+             2.2e-3, 1.8e-3, 1.4e-3, 9e-4, 8e-4, 7e-4]
+    # the trace really does hover: a single threshold would duty-cycle
+    single_threshold_flips = sum(
+        int((a > high) != (b > high)) for a, b in zip(trace, trace[1:])
+    )
+    assert single_threshold_flips >= 4
+
+    ctl = AdaptiveTopK((64, 512, high, low), scale_chunk=512)
+    ks = []
+    for rms in trace:
+        ks.append(ctl.current_k)
+        ctl.update(rms)
+    assert ctl.switches == 2, (ctl.switches, ks)
+    # dense from round 2 until the drain below `low` (trace[9]=1.4e-3)
+    assert ks == [64] + [512] * 9 + [64] * 3
+    assert ctl.dense_rounds == 9
+
+    # the 3-tuple spec defaults the low threshold to high / 2
+    ctl3 = AdaptiveTopK((64, 512, high), scale_chunk=512)
+    assert ctl3.low == pytest.approx(high / 2)
+    # and the band must be ordered
+    with pytest.raises(ValueError, match="low <= high"):
+        AdaptiveTopK((64, 512, 1e-3, 2e-3), scale_chunk=512)
+
+    from repro.configs.ehr_mlp import topk_schedule
+    assert topk_schedule((8, 32, 0.5, 0.2)) == (8, 32, 0.5, 0.2)
+    with pytest.raises(ValueError, match="resparsify_low"):
+        topk_schedule((8, 32, 0.5, 0.8))
 
 
 def test_adaptive_topk_densifies_on_residual():

@@ -159,9 +159,10 @@ _ONE_KERNEL_SCRIPT = textwrap.dedent(
         # scan and the post-wire mix contribute none, DSGT's two wires
         # share the one program
         assert count(jaxpr.jaxpr, "pallas_call") == 1, algorithm
-        # topk turns on the COMPACT wire: the k int8 values, the k int16
-        # positions, and the fp32 scales each ride a ppermute (3 per ring
-        # direction per wire) -- nothing masked-dense crosses the wire
+        # topk turns on the COMPACT wire: the k int8 values, the index
+        # encoding (explicit positions or the presence bitmap, whichever
+        # is cheaper), and the fp32 scales each ride a ppermute (3 per
+        # ring direction per wire) -- nothing masked-dense crosses
         n_pp = count(jaxpr.jaxpr, "ppermute")
         wires = 2 if algorithm == "dsgt" else 1
         assert n_pp == 3 * 2 * wires, (algorithm, n_pp)
