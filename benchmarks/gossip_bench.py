@@ -35,7 +35,15 @@ pytree, where most leaves are small: norms, biases, per-head slices):
                         realized collective operand bytes;
   * bf16 storage:       fp32 vs bf16 flat-buffer storage through the
                         dense W mix (fp32 accumulation on both sides):
-                        the halved buffer bytes are the HBM story.
+                        the halved buffer bytes are the HBM story;
+  * bounded staleness:  depth-k rounds (k in {1, 2, 4}) on the fused
+                        engine: ring state grows with k, the guarded
+                        wire-byte columns prove the collective operand
+                        bytes do NOT;
+  * node program:       the fault-injection gate's price (per-node
+                        uptime hash + masked scan iterations vs the
+                        homogeneous lockstep round, one compilation
+                        both sides).
 
 ``tools/bench_guard.py`` diffs a fresh JSON against the committed
 baselines (BENCH_gossip.json full, benchmarks/BENCH_gossip_smoke.json
@@ -504,6 +512,72 @@ def bench_schedule(tree, w, algorithm: str = "dsgd", q: int = 4,
     }
 
 
+def bench_staleness_depth(tree, w, algorithm: str = "dsgt", q: int = 4) -> Dict:
+    """Depth-k bounded staleness vs the depth-1 pipeline: full fused
+    rounds at k in {1, 2, 4}. The k in-flight payloads live in the
+    engine's RING STATE (difference-coded reconstructions held per
+    node), NOT on the wire: per-round collective operand bytes are
+    IDENTICAL across depths -- the guarded wire_bytes columns pin that
+    down (a regression that shipped the ring would multiply them by k).
+    The measured step-time delta is the ring rotate + stale-slot
+    subtraction, O(n * params) adds against the round's matmul."""
+    flat_buf, layout = pack(tree, pad_to=SCALE_CHUNK)
+    n, t = flat_buf.shape
+    cfg = FLConfig(algorithm=algorithm, q=q, n_nodes=n)
+    sched = constant(0.01)
+
+    def loss_fn(params, batch):
+        sq = 0.0
+        for leaf in jax.tree_util.tree_leaves(params):
+            sq = sq + jnp.sum((leaf - batch["t"]) ** 2) / leaf.size
+        return sq
+
+    batches = {"t": jnp.zeros((q, n), jnp.float32)}
+
+    def make(rs):
+        eng, f0 = FusedEngine.simulated(w, tree, scale_chunk=SCALE_CHUNK,
+                                        impl="jnp", round_schedule=rs)
+        rf = make_fl_round(loss_fn, None, sched, cfg, engine=eng)
+        ring = sum(
+            int(np.prod(s.shape)) * jnp.dtype(s.dtype).itemsize
+            for key, s in (eng.comm_state_sds(cfg) or {}).items()
+            if key.startswith("wire_")
+        )
+        return eng, rf, init_fl_state(cfg, f0, engine=eng), ring
+
+    eng1, rf1, st1, ring1 = make("pipelined")
+    eng2, rf2, st2, ring2 = make("bounded_staleness:k=2")
+    eng4, rf4, st4, ring4 = make("bounded_staleness:k=4")
+    us = time_interleaved({
+        "k1": (lambda st: rf1(st, batches)[0], st1),
+        "k2": (lambda st: rf2(st, batches)[0], st2),
+        "k4": (lambda st: rf4(st, batches)[0], st4),
+    }, rounds=min(20, ROUNDS), trials=min(7, TRIALS))
+    return {
+        "name": f"bounded_staleness_round_{algorithm}_q{q}",
+        "n_nodes": n,
+        "total_params": t,
+        "scale_chunk": SCALE_CHUNK,
+        "q": q,
+        "us_pipelined_k1": us["k1"],
+        "us_bounded_k2": us["k2"],
+        "us_bounded_k4": us["k4"],
+        "wire_bytes_per_round_k1": eng1.wire_bytes(cfg),
+        "wire_bytes_per_round_k2": eng2.wire_bytes(cfg),
+        "wire_bytes_per_round_k4": eng4.wire_bytes(cfg),
+        "ring_state_bytes_k1": ring1,
+        "ring_state_bytes_k2": ring2,
+        "ring_state_bytes_k4": ring4,
+        "note": "guarded wire_bytes_per_round_k* columns are EQUAL by "
+                "construction: depth-k keeps k payloads in flight as "
+                "node-local ring state (ring_state_bytes_k* grows with "
+                "k) while each round still ships exactly one payload "
+                "per wire. Equality across k is also asserted in "
+                "tests/test_bounded_staleness.py; quality-vs-depth is "
+                "experiments/straggler_ehr.json.",
+    }
+
+
 def bench_compact_wire(tree, w, topk: int = None, degree: int = 4) -> Dict:
     """The truly sparse top-k wire's RECEIVE path: dense int8 dequant of
     (nodes, total) vs scatter-accumulate of the compact buffers under
@@ -645,6 +719,64 @@ def bench_churn(tree, w, spec: str = "node_churn:p_down=0.25,mean_downtime=5,see
     }
 
 
+def bench_node_program(tree, w,
+                       spec: str = "stragglers:frac=0.25,rate=0.5,drop=1,seed=0",
+                       q: int = 4) -> Dict:
+    """Node heterogeneity's compute cost: the fused FD-DSGD round with
+    lockstep homogeneous nodes vs the SAME round under a NodeProgram
+    (per-round uptime gate composed into W_r, masked local-step scan
+    iterations). ONE compiled function on both sides -- the delta is the
+    per-node hash + the (q-1, n) step mask multiply inside the scan,
+    O(q * n + n^2) against the round's O(n * params) work. The guarded
+    wire column pins down that fault injection never changes what
+    crosses the wire (dropped payloads are ignored at the RECEIVER by
+    the drop-renormalized W_r; the difference-coded stream still flows
+    so reconstructions stay in sync)."""
+    flat_buf, layout = pack(tree, pad_to=SCALE_CHUNK)
+    n, t = flat_buf.shape
+    cfg = FLConfig(algorithm="dsgd", q=q, n_nodes=n)
+    sched = constant(0.01)
+
+    def loss_fn(params, batch):
+        sq = 0.0
+        for leaf in jax.tree_util.tree_leaves(params):
+            sq = sq + jnp.sum((leaf - batch["t"]) ** 2) / leaf.size
+        return sq
+
+    batches = {"t": jnp.zeros((q, n), jnp.float32)}
+
+    def make(program):
+        eng, f0 = FusedEngine.simulated(w, tree, scale_chunk=SCALE_CHUNK,
+                                        impl="jnp", node_program=program)
+        rf = make_fl_round(loss_fn, None, sched, cfg, engine=eng)
+        return eng, rf, init_fl_state(cfg, f0, engine=eng)
+
+    eng_h, rf_h, st_h = make(None)
+    eng_f, rf_f, st_f = make(spec)
+    us = time_interleaved({
+        "homogeneous": (lambda st: rf_h(st, batches)[0], st_h),
+        "faulty": (lambda st: rf_f(st, batches)[0], st_f),
+    }, rounds=min(20, ROUNDS), trials=min(7, TRIALS))
+    return {
+        "name": f"node_program_round_dsgd_q{q}",
+        "n_nodes": n,
+        "total_params": t,
+        "q": q,
+        "program": eng_f.node_program.spec(),
+        "us_homogeneous": us["homogeneous"],
+        "us_faulty": us["faulty"],
+        "fault_overhead_ratio": us["faulty"] / us["homogeneous"],
+        "wire_bytes_per_round": eng_f.wire_bytes(cfg),
+        "wire_bytes_homogeneous": eng_h.wire_bytes(cfg),
+        "note": "same fused round, same wire, same single compilation; "
+                "the faulty side derives per-node uptime + step masks "
+                "from the round counter each round and folds dropped "
+                "mixing weight into the self-loops. Quality-vs-faults "
+                "is experiments/straggler_ehr.json; this row prices the "
+                "mechanism.",
+    }
+
+
 def bench_bf16_storage(tree, w) -> Dict:
     """bf16 flat-buffer STORAGE vs fp32 (the flat engine's storage_dtype
     knob): one dense W mix per round on each. The accumulation is fp32 on
@@ -718,11 +850,17 @@ def main() -> List[Dict]:
         # comm-bound regime (one big leaf, mixing >> grad eval): where the
         # pipeline's overlap is the round's lever
         bench_schedule(big_state, w, "dsgd", q=4, label="_commbound"),
+        # depth-k bounded staleness: ring state grows with k, the WIRE
+        # does not (guarded wire_bytes_per_round_k* columns are equal)
+        bench_staleness_depth(tree, w, "dsgt", q=4),
         bench_compact_wire(tree, w, topk=4 if args.smoke else None),
         bench_bf16_storage(tree, w),
         # dynamic topology: the traced per-round-W mechanism's price
         # (quality-vs-downtime lives in experiments/churn_ehr.json)
         bench_churn(tree, w),
+        # node heterogeneity: the fourth-axis fault gate's price
+        # (quality-vs-faults lives in experiments/straggler_ehr.json)
+        bench_node_program(tree, w),
     ]
     for r in rows:
         extras = {k: v for k, v in r.items() if isinstance(v, float)}

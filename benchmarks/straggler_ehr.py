@@ -1,0 +1,196 @@
+"""Straggler-tolerance experiment -> experiments/straggler_ehr.json.
+
+Quantifies the depth-k bounded-staleness x straggler-fraction frontier in
+model quality on the paper's 20-hospital cohort: FD-DSGT with the fused
+engine under ``BoundedStalenessSchedule(k)`` (k wire payloads in flight,
+the mix consumes k-round-stale neighbor information) composed with the
+``stragglers`` NodeProgram (each round a random ``frac`` of hospitals is
+slow: it runs half its local steps and its payload misses the round,
+the lost mixing weight folded into the self-loops by the symmetric
+drop-renormalization).
+
+The headline: a straggler budget of k rounds is nearly free. Staleness
+deepens the gossip recurrence (the depth-k delay polynomial's
+disagreement-mode roots approach the unit circle as k grows but stay
+inside it on the hospital graph's Metropolis W), and payload drops
+shrink the expected spectral gap by ~uptime^2 -- both slow CONSENSUS,
+neither touches local optimization, so balanced accuracy degrades
+within run-to-run noise (<= 0.02 asserted at k <= 4 with 25% stragglers
+in tests/test_bounded_staleness.py) until staleness depth and drop rate
+compound.
+
+Also reports the staleness/churn-aware step-size controller
+(``schedules.robust_alpha_scale``: alpha scaled by uptime^2 * 2/(2+k))
+on the harshest frontier cell, separating "the run is unstable" from
+"the run just needs a smaller step".
+
+Usage: PYTHONPATH=src python benchmarks/straggler_ehr.py \
+           [--rounds 80] [--q 10] [--out experiments/straggler_ehr.json]
+       PYTHONPATH=src python benchmarks/straggler_ehr.py --smoke  # tiny CI run
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.ehr_mlp import class_weights
+from repro.core import (
+    FLConfig,
+    get_engine,
+    init_fl_state,
+    make_fl_round,
+    mixing_matrix,
+)
+from repro.core.schedules import inv_sqrt, robust_alpha_scale, scaled
+from repro.data.ehr import generate_ehr_cohort, make_node_batcher
+from repro.models.mlp import make_mlp_loss, mlp_balanced_accuracy, mlp_init
+from repro.training.trainer import stack_for_nodes
+
+#: staleness depths swept (0 == the sequential baseline; 1 == pipelined)
+STALENESS_DEPTHS = (0, 1, 2, 4)
+#: straggler fractions swept (0.0 == the homogeneous lockstep baseline)
+STRAGGLER_FRACTIONS = (0.0, 0.25, 0.5)
+STRAGGLER_RATE = 0.5  # a slow node runs half its local steps
+
+
+def run_cell(k: int, frac: float, rounds: int, q: int, seed: int = 0,
+             robust_alpha: bool = False, alpha0: float = 0.01) -> dict:
+    """One (staleness depth, straggler fraction) cell: FD-DSGT, fused
+    engine, hospital graph, equal round budget everywhere."""
+    n = 20
+    data = generate_ehr_cohort(seed=seed)
+    w = mixing_matrix("hospital20", n)
+    batcher = make_node_batcher(data, m=20, seed=seed + 1)
+    params = stack_for_nodes(mlp_init(jax.random.key(seed)), n)
+    cfg = FLConfig(algorithm="dsgt", q=q, n_nodes=n)
+    node_program = (
+        None if frac == 0.0 else
+        f"stragglers:frac={frac},rate={STRAGGLER_RATE},drop=1,seed=0"
+    )
+    engine, state0 = get_engine("fused").simulated(
+        w, params, scale_chunk=512, impl="pallas",
+        round_schedule=("sequential" if k == 0
+                        else f"bounded_staleness:k={k}"),
+        node_program=node_program,
+    )
+    sched = inv_sqrt(alpha0)
+    if robust_alpha:
+        uptime = engine.node_program.expected_uptime()
+        sched = scaled(sched, robust_alpha_scale(uptime, k))
+    loss_fn = make_mlp_loss(class_weights("balanced"))
+    round_fn = jax.jit(
+        make_fl_round(loss_fn, None, sched, cfg, engine=engine)
+    )
+    state = init_fl_state(cfg, state0, engine=engine)
+    m, payload_fracs, compute_fracs = {}, [], []
+    for _ in range(rounds):
+        qs = [next(batcher) for _ in range(q)]
+        batches = jax.tree_util.tree_map(lambda *xs: np.stack(xs), *qs)
+        state, m = round_fn(state, batches)
+        if "payload_fraction" in m:
+            payload_fracs.append(float(m["payload_fraction"]))
+        if "compute_fraction" in m:
+            compute_fracs.append(float(m["compute_fraction"]))
+    consensus = jax.tree_util.tree_map(
+        lambda p: jnp.mean(p, axis=0), engine.params_view(state.params)
+    )
+    xall = jnp.asarray(np.concatenate(data.features))
+    yall = jnp.asarray(np.concatenate(data.labels))
+    return {
+        "staleness_depth": k,
+        "straggler_fraction": frac,
+        "schedule": engine.round_schedule.spec(),
+        "node_program": engine.node_program.spec(),
+        "robust_alpha": bool(robust_alpha),
+        "rounds": rounds,
+        "q": q,
+        "iterations": int(state.step),
+        "bal_acc": float(mlp_balanced_accuracy(consensus, xall, yall)),
+        "final_loss": float(m["loss"]),
+        "consensus_err": float(m["consensus_err"]),
+        "mean_payload_fraction": (
+            float(np.mean(payload_fracs)) if payload_fracs else 1.0
+        ),
+        "mean_compute_fraction": (
+            float(np.mean(compute_fracs)) if compute_fracs else 1.0
+        ),
+    }
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--rounds", type=int, default=80,
+                    help="comm rounds per cell (equal budget everywhere)")
+    ap.add_argument("--q", type=int, default=10)
+    ap.add_argument("--out", default="experiments/straggler_ehr.json")
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny CI run: few rounds, numbers NOT "
+                         "representative -- exercises every cell and the "
+                         "JSON schema")
+    args = ap.parse_args()
+    rounds = 6 if args.smoke else args.rounds
+
+    cells = []
+    for frac in STRAGGLER_FRACTIONS:
+        for k in STALENESS_DEPTHS:
+            cell = run_cell(k, frac, rounds, args.q)
+            cells.append(cell)
+            print(f"k={k} frac={frac:4.2f} "
+                  f"payload~{cell['mean_payload_fraction']:.2f} "
+                  f"compute~{cell['mean_compute_fraction']:.2f} "
+                  f"bal_acc={cell['bal_acc']:.3f} "
+                  f"cons_err={cell['consensus_err']:.2e}")
+
+    # the alpha controller on the harshest frontier cell
+    k_max, frac_max = STALENESS_DEPTHS[-1], STRAGGLER_FRACTIONS[-1]
+    ctrl = run_cell(k_max, frac_max, rounds, args.q, robust_alpha=True)
+    cells.append(ctrl)
+    print(f"k={k_max} frac={frac_max} + robust_alpha "
+          f"bal_acc={ctrl['bal_acc']:.3f} "
+          f"cons_err={ctrl['consensus_err']:.2e}")
+
+    baseline = cells[0]["bal_acc"]  # k=0, homogeneous
+    summary = {}
+    for frac in STRAGGLER_FRACTIONS:
+        summary[f"frac={frac}"] = {
+            f"k={c['staleness_depth']}": {
+                "bal_acc": c["bal_acc"],
+                "bal_acc_delta_vs_lockstep": c["bal_acc"] - baseline,
+            }
+            for c in cells
+            if c["straggler_fraction"] == frac and not c["robust_alpha"]
+        }
+
+    record = {
+        "experiment": "straggler_bounded_staleness_ehr",
+        "cohort": "hospital20 (2103 AD / 7919 MCI, 42 features)",
+        "algorithm": "dsgt (fused engine, int8 wire, class-weighted loss)",
+        "alpha": "0.01/sqrt(r)",
+        "straggler_rate": STRAGGLER_RATE,
+        "smoke": bool(args.smoke),
+        "note": "equal round budget per cell; bounded_staleness:k keeps "
+                "k payloads in flight (the mix is k rounds stale; wire "
+                "bytes per round unchanged -- tools/bench_guard.py), "
+                "stragglers:frac drops that fraction of payloads per "
+                "round AND halves their local steps (masked scan "
+                "iterations of the ONE compiled round; zero recompiles, "
+                "tests/test_heterogeneity.py). Degradation <= 0.02 at "
+                "k <= 4 with 25% stragglers is asserted in "
+                "tests/test_bounded_staleness.py.",
+        "cells": cells,
+        "summary": summary,
+    }
+    os.makedirs(os.path.dirname(args.out), exist_ok=True)
+    with open(args.out, "w") as f:
+        json.dump(record, f, indent=2)
+    print(f"wrote {args.out}")
+
+
+if __name__ == "__main__":
+    main()

@@ -11,6 +11,9 @@ Public API:
                 (node churn, link failure) as the third pluggable round
                 axis (engine = WHAT moves, schedule = WHEN, program =
                 over WHICH graph)
+    heterogeneity — NodeProgram registry: per-node compute rates, payload
+                delays and drops as the fourth pluggable round axis
+                (WHICH nodes keep up), with drop-renormalized mixing
     fl        — FLState + DSGD/DSGT/FD round builders + baselines
     schedules — alpha^r schedules (paper's 0.02/sqrt(r), Theorem 1 rate, ...)
 """
@@ -37,6 +40,7 @@ from repro.core.dynamics import (
     validate_program,
 )
 from repro.core.engine import (
+    BoundedStalenessSchedule,
     FlatEngine,
     FusedEngine,
     GossipEngine,
@@ -52,6 +56,19 @@ from repro.core.engine import (
     register_schedule,
     resolve_schedule,
     schedule_names,
+)
+from repro.core.heterogeneity import (
+    HomogeneousProgram,
+    NodeProgram,
+    PayloadDropProgram,
+    SlowNodesProgram,
+    StragglerProgram,
+    compose_node_gate,
+    get_node_program,
+    node_program_names,
+    parse_node_program,
+    register_node_program,
+    resolve_node_program,
 )
 from repro.core.fl import (
     FLConfig,
@@ -118,6 +135,7 @@ __all__ = [
     "RoundSchedule",
     "SequentialSchedule",
     "PipelinedSchedule",
+    "BoundedStalenessSchedule",
     "register_schedule",
     "get_schedule",
     "schedule_names",
@@ -134,6 +152,17 @@ __all__ = [
     "parse_program",
     "resolve_program",
     "validate_program",
+    "NodeProgram",
+    "HomogeneousProgram",
+    "StragglerProgram",
+    "SlowNodesProgram",
+    "PayloadDropProgram",
+    "compose_node_gate",
+    "register_node_program",
+    "get_node_program",
+    "node_program_names",
+    "parse_node_program",
+    "resolve_node_program",
     "compact_pos_dtype",
     "consensus_params",
     "init_fl_state",

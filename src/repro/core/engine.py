@@ -89,6 +89,12 @@ from repro.core.dynamics import (
     TopologyProgram,
     resolve_program,
 )
+from repro.core.heterogeneity import (
+    HOMOGENEOUS,
+    NodeProgram,
+    compose_node_gate,
+    resolve_node_program,
+)
 from repro.core.fl import (
     FLConfig,
     FLState,
@@ -133,6 +139,7 @@ __all__ = [
     "RoundSchedule",
     "SequentialSchedule",
     "PipelinedSchedule",
+    "BoundedStalenessSchedule",
     "register_schedule",
     "get_schedule",
     "schedule_names",
@@ -168,12 +175,23 @@ class RoundSchedule(abc.ABC):
     """
 
     name: ClassVar[str] = "abstract"
+    #: staleness depth of the mixed neighbor information: 0 for the
+    #: blocking sequential round, 1 for the double-buffered pipelined
+    #: round, k for :class:`BoundedStalenessSchedule` (k in-flight
+    #: payloads, mix against the k-round-stale one)
+    depth: int = 0
 
     @abc.abstractmethod
     def build_round(self, engine: "GossipEngine", eval_grads, schedule,
                     cfg: FLConfig, local_step):
         """Assemble ``round_fn(state, batches) -> (state, metrics)`` from
         the engine's comm machinery and the per-iteration ``local_step``."""
+
+    def spec(self) -> str:
+        """The round-trippable string form (``resolve_schedule(spec)``
+        reconstructs an equivalent schedule) -- what checkpoint manifests
+        record and ``--fl-schedule`` accepts."""
+        return self.name
 
 
 _SCHEDULES: Dict[str, "RoundSchedule"] = {}
@@ -203,13 +221,36 @@ def schedule_names() -> Tuple[str, ...]:
 
 
 def resolve_schedule(rs) -> RoundSchedule:
-    """Accept a registry name, a RoundSchedule instance, or None (the
-    sequential default)."""
+    """Accept a registry name, a parameterized spec string
+    (``"bounded_staleness:k=4"``), a RoundSchedule instance, or None
+    (the sequential default)."""
     if rs is None:
         return _SCHEDULES["sequential"]
     if isinstance(rs, RoundSchedule):
         return rs
-    return get_schedule(rs)
+    name, _, argstr = str(rs).partition(":")
+    base = get_schedule(name)
+    if not argstr:
+        return base
+    kwargs: Dict[str, int] = {}
+    for item in argstr.split(","):
+        k, sep, v = item.partition("=")
+        if not sep:
+            raise ValueError(
+                f"bad schedule spec {rs!r}: expected name:key=value[,...]"
+            )
+        try:
+            kwargs[k.strip()] = int(v)
+        except ValueError:
+            raise ValueError(
+                f"bad schedule spec {rs!r}: {v!r} is not an integer"
+            ) from None
+    try:
+        return type(base)(**kwargs)
+    except TypeError:
+        raise ValueError(
+            f"schedule {name!r} takes no parameters {tuple(kwargs)!r}"
+        ) from None
 
 
 def _require_sequential(round_schedule, name: str) -> RoundSchedule:
@@ -223,21 +264,33 @@ def _require_sequential(round_schedule, name: str) -> RoundSchedule:
     return rs
 
 
-def _assemble_round(cfg, local_step, comm_call, pre_scan=None):
+def _assemble_round(cfg, local_step, comm_call, pre_scan=None,
+                    step_mask=None):
     """The shared round body: optional pre-scan hook (the pipelined
     ingest -- traced FIRST so its collective precedes the scan in the
     jaxpr), (Q-1) local steps under ONE lax.scan, then the comm call.
     ``comm_call(state, batch, aux)`` receives whatever ``pre_scan``
-    returned (None without one)."""
+    returned (None without one). ``step_mask(state) -> (q-1, n)`` is the
+    heterogeneous-compute hook (:meth:`GossipEngine.make_step_mask`): a
+    traced per-node mask over the local-step scan -- straggling nodes
+    run fewer EFFECTIVE iterations as masked updates of the ONE compiled
+    scan, never as a recompile."""
 
     def round_fn(state: FLState, batches: PyTree):
         aux = pre_scan(state) if pre_scan is not None else None
         q = cfg.q
+        mask = step_mask(state) if step_mask is not None else None
         if q > 1:
             local_batches = _tm(lambda b: b[: q - 1], batches)
-            state, local_losses = jax.lax.scan(
-                local_step, state, local_batches
-            )
+            if mask is None:
+                state, local_losses = jax.lax.scan(
+                    local_step, state, local_batches
+                )
+            else:
+                state, local_losses = jax.lax.scan(
+                    lambda c, xs: local_step(c, xs[0], mask=xs[1]),
+                    state, (local_batches, mask),
+                )
         else:
             local_losses = jnp.zeros((0,), jnp.float32)
         comm_batch = _tm(lambda b: b[q - 1], batches)
@@ -247,6 +300,12 @@ def _assemble_round(cfg, local_step, comm_call, pre_scan=None):
             jnp.sum(local_losses) / jnp.maximum(1, q - 1),
             metrics["loss"],
         )
+        if mask is not None:
+            # realized local-step work: masked scan iterations + the comm
+            # step's own update, as a fraction of the homogeneous q * n
+            metrics["compute_fraction"] = (
+                jnp.sum(mask.astype(jnp.float32)) + cfg.n_nodes
+            ) / jnp.float32(q * cfg.n_nodes)
         return state, metrics
 
     return round_fn
@@ -259,11 +318,14 @@ class SequentialSchedule(RoundSchedule):
     the round returns -- every engine supports it."""
 
     name = "sequential"
+    depth = 0
 
     def build_round(self, engine, eval_grads, schedule, cfg, local_step):
         comm_step = engine.make_comm_step(eval_grads, schedule, cfg)
         return _assemble_round(
-            cfg, local_step, lambda state, batch, aux: comm_step(state, batch)
+            cfg, local_step,
+            lambda state, batch, aux: comm_step(state, batch),
+            step_mask=engine.make_step_mask(cfg),
         )
 
 
@@ -290,6 +352,7 @@ class PipelinedSchedule(RoundSchedule):
     """
 
     name = "pipelined"
+    depth = 1
 
     def build_round(self, engine, eval_grads, schedule, cfg, local_step):
         # The ingest collective on the IN-FLIGHT payload is the pre-scan
@@ -299,7 +362,46 @@ class PipelinedSchedule(RoundSchedule):
         ingest, comm_step = engine.make_pipelined_round(
             eval_grads, schedule, cfg
         )
-        return _assemble_round(cfg, local_step, comm_step, pre_scan=ingest)
+        return _assemble_round(cfg, local_step, comm_step, pre_scan=ingest,
+                               step_mask=engine.make_step_mask(cfg))
+
+
+@register_schedule
+class BoundedStalenessSchedule(RoundSchedule):
+    """Depth-k generalization of the pipelined round: k wire payloads
+    ride in flight in ``FLState.comm`` (a ring buffer of
+    ``wire_q`` / ``wire_pos`` / ``wire_scales``), the collective consumes
+    the OLDEST one, and the mix uses k-round-stale neighbor information:
+
+        round r:   mixed_r = w_self*h_r + S_j W_ij recon_j^(r-k)
+
+    -- exactly sequential-with-k-round-delay (tests/test_bounded_staleness
+    proves equality against a hand-written k-delayed oracle), a straggler
+    budget of k rounds before a late payload must be dropped. ``k=1`` IS
+    the pipelined schedule (bit-identical trajectories, same comm-state
+    contract). The staleness price is swept in
+    experiments/straggler_ehr.json; the alpha controller
+    (``core.schedules.robust_alpha_scale``) compensates the slower
+    mixing. Fused engines only, like the pipelined schedule.
+    """
+
+    name = "bounded_staleness"
+
+    def __init__(self, k: int = 1):
+        k = int(k)
+        if k < 1:
+            raise ValueError(f"bounded staleness depth k={k} must be >= 1")
+        self.depth = k
+
+    def spec(self) -> str:
+        return f"{self.name}:k={self.depth}"
+
+    def build_round(self, engine, eval_grads, schedule, cfg, local_step):
+        ingest, comm_step = engine.make_pipelined_round(
+            eval_grads, schedule, cfg
+        )
+        return _assemble_round(cfg, local_step, comm_step, pre_scan=ingest,
+                               step_mask=engine.make_step_mask(cfg))
 
 
 def _check_flat_params(cfg: FLConfig, params: PyTree, name: str) -> None:
@@ -358,32 +460,129 @@ class GossipEngine(abc.ABC):
     #: the comm-state contract and turns the mixing weights into traced
     #: per-round operands of the ONE compiled round function.
     topology_program: TopologyProgram = STATIC
+    #: the engine's :class:`~repro.core.heterogeneity.NodeProgram` -- the
+    #: FOURTH round axis (over WHICH nodes, at WHAT speed): per-round
+    #: traced compute-rate masks for the local-step scan and payload
+    #: drop gates folded into the realized W_r
+    #: (:func:`~repro.core.heterogeneity.compose_node_gate` renormalizes
+    #: the missing weight into the self-loop, so every realized round
+    #: stays symmetric doubly stochastic). Same zero-recompile discipline
+    #: as the topology program: one ``node_key`` in ``FLState.comm``,
+    #: everything per-round is a traced operand of the ONE compiled round.
+    node_program: NodeProgram = HOMOGENEOUS
 
-    # -- dynamic-topology contract -----------------------------------------
+    # -- dynamic-round contract (topology + node programs) -----------------
 
     @property
     def dynamic_topology(self) -> bool:
         return not self.topology_program.is_static
 
-    def _topo_keys(self) -> Tuple[str, ...]:
-        """Comm keys a dynamic program contributes: the program counter
-        (round index the NEXT comm step will mix under) and the program's
-        base RNG key -- both checkpointed, so a mid-churn restore replays
-        the identical graph sequence."""
-        return ("topo_round", "topo_key") if self.dynamic_topology else ()
+    @property
+    def dynamic_nodes(self) -> bool:
+        return not self.node_program.is_static
 
-    @staticmethod
-    def _topo_sds() -> Dict[str, jax.ShapeDtypeStruct]:
-        return {
+    @property
+    def dynamic_round(self) -> bool:
+        """True when ANY per-round traced operand exists (dynamic graph
+        or heterogeneous/faulty nodes) -- the condition that selects the
+        traced-W round layout."""
+        return self.dynamic_topology or self.dynamic_nodes
+
+    def _topo_keys(self) -> Tuple[str, ...]:
+        """Comm keys the dynamic programs contribute: the shared round
+        counter (round index the NEXT comm step will mix under), the
+        topology program's base RNG key + Markov state buffers, and the
+        node program's base RNG key -- all checkpointed, so a mid-churn /
+        mid-outage restore replays the identical fault sequence."""
+        keys: Tuple[str, ...] = ()
+        if self.dynamic_round:
+            keys += ("topo_round",)
+        if self.dynamic_topology:
+            keys += ("topo_key",) + self.topology_program.state_keys()
+        if self.dynamic_nodes:
+            keys += ("node_key",)
+        return keys
+
+    def _topo_sds(self) -> Dict[str, jax.ShapeDtypeStruct]:
+        sds = {
             "topo_round": jax.ShapeDtypeStruct((), jnp.int32),
             "topo_key": jax.ShapeDtypeStruct((2,), jnp.uint32),
+            "node_key": jax.ShapeDtypeStruct((2,), jnp.uint32),
         }
+        sds.update(self.topology_program.state_sds())
+        return sds
 
     def _topo_init(self) -> Dict[str, jnp.ndarray]:
-        return {
+        init = {
             "topo_round": jnp.int32(0),
             "topo_key": jnp.asarray(self.topology_program.init_key()),
+            "node_key": jnp.asarray(self.node_program.init_key()),
         }
+        # jnp.asarray: program init states are eager numpy (jit-safe); a
+        # raw ndarray leaf would cost one extra executable on round 1.
+        init.update({k: jnp.asarray(v)
+                     for k, v in self.topology_program.init_state().items()})
+        return init
+
+    def _static_round_w(self) -> Tuple[jnp.ndarray, jnp.ndarray]:
+        """The engine's compile-time ``(w_off, w_diag)`` as jnp constants
+        -- what :meth:`_round_gates` starts from when the topology is
+        static but a node program gates payloads. Engines that never
+        materialize a dense W reject node programs at build time
+        instead."""
+        raise NotImplementedError(
+            f"the {self.name!r} engine does not expose its static W; "
+            "node programs are unsupported on this build"
+        )
+
+    def _round_gates(self, comm: Dict[str, jnp.ndarray]):
+        """ONE derivation of the round's realized mixing weights from
+        BOTH dynamic axes: the topology program's per-round W (stateful
+        Markov churn advances its up/down state here), then the node
+        program's payload gate folded in by
+        :func:`~repro.core.heterogeneity.compose_node_gate`. Returns
+        ``(w_off_r, w_diag_r, new_comm_entries, metrics)`` -- the per-
+        round W is a traced OPERAND of the one compiled round, the
+        counter/state advance rides in the returned comm entries, and
+        the metrics report the realized edge/payload fractions."""
+        r = comm["topo_round"]
+        new_comm: Dict[str, jnp.ndarray] = {"topo_round": r + 1}
+        metrics: Dict[str, jnp.ndarray] = {}
+        topo = self.topology_program
+        if self.dynamic_topology:
+            key = comm["topo_key"]
+            tstate = {k: comm[k] for k in topo.state_keys()}
+            w_off_r, w_diag_r, tnew = topo.round_weights_state(r, key, tstate)
+            new_comm["topo_key"] = key
+            new_comm.update(tnew)
+            metrics["edge_fraction"] = topo.edge_fraction(w_off_r)
+        else:
+            w_off_r, w_diag_r = self._static_round_w()
+        if self.dynamic_nodes:
+            nkey = comm["node_key"]
+            up = self.node_program.wire_gate(r, nkey)
+            w_off_r, w_diag_r = compose_node_gate(w_off_r, w_diag_r, up)
+            new_comm["node_key"] = nkey
+            metrics["payload_fraction"] = jnp.mean(up.astype(jnp.float32))
+        return w_off_r, w_diag_r, new_comm, metrics
+
+    def make_step_mask(self, cfg: FLConfig):
+        """The heterogeneous-compute hook for ``_assemble_round``: None
+        for homogeneous programs (the scan runs unmasked, zero overhead),
+        else ``step_mask(state) -> (q-1, n)`` traced from the round
+        counter + node key in ``FLState.comm`` -- stragglers run fewer
+        effective local steps as MASKED iterations of the one compiled
+        scan."""
+        prog = self.node_program
+        if not prog.heterogeneous_compute or cfg.q <= 1:
+            return None
+
+        def step_mask(state: FLState) -> jnp.ndarray:
+            return prog.step_gate(
+                state.comm["topo_round"], state.comm["node_key"], cfg.q
+            )
+
+        return step_mask
 
     def mix_dynamic(self, buf: PyTree, w_off_r: jnp.ndarray,
                     w_diag_r: jnp.ndarray) -> PyTree:
@@ -437,18 +636,27 @@ class GossipEngine(abc.ABC):
         comm.update({k: v for k, v in self._topo_init().items() if k in comm})
         return comm
 
-    def local_step(self, params: PyTree, grads: PyTree, alpha) -> PyTree:
+    def local_step(self, params: PyTree, grads: PyTree, alpha,
+                   mask=None) -> PyTree:
         """Eq. 4 in the engine's state representation (works unchanged for
         tree state and for the single-leaf flat buffer). The update is
         computed at the wider of (leaf, fp32) and stored back at the
         leaf's dtype -- bf16 flat storage keeps fp32 only in transient
-        arithmetic, never in the stored buffer."""
-        return _tm(
-            lambda p, g: (
-                p.astype(jnp.float32) - alpha * g.astype(jnp.float32)
-            ).astype(p.dtype),
-            params, grads,
-        )
+        arithmetic, never in the stored buffer. ``mask`` is the node
+        program's (n,) compute gate for this scan iteration: a masked
+        node's update is zeroed (it sits the iteration out) without
+        touching the compiled scan shape."""
+        a = alpha if mask is None else alpha * mask.astype(jnp.float32)
+
+        def upd(p, g):
+            am = a if mask is None else a.reshape(
+                a.shape + (1,) * (p.ndim - 1)
+            )
+            return (
+                p.astype(jnp.float32) - am * g.astype(jnp.float32)
+            ).astype(p.dtype)
+
+        return _tm(upd, params, grads)
 
     def mix(self, buf: PyTree) -> PyTree:
         """Exact-wire W application (theta <- W theta) on the engine's
@@ -521,23 +729,23 @@ class GossipEngine(abc.ABC):
         :meth:`mix_dynamic` -- so ONE compiled round function serves
         every round of the program."""
         wire = self.wire_bytes(cfg)
-        prog = self.topology_program
+        dynamic = self.dynamic_round
 
         def comm_step(state: FLState, batch: PyTree):
             step = state.step + 1
             alpha = schedule(step)
             losses, grads = eval_grads(state.params, batch)
 
-            edge_fraction = None
-            if prog.is_static:
+            gate_metrics: Dict[str, jnp.ndarray] = {}
+            if not dynamic:
                 mix, comm = self.mix, state.comm
             else:
-                r, key = state.comm["topo_round"], state.comm["topo_key"]
-                w_off_r, w_diag_r = prog.round_weights(r, key)
+                w_off_r, w_diag_r, new_entries, gate_metrics = (
+                    self._round_gates(state.comm)
+                )
                 mix = lambda buf: self.mix_dynamic(buf, w_off_r, w_diag_r)
-                edge_fraction = prog.edge_fraction(w_off_r)
                 comm = dict(state.comm)
-                comm["topo_round"] = r + 1
+                comm.update(new_entries)
 
             # adapt at fp32, store back at the state dtype (bf16 flat
             # storage narrows only what is STORED, never the arithmetic)
@@ -574,8 +782,7 @@ class GossipEngine(abc.ABC):
             }
             if wire is not None:
                 metrics["wire_bytes"] = jnp.float32(wire)
-            if edge_fraction is not None:
-                metrics["edge_fraction"] = edge_fraction
+            metrics.update(gate_metrics)
             return new_state, metrics
 
         return comm_step
@@ -646,7 +853,8 @@ class TreeEngine(GossipEngine):
     @classmethod
     def simulated(cls, w: np.ndarray, stacked_params: PyTree, *,
                   wire_dtype=None, topk=None, round_schedule=None,
-                  storage_dtype=None, topology_program=None, **_ignored):
+                  storage_dtype=None, topology_program=None,
+                  node_program=None, **_ignored):
         """Single-host build: dense-W backend; state stays the input tree."""
         _reject_topk(topk, cls.name)
         _require_sequential(round_schedule, cls.name)
@@ -655,18 +863,26 @@ class TreeEngine(GossipEngine):
             topology_program, cls.name,
             "engine bakes W into its tree-level gossip backend",
         )
+        _reject_node_program(
+            node_program, cls.name,
+            "engine bakes W into its tree-level gossip backend",
+        )
         return cls(make_dense_gossip(w, wire_dtype)), stacked_params
 
     @classmethod
     def from_mesh(cls, mesh: Mesh, node_axes: Sequence[str], stacked_sds,
                   *, specs=None, wire_dtype=None, axes_subset=None,
                   topk=None, round_schedule=None, storage_dtype=None,
-                  topology_program=None, **_ignored):
+                  topology_program=None, node_program=None, **_ignored):
         _reject_topk(topk, cls.name)
         _require_sequential(round_schedule, cls.name)
         _reject_storage_dtype(storage_dtype, cls.name)
         _reject_dynamic_program(
             topology_program, cls.name,
+            "engine bakes W into its tree-level gossip backend",
+        )
+        _reject_node_program(
+            node_program, cls.name,
             "engine bakes W into its tree-level gossip backend",
         )
         if specs is None:
@@ -695,16 +911,31 @@ class FlatEngine(GossipEngine):
 
     def __init__(self, mix_fn: Callable[[jnp.ndarray], jnp.ndarray],
                  layout: FlatLayout, *, topology_program=None,
-                 wire_dtype=None):
+                 node_program=None, wire_dtype=None, w=None):
         self._mix = mix_fn
         self.layout = layout
         self.topology_program = resolve_program(topology_program)
+        self.node_program = resolve_node_program(node_program)
         self._wire_dtype = wire_dtype
+        self._w_np = None if w is None else np.asarray(w, dtype=np.float64)
         if self.dynamic_topology and not self.topology_program.bound:
             raise ValueError(
                 "a dynamic FlatEngine needs the program bound to the base "
                 "W (use FlatEngine.simulated, which binds it)"
             )
+        if self.dynamic_nodes:
+            if self._w_np is None:
+                raise ValueError(
+                    "a FlatEngine under a node program needs the dense W "
+                    "(use FlatEngine.simulated, which passes it)"
+                )
+            self.node_program = self.node_program.bind(self._w_np.shape[0])
+
+    def _static_round_w(self) -> Tuple[jnp.ndarray, jnp.ndarray]:
+        _, w_self, w_off = _split_w_np(self._w_np, self._w_np.shape[0])
+        return jnp.asarray(w_off, jnp.float32), jnp.asarray(
+            w_self, jnp.float32
+        )
 
     @property
     def storage_dtype(self):
@@ -735,24 +966,29 @@ class FlatEngine(GossipEngine):
     def simulated(cls, w: np.ndarray, stacked_params: PyTree, *,
                   scale_chunk: int = 1, wire_dtype=None, topk=None,
                   round_schedule=None, storage_dtype=None,
-                  topology_program=None, **_ignored):
+                  topology_program=None, node_program=None, **_ignored):
         _reject_topk(topk, cls.name)
         _require_sequential(round_schedule, cls.name)
         prog = resolve_program(topology_program).bind(w)
         flat, layout = pack(stacked_params, pad_to=scale_chunk,
                             buffer_dtype=storage_dtype or jnp.float32)
         return cls(make_dense_flat_mix(w, wire_dtype), layout,
-                   topology_program=prog, wire_dtype=wire_dtype), flat
+                   topology_program=prog, node_program=node_program,
+                   wire_dtype=wire_dtype, w=w), flat
 
     @classmethod
     def from_mesh(cls, mesh: Mesh, node_axes: Sequence[str], stacked_sds,
                   *, wire_dtype=None, axes_subset=None, scale_chunk: int = 512,
                   topk=None, round_schedule=None, storage_dtype=None,
-                  topology_program=None, **_ignored):
+                  topology_program=None, node_program=None, **_ignored):
         _reject_topk(topk, cls.name)
         _require_sequential(round_schedule, cls.name)
         _reject_dynamic_program(
             topology_program, cls.name,
+            "engine's mesh build mixes through a baked ppermute backend",
+        )
+        _reject_node_program(
+            node_program, cls.name,
             "engine's mesh build mixes through a baked ppermute backend",
         )
         layout = pack_layout(stacked_sds, pad_to=scale_chunk,
@@ -803,6 +1039,20 @@ def _reject_dynamic_program(program, name: str, reason: str) -> TopologyProgram:
     return prog
 
 
+def _reject_node_program(program, name: str, reason: str) -> NodeProgram:
+    """Resolve a node-program spec and refuse non-homogeneous programs
+    on builds that cannot trace per-round gates (same discipline as
+    :func:`_reject_dynamic_program`)."""
+    prog = resolve_node_program(program)
+    if not prog.is_static:
+        raise ValueError(
+            f"node program {prog.spec()!r} needs traced per-round "
+            f"compute/payload gates; the {name!r} {reason} -- use the "
+            "'flat' (simulated), 'fused', or 'sharded_fused' engine"
+        )
+    return prog
+
+
 def _reject_storage_dtype(storage_dtype, name: str) -> None:
     if storage_dtype is not None and jnp.dtype(storage_dtype) != jnp.float32:
         raise ValueError(
@@ -841,7 +1091,8 @@ class _FusedBase(GossipEngine):
     def __init__(self, layout: FlatLayout, *, scale_chunk: int = 512,
                  topk: Optional[int] = None, error_feedback: bool = True,
                  difference_coding: bool = True, impl: str = "pallas",
-                 round_schedule=None, topology_program=None):
+                 round_schedule=None, topology_program=None,
+                 node_program=None):
         if impl not in ("pallas", "jnp"):
             raise ValueError(f"unknown impl {impl!r}")
         if scale_chunk < 1:
@@ -863,21 +1114,59 @@ class _FusedBase(GossipEngine):
         self.impl = impl
         self.round_schedule = resolve_schedule(round_schedule)
         self.topology_program = resolve_program(topology_program)
+        self.node_program = resolve_node_program(node_program)
 
     @property
     def pipelined(self) -> bool:
-        return self.round_schedule.name == "pipelined"
+        """True for every non-blocking schedule (depth >= 1): the round
+        splits into produce / collective / stale mix."""
+        return self.round_schedule.depth >= 1
 
-    def _round_topology(self, comm: Dict[str, jnp.ndarray]):
-        """The dynamic round's traced mixing weights for the fused
-        kernels: ``(w_off_r (n, n), w_self_r (n,), new_comm,
-        edge_fraction)`` -- the per-round W is a kernel OPERAND, the
-        counter advance rides in the returned comm dict."""
-        prog = self.topology_program
-        r, key = comm["topo_round"], comm["topo_key"]
-        w_off_r, w_diag_r = prog.round_weights(r, key)
-        new_comm = {"topo_round": r + 1, "topo_key": key}
-        return w_off_r, w_diag_r, new_comm, prog.edge_fraction(w_off_r)
+    @property
+    def staleness_depth(self) -> int:
+        return self.round_schedule.depth
+
+    def _static_w_np(self) -> np.ndarray:
+        """The engine's compile-time dense W (the fused engine's ``w``,
+        the sharded engine's dense equivalent)."""
+        raise NotImplementedError
+
+    def _static_round_w(self) -> Tuple[jnp.ndarray, jnp.ndarray]:
+        w = self._static_w_np()
+        _, w_self, w_off = _split_w_np(w, w.shape[0])
+        return jnp.asarray(w_off, jnp.float32), jnp.asarray(
+            w_self, jnp.float32
+        )
+
+    # -- depth-k ring-buffer helpers ---------------------------------------
+    #
+    # Ring convention (both fused engines): slot 0 is the OLDEST in-flight
+    # payload, slot -1 the newest. The consumer reads slot 0; the producer
+    # appends at the end, dropping the consumed slot -- one concatenate on
+    # the leading-(n) comm buffers, no collective touches more than ONE
+    # slot per round (the wire-byte invariant tools/bench_guard.py guards).
+
+    def _ring_slot0(self, comm: Dict[str, jnp.ndarray],
+                    keys: Sequence[str]) -> Tuple[jnp.ndarray, ...]:
+        """The oldest in-flight payload's buffers: the (n, width) buffers
+        themselves at depth 1 (the pipelined double-buffer layout,
+        unchanged), the ``[:, 0]`` ring slice at depth >= 2."""
+        if self.staleness_depth <= 1:
+            return tuple(comm[k] for k in keys)
+        return tuple(comm[k][:, 0] for k in keys)
+
+    def _push_wire(self, old_comm: Dict[str, jnp.ndarray],
+                   comm: Dict[str, jnp.ndarray], keys: Sequence[str],
+                   vals: Sequence[jnp.ndarray]) -> None:
+        """Store this round's produced payload: replace at depth 1, ring
+        push (drop slot 0, append at the end) at depth >= 2."""
+        if self.staleness_depth <= 1:
+            comm.update(zip(keys, vals))
+            return
+        for k, v in zip(keys, vals):
+            comm[k] = jnp.concatenate(
+                [old_comm[k][:, 1:], v[:, None]], axis=1
+            )
 
     def check_params(self, cfg: FLConfig, params: PyTree) -> None:
         _check_flat_params(cfg, params, self.name)
@@ -921,18 +1210,63 @@ class FusedEngine(_FusedBase):
         # binding validates per-round Assumption 1 over a sample of the
         # program's emitted rounds (core.dynamics.validate_program)
         self.topology_program.bind(self.w)
+        self.node_program = self.node_program.bind(self.w.shape[0])
+
+    def _static_w_np(self) -> np.ndarray:
+        return self.w
+
+    def _ring_depth(self) -> int:
+        """Ring slots the DENSE engine needs for depth-k staleness: its
+        recon buffer already lags the mix by construction (the ``k=1``
+        ``stale_mix`` kernel needs ZERO extra buffers), so with
+        difference coding the k-round-stale reconstruction is recovered
+        by subtracting the last k-1 in-flight payloads from recon
+        (``recon^(r-1) - sum dq^(r-1..r-k+1) == recon^(r-k)`` exactly);
+        without difference coding recon IS the last payload, so the ring
+        holds k and the mix reads the oldest slot."""
+        k = self.staleness_depth
+        if k <= 1:
+            return 0
+        return k - 1 if self.difference_coding else k
 
     def comm_keys(self, cfg: FLConfig) -> Tuple[str, ...]:
         keys = ("recon", "residual")
+        if self._ring_depth():
+            keys += ("wire_q", "wire_scales")
         if cfg.algorithm == "dsgt":
             keys += ("recon_t", "residual_t")
+            if self._ring_depth():
+                keys += ("wire_q_t", "wire_scales_t")
         return keys + self._topo_keys()
+
+    def comm_state_sds(
+        self, cfg: FLConfig
+    ) -> Optional[Dict[str, jax.ShapeDtypeStruct]]:
+        n, t = cfg.n_nodes, self.layout.total
+        rd = self._ring_depth()
+        topo = self._topo_sds()
+
+        def buf(key):
+            if key in topo:
+                return topo[key]
+            if key.startswith("wire_q"):
+                return jax.ShapeDtypeStruct((n, rd, t), jnp.int8)
+            if key.startswith("wire_scales"):
+                return jax.ShapeDtypeStruct(
+                    (n, rd, t // self.scale_chunk), jnp.float32
+                )
+            return jax.ShapeDtypeStruct((n, t), jnp.float32)
+
+        keys = self.comm_keys(cfg)
+        return {k: buf(k) for k in keys} or None
 
     def wire_bytes(self, cfg: FLConfig) -> float:
         wires = 2 if cfg.algorithm == "dsgt" else 1
         return float(wires * _degrees(self.w).sum() * self._edge_bytes())
 
     def make_comm_step(self, eval_grads, schedule, cfg: FLConfig):
+        if self._ring_depth():
+            return self._make_bounded_comm_step(eval_grads, schedule, cfg)
         _, w_self, w_off = _split_w_np(self.w, cfg.n_nodes)
         if self.impl == "pallas":
             from repro.kernels.gossip.ops import fused_round, fused_round_gt
@@ -945,10 +1279,11 @@ class FusedEngine(_FusedBase):
         # INPUT recon -- which IS the neighbor reconstruction as of the
         # end of the previous round -- so the dense engine needs no extra
         # in-flight buffers: it is the exact single-host oracle of the
-        # sharded pipelined round.
+        # sharded pipelined round. (Bounded staleness at k=1 lands here
+        # too -- it IS the pipelined round, bit-identically.)
         kw = dict(self._kernel_kwargs(), stale_mix=self.pipelined)
         egress = self.wire_bytes(cfg)
-        dynamic = self.dynamic_topology
+        dynamic = self.dynamic_round
 
         def comm_step(state: FLState, batch: PyTree):
             if state.comm is None:
@@ -960,13 +1295,14 @@ class FusedEngine(_FusedBase):
             losses, grads = eval_grads(state.params, batch)
             grads = grads.astype(jnp.float32)
 
-            # Dynamic topology: the kernels already take (w_off, w_self)
-            # as runtime operands, so the per-round W is simply the traced
-            # program output -- same kernel, same compilation, all rounds.
-            edge_fraction = None
+            # Dynamic topology / node gates: the kernels already take
+            # (w_off, w_self) as runtime operands, so the per-round
+            # realized W is simply the traced program output -- same
+            # kernel, same compilation, all rounds.
+            gate_metrics: Dict[str, jnp.ndarray] = {}
             if dynamic:
-                w_off_r, w_self_r, topo_comm, edge_fraction = (
-                    self._round_topology(state.comm)
+                w_off_r, w_self_r, topo_comm, gate_metrics = (
+                    self._round_gates(state.comm)
                 )
             else:
                 w_off_r, w_self_r, topo_comm = w_off, w_self, {}
@@ -1002,8 +1338,125 @@ class FusedEngine(_FusedBase):
                 "wire_bytes": jnp.float32(egress),
                 "ef_residual_rms": self._residual_rms(new_state.comm),
             }
-            if edge_fraction is not None:
-                metrics["edge_fraction"] = edge_fraction
+            metrics.update(gate_metrics)
+            return new_state, metrics
+
+        return comm_step
+
+    def _make_bounded_comm_step(self, eval_grads, schedule, cfg: FLConfig):
+        """The depth-k (k >= 2) round: the wire stage runs unchanged (ONE
+        Pallas call -- same kernel the sharded engine's shards run), the
+        mix contracts W against the k-round-STALE reconstruction
+        recovered from the in-flight ring (see :meth:`_ring_depth`), and
+        this round's payload is pushed onto the ring. Proven equal to the
+        hand-written k-delayed sequential oracle in
+        tests/test_bounded_staleness.py."""
+        _, w_self, w_off = _split_w_np(self.w, cfg.n_nodes)
+        if self.impl == "pallas":
+            from repro.kernels.gossip.ops import wire_stage, wire_stage_gt
+        else:
+            from repro.kernels.gossip.ref import (
+                wire_stage_gt_ref as wire_stage_gt,
+                wire_stage_ref as wire_stage,
+            )
+        kw = self._kernel_kwargs()
+        egress = self.wire_bytes(cfg)
+        dynamic = self.dynamic_round
+        dc = self.difference_coding
+        chunk = self.scale_chunk
+        w_off32 = jnp.asarray(w_off, jnp.float32)
+        w_self32 = jnp.asarray(w_self, jnp.float32)
+
+        def stale_recon(recon, wq, wsc):
+            """recon^(r-k) from recon^(r-1) and the ring (difference
+            coding), or the oldest in-flight payload directly (no
+            difference coding: recon IS the payload)."""
+            if not dc:
+                return _dequant(wq[:, 0], wsc[:, 0], chunk)
+            mix = recon
+            for j in range(wq.shape[1]):
+                mix = mix - _dequant(wq[:, j], wsc[:, j], chunk)
+            return mix
+
+        def push(wq, wsc, q, sc):
+            return (
+                jnp.concatenate([wq[:, 1:], q[:, None]], axis=1),
+                jnp.concatenate([wsc[:, 1:], sc[:, None]], axis=1),
+            )
+
+        def comm_step(state: FLState, batch: PyTree):
+            if state.comm is None:
+                raise ValueError(
+                    "fused rounds need init_fl_state(..., engine=...)"
+                )
+            step = state.step + 1
+            alpha = schedule(step)
+            losses, grads = eval_grads(state.params, batch)
+            grads = grads.astype(jnp.float32)
+            alpha32 = jnp.asarray(alpha, jnp.float32)
+
+            gate_metrics: Dict[str, jnp.ndarray] = {}
+            if dynamic:
+                w_off_r, w_self_r, topo_comm, gate_metrics = (
+                    self._round_gates(state.comm)
+                )
+                w_off_r = jnp.asarray(w_off_r, jnp.float32)
+                w_self_r = jnp.asarray(w_self_r, jnp.float32)
+            else:
+                w_off_r, w_self_r, topo_comm = w_off32, w_self32, {}
+
+            c = state.comm
+            if cfg.algorithm == "dsgd":
+                h, q, sc, nrecon, nres = wire_stage(
+                    state.params, grads, c["recon"], c["residual"],
+                    alpha32, **kw,
+                )
+                mix = stale_recon(c["recon"], c["wire_q"], c["wire_scales"])
+                mixed = w_off_r @ mix + w_self_r[:, None] * h
+                nwq, nwsc = push(c["wire_q"], c["wire_scales"], q, sc)
+                new_state = state._replace(
+                    step=step, params=mixed,
+                    comm={"recon": nrecon, "residual": nres,
+                          "wire_q": nwq, "wire_scales": nwsc, **topo_comm},
+                )
+            else:
+                (h, t_half, qx, scx, nrx, nsx, qt, sct, nrt, nst) = (
+                    wire_stage_gt(
+                        state.params, state.tracker, grads, state.prev_grad,
+                        c["recon"], c["residual"], c["recon_t"],
+                        c["residual_t"], alpha32, **kw,
+                    )
+                )
+                mix_x = stale_recon(c["recon"], c["wire_q"], c["wire_scales"])
+                mix_t = stale_recon(
+                    c["recon_t"], c["wire_q_t"], c["wire_scales_t"]
+                )
+                mixed_x = w_off_r @ mix_x + w_self_r[:, None] * h
+                mixed_t = w_off_r @ mix_t + w_self_r[:, None] * t_half
+                nwq, nwsc = push(c["wire_q"], c["wire_scales"], qx, scx)
+                nwqt, nwsct = push(
+                    c["wire_q_t"], c["wire_scales_t"], qt, sct
+                )
+                new_state = FLState(
+                    step=step, params=mixed_x, tracker=mixed_t,
+                    prev_grad=grads,
+                    comm={"recon": nrx, "residual": nsx,
+                          "recon_t": nrt, "residual_t": nst,
+                          "wire_q": nwq, "wire_scales": nwsc,
+                          "wire_q_t": nwqt, "wire_scales_t": nwsct,
+                          **topo_comm},
+                )
+
+            metrics = {
+                "loss": jnp.mean(losses),
+                "alpha": alpha,
+                "grad_norm_sq": _mean_grad_norm_sq(grads),
+                "consensus_err": _consensus_error(new_state.params),
+                "comm_rounds": jnp.float32(1.0),
+                "wire_bytes": jnp.float32(egress),
+                "ef_residual_rms": self._residual_rms(new_state.comm),
+            }
+            metrics.update(gate_metrics)
             return new_state, metrics
 
         return comm_step
@@ -1025,7 +1478,7 @@ class FusedEngine(_FusedBase):
                   scale_chunk: int = 512, topk=None, impl: str = "pallas",
                   error_feedback: bool = True, difference_coding: bool = True,
                   wire_dtype=None, round_schedule=None, storage_dtype=None,
-                  topology_program=None, **_ignored):
+                  topology_program=None, node_program=None, **_ignored):
         _reject_wire_dtype(wire_dtype)
         _reject_storage_dtype(storage_dtype, cls.name)
         flat, layout = pack(stacked_params, pad_to=scale_chunk)
@@ -1033,7 +1486,8 @@ class FusedEngine(_FusedBase):
                    error_feedback=error_feedback,
                    difference_coding=difference_coding,
                    round_schedule=round_schedule,
-                   topology_program=topology_program), flat
+                   topology_program=topology_program,
+                   node_program=node_program), flat
 
     @classmethod
     def from_mesh(cls, mesh: Mesh, node_axes: Sequence[str], stacked_sds,
@@ -1041,7 +1495,7 @@ class FusedEngine(_FusedBase):
                   topk=None, impl: str = "jnp", error_feedback: bool = True,
                   difference_coding: bool = True, self_weight=None,
                   round_schedule=None, storage_dtype=None,
-                  topology_program=None, **_ignored):
+                  topology_program=None, node_program=None, **_ignored):
         """Mesh build: W is the dense equivalent of the circulant torus the
         ppermute backend realizes over the node axes (directions restricted
         to ``axes_subset`` for hierarchical gossip). ``impl`` defaults to
@@ -1057,7 +1511,8 @@ class FusedEngine(_FusedBase):
                    error_feedback=error_feedback,
                    difference_coding=difference_coding,
                    round_schedule=round_schedule,
-                   topology_program=topology_program)
+                   topology_program=topology_program,
+                   node_program=node_program)
 
 
 @register_engine
@@ -1165,24 +1620,20 @@ class ShardedFusedEngine(_FusedBase):
                 )
             self.w_dense = w
             self.w_self, self.dirs = None, None
-        if self.dynamic_topology:
-            # Dynamic programs gate the CIRCULANT wire: the ppermutes run
-            # every round unchanged (zero extra collectives) and a dropped
-            # link only zeroes its mixing contribution; the running
-            # neighbor term generalizes from ONE pre-weighted mix_recon to
-            # one UNWEIGHTED accumulator per torus direction (each tracks
-            # that neighbor's reconstruction exactly), weighted per round
-            # by the program's traced gate. The dense all-gather wire has
-            # no per-direction structure to gate -- use 'fused' there.
-            if self.dirs is None:
-                raise ValueError(
-                    f"topology program "
-                    f"{self.topology_program.spec()!r} on the sharded "
-                    "engine needs the circulant ppermute wire (w=None); "
-                    "for an arbitrary dense W under churn use the 'fused' "
-                    "engine"
-                )
+        # Dynamic programs gate EITHER wire with zero extra collectives:
+        # on the CIRCULANT wire the ppermutes run every round unchanged
+        # and a dropped link only zeroes its mixing contribution -- the
+        # running neighbor term generalizes from ONE pre-weighted
+        # mix_recon to one UNWEIGHTED accumulator per torus direction
+        # (each tracks that neighbor's reconstruction exactly), weighted
+        # per round by the program's traced gate. On the DENSE all-gather
+        # wire every dq already reaches every node, so each node keeps an
+        # unweighted replica of ALL reconstructions (``nbr_recon_all``,
+        # (n, t) per node -- n x the per-node memory of the circulant
+        # accumulators, the price of an arbitrary dense W under churn)
+        # and contracts its traced W_r row against it at mix time.
         self.topology_program.bind(self.dense_equivalent())
+        self.node_program = self.node_program.bind(self.n_nodes)
         # per-direction sender index: node i receives from _dir_src[d][i]
         # (row-major node order, identical to dense_equivalent)
         self._dir_src: Tuple[np.ndarray, ...] = ()
@@ -1224,21 +1675,25 @@ class ShardedFusedEngine(_FusedBase):
         return tuple(n + suffix for n in names)
 
     def _nbr_key_names(self, suffix: str = "") -> Tuple[str, ...]:
-        """Dynamic-topology accumulators: one per torus direction, each
-        tracking THAT neighbor's reconstruction (sum of every dq that
-        crossed from it). Replaces the single pre-weighted ``mix_recon``
-        -- under a per-round W the weights cannot be folded into the
-        running sum, so the weighting moves to mix time (the traced
-        gate). Present only with difference coding (without it the mix
-        term is rebuilt from the current round's wire alone)."""
-        if not (self.dynamic_topology and self.difference_coding):
+        """Dynamic-round accumulators: one per torus direction on the
+        circulant wire, each tracking THAT neighbor's reconstruction (sum
+        of every dq that crossed from it), or ONE all-node replica
+        (``nbr_recon_all``, (n, n, t) sharded by receiver) on the dense
+        all-gather wire. Both replace the single pre-weighted
+        ``mix_recon`` -- under a per-round W the weights cannot be folded
+        into the running sum, so the weighting moves to mix time (the
+        traced gate). Present only with difference coding (without it the
+        mix term is rebuilt from the current round's wire alone)."""
+        if not (self.dynamic_round and self.difference_coding):
             return ()
+        if self.dirs is None:
+            return ("nbr_recon_all" + suffix,)
         return tuple(
             f"nbr_recon_{d}{suffix}" for d in range(len(self.dirs))
         )
 
     def comm_keys(self, cfg: FLConfig) -> Tuple[str, ...]:
-        if self.dynamic_topology:
+        if self.dynamic_round:
             keys = ("recon", "residual") + self._nbr_key_names("")
             if self.pipelined:
                 keys += self._wire_key_names("")
@@ -1263,23 +1718,30 @@ class ShardedFusedEngine(_FusedBase):
         n_chunks = t // self.scale_chunk
         pos_dtype = compact_pos_dtype(self.scale_chunk)
         topo = self._topo_sds()
+        # depth-k rings carry k in-flight payloads per wire buffer: a
+        # (n, k, width) middle axis. Depth 1 keeps the flat pipelined
+        # (n, width) layout (same contract as before, bit-compatible
+        # checkpoints).
+        k = self.staleness_depth
+
+        def ring(width, dtype):
+            shape = (n, width) if k <= 1 else (n, k, width)
+            return jax.ShapeDtypeStruct(shape, dtype)
 
         def buf(key):
             if key in topo:
                 return topo[key]
             if key.startswith("wire_q"):
                 width = n_chunks * self.topk if self.compact_wire else t
-                return jax.ShapeDtypeStruct((n, width), jnp.int8)
+                return ring(width, jnp.int8)
             if key.startswith("wire_pos"):
-                return jax.ShapeDtypeStruct(
-                    (n, n_chunks * self.topk), pos_dtype
-                )
+                return ring(n_chunks * self.topk, pos_dtype)
             if key.startswith("wire_bits"):
-                return jax.ShapeDtypeStruct(
-                    (n, n_chunks * (self.scale_chunk // 8)), jnp.uint8
-                )
+                return ring(n_chunks * (self.scale_chunk // 8), jnp.uint8)
             if key.startswith("wire_scales"):
-                return jax.ShapeDtypeStruct((n, n_chunks), jnp.float32)
+                return ring(n_chunks, jnp.float32)
+            if key.startswith("nbr_recon_all"):
+                return jax.ShapeDtypeStruct((n, n, t), jnp.float32)
             return jax.ShapeDtypeStruct((n, t), jnp.float32)
 
         keys = self.comm_keys(cfg)
@@ -1361,24 +1823,41 @@ class ShardedFusedEngine(_FusedBase):
         comm = dict(comm)
 
         def effective_recon(recon_key: str, suffix: str) -> jnp.ndarray:
+            """recon minus EVERY in-flight payload: the sender has
+            advanced recon by k payloads its neighbors have not mixed
+            yet, so the neighbor-visible reconstruction subtracts the
+            whole ring (one buffer at depth 1)."""
             recon = jnp.asarray(comm[recon_key], jnp.float32)
             names = self._wire_key_names(suffix)
             if self.pipelined and all(k in comm for k in names):
-                recon = recon - self._dq_full(
-                    tuple(jnp.asarray(comm[k]) for k in names)
-                )
+                bufs = tuple(jnp.asarray(comm[k]) for k in names)
+                if self.staleness_depth <= 1:
+                    recon = recon - self._dq_full(bufs)
+                else:
+                    for j in range(self.staleness_depth):
+                        recon = recon - self._dq_full(
+                            tuple(b[:, j] for b in bufs)
+                        )
             return recon
 
-        if self.dynamic_topology:
+        if self.dynamic_round:
             # per-direction accumulators are DERIVED the same way
             # mix_recon is: nbr_recon_d[i] tracks neighbor src_d(i)'s
             # reconstruction at the same wire lag, i.e. a row permutation
-            # of the (restored) full recon matrix
+            # of the (restored) full recon matrix; the dense wire's
+            # nbr_recon_all[i] is every node's replica of the SAME matrix
             def rebuild(suffix: str) -> None:
                 eff = effective_recon(
                     "recon" + suffix, suffix
                 )
-                for d, name in enumerate(self._nbr_key_names(suffix)):
+                names = self._nbr_key_names(suffix)
+                if self.dirs is None:
+                    for name in names:
+                        comm[name] = jnp.broadcast_to(
+                            eff[None], (self.n_nodes,) + eff.shape
+                        )
+                    return
+                for d, name in enumerate(names):
                     comm[name] = eff[self._dir_src[d]]
 
             rebuild("")
@@ -1445,20 +1924,22 @@ class ShardedFusedEngine(_FusedBase):
 
     def _dir_gates(self, comm: Dict[str, jnp.ndarray]):
         """The round's traced per-direction mixing weights, derived
-        OUTSIDE the shard_map (tiny (n, n) arithmetic): ``dgate (n, D)``
-        where ``dgate[i, d] = W_r[i, src_d(i)]`` (zero when the link is
-        down), ``ddiag (n, 1)`` the folded self weights, the advanced
-        topo comm entries, and the edge_fraction metric."""
-        prog = self.topology_program
-        r, key = comm["topo_round"], comm["topo_key"]
-        w_off_r, w_diag_r = prog.round_weights(r, key)
+        OUTSIDE the shard_map (tiny (n, n) arithmetic) from BOTH dynamic
+        axes via :meth:`_round_gates`: ``dgate (n, D)`` where
+        ``dgate[i, d] = W_r[i, src_d(i)]`` (zero when the link or either
+        endpoint is down), ``ddiag (n, 1)`` the folded self weights, the
+        advanced topo/node comm entries, and the realized-fraction
+        metrics."""
+        w_off_r, w_diag_r, new_comm, gate_metrics = self._round_gates(comm)
         ar = jnp.arange(self.n_nodes)
         dgate = jnp.stack(
             [w_off_r[ar, jnp.asarray(src)] for src in self._dir_src], axis=1
         ).astype(jnp.float32)
         ddiag = w_diag_r.reshape(self.n_nodes, 1).astype(jnp.float32)
-        topo_comm = {"topo_round": r + 1, "topo_key": key}
-        return dgate, ddiag, topo_comm, prog.edge_fraction(w_off_r)
+        return dgate, ddiag, new_comm, gate_metrics
+
+    def _static_w_np(self) -> np.ndarray:
+        return self.dense_equivalent()
 
     def _make_produce(self):
         """The wire-stage kernels (compact or dense epilogue), normalized
@@ -1589,6 +2070,10 @@ class ShardedFusedEngine(_FusedBase):
         against per-direction neighbor-recon accumulators. Returns
         ``(ingest_or_None, comm_step(state, batch, stale))``."""
         self._round_constants(cfg)  # shape validation only
+        if self.dirs is None:
+            return self._make_dynamic_round_dense(
+                eval_grads, schedule, cfg, pipelined
+            )
         produce, produce_gt = self._make_produce()
         egress = self.wire_bytes(cfg)
         spec = P(self.node_axes, None)
@@ -1660,12 +2145,14 @@ class ShardedFusedEngine(_FusedBase):
                         "engine=...) with the pipelined engine (in-flight "
                         "wire buffers)"
                     )
+                # the collective consumes the OLDEST ring slot only --
+                # k in-flight payloads never multiply the operand bytes
                 stale = {"dqs": sm_ingest(
-                    *[state.comm[k] for k in wire_keys]
+                    *self._ring_slot0(state.comm, wire_keys)
                 )}
                 if cfg.algorithm == "dsgt":
                     stale["dqs_t"] = sm_ingest(
-                        *[state.comm[k] for k in wire_keys_t]
+                        *self._ring_slot0(state.comm, wire_keys_t)
                     )
                 return stale
 
@@ -1679,7 +2166,7 @@ class ShardedFusedEngine(_FusedBase):
             losses, grads = eval_grads(state.params, batch)
             grads = grads.astype(jnp.float32)
             alpha32 = jnp.asarray(alpha, jnp.float32)
-            dgate, ddiag, topo_comm, edge_fraction = self._dir_gates(
+            dgate, ddiag, topo_comm, gate_metrics = self._dir_gates(
                 state.comm
             )
             adds = tuple(stale["dqs"]) if pipelined else ()
@@ -1694,7 +2181,10 @@ class ShardedFusedEngine(_FusedBase):
                 mixed, nrecon, nres = outs[:3]
                 comm = {"recon": nrecon, "residual": nres, **topo_comm}
                 # output order == key order by construction of the bodies
-                comm.update(zip(nbr_keys + wire_keys, outs[3:]))
+                comm.update(zip(nbr_keys, outs[3:3 + nnbr]))
+                self._push_wire(
+                    state.comm, comm, wire_keys, outs[3 + nnbr:]
+                )
                 new_state = state._replace(step=step, params=mixed, comm=comm)
             else:
                 adds_t = tuple(stale["dqs_t"]) if pipelined else ()
@@ -1710,9 +2200,12 @@ class ShardedFusedEngine(_FusedBase):
                 comm = {"recon": nrx, "residual": nsx,
                         "recon_t": nrt, "residual_t": nst, **topo_comm}
                 comm.update(zip(
-                    nbr_keys + nbr_keys_t + wire_keys + wire_keys_t,
-                    outs[6:],
+                    nbr_keys + nbr_keys_t, outs[6:6 + 2 * nnbr]
                 ))
+                self._push_wire(
+                    state.comm, comm, wire_keys + wire_keys_t,
+                    outs[6 + 2 * nnbr:],
+                )
                 new_state = FLState(
                     step=step, params=mx, tracker=mt, prev_grad=grads,
                     comm=comm,
@@ -1721,10 +2214,163 @@ class ShardedFusedEngine(_FusedBase):
             metrics = self._metrics(
                 cfg, losses, grads, alpha, new_state, egress
             )
-            metrics["edge_fraction"] = edge_fraction
+            metrics.update(gate_metrics)
             return new_state, metrics
 
         return ingest, comm_step
+
+    def _make_dynamic_round_dense(self, eval_grads, schedule, cfg: FLConfig,
+                                  pipelined: bool):
+        """Dynamic round on the DENSE all-gather wire: the same ONE
+        all-gather per wire buffer as the static dense path (a dynamic
+        program adds zero collectives), but the pre-weighted ``mix_recon``
+        accumulator -- impossible under a per-round W -- is replaced by
+        ``nbr_recon_all``: every dq reaches every node anyway, so each
+        node keeps an UNWEIGHTED (n, t) replica of all reconstructions
+        and contracts its traced W_r row against it at mix time
+        (``mix_i = W_r[i] @ nbr_recon_all_i``). Pipelined/bounded rounds
+        gather the ring's OLDEST in-flight payload inside the comm body
+        (the dense wire has no separate pre-scan collective) and push
+        this round's payload onto the ring."""
+        produce, produce_gt = self._make_produce()
+        egress = self.wire_bytes(cfg)
+        spec = P(self.node_axes, None)
+        spec3 = P(self.node_axes, None, None)
+        dc = self.difference_coding
+        n = self.n_nodes
+        nbr_keys = self._nbr_key_names("")
+        nbr_keys_t = self._nbr_key_names("_t")
+        nnbr = len(nbr_keys)  # 1 with difference coding, else 0
+        wire_keys = self._wire_key_names("") if pipelined else ()
+        wire_keys_t = self._wire_key_names("_t") if pipelined else ()
+        n_wire = len(wire_keys)
+        n_stale = n_wire if pipelined else 0
+
+        def gather_dq(wire):
+            """ONE all-gather per wire buffer -> every node's dense dq."""
+            gathered = tuple(
+                jax.lax.all_gather(
+                    b[0], self.node_axes, tiled=False
+                ).reshape(n, -1)
+                for b in wire
+            )
+            return self._dq_full(gathered)
+
+        def mix_one(wire, stale_wire, nbr, w_row):
+            dq = gather_dq(stale_wire if pipelined else wire)
+            new_all = (nbr[0] + dq) if dc else dq  # (n, t)
+            mix = (w_row[0] @ new_all)[None]
+            return mix, ((new_all[None],) if dc else ())
+
+        def body(x, g, recon, res, *rest):
+            nbrs = rest[:nnbr]
+            stale_wire = rest[nnbr:nnbr + n_stale]
+            w_row, ddiag, alpha = rest[nnbr + n_stale:]
+            h, wire, nrecon, nres = produce(x, g, recon, res, alpha)
+            mix, new_nbr = mix_one(wire, stale_wire, nbrs[0] if dc else None,
+                                   w_row)
+            out = (ddiag * h + mix, nrecon, nres) + new_nbr
+            return out + (wire if pipelined else ())
+
+        def body_gt(x, t, g, gp, rx, sx, rt, st, *rest):
+            nbrs_x = rest[:nnbr]
+            nbrs_t = rest[nnbr:2 * nnbr]
+            stale_x = rest[2 * nnbr:2 * nnbr + n_stale]
+            stale_t = rest[2 * nnbr + n_stale:2 * nnbr + 2 * n_stale]
+            w_row, ddiag, alpha = rest[2 * nnbr + 2 * n_stale:]
+            (h, t_half, wire_x, nrx, nsx, wire_t, nrt, nst) = produce_gt(
+                x, t, g, gp, rx, sx, rt, st, alpha
+            )
+            mix_x, new_x = mix_one(wire_x, stale_x,
+                                   nbrs_x[0] if dc else None, w_row)
+            mix_t, new_t = mix_one(wire_t, stale_t,
+                                   nbrs_t[0] if dc else None, w_row)
+            out = ((ddiag * h + mix_x, ddiag * t_half + mix_t,
+                    nrx, nsx, nrt, nst) + new_x + new_t)
+            return out + ((wire_x + wire_t) if pipelined else ())
+
+        sm_dsgd = _shard_map(
+            body, mesh=self.mesh,
+            in_specs=(spec,) * 4 + (spec3,) * nnbr + (spec,) * n_stale
+            + (spec, spec, P()),
+            out_specs=(spec,) * 3 + (spec3,) * nnbr + (spec,) * n_wire,
+        )
+        sm_dsgt = _shard_map(
+            body_gt, mesh=self.mesh,
+            in_specs=(spec,) * 8 + (spec3,) * 2 * nnbr
+            + (spec,) * 2 * n_stale + (spec, spec, P()),
+            out_specs=(spec,) * 6 + (spec3,) * 2 * nnbr
+            + (spec,) * 2 * n_wire,
+        )
+
+        def comm_step(state: FLState, batch: PyTree, stale):
+            if state.comm is None:
+                raise ValueError(
+                    "fused rounds need init_fl_state(..., engine=...)"
+                )
+            step = state.step + 1
+            alpha = schedule(step)
+            losses, grads = eval_grads(state.params, batch)
+            grads = grads.astype(jnp.float32)
+            alpha32 = jnp.asarray(alpha, jnp.float32)
+            w_off_r, w_diag_r, topo_comm, gate_metrics = self._round_gates(
+                state.comm
+            )
+            w_row = jnp.asarray(w_off_r, jnp.float32)
+            ddiag = jnp.asarray(w_diag_r, jnp.float32).reshape(n, 1)
+            adds = (
+                self._ring_slot0(state.comm, wire_keys) if pipelined else ()
+            )
+
+            if cfg.algorithm == "dsgd":
+                outs = sm_dsgd(
+                    state.params, grads, state.comm["recon"],
+                    state.comm["residual"],
+                    *[state.comm[k] for k in nbr_keys],
+                    *adds, w_row, ddiag, alpha32,
+                )
+                mixed, nrecon, nres = outs[:3]
+                comm = {"recon": nrecon, "residual": nres, **topo_comm}
+                comm.update(zip(nbr_keys, outs[3:3 + nnbr]))
+                self._push_wire(
+                    state.comm, comm, wire_keys, outs[3 + nnbr:]
+                )
+                new_state = state._replace(step=step, params=mixed, comm=comm)
+            else:
+                adds_t = (
+                    self._ring_slot0(state.comm, wire_keys_t)
+                    if pipelined else ()
+                )
+                outs = sm_dsgt(
+                    state.params, state.tracker, grads, state.prev_grad,
+                    state.comm["recon"], state.comm["residual"],
+                    state.comm["recon_t"], state.comm["residual_t"],
+                    *[state.comm[k] for k in nbr_keys],
+                    *[state.comm[k] for k in nbr_keys_t],
+                    *adds, *adds_t, w_row, ddiag, alpha32,
+                )
+                (mx, mt, nrx, nsx, nrt, nst) = outs[:6]
+                comm = {"recon": nrx, "residual": nsx,
+                        "recon_t": nrt, "residual_t": nst, **topo_comm}
+                comm.update(zip(
+                    nbr_keys + nbr_keys_t, outs[6:6 + 2 * nnbr]
+                ))
+                self._push_wire(
+                    state.comm, comm, wire_keys + wire_keys_t,
+                    outs[6 + 2 * nnbr:],
+                )
+                new_state = FLState(
+                    step=step, params=mx, tracker=mt, prev_grad=grads,
+                    comm=comm,
+                )
+
+            metrics = self._metrics(
+                cfg, losses, grads, alpha, new_state, egress
+            )
+            metrics.update(gate_metrics)
+            return new_state, metrics
+
+        return None, comm_step
 
     def _make_comm_step_dynamic(self, eval_grads, schedule, cfg: FLConfig):
         _, comm_step = self._make_dynamic_round(
@@ -1733,7 +2379,7 @@ class ShardedFusedEngine(_FusedBase):
         return lambda state, batch: comm_step(state, batch, None)
 
     def make_comm_step(self, eval_grads, schedule, cfg: FLConfig):
-        if self.dynamic_topology:
+        if self.dynamic_round:
             return self._make_comm_step_dynamic(eval_grads, schedule, cfg)
         w_diag, w_off = self._round_constants(cfg)
         produce, produce_gt = self._make_produce()
@@ -1849,7 +2495,7 @@ class ShardedFusedEngine(_FusedBase):
                 "engine was built with round_schedule='sequential'; build "
                 "it with round_schedule='pipelined'"
             )
-        if self.dynamic_topology:
+        if self.dynamic_round:
             return self._make_pipelined_round_dynamic(
                 eval_grads, schedule, cfg
             )
@@ -1878,12 +2524,14 @@ class ShardedFusedEngine(_FusedBase):
                     "pipelined rounds need init_fl_state(..., engine=...) "
                     "with the pipelined engine (in-flight wire buffers)"
                 )
+            # the collective consumes the OLDEST ring slot only -- depth-k
+            # staleness never multiplies the operand bytes per round
             stale = {"mix": sm_ingest(
-                *[state.comm[k] for k in wire_keys], w_off
+                *self._ring_slot0(state.comm, wire_keys), w_off
             )}
             if cfg.algorithm == "dsgt":
                 stale["mix_t"] = sm_ingest(
-                    *[state.comm[k] for k in wire_keys_t], w_off
+                    *self._ring_slot0(state.comm, wire_keys_t), w_off
                 )
             return stale
 
@@ -1935,7 +2583,7 @@ class ShardedFusedEngine(_FusedBase):
                 mixed, nrecon, nres, new_mix = outs[:4]
                 comm = {"recon": nrecon, "residual": nres,
                         "mix_recon": new_mix}
-                comm.update(zip(wire_keys, outs[4:]))
+                self._push_wire(state.comm, comm, wire_keys, outs[4:])
                 new_state = state._replace(step=step, params=mixed, comm=comm)
             else:
                 outs = sm_dsgt(
@@ -1949,8 +2597,8 @@ class ShardedFusedEngine(_FusedBase):
                 comm = {"recon": nrx, "residual": nsx, "mix_recon": nmrx,
                         "recon_t": nrt, "residual_t": nst,
                         "mix_recon_t": nmrt}
-                comm.update(zip(wire_keys, outs[8:8 + nw]))
-                comm.update(zip(wire_keys_t, outs[8 + nw:]))
+                self._push_wire(state.comm, comm, wire_keys, outs[8:8 + nw])
+                self._push_wire(state.comm, comm, wire_keys_t, outs[8 + nw:])
                 new_state = FLState(
                     step=step, params=mx, tracker=mt, prev_grad=grads,
                     comm=comm,
@@ -1975,7 +2623,8 @@ class ShardedFusedEngine(_FusedBase):
                   topk=None, impl: str = "pallas", w=None,
                   error_feedback: bool = True, difference_coding: bool = True,
                   self_weight=None, compact=None, round_schedule=None,
-                  storage_dtype=None, topology_program=None, **_ignored):
+                  storage_dtype=None, topology_program=None,
+                  node_program=None, **_ignored):
         _reject_wire_dtype(wire_dtype)
         _reject_storage_dtype(storage_dtype, cls.name)
         layout = pack_layout(stacked_sds, pad_to=scale_chunk)
@@ -1984,4 +2633,5 @@ class ShardedFusedEngine(_FusedBase):
                    topk=topk, impl=impl, error_feedback=error_feedback,
                    difference_coding=difference_coding, compact=compact,
                    round_schedule=round_schedule,
-                   topology_program=topology_program)
+                   topology_program=topology_program,
+                   node_program=node_program)

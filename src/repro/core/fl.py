@@ -269,11 +269,15 @@ def make_fl_round(
     grad_fn = jax.vmap(jax.value_and_grad(loss_fn))
     eval_grads = engine.make_eval_grads(grad_fn)
 
-    def local_step(state: FLState, batch: PyTree) -> Tuple[FLState, jnp.ndarray]:
+    def local_step(state: FLState, batch: PyTree,
+                   mask=None) -> Tuple[FLState, jnp.ndarray]:
+        # ``mask``: the node program's (n,) per-iteration compute gate
+        # (straggling nodes sit masked iterations out -- traced, so the
+        # ONE compiled scan serves every heterogeneity pattern).
         step = state.step + 1
         alpha = schedule(step)
         losses, grads = eval_grads(state.params, batch)
-        params = engine.local_step(state.params, grads, alpha)
+        params = engine.local_step(state.params, grads, alpha, mask=mask)
         return state._replace(step=step, params=params), jnp.mean(losses)
 
     # The engine's RoundSchedule owns the round's TIME layout: sequential

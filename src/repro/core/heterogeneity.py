@@ -1,0 +1,426 @@
+"""Node heterogeneity: per-node compute/communication faults as the
+round machinery's FOURTH axis.
+
+The paper's round is lockstep: every hospital runs exactly Q local steps
+and its payload arrives on time. Production decentralized FL does not
+(the straggler/staleness catalog of the FL communication survey, arXiv
+2405.20431): nodes run at different speeds, payloads are late or lost.
+This module supplies a :class:`NodeProgram` -- a pluggable, registered
+object exactly like ``TopologyProgram`` (``core.dynamics``) -- mapping
+(round counter, RNG key) to per-node TRACED operands of the ONE compiled
+round function:
+
+  * a **compute rate**: which of the round's ``q - 1`` local-step scan
+    iterations each node actually executes (:meth:`step_gate`, a masked
+    scan -- a slow node's skipped iteration costs zero gradient motion,
+    not a recompile);
+  * a **payload gate**: whether each node's wire payload lands this
+    round (:meth:`wire_gate` -- late and dropped payloads are the same
+    event at round granularity: the receiver cannot use what has not
+    arrived).
+
+Graceful degradation is W-row renormalization, shared with topology
+churn: a missing payload masks BOTH directions of every edge at the node
+(the symmetric outer-product gate ``up_i * up_j``), and the lost weight
+folds into the two self-loops -- every realized W_r stays symmetric
+doubly stochastic (property-tested with hypothesis over arbitrary drop
+masks), so consensus is unchanged in expectation and the convergence
+theory keeps holding with a spectral gap shrunk by ~uptime**2
+(``schedules.robust_alpha_scale`` shrinks alpha accordingly).
+
+The wire itself still crosses EVERY round -- the gate only zeroes the
+mixing contribution. That is deliberate: the difference-coded recon
+contract requires every receiver to fold every dq it is sent (skipping
+one would desynchronize recon), and it keeps the fault axis free of
+extra collectives and recompiles (jaxpr-asserted, like topology churn).
+
+Registered programs (the ``--fl-node-program`` spec strings):
+
+    homogeneous                the lockstep default (static; engines keep
+                               their historical fast path)
+    stragglers:frac=,rate=,drop=,seed=
+                               per round, each node is slow i.i.d. with
+                               probability ``frac``; a slow node runs
+                               only ``ceil(rate * (q-1))`` of its local
+                               steps and -- when ``drop=1`` (default) --
+                               its payload misses the round
+    slow_nodes:frac=,rate=,seed=
+                               a FIXED random subset of ``ceil(frac*n)``
+                               nodes is permanently slow (runs
+                               ``ceil(rate * (q-1))`` local steps);
+                               payloads always arrive -- pure compute
+                               heterogeneity
+    payload_drop:p=,seed=      every node's payload independently lost
+                               with probability ``p`` per round; full
+                               compute -- pure communication faults
+
+Randomness uses the same counter-based splitmix32 hash as the topology
+programs (partition-invariant; the checkpointed ``node_key`` in
+``FLState.comm`` seeds it), on streams 11-13 (disjoint from topology's
+1-4).
+"""
+
+from __future__ import annotations
+
+import abc
+import math
+from typing import Any, ClassVar, Dict, Tuple, Type, Union
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.dynamics import _parse_value, _u01
+
+__all__ = [
+    "NodeProgram",
+    "HomogeneousProgram",
+    "StragglerProgram",
+    "SlowNodesProgram",
+    "PayloadDropProgram",
+    "HOMOGENEOUS",
+    "compose_node_gate",
+    "register_node_program",
+    "get_node_program",
+    "node_program_names",
+    "parse_node_program",
+    "resolve_node_program",
+]
+
+
+def compose_node_gate(
+    w_off_r: jnp.ndarray, w_diag_r: jnp.ndarray, up: jnp.ndarray
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Fold a per-node payload gate ``up (n,) {0,1}`` into a round's
+    mixing matrix: an edge needs BOTH endpoints' payloads (the symmetric
+    outer product), and the dropped weight refolds into the self-loops --
+    so if ``w_off_r + diag(w_diag_r)`` is symmetric doubly stochastic,
+    the composed matrix is too (hypothesis property test over arbitrary
+    drop masks in tests/test_heterogeneity.py). Composes with the
+    topology gate multiplicatively, in either order."""
+    w_off = w_off_r * (up[:, None] * up[None, :])
+    w_diag = 1.0 - jnp.sum(w_off, axis=1)
+    return w_off, w_diag
+
+
+class NodeProgram(abc.ABC):
+    """Per-round per-node compute/communication fault program.
+
+    Life cycle mirrors :class:`~repro.core.dynamics.TopologyProgram`:
+    construct with knobs (or :func:`parse_node_program` a CLI spec), an
+    engine ``bind(n_nodes)``s it at build time, then :meth:`step_gate`
+    and :meth:`wire_gate` are traced per-round functions of the round
+    counter and the checkpointed ``node_key``."""
+
+    #: registry key; first token of the CLI spec string
+    name: ClassVar[str] = "abstract"
+    #: True only for :class:`HomogeneousProgram` -- engines keep their
+    #: historical lockstep path (no node_key, no masked scan)
+    is_static: ClassVar[bool] = False
+    #: False when every node always runs all q-1 local steps -- lets the
+    #: round builder skip the masked scan entirely (payload-only faults)
+    heterogeneous_compute: ClassVar[bool] = True
+
+    def __init__(self, seed: int = 0):
+        self.seed = int(seed)
+        self._n: int = 0
+
+    @property
+    def bound(self) -> bool:
+        return self._n > 0
+
+    def bind(self, n_nodes: int) -> "NodeProgram":
+        n_nodes = int(n_nodes)
+        if n_nodes < 1:
+            raise ValueError(f"n_nodes={n_nodes} must be >= 1")
+        if self._n and self._n != n_nodes:
+            raise ValueError(
+                f"node program {self.spec()!r} is already bound to "
+                f"{self._n} nodes; build a fresh instance"
+            )
+        self._n = n_nodes
+        self._bind_aux()
+        return self
+
+    def _bind_aux(self) -> None:
+        """Subclass hook: precompute static auxiliaries from n_nodes."""
+
+    def _require_bound(self) -> None:
+        if not self._n:
+            raise ValueError(
+                f"node program {self.spec()!r} is unbound; engines bind "
+                "it at build time (program.bind(n_nodes))"
+            )
+
+    @property
+    def n_nodes(self) -> int:
+        self._require_bound()
+        return self._n
+
+    # -- the per-round contract ---------------------------------------------
+
+    def step_gate(
+        self, r: jnp.ndarray, base_key: jnp.ndarray, q: int
+    ) -> jnp.ndarray:
+        """Traced ``(max(q - 1, 1), n)`` fp32 {0,1} mask over the round's
+        local-step scan iterations (row i gates iteration i for every
+        node). All-ones by default. The comm-round update itself is
+        never masked -- a fully stalled node still mixes (it just moved
+        nothing)."""
+        self._require_bound()
+        return jnp.ones((max(int(q) - 1, 1), self._n), jnp.float32)
+
+    def wire_gate(
+        self, r: jnp.ndarray, base_key: jnp.ndarray
+    ) -> jnp.ndarray:
+        """Traced ``(n,)`` fp32 {0,1}: 1 where the node's payload lands
+        this round. All-ones by default."""
+        self._require_bound()
+        return jnp.ones((self._n,), jnp.float32)
+
+    def expected_uptime(self) -> float:
+        """Stationary payload-arrival probability in [0, 1] -- feeds the
+        staleness/churn-aware step-size controller."""
+        return 1.0
+
+    def init_key(self) -> np.ndarray:
+        """The program's base RNG key -- carried in ``FLState.comm`` as
+        ``node_key`` (checkpointed: restores replay the identical fault
+        sequence)."""
+        # Pure numpy (threefry PRNGKey layout) so it is safe under jit.
+        s = int(self.seed) ^ 0x5EED
+        return np.array([(s >> 32) & 0xFFFFFFFF, s & 0xFFFFFFFF], np.uint32)
+
+    # -- spec round trip ----------------------------------------------------
+
+    def params(self) -> Dict[str, Any]:
+        return {"seed": self.seed}
+
+    def spec(self) -> str:
+        """Canonical ``name:k=v,...`` string (checkpoint manifest record
+        and ``--fl-node-program`` syntax); floats at repr precision so
+        ``parse_node_program(spec()).spec() == spec()`` exactly."""
+        p = self.params()
+        if not p:
+            return self.name
+        return self.name + ":" + ",".join(
+            f"{k}={v!r}" if isinstance(v, float) else f"{k}={v}"
+            for k, v in sorted(p.items())
+        )
+
+    def __repr__(self) -> str:  # pragma: no cover - debugging sugar
+        return f"<NodeProgram {self.spec()}>"
+
+
+# ---------------------------------------------------------------------------
+# Registry
+# ---------------------------------------------------------------------------
+
+_NODE_PROGRAMS: Dict[str, Type[NodeProgram]] = {}
+
+
+def register_node_program(cls: Type[NodeProgram]) -> Type[NodeProgram]:
+    if cls.name in _NODE_PROGRAMS:
+        raise ValueError(f"duplicate node program name {cls.name!r}")
+    _NODE_PROGRAMS[cls.name] = cls
+    return cls
+
+
+def get_node_program(name: str) -> Type[NodeProgram]:
+    try:
+        return _NODE_PROGRAMS[name]
+    except KeyError:
+        raise ValueError(
+            f"unknown node program {name!r}; registered: "
+            f"{node_program_names()}"
+        ) from None
+
+
+def node_program_names() -> Tuple[str, ...]:
+    return tuple(sorted(_NODE_PROGRAMS))
+
+
+def parse_node_program(spec: str) -> NodeProgram:
+    """Build a node program from a ``name[:k=v,...]`` spec string."""
+    name, _, rest = spec.partition(":")
+    cls = get_node_program(name.strip())
+    kwargs = {}
+    if rest.strip():
+        for item in rest.split(","):
+            k, eq, v = item.partition("=")
+            if not eq:
+                raise ValueError(
+                    f"bad node program knob {item!r} in {spec!r}; use k=v"
+                )
+            kwargs[k.strip()] = _parse_value(v.strip())
+    try:
+        return cls(**kwargs)
+    except TypeError as e:
+        raise ValueError(f"bad knobs for node program {name!r}: {e}") from None
+
+
+def resolve_node_program(
+    program: Union[None, str, NodeProgram]
+) -> NodeProgram:
+    """Spec string, instance, or None (the homogeneous default -- a
+    fresh instance, since instances bind to one node count)."""
+    if program is None:
+        return HomogeneousProgram()
+    if isinstance(program, NodeProgram):
+        return program
+    return parse_node_program(program)
+
+
+# ---------------------------------------------------------------------------
+# Programs
+# ---------------------------------------------------------------------------
+
+
+@register_node_program
+class HomogeneousProgram(NodeProgram):
+    """The lockstep default: every node runs every local step and every
+    payload arrives. Engines detect ``is_static`` and keep the
+    historical path (no node_key counter, no masked scan)."""
+
+    name = "homogeneous"
+    is_static = True
+    heterogeneous_compute = False
+
+    def __init__(self):
+        super().__init__(seed=0)
+
+    def bind(self, n_nodes: int) -> "NodeProgram":
+        # no per-binding state: the shared HOMOGENEOUS sentinel may
+        # default any number of engines over different node counts
+        self._n = 0
+        return super().bind(n_nodes)
+
+    def params(self) -> Dict[str, Any]:
+        return {}
+
+
+#: shared unbound sentinel for "no heterogeneity" default arguments
+HOMOGENEOUS = HomogeneousProgram()
+
+
+def _slow_steps(rate: float, q: int) -> int:
+    """Local steps a slow node completes out of ``q - 1``."""
+    return min(max(int(math.ceil(rate * (q - 1))), 0), max(q - 1, 0))
+
+
+@register_node_program
+class StragglerProgram(NodeProgram):
+    """Transient stragglers: per round, each node is slow i.i.d. with
+    probability ``frac``. A slow node completes only
+    ``ceil(rate * (q-1))`` of the round's local steps and, when
+    ``drop=1`` (the default), its payload misses the round -- the
+    late-arrival regime: compute AND communication degrade together."""
+
+    name = "stragglers"
+
+    def __init__(self, frac: float = 0.25, rate: float = 0.5,
+                 drop: int = 1, seed: int = 0):
+        super().__init__(seed=seed)
+        self.frac = float(frac)
+        self.rate = float(rate)
+        self.drop = int(bool(drop))
+        if not (0.0 <= self.frac <= 1.0):
+            raise ValueError(f"straggler fraction frac={frac} not in [0, 1]")
+        if not (0.0 <= self.rate <= 1.0):
+            raise ValueError(f"straggler compute rate={rate} not in [0, 1]")
+
+    def _slow(self, r, base_key):
+        u = _u01(base_key, r, jnp.arange(self._n, dtype=jnp.uint32),
+                 stream=11)
+        return (u < self.frac).astype(jnp.float32)  # 1 = slow
+
+    def step_gate(self, r, base_key, q):
+        self._require_bound()
+        steps = max(int(q) - 1, 1)
+        slow = self._slow(r, base_key)  # (n,)
+        done = _slow_steps(self.rate, int(q))
+        # a slow node runs the FIRST `done` iterations, then idles
+        runs = jnp.where(slow > 0.5, jnp.float32(done), jnp.float32(steps))
+        i = jnp.arange(steps, dtype=jnp.float32)[:, None]
+        return (i < runs[None, :]).astype(jnp.float32)
+
+    def wire_gate(self, r, base_key):
+        self._require_bound()
+        if not self.drop:
+            return jnp.ones((self._n,), jnp.float32)
+        return 1.0 - self._slow(r, base_key)
+
+    def expected_uptime(self) -> float:
+        return 1.0 - self.frac if self.drop else 1.0
+
+    def params(self) -> Dict[str, Any]:
+        return {"drop": self.drop, "frac": self.frac, "rate": self.rate,
+                "seed": self.seed}
+
+
+@register_node_program
+class SlowNodesProgram(NodeProgram):
+    """Persistent compute heterogeneity: a FIXED random subset of
+    ``ceil(frac * n)`` nodes (drawn once from the seed at bind) is slow
+    every round, completing ``ceil(rate * (q-1))`` local steps; payloads
+    always arrive on time. Isolates the objective-inconsistency effect
+    of unequal local work from communication faults."""
+
+    name = "slow_nodes"
+
+    def __init__(self, frac: float = 0.25, rate: float = 0.5, seed: int = 0):
+        super().__init__(seed=seed)
+        self.frac = float(frac)
+        self.rate = float(rate)
+        if not (0.0 <= self.frac <= 1.0):
+            raise ValueError(f"slow fraction frac={frac} not in [0, 1]")
+        if not (0.0 <= self.rate <= 1.0):
+            raise ValueError(f"slow compute rate={rate} not in [0, 1]")
+        self._slow_mask: np.ndarray | None = None
+
+    def _bind_aux(self) -> None:
+        rng = np.random.default_rng(self.seed)
+        k = int(math.ceil(self.frac * self._n))
+        mask = np.zeros((self._n,), np.float32)
+        mask[rng.permutation(self._n)[:k]] = 1.0
+        self._slow_mask = mask
+
+    def step_gate(self, r, base_key, q):
+        self._require_bound()
+        steps = max(int(q) - 1, 1)
+        done = _slow_steps(self.rate, int(q))
+        slow = jnp.asarray(self._slow_mask)
+        runs = jnp.where(slow > 0.5, jnp.float32(done), jnp.float32(steps))
+        i = jnp.arange(steps, dtype=jnp.float32)[:, None]
+        return (i < runs[None, :]).astype(jnp.float32)
+
+    def params(self) -> Dict[str, Any]:
+        return {"frac": self.frac, "rate": self.rate, "seed": self.seed}
+
+
+@register_node_program
+class PayloadDropProgram(NodeProgram):
+    """Pure communication faults: every node's payload is independently
+    LOST with probability ``p`` per round (both directions of all its
+    edges renormalize away); compute is unaffected."""
+
+    name = "payload_drop"
+    heterogeneous_compute = False
+
+    def __init__(self, p: float = 0.1, seed: int = 0):
+        super().__init__(seed=seed)
+        self.p = float(p)
+        if not (0.0 <= self.p < 1.0):
+            raise ValueError(f"payload drop probability p={p} not in [0, 1)")
+
+    def wire_gate(self, r, base_key):
+        self._require_bound()
+        u = _u01(base_key, r, jnp.arange(self._n, dtype=jnp.uint32),
+                 stream=13)
+        return (u >= self.p).astype(jnp.float32)
+
+    def expected_uptime(self) -> float:
+        return 1.0 - self.p
+
+    def params(self) -> Dict[str, Any]:
+        return {"p": self.p, "seed": self.seed}

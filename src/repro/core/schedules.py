@@ -21,6 +21,8 @@ __all__ = [
     "constant",
     "cosine",
     "warmup_linear",
+    "scaled",
+    "robust_alpha_scale",
 ]
 
 
@@ -62,6 +64,41 @@ def cosine(alpha0: float, total_steps: int, alpha_min: float = 0.0) -> Schedule:
         )
 
     return f
+
+
+def scaled(schedule: Schedule, factor: float) -> Schedule:
+    """Pointwise-scaled schedule: ``factor * schedule(r)``. The
+    combinator the robustness controller uses -- the base schedule's
+    shape (inv-sqrt decay etc.) is preserved, only the level shrinks."""
+    f32 = jnp.float32(factor)
+    return lambda step: f32 * schedule(step)
+
+
+def robust_alpha_scale(uptime: float = 1.0, staleness_depth: int = 0) -> float:
+    """Staleness/churn-aware step-size shrink factor in (0, 1].
+
+    The decentralized convergence rates trade step size against the
+    mixing matrix's spectral gap. Under faults the EFFECTIVE gap shrinks:
+    with per-node payload availability ``uptime`` an edge of E[W_r]
+    survives with probability ~uptime**2 (both endpoints must deliver),
+    scaling ``1 - lambda_2`` by the same factor; depth-k bounded-stale
+    mixing turns gossip into an order-(k+1) recurrence whose
+    disagreement modes contract roughly ``(k/2 + 1)``-times slower (the
+    k=1 root analysis in benchmarks/staleness_ehr.py, extended). Both
+    effects multiply:
+
+        scale = uptime**2 * 2 / (2 + k)
+
+    Heuristic, not a bound -- but it keeps the effective
+    ``alpha / gap_eff`` ratio of the fault-free tuning, which is what the
+    sweep in benchmarks/straggler_ehr.py shows matters."""
+    uptime = float(uptime)
+    if not (0.0 < uptime <= 1.0):
+        raise ValueError(f"uptime={uptime} not in (0, 1]")
+    k = int(staleness_depth)
+    if k < 0:
+        raise ValueError(f"staleness_depth={staleness_depth} must be >= 0")
+    return uptime ** 2 * 2.0 / (2.0 + k)
 
 
 def warmup_linear(alpha0: float, warmup: int, total_steps: int) -> Schedule:

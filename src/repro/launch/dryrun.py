@@ -69,7 +69,8 @@ def build_train_lowering(arch: str, shape_name: str, mesh, q: int, algorithm: st
                          pad_heads: int = 0, fl_engine: str = "tree",
                          scale_chunk: int = 512, topk=None,
                          fl_schedule: str = "sequential",
-                         fl_topology_program: Optional[str] = None):
+                         fl_topology_program: Optional[str] = None,
+                         fl_node_program: Optional[str] = None):
     """Lower one FL round (Q local steps + gossip) for the given mesh.
 
     ``fl_engine`` names a registered GossipEngine (the registry in
@@ -105,6 +106,12 @@ def build_train_lowering(arch: str, shape_name: str, mesh, q: int, algorithm: st
     mixing weights become traced operands of the one compiled round --
     churn adds zero recompiles and zero collectives (fused engines; the
     sharded engine gates its circulant ppermute wire).
+    ``fl_node_program`` adds per-node heterogeneity the same way
+    (``repro.core.heterogeneity``; e.g. "stragglers:frac=0.25"): compute
+    and payload gates are traced operands, so slow/faulty nodes change
+    nothing about the lowering. ``fl_schedule`` also accepts depth-k
+    specs ("bounded_staleness:k=3"): the comm state grows a k-slot wire
+    ring but the collective still moves ONE slot per round.
     """
     import dataclasses as _dc
 
@@ -134,6 +141,7 @@ def build_train_lowering(arch: str, shape_name: str, mesh, q: int, algorithm: st
         axes_subset=("data",) if hier else None, scale_chunk=scale_chunk,
         topk=topk, round_schedule=fl_schedule,
         topology_program=fl_topology_program,
+        node_program=fl_node_program,
     )
     round_fn = make_fl_round(
         bundle.loss_fn, None, inv_sqrt(0.02), fl_cfg, engine=engine
@@ -150,13 +158,16 @@ def build_train_lowering(arch: str, shape_name: str, mesh, q: int, algorithm: st
         buf_specs = P(tuple(naxes), None)
     # comm buffers from the engine's own contract (shapes/dtypes differ
     # per schedule and wire: in-flight int8 payloads, positions, scales).
-    # Node-stacked (rank >= 2) buffers shard over the node axes; the
-    # topology program's scalar counters (topo_round, topo_key) replicate.
+    # Node-stacked (rank >= 2) buffers shard over the LEADING node axes
+    # only -- depth-k rings are (n, k, width) and the dense-W neighbor
+    # replica is (n, n, t), both sharded by receiver row; the topology
+    # program's scalar counters (topo_round, topo_key) replicate.
     comm_sds = engine.comm_state_sds(fl_cfg)
     comm_specs = (
         None if comm_sds is None
         else {
-            k: P(tuple(naxes), None) if len(s.shape) >= 2 else P()
+            k: (P(tuple(naxes), *(None,) * (len(s.shape) - 1))
+                if len(s.shape) >= 2 else P())
             for k, s in comm_sds.items()
         }
     )
@@ -283,6 +294,7 @@ def run_pair(
     topk=None,
     fl_schedule: str = "sequential",
     fl_topology_program: Optional[str] = None,
+    fl_node_program: Optional[str] = None,
 ) -> Dict[str, Any]:
     """Lower + compile one pair; return the dry-run record."""
     mesh = make_production_mesh(multi_pod=(mesh_kind == "multi"))
@@ -301,6 +313,7 @@ def run_pair(
                 arch, shape_name, mesh, q, algorithm, wd, pod_gossip_every, impl,
                 pad_heads, fl_engine, topk=topk, fl_schedule=fl_schedule,
                 fl_topology_program=fl_topology_program,
+                fl_node_program=fl_node_program,
             )
             lowered = jitted.lower(*args)
         elif shape.kind == "prefill":
@@ -333,6 +346,9 @@ def run_pair(
         "fl_schedule": fl_schedule if shape.kind == "train" else None,
         "fl_topology_program": (
             fl_topology_program if shape.kind == "train" else None
+        ),
+        "fl_node_program": (
+            fl_node_program if shape.kind == "train" else None
         ),
         "topk": topk if shape.kind == "train" else None,
         "wire_dtype": wire_dtype,
@@ -384,11 +400,12 @@ def main() -> None:
                          "columns per scale chunk (compact sparse wire on "
                          "the sharded engine)")
     ap.add_argument("--fl-schedule", default="sequential",
-                    choices=schedule_names(),
                     help="round time layout, resolved through the "
-                         "RoundSchedule registry: pipelined overlaps the "
-                         "collective with the next round's local steps "
-                         "(fused engines only)")
+                         f"RoundSchedule registry ({', '.join(schedule_names())}): "
+                         "pipelined overlaps the collective with the next "
+                         "round's local steps; spec syntax "
+                         "'bounded_staleness:k=3' keeps k payloads in "
+                         "flight (fused engines only)")
     ap.add_argument("--fl-topology-program", default=None,
                     help="per-round graph dynamics, resolved through the "
                          "TopologyProgram registry "
@@ -397,6 +414,13 @@ def main() -> None:
                          "'node_churn:p_down=0.2,mean_downtime=5' -- "
                          "fused engines take any W, the sharded engine "
                          "gates its circulant ppermute wire")
+    ap.add_argument("--fl-node-program", default=None,
+                    help="per-node heterogeneity, resolved through the "
+                         "NodeProgram registry (repro.core.heterogeneity); "
+                         "spec syntax name:k=v,... e.g. "
+                         "'stragglers:frac=0.25,rate=0.5' -- compute and "
+                         "payload gates are traced operands of the one "
+                         "compiled round")
     ap.add_argument("--pad-heads", type=int, default=0,
                     help="pad q heads to a multiple of this (16 = TP degree)")
     ap.add_argument("--out", default=None, help="directory for the JSON record")
@@ -408,6 +432,7 @@ def main() -> None:
         impl=args.impl, pad_heads=args.pad_heads, fl_engine=args.fl_engine,
         topk=args.topk, fl_schedule=args.fl_schedule,
         fl_topology_program=args.fl_topology_program,
+        fl_node_program=args.fl_node_program,
     )
     print(json.dumps(rec, indent=2))
     if args.out:
@@ -420,9 +445,11 @@ def main() -> None:
         if args.topk:
             suffix += f"_topk{args.topk}"
         if args.fl_schedule != "sequential":
-            suffix += f"_{args.fl_schedule}"
+            suffix += "_" + args.fl_schedule.replace(":", "-").replace("=", "")
         if args.fl_topology_program:
             suffix += "_" + args.fl_topology_program.split(":")[0]
+        if args.fl_node_program:
+            suffix += "_" + args.fl_node_program.split(":")[0]
         if args.pad_heads:
             suffix += f"_hpad{args.pad_heads}"
         if args.wire_dtype:

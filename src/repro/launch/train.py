@@ -29,6 +29,7 @@ import numpy as np
 from repro.configs import FLRunConfig, get_config
 from repro.core.dynamics import program_names
 from repro.core.engine import engine_names, schedule_names
+from repro.core.heterogeneity import node_program_names
 from repro.data.tokens import make_fl_token_batches
 from repro.models import build_model
 from repro.training.checkpoint import save_fl_state
@@ -57,11 +58,16 @@ def main() -> None:
                     help="fused engines: k largest payload columns per "
                          "scale chunk on the wire")
     ap.add_argument("--fl-schedule", default="sequential",
-                    choices=schedule_names(),
-                    help="round time layout (RoundSchedule registry): "
-                         "pipelined overlaps the collective with the next "
-                         "round's local steps, mixing one-round stale "
-                         "(fused engines only)")
+                    help="round time layout (RoundSchedule registry: "
+                         f"{', '.join(schedule_names())}): pipelined "
+                         "overlaps the collective with the next round's "
+                         "local steps, mixing one-round stale; spec "
+                         "syntax name:k=v e.g. 'bounded_staleness:k=3' "
+                         "keeps k payloads in flight (fused engines only)")
+    ap.add_argument("--fl-staleness-depth", type=int, default=None,
+                    help="sugar for --fl-schedule bounded_staleness:k=K "
+                         "(0 = sequential); mutually exclusive with "
+                         "--fl-schedule")
     ap.add_argument("--storage-dtype", default=None,
                     help="flat engine: buffer storage dtype (e.g. "
                          "bfloat16); fp32 stays in the mix accumulator")
@@ -71,6 +77,17 @@ def main() -> None:
                          "syntax name:k=v,... e.g. "
                          "'edge_failure:p=0.2,seed=0' -- flat/fused "
                          "engines; metrics gain edge_fraction")
+    ap.add_argument("--fl-node-program", default=None,
+                    help="per-node heterogeneity (NodeProgram registry: "
+                         f"{', '.join(node_program_names())}); spec syntax "
+                         "name:k=v,... e.g. "
+                         "'stragglers:frac=0.25,rate=0.5' gates local-step "
+                         "budgets and payload delivery per round; metrics "
+                         "gain payload_fraction / compute_fraction")
+    ap.add_argument("--fl-robust-alpha", action="store_true",
+                    help="shrink the step-size schedule by the "
+                         "staleness/churn controller "
+                         "(robust_alpha_scale(uptime, k))")
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--checkpoint", default=None)
     ap.add_argument("--log-every", type=int, default=5)
@@ -106,12 +123,23 @@ def main() -> None:
             yield {k: v[0] for k, v in b.items()}  # (nodes, pnb, ...)
 
     t0 = time.time()
+    fl_schedule = args.fl_schedule
+    if args.fl_staleness_depth is not None:
+        if fl_schedule != "sequential":
+            raise SystemExit(
+                "--fl-staleness-depth is sugar for --fl-schedule "
+                "bounded_staleness:k=K; pass one or the other"
+            )
+        fl_schedule = None  # trainer derives it from staleness_depth
     result = train_decentralized(
         bundle.loss_fn, params, run, step_batches(), rounds=args.rounds,
         log_every=args.log_every, engine=args.fl_engine,
         scale_chunk=args.scale_chunk, topk=args.topk,
-        round_schedule=args.fl_schedule, storage_dtype=args.storage_dtype,
+        round_schedule=fl_schedule, storage_dtype=args.storage_dtype,
         topology_program=args.fl_topology_program,
+        node_program=args.fl_node_program,
+        staleness_depth=args.fl_staleness_depth,
+        robust_alpha=args.fl_robust_alpha,
     )
     hist = result.history
     first, last = hist.rows()[0], hist.last()
@@ -120,8 +148,9 @@ def main() -> None:
             {
                 "arch": cfg.name,
                 "fl_engine": args.fl_engine,
-                "fl_schedule": args.fl_schedule,
+                "fl_schedule": result.engine.round_schedule.spec(),
                 "fl_topology_program": args.fl_topology_program,
+                "fl_node_program": args.fl_node_program,
                 "algorithm": args.algorithm,
                 "q": args.q,
                 "rounds": args.rounds,

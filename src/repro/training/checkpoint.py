@@ -36,9 +36,10 @@ from repro.core.engine import (
     GossipEngine,
     engine_names,
     get_engine,
-    get_schedule,
+    resolve_schedule,
     schedule_names,
 )
+from repro.core.heterogeneity import parse_node_program
 from repro.core.fl import FLState
 
 PyTree = Any
@@ -70,7 +71,9 @@ def save_fl_state(path: str, state: FLState, extra: Optional[dict] = None,
         # restore must rebuild mix_recon against them (engine.restore_comm)
         schedule = getattr(engine, "round_schedule", None)
         if schedule is not None:
-            manifest["round_schedule"] = schedule.name
+            # spec(), not name: "bounded_staleness:k=3" carries a
+            # 3-deep wire ring a k=2 restore could not consume
+            manifest["round_schedule"] = schedule.spec()
         # so is the topology program: the comm counters (topo_round /
         # topo_key) only mean something under the SAME program -- the
         # recorded spec lets a mid-churn restore rebuild the engine and
@@ -78,6 +81,11 @@ def save_fl_state(path: str, state: FLState, extra: Optional[dict] = None,
         program = getattr(engine, "topology_program", None)
         if program is not None:
             manifest["topology_program"] = program.spec()
+        # and the node program: node_key (and any Markov fault state)
+        # replays the identical straggler/outage sequence only under it
+        node_prog = getattr(engine, "node_program", None)
+        if node_prog is not None:
+            manifest["node_program"] = node_prog.spec()
     if state.comm is not None:
         manifest["comm_keys"] = sorted(state.comm)
     if extra:
@@ -108,13 +116,26 @@ def load_fl_state(path: str, template: FLState,
         get_engine(saved_engine)  # resolvable, not just named
     saved_schedule = manifest.get("round_schedule")
     if saved_schedule is not None:
-        if saved_schedule not in schedule_names():
+        try:
+            saved_sched = resolve_schedule(saved_schedule)
+        except (ValueError, KeyError):
             raise ValueError(
                 f"checkpoint was written under round schedule "
-                f"{saved_schedule!r}, which is not in the registry "
-                f"{schedule_names()}"
-            )
-        get_schedule(saved_schedule)
+                f"{saved_schedule!r}, which no schedule in the registry "
+                f"{schedule_names()} can rebuild"
+            ) from None
+        if engine is not None:
+            eng_sched = getattr(engine, "round_schedule", None)
+            if (eng_sched is not None
+                    and eng_sched.depth != saved_sched.depth):
+                raise ValueError(
+                    f"checkpoint was written at staleness depth "
+                    f"{saved_sched.depth} ({saved_schedule!r}) but the "
+                    f"restore engine runs depth {eng_sched.depth} "
+                    f"({eng_sched.spec()!r}); the in-flight wire ring is "
+                    "part of the comm-state contract -- rebuild the "
+                    f"engine with round_schedule={saved_schedule!r}"
+                )
     saved_program = manifest.get("topology_program")
     if saved_program is not None:
         try:
@@ -139,6 +160,27 @@ def load_fl_state(path: str, template: FLState,
                     "counters only replay the identical graph sequence "
                     "under the same program -- rebuild the engine with "
                     f"topology_program={saved_program!r}"
+                )
+    saved_node = manifest.get("node_program")
+    if saved_node is not None:
+        try:
+            parse_node_program(saved_node)
+        except ValueError as e:
+            raise ValueError(
+                f"checkpoint was written under node program "
+                f"{saved_node!r}, which no registered program can "
+                f"rebuild: {e}"
+            ) from None
+        if engine is not None and saved_node != "homogeneous":
+            engine_node = getattr(engine, "node_program", None)
+            if engine_node is not None and engine_node.spec() != saved_node:
+                raise ValueError(
+                    f"checkpoint was written under node program "
+                    f"{saved_node!r} but the restore engine runs "
+                    f"{engine_node.spec()!r}; node_key only replays the "
+                    "identical straggler/outage sequence under the same "
+                    "program -- rebuild the engine with "
+                    f"node_program={saved_node!r}"
                 )
     data = np.load(os.path.join(path, "state.npz"))
     saved_comm_keys = set(manifest.get("comm_keys") or ())

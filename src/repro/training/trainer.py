@@ -164,6 +164,9 @@ def train_decentralized(
     storage_dtype=None,
     topk_schedule: Optional[Tuple[int, ...]] = None,
     topology_program: Optional[str] = None,
+    node_program: Optional[str] = None,
+    staleness_depth: Optional[int] = None,
+    robust_alpha: bool = False,
 ) -> TrainResult:
     """Train for ``rounds`` communication rounds.
 
@@ -202,9 +205,31 @@ def train_decentralized(
     inside the ONE compiled round function (metrics gain
     ``edge_fraction``). None (or ``"static"``) keeps the compile-time
     constant W.
+
+    ``node_program`` selects per-NODE heterogeneity (the FOURTH round
+    axis, ``repro.core.heterogeneity``): a spec string like
+    ``"stragglers:frac=0.25,rate=0.5"`` gating each node's local-step
+    budget and payload delivery per round -- still traced operands of
+    the one compiled round (metrics gain ``payload_fraction`` /
+    ``compute_fraction``). ``staleness_depth=k`` is sugar for
+    ``round_schedule="bounded_staleness:k=k"`` (k-round-stale mixing
+    with k payloads in flight; 0 = sequential). ``robust_alpha=True``
+    shrinks the step-size schedule by
+    ``robust_alpha_scale(expected_uptime, k)`` -- the staleness/churn
+    controller keeping the effective alpha/spectral-gap ratio of the
+    fault-free tuning.
     """
     w = mixing_matrix(run.topology, run.n_nodes)
     check_assumption1(w)
+    if staleness_depth is not None:
+        if round_schedule is not None:
+            raise ValueError(
+                "pass either round_schedule or staleness_depth, not both "
+                "(staleness_depth=k is sugar for "
+                "round_schedule='bounded_staleness:k=k')"
+            )
+        k = int(staleness_depth)
+        round_schedule = "sequential" if k == 0 else f"bounded_staleness:k={k}"
     cfg = FLConfig(algorithm=run.algorithm, q=run.q, n_nodes=run.n_nodes)
     stacked = (
         params_single
@@ -216,7 +241,8 @@ def train_decentralized(
                  "topk": topk, "round_schedule": round_schedule,
                  "storage_dtype": storage_dtype,
                  "topk_schedule": topk_schedule,
-                 "topology_program": topology_program}
+                 "topology_program": topology_program,
+                 "node_program": node_program}
         set_knobs = sorted(k for k, v in knobs.items() if v is not None)
         if set_knobs:
             raise ValueError(
@@ -235,10 +261,19 @@ def train_decentralized(
             wire_dtype=wire_dtype,
             scale_chunk=512 if scale_chunk is None else scale_chunk,
             round_schedule=round_schedule, storage_dtype=storage_dtype,
-            topology_program=topology_program,
+            topology_program=topology_program, node_program=node_program,
         )
         engine, params0 = build(w, stacked, topk=topk, **kw)
     schedule = make_schedule(run)
+    if robust_alpha:
+        from repro.core.schedules import robust_alpha_scale, scaled
+
+        uptime = (engine.topology_program.expected_uptime()
+                  * engine.node_program.expected_uptime())
+        schedule = scaled(
+            schedule,
+            robust_alpha_scale(uptime, engine.round_schedule.depth),
+        )
     round_fn = jax.jit(make_fl_round(loss_fn, None, schedule, cfg, engine=engine))
     adaptive, dense_fn = None, None
     if topk_schedule is not None:
@@ -278,8 +313,9 @@ def train_decentralized(
             "alpha": float(m["alpha"]),
             "wall_s": time.time() - t0,
         }
-        if "edge_fraction" in m:
-            row["edge_fraction"] = float(m["edge_fraction"])
+        for k in ("edge_fraction", "payload_fraction", "compute_fraction"):
+            if k in m:
+                row[k] = float(m[k])
         if adaptive is not None:
             row["topk"] = float(adaptive.current_k)
             row["ef_residual_rms"] = float(m["ef_residual_rms"])

@@ -510,11 +510,12 @@ _SHARDED_SCRIPT = textwrap.dedent(
     # 1. sharded churn == fused churn (the single-host oracle, itself
     #    proven against the per-round-W reference in test_dynamics.py)
     #    over program x algorithm x schedule x {dense int8, compact}
-    def compare(algorithm, topk, schedule, spec):
+    def compare(algorithm, topk, schedule, spec, w=None, rounds=4):
         cfg = FLConfig(algorithm=algorithm, q=q, n_nodes=n)
         sh = ShardedFusedEngine.from_mesh(
             mesh, naxes, params, scale_chunk=chunk, topk=topk,
-            impl="pallas", round_schedule=schedule, topology_program=spec)
+            impl="pallas", round_schedule=schedule, topology_program=spec,
+            w=w)
         fe = FusedEngine(sh.dense_equivalent(), layout, scale_chunk=chunk,
                          topk=topk, impl="pallas", round_schedule=schedule,
                          topology_program=spec)
@@ -523,9 +524,12 @@ _SHARDED_SCRIPT = textwrap.dedent(
         with mesh:
             rf_s = jax.jit(make_fl_round(loss, None, sched, cfg, engine=sh))
             st_s = init_fl_state(cfg, put(), engine=sh)
-            for _ in range(4):
+            for _ in range(rounds):
                 st_f, m_f = rf_f(st_f, batches)
                 st_s, m_s = rf_s(st_s, batches)
+        if w is not None:
+            # the dense-W dynamic round tracks ALL nodes' reconstructions
+            assert "nbr_recon_all" in st_s.comm, (schedule, spec)
         err = float(jnp.abs(st_f.params - st_s.params).max())
         assert err < 1e-5, (algorithm, topk, schedule, spec, err)
         if algorithm == "dsgt":
@@ -544,6 +548,17 @@ _SHARDED_SCRIPT = textwrap.dedent(
     compare("dsgd", None, "pipelined", SPECS[1])
     compare("dsgt", 4, "sequential", SPECS[1])   # compact bitmap wire
     compare("dsgd", 4, "pipelined", SPECS[0])
+
+    # dense-W sharded dynamics: churn on the all-gather dense-W wire
+    # (nbr_recon_all), across schedules up to depth-2 bounded staleness
+    w_er = mixing_matrix("erdos_renyi", n, p=0.7, seed=1)
+    compare("dsgd", None, "sequential", SPECS[0], w=w_er)
+    compare("dsgt", None, "sequential", SPECS[1], w=w_er)
+    compare("dsgt", 4, "pipelined", SPECS[0], w=w_er)
+    compare("dsgd", None, "pipelined", SPECS[3], w=w_er)
+    compare("dsgd", None, "bounded_staleness:k=2", SPECS[0], w=w_er,
+            rounds=5)
+    compare("dsgt", None, "bounded_staleness:k=2", SPECS[1], rounds=5)
 
     # 2. jaxpr: churn adds ZERO collectives (same ppermute count as the
     #    static engine; the gate only zeroes contributions) and the round

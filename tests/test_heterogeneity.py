@@ -1,0 +1,566 @@
+"""NodeProgram layer: per-node compute/communication faults as the
+FOURTH round axis.
+
+Covers the registry/spec round trips, the hypothesis property that
+``compose_node_gate`` keeps every realized W_r symmetric doubly
+stochastic under ARBITRARY drop masks, the engine-vs-eager-oracle
+equalities (fused + flat, masked local-step scan + gated payload mixing,
+composed with topology churn and with depth-k staleness), the
+zero-recompile discipline across faulty rounds, mid-fault checkpoint
+replay, the staleness/churn-aware alpha controller, and the trainer
+plumbing (``staleness_depth`` sugar, ``robust_alpha``, fault metrics in
+the history).
+"""
+
+import collections
+import os
+import tempfile
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (
+    FLConfig,
+    FusedEngine,
+    compose_node_gate,
+    get_engine,
+    init_fl_state,
+    make_fl_round,
+    mixing_matrix,
+    node_program_names,
+    pack,
+    parse_node_program,
+    resolve_node_program,
+)
+from repro.core.schedules import constant, inv_sqrt, robust_alpha_scale, scaled
+from repro.core.topology import check_assumption1
+from repro.kernels.gossip.ref import (
+    fused_round_gt_ref,
+    fused_round_ref,
+    wire_stage_ref,
+)
+from repro.core.packing import pack_like, unpack
+from repro.training.checkpoint import load_fl_state, save_fl_state
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+#: one spec per registered fault program, sized for small test graphs
+NODE_SPECS = (
+    "stragglers:drop=1,frac=0.4,rate=0.5,seed=3",
+    "slow_nodes:frac=0.25,rate=0.5,seed=1",
+    "payload_drop:p=0.3,seed=2",
+)
+
+
+def _problem(n, q, seed=0):
+    rng = np.random.default_rng(seed)
+
+    def loss(p, batch):
+        return jnp.sum((p["w"] - batch["t"]) ** 2) + jnp.sum(p["b"] ** 2)
+
+    params = {
+        "w": jnp.asarray(rng.normal(size=(n, 4, 5)), jnp.float32),
+        "b": jnp.asarray(rng.normal(size=(n, 3)), jnp.float32),
+    }
+    batches = {"t": jnp.asarray(rng.normal(size=(q, n, 4, 5)), jnp.float32)}
+    return loss, params, batches
+
+
+# ---------------------------------------------------------------------------
+# registry + spec round trips + bind contract
+# ---------------------------------------------------------------------------
+
+
+def test_node_program_registry_and_specs():
+    assert node_program_names() == (
+        "homogeneous", "payload_drop", "slow_nodes", "stragglers",
+    )
+    assert resolve_node_program(None).is_static
+    assert resolve_node_program("homogeneous").is_static
+    prog = parse_node_program("stragglers:frac=0.3,rate=0.25,seed=7")
+    assert prog.frac == 0.3 and prog.rate == 0.25 and prog.seed == 7
+    assert resolve_node_program(prog) is prog
+    for spec in ("homogeneous",) + NODE_SPECS:
+        p = parse_node_program(spec)
+        assert parse_node_program(p.spec()).spec() == p.spec()
+    with pytest.raises(ValueError, match="unknown node program"):
+        parse_node_program("does_not_exist:p=1")
+    with pytest.raises(ValueError, match="bad node program knob"):
+        parse_node_program("payload_drop:p")
+    with pytest.raises(ValueError, match="bad knobs"):
+        parse_node_program("payload_drop:nope=3")
+    with pytest.raises(ValueError, match="p=1.5"):
+        parse_node_program("payload_drop:p=1.5")
+    with pytest.raises(ValueError, match="frac=2.0"):
+        parse_node_program("stragglers:frac=2.0")
+    # full float precision survives the manifest round trip
+    hp = parse_node_program("payload_drop:p=0.1234567891,seed=0")
+    assert parse_node_program(hp.spec()).p == hp.p == 0.1234567891
+
+
+def test_node_program_bind_contract():
+    prog = parse_node_program("payload_drop:p=0.2,seed=0")
+    with pytest.raises(ValueError, match="unbound"):
+        prog.wire_gate(jnp.int32(0), jnp.zeros((2,), jnp.uint32))
+    prog.bind(8)
+    prog.bind(8)  # idempotent
+    with pytest.raises(ValueError, match="already bound"):
+        prog.bind(4)
+    # the shared HOMOGENEOUS sentinel rebinds freely across node counts
+    from repro.core.heterogeneity import HOMOGENEOUS
+
+    HOMOGENEOUS.bind(4)
+    HOMOGENEOUS.bind(20)
+
+
+def test_expected_uptime():
+    assert parse_node_program("homogeneous").expected_uptime() == 1.0
+    assert parse_node_program("payload_drop:p=0.3").expected_uptime() == 0.7
+    assert parse_node_program(
+        "stragglers:frac=0.25,drop=1").expected_uptime() == 0.75
+    assert parse_node_program(
+        "stragglers:frac=0.25,drop=0").expected_uptime() == 1.0
+    assert parse_node_program("slow_nodes:frac=0.5").expected_uptime() == 1.0
+
+
+# ---------------------------------------------------------------------------
+# graceful degradation: drop-renormalization keeps Assumption 1
+# (hypothesis property over arbitrary masks)
+# ---------------------------------------------------------------------------
+
+
+def test_compose_node_gate_keeps_w_doubly_stochastic_property():
+    pytest.importorskip("hypothesis", reason="property tests need hypothesis")
+    from hypothesis import given, settings, strategies as st
+
+    @settings(max_examples=40, deadline=None)
+    @given(
+        wseed=st.integers(0, 50),
+        p=st.sampled_from([0.3, 0.6, 0.9]),
+        mask_bits=st.lists(st.booleans(), min_size=12, max_size=12),
+    )
+    def check(wseed, p, mask_bits):
+        n = 12
+        w = mixing_matrix("erdos_renyi", n, p=p, seed=wseed)
+        w_off = jnp.asarray(w - np.diag(np.diag(w)), jnp.float32)
+        w_diag = jnp.asarray(np.diag(w), jnp.float32)
+        up = jnp.asarray(np.array(mask_bits, np.float32))
+        g_off, g_diag = compose_node_gate(w_off, w_diag, up)
+        w_r = np.asarray(g_off) + np.diag(np.asarray(g_diag))
+        diag = check_assumption1(w_r, atol=1e-5, require_connected=False)
+        assert diag["sym_err"] <= 1e-5
+        # support shrinks, never grows
+        base_off = np.abs(np.asarray(w_off)) > 0
+        assert not (np.abs(np.asarray(g_off)) > 0)[~base_off].any()
+        # a dropped node is fully isolated: self-loop weight exactly 1
+        down = np.asarray(up) < 0.5
+        assert not np.asarray(g_off)[down].any()
+        assert not np.asarray(g_off)[:, down].any()
+        np.testing.assert_allclose(np.asarray(g_diag)[down], 1.0, atol=1e-6)
+        # gates compose multiplicatively in either order
+        up2 = jnp.asarray((np.arange(n) % 2).astype(np.float32))
+        a_off, a_diag = compose_node_gate(g_off, g_diag, up2)
+        b_off, b_diag = compose_node_gate(w_off, w_diag, up * up2)
+        np.testing.assert_allclose(np.asarray(a_off), np.asarray(b_off),
+                                   atol=1e-6)
+        np.testing.assert_allclose(np.asarray(a_diag), np.asarray(b_diag),
+                                   atol=1e-6)
+
+    check()
+
+
+def test_compose_node_gate_deterministic_sweep():
+    """The same Assumption-1 property on a fixed mask grid (always runs;
+    the hypothesis test widens the search when the dep is present):
+    includes the all-up identity and the all-down fully-isolated graph."""
+    n = 12
+    rng = np.random.default_rng(0)
+    masks = [np.ones(n), np.zeros(n)] + [
+        (rng.random(n) < p).astype(np.float64)
+        for p in (0.2, 0.5, 0.8) for _ in range(10)
+    ]
+    for wseed in (0, 1):
+        w = mixing_matrix("erdos_renyi", n, p=0.6, seed=wseed)
+        w_off = jnp.asarray(w - np.diag(np.diag(w)), jnp.float32)
+        w_diag = jnp.asarray(np.diag(w), jnp.float32)
+        for mask in masks:
+            up = jnp.asarray(mask, jnp.float32)
+            g_off, g_diag = compose_node_gate(w_off, w_diag, up)
+            w_r = np.asarray(g_off) + np.diag(np.asarray(g_diag))
+            diag = check_assumption1(w_r, atol=1e-5, require_connected=False)
+            assert diag["sym_err"] <= 1e-5
+            down = mask < 0.5
+            assert not np.asarray(g_off)[down].any()
+            np.testing.assert_allclose(np.asarray(g_diag)[down], 1.0,
+                                       atol=1e-6)
+        # all-up is the identity gate
+        i_off, i_diag = compose_node_gate(w_off, w_diag,
+                                          jnp.ones((n,), jnp.float32))
+        np.testing.assert_allclose(np.asarray(i_off), np.asarray(w_off),
+                                   atol=1e-7)
+        np.testing.assert_allclose(np.asarray(i_diag), np.asarray(w_diag),
+                                   atol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# engine gating
+# ---------------------------------------------------------------------------
+
+
+def test_tree_engine_rejects_node_program():
+    w = mixing_matrix("ring", 4)
+    _, params, _ = _problem(4, 1)
+    with pytest.raises(ValueError, match="node program"):
+        get_engine("tree").simulated(
+            w, params, node_program="payload_drop:p=0.2"
+        )
+
+
+def test_homogeneous_program_keeps_static_path():
+    n, q = 8, 2
+    w = mixing_matrix("ring", n)
+    _, params, _ = _problem(n, q)
+    eng, _ = FusedEngine.simulated(w, params, scale_chunk=8,
+                                   node_program=None)
+    cfg = FLConfig(algorithm="dsgd", q=q, n_nodes=n)
+    assert not eng.dynamic_nodes
+    assert "node_key" not in eng.comm_keys(cfg)
+    assert eng.make_step_mask(cfg) is None
+
+
+def test_node_program_comm_contract():
+    n = 8
+    w = mixing_matrix("ring", n)
+    _, params, _ = _problem(n, 1)
+    eng, flat0 = FusedEngine.simulated(
+        w, params, scale_chunk=8, node_program="payload_drop:p=0.2,seed=1",
+    )
+    cfg = FLConfig(algorithm="dsgd", q=1, n_nodes=n)
+    keys = eng.comm_keys(cfg)
+    assert "topo_round" in keys and "node_key" in keys
+    assert "topo_key" not in keys  # static topology contributes nothing
+    comm = eng.init_comm_state(cfg, flat0)
+    np.testing.assert_array_equal(
+        np.asarray(comm["node_key"]),
+        np.asarray(eng.node_program.init_key()),
+    )
+    # payload-only faults never trigger the masked scan
+    assert eng.make_step_mask(cfg) is None
+    assert eng.make_step_mask(FLConfig(
+        algorithm="dsgd", q=4, n_nodes=n)) is None
+
+
+# ---------------------------------------------------------------------------
+# the eager fault oracle: masked local steps + gated per-round W
+# ---------------------------------------------------------------------------
+
+
+def _eager_gates(prog, r, q):
+    """The traced gates evaluated eagerly at round ``r`` (same key the
+    engine carries in ``FLState.comm['node_key']``)."""
+    key = jnp.asarray(prog.init_key())
+    up = np.asarray(prog.wire_gate(jnp.int32(r), key))
+    mask = np.asarray(prog.step_gate(jnp.int32(r), key, q))
+    return up, mask
+
+
+def _fault_oracle(loss, params, batches, w, cfg, alpha, rounds, chunk,
+                  node_prog, engine_kind="fused", topo_prog=None):
+    """Hand-written faulty round loop: masked local steps (a gated node's
+    scan iteration moves nothing), then the comm round against the
+    composed per-round W (topology gate first, then the payload gate's
+    symmetric drop-renormalization) via the fused jnp references or the
+    exact flat mix."""
+    flat, layout = pack(params, pad_to=chunk)
+    grad_fn = jax.vmap(jax.value_and_grad(loss))
+
+    def eval_grads(fb, batch):
+        losses, grads = grad_fn(unpack(fb, layout), batch)
+        return losses, pack_like(grads, layout)
+
+    q = cfg.q
+    x = flat + 0.0
+    zeros = jnp.zeros_like(x)
+    tr, gp = zeros, zeros
+    rx, sx, rt, st_ = zeros, zeros, zeros, zeros
+    for r in range(rounds):
+        up, mask = _eager_gates(node_prog, r, q)
+        for i in range(q - 1):
+            _, g = eval_grads(x, {k: v[i] for k, v in batches.items()})
+            x = x - alpha * jnp.asarray(mask[i])[:, None] * g
+        _, g = eval_grads(x, {k: v[q - 1] for k, v in batches.items()})
+        w_r = w if topo_prog is None else topo_prog.weights_np(r)
+        w_off, w_diag = compose_node_gate(
+            jnp.asarray(w_r - np.diag(np.diag(w_r)), jnp.float32),
+            jnp.asarray(np.diag(w_r), jnp.float32),
+            jnp.asarray(up),
+        )
+        if engine_kind == "flat":
+            if cfg.algorithm == "dsgd":
+                x = (w_off @ x + w_diag[:, None] * x) - alpha * g
+            else:
+                tr = (w_off @ tr + w_diag[:, None] * tr) + g - gp
+                x = (w_off @ x + w_diag[:, None] * x) - alpha * tr
+                gp = g
+        elif cfg.algorithm == "dsgd":
+            x, rx, sx, _ = fused_round_ref(
+                x, g, rx, sx, w_off, w_diag, jnp.float32(alpha),
+                scale_chunk=chunk,
+            )
+        else:
+            x, tr, rx, sx, rt, st_, _, _ = fused_round_gt_ref(
+                x, tr, g, gp, rx, sx, rt, st_, w_off, w_diag,
+                jnp.float32(alpha), scale_chunk=chunk,
+            )
+            gp = g
+    return x
+
+
+@pytest.mark.parametrize("spec", NODE_SPECS)
+@pytest.mark.parametrize("algorithm", ["dsgd", "dsgt"])
+def test_fused_faulty_rounds_match_oracle(spec, algorithm):
+    n, q, chunk, rounds = 8, 3, 8, 4
+    w = mixing_matrix("ring", n)
+    loss, params, batches = _problem(n, q)
+    cfg = FLConfig(algorithm=algorithm, q=q, n_nodes=n)
+    eng, flat0 = FusedEngine.simulated(
+        w, params, scale_chunk=chunk, impl="pallas", node_program=spec,
+    )
+    rf = jax.jit(make_fl_round(loss, None, constant(0.05), cfg, engine=eng))
+    st = init_fl_state(cfg, flat0, engine=eng)
+    for _ in range(rounds):
+        st, m = rf(st, batches)
+    assert rf._cache_size() == 1  # faults add ZERO recompiles
+    assert int(st.comm["topo_round"]) == rounds
+    assert 0.0 <= float(m["payload_fraction"]) <= 1.0
+    if eng.node_program.heterogeneous_compute:
+        assert 0.0 < float(m["compute_fraction"]) <= 1.0
+    oracle = _fault_oracle(loss, params, batches, w, cfg, 0.05, rounds,
+                           chunk, eng.node_program)
+    np.testing.assert_allclose(np.asarray(st.params), np.asarray(oracle),
+                               atol=1e-5)
+
+
+@pytest.mark.parametrize("algorithm", ["dsgd", "dsgt"])
+def test_flat_faulty_rounds_match_oracle(algorithm):
+    n, q, chunk, rounds = 8, 2, 8, 4
+    w = mixing_matrix("ring", n)
+    loss, params, batches = _problem(n, q)
+    cfg = FLConfig(algorithm=algorithm, q=q, n_nodes=n)
+    eng, flat0 = get_engine("flat").simulated(
+        w, params, scale_chunk=chunk,
+        node_program="stragglers:frac=0.4,rate=0.0,seed=5",
+    )
+    rf = jax.jit(make_fl_round(loss, None, constant(0.05), cfg, engine=eng))
+    st = init_fl_state(cfg, flat0, engine=eng)
+    for _ in range(rounds):
+        st, m = rf(st, batches)
+    assert rf._cache_size() == 1
+    oracle = _fault_oracle(loss, params, batches, w, cfg, 0.05, rounds,
+                           chunk, eng.node_program, engine_kind="flat")
+    np.testing.assert_allclose(np.asarray(st.params), np.asarray(oracle),
+                               atol=1e-5)
+
+
+def test_faults_compose_with_topology_churn():
+    """Third and fourth axes together: per-round graph churn AND payload
+    drops, one compiled round, both gates folded into the realized W_r."""
+    n, q, chunk, rounds = 8, 2, 8, 5
+    w = mixing_matrix("ring", n)
+    loss, params, batches = _problem(n, q)
+    cfg = FLConfig(algorithm="dsgt", q=q, n_nodes=n)
+    eng, flat0 = FusedEngine.simulated(
+        w, params, scale_chunk=chunk, impl="pallas",
+        topology_program="edge_failure:p=0.3,seed=4",
+        node_program="payload_drop:p=0.25,seed=6",
+    )
+    rf = jax.jit(make_fl_round(loss, None, constant(0.05), cfg, engine=eng))
+    st = init_fl_state(cfg, flat0, engine=eng)
+    for _ in range(rounds):
+        st, m = rf(st, batches)
+    assert rf._cache_size() == 1
+    assert "edge_fraction" in m and "payload_fraction" in m
+    oracle = _fault_oracle(loss, params, batches, w, cfg, 0.05, rounds,
+                           chunk, eng.node_program,
+                           topo_prog=eng.topology_program)
+    np.testing.assert_allclose(np.asarray(st.params), np.asarray(oracle),
+                               atol=1e-5)
+
+
+def test_faults_compose_with_bounded_staleness():
+    """Fourth axis x depth-k ring: the gated W_r mixes the k-round-stale
+    payload (dsgd, payload drops only -- the wire still crosses, the gate
+    zeroes the mixing contribution)."""
+    n, q, chunk, rounds, k = 8, 2, 8, 6, 2
+    w = mixing_matrix("ring", n)
+    loss, params, batches = _problem(n, q)
+    cfg = FLConfig(algorithm="dsgd", q=q, n_nodes=n)
+    eng, flat0 = FusedEngine.simulated(
+        w, params, scale_chunk=chunk, impl="pallas",
+        node_program="payload_drop:p=0.25,seed=6",
+        round_schedule=f"bounded_staleness:k={k}",
+    )
+    rf = jax.jit(make_fl_round(loss, None, constant(0.05), cfg, engine=eng))
+    st = init_fl_state(cfg, flat0, engine=eng)
+    for _ in range(rounds):
+        st, _ = rf(st, batches)
+    assert rf._cache_size() == 1
+
+    # k-delayed oracle with the gated W: local steps by hand, wire stage
+    # via the jnp reference, mix contracting the composed W against the
+    # reconstruction from k rounds back
+    flat, layout = pack(params, pad_to=chunk)
+    grad_fn = jax.vmap(jax.value_and_grad(loss))
+    x = flat + 0.0
+    zeros = jnp.zeros_like(x)
+    recon, res = zeros, zeros
+    past = collections.deque([zeros] * k)
+    prog = eng.node_program
+    for r in range(rounds):
+        for i in range(q - 1):
+            _, grads = grad_fn(unpack(x, layout),
+                               {kk: v[i] for kk, v in batches.items()})
+            x = x - 0.05 * pack_like(grads, layout)
+        _, grads = grad_fn(unpack(x, layout),
+                           {kk: v[q - 1] for kk, v in batches.items()})
+        g = pack_like(grads, layout)
+        up, _ = _eager_gates(prog, r, q)
+        w_off, w_diag = compose_node_gate(
+            jnp.asarray(w - np.diag(np.diag(w)), jnp.float32),
+            jnp.asarray(np.diag(w), jnp.float32), jnp.asarray(up),
+        )
+        h, _, _, nrecon, nres = wire_stage_ref(
+            x, g, recon, res, jnp.float32(0.05), scale_chunk=chunk,
+        )
+        x = w_off @ past[0] + w_diag[:, None] * h
+        recon, res = nrecon, nres
+        past.append(nrecon)
+        past.popleft()
+    np.testing.assert_allclose(np.asarray(st.params), np.asarray(x),
+                               atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# mid-fault checkpoint replay (Markov churn + node program manifests)
+# ---------------------------------------------------------------------------
+
+
+def test_mid_fault_checkpoint_replays_bit_identically():
+    """Save mid-run under stateful Markov churn (topo_up mid-outage) AND
+    a straggler program; the restore must replay the identical fault
+    sequence bit for bit, and a restore under a DIFFERENT node program
+    must be refused."""
+    n, q, chunk = 8, 2, 8
+    w = mixing_matrix("ring", n)
+    loss, params, batches = _problem(n, q)
+    cfg = FLConfig(algorithm="dsgt", q=q, n_nodes=n)
+    node_spec = "stragglers:drop=1,frac=0.4,rate=0.5,seed=3"
+    churn_spec = "node_churn:mean_downtime=2,p_down=0.3,seed=1"
+    eng, flat0 = FusedEngine.simulated(
+        w, params, scale_chunk=chunk, impl="pallas",
+        topology_program=churn_spec, node_program=node_spec,
+    )
+    rf = jax.jit(make_fl_round(loss, None, inv_sqrt(0.05), cfg, engine=eng))
+    st = init_fl_state(cfg, flat0, engine=eng)
+    for _ in range(3):
+        st, _ = rf(st, batches)
+    assert "topo_up" in st.comm  # the Markov outage state rides in comm
+    with tempfile.TemporaryDirectory() as d:
+        save_fl_state(d, st, engine=eng)
+        import json
+
+        with open(os.path.join(d, "manifest.json")) as f:
+            manifest = json.load(f)
+        assert manifest["topology_program"] == churn_spec
+        assert manifest["node_program"] == node_spec
+        template = init_fl_state(cfg, flat0, engine=eng)
+        back = load_fl_state(d, template, engine=eng)
+
+        other, _ = FusedEngine.simulated(
+            w, params, scale_chunk=chunk, impl="pallas",
+            topology_program=churn_spec,
+            node_program="payload_drop:p=0.2,seed=0",
+        )
+        with pytest.raises(ValueError, match="node program"):
+            load_fl_state(d, template, engine=other)
+    for _ in range(3):
+        st, _ = rf(st, batches)
+        back, _ = rf(back, batches)
+    np.testing.assert_array_equal(np.asarray(st.params),
+                                  np.asarray(back.params))
+    np.testing.assert_array_equal(np.asarray(st.comm["topo_up"]),
+                                  np.asarray(back.comm["topo_up"]))
+
+
+# ---------------------------------------------------------------------------
+# the staleness/churn-aware alpha controller
+# ---------------------------------------------------------------------------
+
+
+def test_robust_alpha_scale():
+    assert robust_alpha_scale() == 1.0
+    assert robust_alpha_scale(uptime=0.5) == pytest.approx(0.25)
+    assert robust_alpha_scale(staleness_depth=2) == pytest.approx(0.5)
+    assert robust_alpha_scale(0.8, 3) == pytest.approx(0.8 ** 2 * 2 / 5)
+    with pytest.raises(ValueError, match="uptime"):
+        robust_alpha_scale(uptime=1.5)
+    with pytest.raises(ValueError, match="staleness"):
+        robust_alpha_scale(staleness_depth=-1)
+    base = inv_sqrt(0.1)
+    shrunk = scaled(base, robust_alpha_scale(0.5, 0))
+    for step in (1, 10, 100):
+        assert float(shrunk(jnp.int32(step))) == pytest.approx(
+            0.25 * float(base(jnp.int32(step)))
+        )
+
+
+# ---------------------------------------------------------------------------
+# trainer plumbing: sugar, controller, metrics
+# ---------------------------------------------------------------------------
+
+
+def _toy_run(**kw):
+    from repro.configs import FLRunConfig
+    from repro.training.trainer import train_decentralized
+
+    n = 8
+    rng = np.random.default_rng(0)
+    target = jnp.asarray(rng.normal(size=(4, 5)), jnp.float32)
+
+    def loss(p, batch):
+        return jnp.mean((p["w"] - batch["t"]) ** 2)
+
+    params = {"w": jnp.asarray(rng.normal(size=(4, 5)), jnp.float32)}
+
+    def batches():
+        while True:
+            yield {"t": np.broadcast_to(np.asarray(target), (n, 4, 5))}
+
+    run = FLRunConfig(algorithm="dsgd", q=2, topology="ring", n_nodes=n,
+                      batch_per_node=1, alpha0=0.05, schedule="constant")
+    return train_decentralized(loss, params, run, batches(), rounds=4,
+                               engine="fused", scale_chunk=8, **kw)
+
+
+def test_trainer_staleness_depth_sugar_and_fault_metrics():
+    result = _toy_run(
+        staleness_depth=2,
+        node_program="stragglers:frac=0.5,rate=0.5,seed=1",
+        robust_alpha=True,
+    )
+    assert result.engine.round_schedule.spec() == "bounded_staleness:k=2"
+    assert result.engine.node_program.spec() == \
+        "stragglers:drop=1,frac=0.5,rate=0.5,seed=1"
+    rows = result.history.rows()
+    assert all(0.0 <= r["payload_fraction"] <= 1.0 for r in rows)
+    assert all(0.0 < r["compute_fraction"] <= 1.0 for r in rows)
+    # depth 0 is the sequential schedule
+    assert _toy_run(staleness_depth=0).engine.round_schedule.spec() == \
+        "sequential"
+
+
+def test_trainer_rejects_conflicting_schedule_knobs():
+    with pytest.raises(ValueError, match="staleness_depth"):
+        _toy_run(staleness_depth=2, round_schedule="pipelined")

@@ -58,7 +58,7 @@ def _problem(n, q, seed=0):
 
 
 def test_schedule_registry():
-    assert schedule_names() == ("pipelined", "sequential")
+    assert schedule_names() == ("bounded_staleness", "pipelined", "sequential")
     assert isinstance(get_schedule("sequential"), SequentialSchedule)
     assert isinstance(get_schedule("pipelined"), PipelinedSchedule)
     assert resolve_schedule(None).name == "sequential"
@@ -67,6 +67,20 @@ def test_schedule_registry():
     assert resolve_schedule(sched) is sched
     with pytest.raises(ValueError, match="sequential"):
         get_schedule("does-not-exist")
+
+
+def test_schedule_spec_round_trip():
+    sched = resolve_schedule("bounded_staleness:k=3")
+    assert sched.depth == 3 and sched.spec() == "bounded_staleness:k=3"
+    assert resolve_schedule(sched.spec()).depth == 3
+    assert resolve_schedule("sequential").spec() == "sequential"
+    assert resolve_schedule("pipelined").spec() == "pipelined"
+    with pytest.raises(ValueError, match="k"):
+        resolve_schedule("bounded_staleness:k=0")
+    with pytest.raises(ValueError):
+        resolve_schedule("bounded_staleness:k=two")
+    with pytest.raises(ValueError):
+        resolve_schedule("sequential:k=2")
 
 
 @pytest.mark.parametrize("name", ["tree", "flat"])
