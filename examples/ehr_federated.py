@@ -61,7 +61,8 @@ from repro.training.trainer import AdaptiveTopK, stack_for_nodes
 def run_fused_engine(rounds: int, q: int, scale_chunk: int = 512, seed: int = 0,
                      fl_engine: str = "fused", topk=None,
                      class_weight=CLASS_WEIGHT, fl_schedule="sequential",
-                     topk_schedule=None, topology_program=None):
+                     topk_schedule=None, topology_program=None,
+                     privacy=None):
     """FD-DSGT on a registry engine: one megakernel call per comm round
     on the default ``fused`` engine, with the class-weighted loss
     (``configs.ehr_mlp.class_weights``) unless ``class_weight=None`` --
@@ -75,7 +76,11 @@ def run_fused_engine(rounds: int, q: int, scale_chunk: int = 512, seed: int = 0,
     hysteresis band); ``topology_program`` (a registry spec like
     "node_churn:p_down=0.2,mean_downtime=5") makes the hospital graph
     TIME-VARYING -- per-round link/node outages with dropped weight
-    folded into the self-loops, inside the one compiled round."""
+    folded into the self-loops, inside the one compiled round;
+    ``privacy`` (a spec like "secure_agg+dp:sigma=0.5,clip=1.0") adds
+    the wire's privacy epilogue -- the hospitals' whole reason for
+    gossiping instead of pooling records -- with the per-round
+    ``dp_epsilon`` moments bound reported alongside the loss."""
     if rounds < 1:
         raise ValueError("--fused-rounds must be >= 1")
     if topk_schedule is not None and topk is not None:
@@ -94,6 +99,7 @@ def run_fused_engine(rounds: int, q: int, scale_chunk: int = 512, seed: int = 0,
     engine, state0 = get_engine(fl_engine).simulated(
         w, params, scale_chunk=scale_chunk, topk=topk, impl="pallas",
         round_schedule=fl_schedule, topology_program=topology_program,
+        privacy=privacy,
     )
     loss_fn = make_mlp_loss(class_weights(class_weight))
     round_fn = jax.jit(
@@ -107,7 +113,7 @@ def run_fused_engine(rounds: int, q: int, scale_chunk: int = 512, seed: int = 0,
         dense_engine, _ = get_engine(fl_engine).simulated(
             w, params, scale_chunk=scale_chunk, topk=adaptive.dense_topk,
             impl="pallas", round_schedule=fl_schedule,
-            topology_program=topology_program,
+            topology_program=topology_program, privacy=privacy,
         )
         dense_fn = jax.jit(
             make_fl_round(loss_fn, None, inv_sqrt(0.02), cfg,
@@ -137,8 +143,11 @@ def run_fused_engine(rounds: int, q: int, scale_chunk: int = 512, seed: int = 0,
 
     graph_note = (f"hospital graph x {engine.topology_program.spec()}"
                   if engine.dynamic_topology else "hospital graph")
+    priv_note = (f", privacy={engine.privacy.spec()}"
+                 if engine.privacy.active else "")
     print(f"\n{fl_engine} engine (FD-DSGT, Q={q}, schedule={fl_schedule}, "
-          f"{graph_note}, class_weight={class_weight}, {layout_note}):")
+          f"{graph_note}, class_weight={class_weight}{priv_note}, "
+          f"{layout_note}):")
     m = None
     for rnd in range(1, rounds + 1):
         qs = [next(batcher) for _ in range(q)]
@@ -152,6 +161,8 @@ def run_fused_engine(rounds: int, q: int, scale_chunk: int = 512, seed: int = 0,
                       if adaptive is not None else "")
             churn_note = (f" edges_up={float(m['edge_fraction']):.0%}"
                           if "edge_fraction" in m else "")
+            churn_note += (f" eps={float(m['dp_epsilon']):.2f}"
+                           if "dp_epsilon" in m else "")
             print(f"  [round {rnd:4d}] loss={float(m['loss']):.4f} "
                   f"consensus_err={float(m['consensus_err']):.2e} "
                   f"comm_bytes/round={per_round:,.0f} ({wire_label} wire) "
@@ -180,7 +191,9 @@ def run_fused_engine(rounds: int, q: int, scale_chunk: int = 512, seed: int = 0,
           f"per exchange) => {q * saving:.0f}x fewer bytes "
           f"per iteration than comm-every-step fp32 gossip")
     return {"acc": acc, "bal_acc": bal, "wire_saving": saving,
-            "dense_rounds": adaptive.dense_rounds if adaptive else None}
+            "dense_rounds": adaptive.dense_rounds if adaptive else None,
+            "dp_epsilon": float(m["dp_epsilon"]) if m is not None
+            and "dp_epsilon" in m else None}
 
 
 def main() -> None:
@@ -219,6 +232,13 @@ def main() -> None:
                          f"{', '.join(program_names())}); e.g. "
                          "'node_churn:p_down=0.2,mean_downtime=5' makes "
                          "the hospital graph time-varying")
+    ap.add_argument("--fl-privacy", default=None,
+                    help="wire privacy epilogue for part 2 (PrivacySpec): "
+                         "'secure_agg' masks every neighbor payload "
+                         "(cancels exactly under the mix -- bit-identical "
+                         "training), 'dp:sigma=0.5,clip=1.0' adds clipped "
+                         "Gaussian noise with the dp_epsilon moments "
+                         "bound reported per round, or both with '+'")
     ap.add_argument("--class-weight", default=CLASS_WEIGHT,
                     help="part-2 loss weighting: 'balanced' (inverse "
                          "frequency, lifts balanced accuracy off the ~0.6 "
@@ -257,7 +277,8 @@ def main() -> None:
                              else args.class_weight,
                              fl_schedule=args.fl_schedule,
                              topk_schedule=tks,
-                             topology_program=args.fl_topology_program)
+                             topology_program=args.fl_topology_program,
+                             privacy=args.fl_privacy)
 
     print("\nPaper claims validated:")
     print("  * FD variants converge with ~2 orders of magnitude fewer comm rounds")

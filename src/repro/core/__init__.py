@@ -14,6 +14,10 @@ Public API:
     heterogeneity — NodeProgram registry: per-node compute rates, payload
                 delays and drops as the fourth pluggable round axis
                 (WHICH nodes keep up), with drop-renormalized mixing
+    privacy   — PrivacySpec: pairwise-masked secure aggregation + DP
+                noise in the wire-stage epilogue as the fifth round axis
+                (WHAT a neighbor can read), with (epsilon, delta) moments
+                accounting
     fl        — FLState + DSGD/DSGT/FD round builders + baselines
     schedules — alpha^r schedules (paper's 0.02/sqrt(r), Theorem 1 rate, ...)
 """
@@ -76,6 +80,13 @@ from repro.core.fl import (
     consensus_params,
     init_fl_state,
     make_fl_round,
+)
+from repro.core.privacy import (
+    PrivacySpec,
+    analytic_epsilon,
+    parse_privacy,
+    rdp_epsilon,
+    resolve_privacy,
 )
 from repro.core.mixing import (
     make_allgather_gossip,
@@ -163,6 +174,11 @@ __all__ = [
     "node_program_names",
     "parse_node_program",
     "resolve_node_program",
+    "PrivacySpec",
+    "parse_privacy",
+    "resolve_privacy",
+    "rdp_epsilon",
+    "analytic_epsilon",
     "compact_pos_dtype",
     "consensus_params",
     "init_fl_state",

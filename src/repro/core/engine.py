@@ -124,6 +124,17 @@ from repro.core.packing import (
     pack_like,
     unpack,
 )
+from repro.core.privacy import (
+    NONE as PRIVACY_NONE,
+    PAD_STREAM,
+    TRACKER_STREAM_OFFSET,
+    PrivacySpec,
+    dp_noise,
+    epsilon_traced,
+    mask_wire,
+    pair_index,
+    resolve_privacy,
+)
 
 PyTree = Any
 
@@ -470,6 +481,12 @@ class GossipEngine(abc.ABC):
     #: as the topology program: one ``node_key`` in ``FLState.comm``,
     #: everything per-round is a traced operand of the ONE compiled round.
     node_program: NodeProgram = HOMOGENEOUS
+    #: the engine's :class:`~repro.core.privacy.PrivacySpec` -- the FIFTH
+    #: round axis (what the wire does to the PAYLOAD: pairwise transport
+    #: pads and/or clip + Gaussian DP noise). Engines that realize it
+    #: override :attr:`_priv_rng`; the base engines carry the spec only
+    #: so the checkpoint manifest can record/refuse it uniformly.
+    privacy: PrivacySpec = PRIVACY_NONE
 
     # -- dynamic-round contract (topology + node programs) -----------------
 
@@ -488,19 +505,31 @@ class GossipEngine(abc.ABC):
         traced-W round layout."""
         return self.dynamic_topology or self.dynamic_nodes
 
+    @property
+    def _priv_rng(self) -> bool:
+        """True when the engine REALIZES a privacy transform that
+        consumes round-time RNG (pads / DP noise) -- it then carries
+        ``priv_key`` + the shared ``topo_round`` counter in
+        ``FLState.comm`` so masked/noised rounds are checkpoint-exact.
+        Base engines never do; the fused engines override."""
+        return False
+
     def _topo_keys(self) -> Tuple[str, ...]:
         """Comm keys the dynamic programs contribute: the shared round
         counter (round index the NEXT comm step will mix under), the
-        topology program's base RNG key + Markov state buffers, and the
-        node program's base RNG key -- all checkpointed, so a mid-churn /
-        mid-outage restore replays the identical fault sequence."""
+        topology program's base RNG key + Markov state buffers, the
+        node program's base RNG key, and the privacy base key -- all
+        checkpointed, so a mid-churn / mid-outage / mid-noise restore
+        replays the identical round sequence."""
         keys: Tuple[str, ...] = ()
-        if self.dynamic_round:
+        if self.dynamic_round or self._priv_rng:
             keys += ("topo_round",)
         if self.dynamic_topology:
             keys += ("topo_key",) + self.topology_program.state_keys()
         if self.dynamic_nodes:
             keys += ("node_key",)
+        if self._priv_rng:
+            keys += ("priv_key",)
         return keys
 
     def _topo_sds(self) -> Dict[str, jax.ShapeDtypeStruct]:
@@ -508,6 +537,7 @@ class GossipEngine(abc.ABC):
             "topo_round": jax.ShapeDtypeStruct((), jnp.int32),
             "topo_key": jax.ShapeDtypeStruct((2,), jnp.uint32),
             "node_key": jax.ShapeDtypeStruct((2,), jnp.uint32),
+            "priv_key": jax.ShapeDtypeStruct((2,), jnp.uint32),
         }
         sds.update(self.topology_program.state_sds())
         return sds
@@ -517,6 +547,7 @@ class GossipEngine(abc.ABC):
             "topo_round": jnp.int32(0),
             "topo_key": jnp.asarray(self.topology_program.init_key()),
             "node_key": jnp.asarray(self.node_program.init_key()),
+            "priv_key": jnp.asarray(self.privacy.init_key()),
         }
         # jnp.asarray: program init states are eager numpy (jit-safe); a
         # raw ndarray leaf would cost one extra executable on round 1.
@@ -564,7 +595,20 @@ class GossipEngine(abc.ABC):
             w_off_r, w_diag_r = compose_node_gate(w_off_r, w_diag_r, up)
             new_comm["node_key"] = nkey
             metrics["payload_fraction"] = jnp.mean(up.astype(jnp.float32))
+        if self._priv_rng:
+            new_comm["priv_key"] = comm["priv_key"]
         return w_off_r, w_diag_r, new_comm, metrics
+
+    def _priv_comm(self, comm: Dict[str, jnp.ndarray]) -> Dict[str, jnp.ndarray]:
+        """The advanced privacy counter entries for STATIC rounds (a
+        dynamic round advances ``topo_round`` in :meth:`_round_gates`,
+        which also passes ``priv_key`` through)."""
+        if not self._priv_rng or self.dynamic_round:
+            return {}
+        return {
+            "topo_round": comm["topo_round"] + 1,
+            "priv_key": comm["priv_key"],
+        }
 
     def make_step_mask(self, cfg: FLConfig):
         """The heterogeneous-compute hook for ``_assemble_round``: None
@@ -704,11 +748,44 @@ class GossipEngine(abc.ABC):
 
         return init_fl_state(cfg, params, engine=self)
 
+    def _known_comm_keys(self) -> frozenset:
+        """EVERY comm key this engine could ever carry (a cfg-independent
+        superset of :meth:`comm_keys` over both algorithms and all
+        schedule depths) -- what :meth:`restore_comm` validates restored
+        dicts against. Engines with wire buffers extend it."""
+        return frozenset(
+            ("topo_round", "topo_key", "node_key", "priv_key")
+            + tuple(self.topology_program.state_keys())
+        )
+
+    def _check_restored_comm_keys(
+        self, comm: Dict[str, jnp.ndarray]
+    ) -> None:
+        """Refuse restored comm dicts carrying keys this engine does not
+        know: a silent extra key is a forward-compat hazard (state from a
+        newer wire contract would be dropped on the floor, then
+        re-initialized to something inconsistent on the next save)."""
+        unknown = sorted(set(comm) - self._known_comm_keys())
+        if unknown:
+            raise ValueError(
+                f"restored comm state carries keys {unknown} the "
+                f"{self.name!r} engine does not know (known: "
+                f"{sorted(self._known_comm_keys())}). The checkpoint was "
+                "written under a different wire contract -- rebuild the "
+                "engine with the checkpoint manifest's engine/schedule/"
+                "topology/node-program/privacy specs (training.checkpoint "
+                "restores them verbatim), or migrate the comm dict by "
+                "dropping keys the manifest marks as derived."
+            )
+
     def restore_comm(
         self, comm: Dict[str, jnp.ndarray]
     ) -> Dict[str, jnp.ndarray]:
         """Rebuild DERIVED wire-state buffers after a checkpoint restore
-        (identity for engines whose comm buffers are all independent)."""
+        (identity for engines whose comm buffers are all independent).
+        Always validates the restored keys first: unknown keys raise
+        (see :meth:`_check_restored_comm_keys`)."""
+        self._check_restored_comm_keys(comm)
         return comm
 
     def is_derived_comm_key(self, key: str) -> bool:
@@ -854,11 +931,16 @@ class TreeEngine(GossipEngine):
     def simulated(cls, w: np.ndarray, stacked_params: PyTree, *,
                   wire_dtype=None, topk=None, round_schedule=None,
                   storage_dtype=None, topology_program=None,
-                  node_program=None, **_ignored):
+                  node_program=None, privacy=None, **_ignored):
         """Single-host build: dense-W backend; state stays the input tree."""
         _reject_topk(topk, cls.name)
         _require_sequential(round_schedule, cls.name)
         _reject_storage_dtype(storage_dtype, cls.name)
+        _reject_privacy(
+            privacy, cls.name,
+            "engine's pytree wire has no quantize epilogue to pad or "
+            "noise",
+        )
         _reject_dynamic_program(
             topology_program, cls.name,
             "engine bakes W into its tree-level gossip backend",
@@ -873,10 +955,16 @@ class TreeEngine(GossipEngine):
     def from_mesh(cls, mesh: Mesh, node_axes: Sequence[str], stacked_sds,
                   *, specs=None, wire_dtype=None, axes_subset=None,
                   topk=None, round_schedule=None, storage_dtype=None,
-                  topology_program=None, node_program=None, **_ignored):
+                  topology_program=None, node_program=None, privacy=None,
+                  **_ignored):
         _reject_topk(topk, cls.name)
         _require_sequential(round_schedule, cls.name)
         _reject_storage_dtype(storage_dtype, cls.name)
+        _reject_privacy(
+            privacy, cls.name,
+            "engine's pytree wire has no quantize epilogue to pad or "
+            "noise",
+        )
         _reject_dynamic_program(
             topology_program, cls.name,
             "engine bakes W into its tree-level gossip backend",
@@ -911,11 +999,20 @@ class FlatEngine(GossipEngine):
 
     def __init__(self, mix_fn: Callable[[jnp.ndarray], jnp.ndarray],
                  layout: FlatLayout, *, topology_program=None,
-                 node_program=None, wire_dtype=None, w=None):
+                 node_program=None, wire_dtype=None, w=None, privacy=None):
         self._mix = mix_fn
         self.layout = layout
         self.topology_program = resolve_program(topology_program)
         self.node_program = resolve_node_program(node_program)
+        # The flat engine GAINS the privacy knob but realizes only the
+        # vacuous half: its simulated wire is one in-process matmul, so
+        # secure_agg is trivially satisfied (no per-edge payload exists
+        # to intercept) and is accepted as a no-op; DP is refused at the
+        # build sites (no EF epilogue to absorb the noise).
+        self.privacy = _reject_dp(
+            privacy, self.name, "engine ships an exact un-quantized wire "
+            "with no error-feedback residual"
+        )
         self._wire_dtype = wire_dtype
         self._w_np = None if w is None else np.asarray(w, dtype=np.float64)
         if self.dynamic_topology and not self.topology_program.bound:
@@ -966,7 +1063,8 @@ class FlatEngine(GossipEngine):
     def simulated(cls, w: np.ndarray, stacked_params: PyTree, *,
                   scale_chunk: int = 1, wire_dtype=None, topk=None,
                   round_schedule=None, storage_dtype=None,
-                  topology_program=None, node_program=None, **_ignored):
+                  topology_program=None, node_program=None, privacy=None,
+                  **_ignored):
         _reject_topk(topk, cls.name)
         _require_sequential(round_schedule, cls.name)
         prog = resolve_program(topology_program).bind(w)
@@ -974,15 +1072,21 @@ class FlatEngine(GossipEngine):
                             buffer_dtype=storage_dtype or jnp.float32)
         return cls(make_dense_flat_mix(w, wire_dtype), layout,
                    topology_program=prog, node_program=node_program,
-                   wire_dtype=wire_dtype, w=w), flat
+                   wire_dtype=wire_dtype, w=w, privacy=privacy), flat
 
     @classmethod
     def from_mesh(cls, mesh: Mesh, node_axes: Sequence[str], stacked_sds,
                   *, wire_dtype=None, axes_subset=None, scale_chunk: int = 512,
                   topk=None, round_schedule=None, storage_dtype=None,
-                  topology_program=None, node_program=None, **_ignored):
+                  topology_program=None, node_program=None, privacy=None,
+                  **_ignored):
         _reject_topk(topk, cls.name)
         _require_sequential(round_schedule, cls.name)
+        _reject_privacy(
+            privacy, cls.name,
+            "engine's mesh build ships raw fp32 payloads through a baked "
+            "ppermute backend (no pad/noise epilogue)",
+        )
         _reject_dynamic_program(
             topology_program, cls.name,
             "engine's mesh build mixes through a baked ppermute backend",
@@ -1053,6 +1157,34 @@ def _reject_node_program(program, name: str, reason: str) -> NodeProgram:
     return prog
 
 
+def _reject_privacy(privacy, name: str, reason: str) -> PrivacySpec:
+    """Resolve a privacy spec and refuse ACTIVE specs on engines whose
+    wire cannot realize them (returns the resolved inactive spec
+    otherwise, same discipline as :func:`_reject_dynamic_program`)."""
+    p = resolve_privacy(privacy)
+    if p.active:
+        raise ValueError(
+            f"privacy spec {p.spec()!r}: the {name!r} {reason} -- use "
+            "'fused' (dp; secure_agg is vacuously satisfied in-process) "
+            "or 'sharded_fused' on the circulant wire (dp + secure_agg)"
+        )
+    return p
+
+
+def _reject_dp(privacy, name: str, reason: str) -> PrivacySpec:
+    """Resolve a privacy spec, allowing ``secure_agg`` (a no-op where
+    no per-edge payload ever exists to read) but refusing DP on engines
+    without the EF quantize epilogue that absorbs the noise."""
+    p = resolve_privacy(privacy)
+    if p.dp:
+        raise ValueError(
+            f"privacy spec {p.spec()!r}: the {name!r} {reason}, so DP "
+            "noise would accumulate unabsorbed -- use the 'fused' or "
+            "'sharded_fused' engine (error-feedback wire epilogue)"
+        )
+    return p
+
+
 def _reject_storage_dtype(storage_dtype, name: str) -> None:
     if storage_dtype is not None and jnp.dtype(storage_dtype) != jnp.float32:
         raise ValueError(
@@ -1092,7 +1224,7 @@ class _FusedBase(GossipEngine):
                  topk: Optional[int] = None, error_feedback: bool = True,
                  difference_coding: bool = True, impl: str = "pallas",
                  round_schedule=None, topology_program=None,
-                 node_program=None):
+                 node_program=None, privacy=None):
         if impl not in ("pallas", "jnp"):
             raise ValueError(f"unknown impl {impl!r}")
         if scale_chunk < 1:
@@ -1115,6 +1247,78 @@ class _FusedBase(GossipEngine):
         self.round_schedule = resolve_schedule(round_schedule)
         self.topology_program = resolve_program(topology_program)
         self.node_program = resolve_node_program(node_program)
+        self.privacy = resolve_privacy(privacy)
+        if self.privacy.dp and not error_feedback:
+            raise ValueError(
+                "dp noise rides the EF residual (res-substitution in the "
+                "wire-stage epilogue); build the engine with "
+                "error_feedback=True or drop the dp token"
+            )
+
+    # -- privacy hooks ------------------------------------------------------
+
+    @property
+    def _dp(self) -> bool:
+        return self.privacy.dp
+
+    @property
+    def _sa_wire(self) -> bool:
+        """True when this build physically masks a transported payload
+        (only the sharded circulant wire does; the dense single-host
+        engines have no per-edge transport, so their secure_agg is
+        vacuously satisfied and numerically a no-op)."""
+        return False
+
+    @property
+    def _priv_rng(self) -> bool:
+        return self._dp or self._sa_wire
+
+    def _noise_scale(self) -> float:
+        """Gaussian-mechanism std: ``sigma * clip``."""
+        return float(self.privacy.dp_sigma * self.privacy.dp_clip)
+
+    def _dp_kwargs(self):
+        """The ``dp_clip`` kwarg forwarded to the wire-stage kernels
+        (the noise arrays are per-round traced operands)."""
+        return {"dp_clip": float(self.privacy.dp_clip)} if self._dp else {}
+
+    def _dp_noise_full(self, comm: Dict[str, jnp.ndarray], n: int,
+                       tracker: bool = False) -> jnp.ndarray:
+        """This round's (n, total) Gaussian draw from the checkpointed
+        privacy counter -- the fused engine's whole-matrix twin of the
+        sharded per-row draw (bitwise-identical rows: the element
+        counter is global)."""
+        from repro.core.privacy import NOISE_STREAM
+
+        stream = NOISE_STREAM + (TRACKER_STREAM_OFFSET if tracker else 0)
+        return dp_noise(
+            comm["priv_key"], comm["topo_round"], jnp.arange(n),
+            self.layout.total, self._noise_scale(), stream=stream,
+        )
+
+    def _privacy_metrics(self, cfg: FLConfig, new_state: FLState):
+        """The (epsilon, delta) moments bound over the WIRE RELEASES so
+        far: noise is drawn once per comm round (``step / q`` rounds,
+        the q local steps between rounds release nothing), and the DSGT
+        round releases TWO noised wires (x and tracker), doubling its
+        per-round composition count."""
+        if not self._dp:
+            return {}
+        wires = 2 if cfg.algorithm == "dsgt" else 1
+        return {
+            "dp_epsilon": epsilon_traced(
+                self.privacy.dp_sigma,
+                (new_state.step // cfg.q) * wires,
+                self.privacy.delta,
+            )
+        }
+
+    def _known_comm_keys(self) -> frozenset:
+        return super()._known_comm_keys() | frozenset(
+            base + suffix
+            for base in ("recon", "residual", "wire_q", "wire_scales")
+            for suffix in ("", "_t")
+        )
 
     @property
     def pipelined(self) -> bool:
@@ -1284,6 +1488,8 @@ class FusedEngine(_FusedBase):
         kw = dict(self._kernel_kwargs(), stale_mix=self.pipelined)
         egress = self.wire_bytes(cfg)
         dynamic = self.dynamic_round
+        dp = self._dp
+        n = cfg.n_nodes
 
         def comm_step(state: FLState, batch: PyTree):
             if state.comm is None:
@@ -1305,23 +1511,32 @@ class FusedEngine(_FusedBase):
                     self._round_gates(state.comm)
                 )
             else:
-                w_off_r, w_self_r, topo_comm = w_off, w_self, {}
+                w_off_r, w_self_r = w_off, w_self
+                topo_comm = self._priv_comm(state.comm)
+            dpkw = dict(self._dp_kwargs())
+            if dp:
+                dpkw["dp_noise"] = self._dp_noise_full(state.comm, n)
 
             if cfg.algorithm == "dsgd":
                 mixed, recon, res, _ = fused_round(
                     state.params, grads, state.comm["recon"],
-                    state.comm["residual"], w_off_r, w_self_r, alpha, **kw,
+                    state.comm["residual"], w_off_r, w_self_r, alpha,
+                    **kw, **dpkw,
                 )
                 new_state = state._replace(
                     step=step, params=mixed,
                     comm={"recon": recon, "residual": res, **topo_comm},
                 )
             else:
+                if dp:
+                    dpkw["dp_noise_t"] = self._dp_noise_full(
+                        state.comm, n, tracker=True
+                    )
                 mx, mt, nrx, nsx, nrt, nst, _, _ = fused_round_gt(
                     state.params, state.tracker, grads, state.prev_grad,
                     state.comm["recon"], state.comm["residual"],
                     state.comm["recon_t"], state.comm["residual_t"],
-                    w_off_r, w_self_r, alpha, **kw,
+                    w_off_r, w_self_r, alpha, **kw, **dpkw,
                 )
                 new_state = FLState(
                     step=step, params=mx, tracker=mt, prev_grad=grads,
@@ -1338,6 +1553,7 @@ class FusedEngine(_FusedBase):
                 "wire_bytes": jnp.float32(egress),
                 "ef_residual_rms": self._residual_rms(new_state.comm),
             }
+            metrics.update(self._privacy_metrics(cfg, new_state))
             metrics.update(gate_metrics)
             return new_state, metrics
 
@@ -1362,6 +1578,8 @@ class FusedEngine(_FusedBase):
         kw = self._kernel_kwargs()
         egress = self.wire_bytes(cfg)
         dynamic = self.dynamic_round
+        dp = self._dp
+        n = cfg.n_nodes
         dc = self.difference_coding
         chunk = self.scale_chunk
         w_off32 = jnp.asarray(w_off, jnp.float32)
@@ -1403,13 +1621,17 @@ class FusedEngine(_FusedBase):
                 w_off_r = jnp.asarray(w_off_r, jnp.float32)
                 w_self_r = jnp.asarray(w_self_r, jnp.float32)
             else:
-                w_off_r, w_self_r, topo_comm = w_off32, w_self32, {}
+                w_off_r, w_self_r = w_off32, w_self32
+                topo_comm = self._priv_comm(state.comm)
+            dpkw = dict(self._dp_kwargs())
+            if dp:
+                dpkw["dp_noise"] = self._dp_noise_full(state.comm, n)
 
             c = state.comm
             if cfg.algorithm == "dsgd":
                 h, q, sc, nrecon, nres = wire_stage(
                     state.params, grads, c["recon"], c["residual"],
-                    alpha32, **kw,
+                    alpha32, **kw, **dpkw,
                 )
                 mix = stale_recon(c["recon"], c["wire_q"], c["wire_scales"])
                 mixed = w_off_r @ mix + w_self_r[:, None] * h
@@ -1420,11 +1642,15 @@ class FusedEngine(_FusedBase):
                           "wire_q": nwq, "wire_scales": nwsc, **topo_comm},
                 )
             else:
+                if dp:
+                    dpkw["dp_noise_t"] = self._dp_noise_full(
+                        state.comm, n, tracker=True
+                    )
                 (h, t_half, qx, scx, nrx, nsx, qt, sct, nrt, nst) = (
                     wire_stage_gt(
                         state.params, state.tracker, grads, state.prev_grad,
                         c["recon"], c["residual"], c["recon_t"],
-                        c["residual_t"], alpha32, **kw,
+                        c["residual_t"], alpha32, **kw, **dpkw,
                     )
                 )
                 mix_x = stale_recon(c["recon"], c["wire_q"], c["wire_scales"])
@@ -1456,6 +1682,7 @@ class FusedEngine(_FusedBase):
                 "wire_bytes": jnp.float32(egress),
                 "ef_residual_rms": self._residual_rms(new_state.comm),
             }
+            metrics.update(self._privacy_metrics(cfg, new_state))
             metrics.update(gate_metrics)
             return new_state, metrics
 
@@ -1478,7 +1705,8 @@ class FusedEngine(_FusedBase):
                   scale_chunk: int = 512, topk=None, impl: str = "pallas",
                   error_feedback: bool = True, difference_coding: bool = True,
                   wire_dtype=None, round_schedule=None, storage_dtype=None,
-                  topology_program=None, node_program=None, **_ignored):
+                  topology_program=None, node_program=None, privacy=None,
+                  **_ignored):
         _reject_wire_dtype(wire_dtype)
         _reject_storage_dtype(storage_dtype, cls.name)
         flat, layout = pack(stacked_params, pad_to=scale_chunk)
@@ -1487,7 +1715,7 @@ class FusedEngine(_FusedBase):
                    difference_coding=difference_coding,
                    round_schedule=round_schedule,
                    topology_program=topology_program,
-                   node_program=node_program), flat
+                   node_program=node_program, privacy=privacy), flat
 
     @classmethod
     def from_mesh(cls, mesh: Mesh, node_axes: Sequence[str], stacked_sds,
@@ -1495,7 +1723,8 @@ class FusedEngine(_FusedBase):
                   topk=None, impl: str = "jnp", error_feedback: bool = True,
                   difference_coding: bool = True, self_weight=None,
                   round_schedule=None, storage_dtype=None,
-                  topology_program=None, node_program=None, **_ignored):
+                  topology_program=None, node_program=None, privacy=None,
+                  **_ignored):
         """Mesh build: W is the dense equivalent of the circulant torus the
         ppermute backend realizes over the node axes (directions restricted
         to ``axes_subset`` for hierarchical gossip). ``impl`` defaults to
@@ -1512,7 +1741,7 @@ class FusedEngine(_FusedBase):
                    difference_coding=difference_coding,
                    round_schedule=round_schedule,
                    topology_program=topology_program,
-                   node_program=node_program)
+                   node_program=node_program, privacy=privacy)
 
 
 @register_engine
@@ -1634,9 +1863,12 @@ class ShardedFusedEngine(_FusedBase):
         # and contracts its traced W_r row against it at mix time.
         self.topology_program.bind(self.dense_equivalent())
         self.node_program = self.node_program.bind(self.n_nodes)
-        # per-direction sender index: node i receives from _dir_src[d][i]
-        # (row-major node order, identical to dense_equivalent)
+        # per-direction sender index: node i receives from _dir_src[d][i],
+        # and ships its own payload to _dir_dst[d][i] (the inverse roll)
+        # -- row-major node order, identical to dense_equivalent. The dst
+        # table keys the SENDER side of the pairwise transport pads.
         self._dir_src: Tuple[np.ndarray, ...] = ()
+        self._dir_dst: Tuple[np.ndarray, ...] = ()
         if self.dirs is not None:
             names = list(self.node_axes)
             sizes = [self.mesh.shape[a] for a in names]
@@ -1644,6 +1876,18 @@ class ShardedFusedEngine(_FusedBase):
             self._dir_src = tuple(
                 np.roll(idx, shift, axis=names.index(axis_name)).reshape(-1)
                 for axis_name, shift, _ in self.dirs
+            )
+            self._dir_dst = tuple(
+                np.roll(idx, -shift, axis=names.index(axis_name)).reshape(-1)
+                for axis_name, shift, _ in self.dirs
+            )
+        if self.privacy.secure_agg and self.dirs is None:
+            raise ValueError(
+                f"privacy spec {self.privacy.spec()!r}: secure_agg needs "
+                "the circulant ppermute wire (per-edge payloads to pad); "
+                "the dense all-gather wire broadcasts every payload to "
+                "every node, so pairwise pads cannot conceal it -- drop "
+                "w= (use the mesh torus W) or drop the secure_agg token"
             )
 
     def _compact_is_economic(self) -> bool:
@@ -1657,6 +1901,15 @@ class ShardedFusedEngine(_FusedBase):
             return False
         idx = compact_index_bytes(self.scale_chunk, self.topk)
         return self.topk + idx <= self.scale_chunk
+
+    @property
+    def _sa_wire(self) -> bool:
+        """The circulant ppermute wire is the one place a per-edge
+        payload physically exists, so it is the one place the pairwise
+        pads are real (masked immediately before each ppermute, unmasked
+        immediately after -- zero extra collectives, identical operand
+        shapes/dtypes, bit-identical arithmetic after the receive)."""
+        return self.privacy.secure_agg and self.dirs is not None
 
     # -- comm-state contract ----------------------------------------------
 
@@ -1709,7 +1962,9 @@ class ShardedFusedEngine(_FusedBase):
             keys += ("recon_t", "residual_t", "mix_recon_t")
             if self.pipelined:
                 keys += self._wire_key_names("_t")
-        return keys
+        # static rounds under an active privacy transform still need the
+        # counter + key (the pads/noise advance with the round index)
+        return keys + self._topo_keys()
 
     def comm_state_sds(
         self, cfg: FLConfig
@@ -1754,6 +2009,18 @@ class ShardedFusedEngine(_FusedBase):
         the other (modulo the topology-program equality check in
         ``training.checkpoint``)."""
         return key.startswith("mix_recon") or key.startswith("nbr_recon_")
+
+    def _known_comm_keys(self) -> frozenset:
+        extra = ["mix_recon", "mix_recon_t", "nbr_recon_all",
+                 "nbr_recon_all_t", "wire_pos", "wire_pos_t",
+                 "wire_bits", "wire_bits_t"]
+        if self.dirs is not None:
+            extra += [
+                f"nbr_recon_{d}{suffix}"
+                for d in range(len(self.dirs))
+                for suffix in ("", "_t")
+            ]
+        return super()._known_comm_keys() | frozenset(extra)
 
     def dense_equivalent(self) -> np.ndarray:
         """The dense W this engine realizes (the ``FusedEngine`` oracle)."""
@@ -1818,6 +2085,7 @@ class ShardedFusedEngine(_FusedBase):
         a zero wire (restore from a sequential/fused checkpoint) the
         formulas coincide, which is what makes mid-pipeline restores and
         cross-schedule restores both land in a self-consistent state."""
+        self._check_restored_comm_keys(comm)
         w = self.dense_equivalent()
         w_off = jnp.asarray(w - np.diag(np.diag(w)), jnp.float32)
         comm = dict(comm)
@@ -1872,27 +2140,69 @@ class ShardedFusedEngine(_FusedBase):
 
     # -- the shard_map round ----------------------------------------------
 
-    def _wire_mix(self, wire: Tuple[jnp.ndarray, ...], w_off_rows):
+    def _my_index(self) -> jnp.ndarray:
+        """This device's row-major node index (trace-time, inside the
+        shard_map body) -- the composition of the node-axis indices,
+        identical to the ``dense_equivalent`` row order."""
+        idx = 0
+        for a in self.node_axes:
+            idx = idx * self.mesh.shape[a] + jax.lax.axis_index(a)
+        return idx
+
+    def _transport(self, wire: Tuple[jnp.ndarray, ...], d: int,
+                   priv, stream_base: int) -> Tuple[jnp.ndarray, ...]:
+        """ONE direction's masked transport: pad the payload with the
+        sender-side edge pad, ppermute every buffer, remove the
+        receiver-side pad. Pads are a pure counter hash of (priv_key,
+        round, undirected pair index) with the antisymmetric sign fixed
+        by ``sender < receiver``, so both endpoints derive the same
+        words and mask∘unmask is the exact identity -- the collective's
+        operand shapes, dtypes, and count are byte-for-byte those of the
+        plaintext wire. With ``priv=None`` this IS the plaintext wire."""
+        axis_name, shift, _w = self.dirs[d]
+        size = self.mesh.shape[axis_name]
+        perm = [(i, (i + shift) % size) for i in range(size)]
+        if priv is not None:
+            key, r = priv
+            n = self.n_nodes
+            my = self._my_index()
+            dst = jnp.asarray(self._dir_dst[d])[my]
+            wire = mask_wire(
+                wire, key, r, pair_index(my, dst, n), my < dst,
+                stream_base=stream_base,
+            )
+        recv = tuple(
+            jax.lax.ppermute(b, axis_name, perm) for b in wire
+        )
+        if priv is not None:
+            src = jnp.asarray(self._dir_src[d])[my]
+            recv = mask_wire(
+                recv, key, r, pair_index(src, my, n), src < my,
+                stream_base=stream_base, unmask=True,
+            )
+        return recv
+
+    def _wire_mix(self, wire: Tuple[jnp.ndarray, ...], w_off_rows,
+                  priv=None, stream_base: int = PAD_STREAM):
         """Move one wire's payload buffers over the collective and return
         ``sum_j W_ij dq_j`` for this shard's rows. ``wire`` is (q, scales)
         for the dense int8 wire or (q, pos, scales) for the compact
         top-k wire -- EVERY buffer in the tuple is a collective operand,
         so the bytes that move are exactly ``flat_wire_bytes``.
         ``w_off_rows``: replicated (n, n) off-diagonal W (dense-W
-        all-gather wire only; ignored for the circulant ppermute wire)."""
+        all-gather wire only; ignored for the circulant ppermute wire).
+        ``priv``: the traced ``(priv_key, round)`` pair when secure_agg
+        masks the transport (see :meth:`_transport`)."""
         rows = wire[0].shape[0]
         t = self.layout.total
         if self.dirs is not None:
             acc = jnp.zeros((rows, t), jnp.float32)
-            for axis_name, shift, weight in self.dirs:
-                size = self.mesh.shape[axis_name]
-                perm = [(i, (i + shift) % size) for i in range(size)]
-                recv = tuple(
-                    jax.lax.ppermute(b, axis_name, perm) for b in wire
-                )
+            for d, (_axis, _shift, weight) in enumerate(self.dirs):
+                recv = self._transport(wire, d, priv, stream_base)
                 acc = acc + jnp.float32(weight) * self._dq_full(recv)
             return acc
-        # arbitrary dense W: ONE all-gather per wire buffer
+        # arbitrary dense W: ONE all-gather per wire buffer (secure_agg
+        # is rejected at build on this wire -- nothing to pad)
         n = self.n_nodes
         gathered = tuple(
             jax.lax.all_gather(b[0], self.node_axes, tiled=False).reshape(
@@ -1906,19 +2216,18 @@ class ShardedFusedEngine(_FusedBase):
 
     # -- dynamic-topology machinery ----------------------------------------
 
-    def _recv_dqs(self, wire: Tuple[jnp.ndarray, ...]):
+    def _recv_dqs(self, wire: Tuple[jnp.ndarray, ...], priv=None,
+                  stream_base: int = PAD_STREAM):
         """Per-direction receive: the SAME ppermutes as :meth:`_wire_mix`
         (one per wire buffer per direction -- churn adds zero
         collectives), returning each direction's dense dequantized
         payload UNWEIGHTED so the per-round gate can weight it at mix
-        time."""
+        time. Masked transport per :meth:`_transport`: unmask happens
+        HERE, at the boundary, so the gate weights plaintext arithmetic
+        -- a dropped edge drops both directions of its pad with it."""
         out = []
-        for axis_name, shift, _weight in self.dirs:
-            size = self.mesh.shape[axis_name]
-            perm = [(i, (i + shift) % size) for i in range(size)]
-            recv = tuple(
-                jax.lax.ppermute(b, axis_name, perm) for b in wire
-            )
+        for d in range(len(self.dirs)):
+            recv = self._transport(wire, d, priv, stream_base)
             out.append(self._dq_full(recv))
         return out
 
@@ -1960,6 +2269,18 @@ class ShardedFusedEngine(_FusedBase):
                 wire_stage_ref as wire_stage,
             )
         kw = self._kernel_kwargs()
+        clip_kw = self._dp_kwargs()
+
+        def dpkw(noise, noise_t=None):
+            """The per-call DP kwargs: empty without noise (the original
+            kernel call, bit-identical), clip + this round's traced
+            noise rows otherwise."""
+            if noise is None:
+                return {}
+            out = dict(clip_kw, dp_noise=noise)
+            if noise_t is not None:
+                out["dp_noise_t"] = noise_t
+            return out
 
         if self.compact_wire:
             # The kernels emit explicit positions; the bitmap encoding is
@@ -1978,30 +2299,34 @@ class ShardedFusedEngine(_FusedBase):
                 def encode(q, pos, sc):
                     return q, pos, sc
 
-            def produce(x, g, recon, res, alpha):
+            def produce(x, g, recon, res, alpha, noise=None):
                 h, q, pos, sc, nrecon, nres = wire_stage_compact(
-                    x, g, recon, res, alpha, **kw
+                    x, g, recon, res, alpha, **kw, **dpkw(noise)
                 )
                 return h, encode(q, pos, sc), nrecon, nres
 
-            def produce_gt(x, t, g, gp, rx, sx, rt, st, alpha):
+            def produce_gt(x, t, g, gp, rx, sx, rt, st, alpha,
+                           noise=None, noise_t=None):
                 (h, th, qx, px, scx, nrx, nsx,
                  qt, pt, sct, nrt, nst) = wire_stage_gt_compact(
-                    x, t, g, gp, rx, sx, rt, st, alpha, **kw
+                    x, t, g, gp, rx, sx, rt, st, alpha, **kw,
+                    **dpkw(noise, noise_t)
                 )
                 return (h, th, encode(qx, px, scx), nrx, nsx,
                         encode(qt, pt, sct), nrt, nst)
         else:
-            def produce(x, g, recon, res, alpha):
+            def produce(x, g, recon, res, alpha, noise=None):
                 h, q, sc, nrecon, nres = wire_stage(
-                    x, g, recon, res, alpha, **kw
+                    x, g, recon, res, alpha, **kw, **dpkw(noise)
                 )
                 return h, (q, sc), nrecon, nres
 
-            def produce_gt(x, t, g, gp, rx, sx, rt, st, alpha):
+            def produce_gt(x, t, g, gp, rx, sx, rt, st, alpha,
+                           noise=None, noise_t=None):
                 (h, th, qx, scx, nrx, nsx,
                  qt, sct, nrt, nst) = wire_stage_gt(
-                    x, t, g, gp, rx, sx, rt, st, alpha, **kw
+                    x, t, g, gp, rx, sx, rt, st, alpha, **kw,
+                    **dpkw(noise, noise_t)
                 )
                 return h, th, (qx, scx), nrx, nsx, (qt, sct), nrt, nst
 
@@ -2010,10 +2335,7 @@ class ShardedFusedEngine(_FusedBase):
     def _self_weight(self, w_diag):
         if self.dirs is not None:
             return jnp.float32(self.w_self)
-        idx = 0
-        for a in self.node_axes:
-            idx = idx * self.mesh.shape[a] + jax.lax.axis_index(a)
-        return jax.lax.dynamic_slice_in_dim(w_diag, idx, 1)[0]
+        return jax.lax.dynamic_slice_in_dim(w_diag, self._my_index(), 1)[0]
 
     def _round_constants(self, cfg: FLConfig):
         if cfg.n_nodes != self.n_nodes:
@@ -2030,7 +2352,7 @@ class ShardedFusedEngine(_FusedBase):
         return w_diag, w_off
 
     def _metrics(self, cfg, losses, grads, alpha, new_state, egress):
-        return {
+        m = {
             "loss": jnp.mean(losses),
             "alpha": alpha,
             "grad_norm_sq": _mean_grad_norm_sq(grads),
@@ -2039,6 +2361,8 @@ class ShardedFusedEngine(_FusedBase):
             "wire_bytes": jnp.float32(egress),
             "ef_residual_rms": self._residual_rms(new_state.comm),
         }
+        m.update(self._privacy_metrics(cfg, new_state))
+        return m
 
     def _mix_dirs_dynamic(self, dqs, nbrs, dgate):
         """Fold one wire's per-direction dq into the neighbor-recon
@@ -2087,17 +2411,34 @@ class ShardedFusedEngine(_FusedBase):
         wire_keys_t = self._wire_key_names("_t") if pipelined else ()
         n_adds = n_dirs if pipelined else 0
         n_wire = len(wire_keys)
+        dp, sa = self._dp, self._sa_wire
+        n_noise = 1 if dp else 0
+        # pipelined transport lives in ingest; sequential transport lives
+        # in the comm body -- the pad operands ride wherever the
+        # ppermutes actually are
+        sa_body = sa and not pipelined
+        n_priv = 2 if sa_body else 0
+        priv_specs = (P(None), P()) if sa_body else ()
+        t_stream = PAD_STREAM + TRACKER_STREAM_OFFSET
 
-        def mix_one(wire, nbrs, adds, dgate):
-            dqs = adds if pipelined else self._recv_dqs(wire)
+        def mix_one(wire, nbrs, adds, dgate, priv, stream_base):
+            dqs = (adds if pipelined
+                   else self._recv_dqs(wire, priv=priv,
+                                       stream_base=stream_base))
             return self._mix_dirs_dynamic(dqs, nbrs, dgate)
+
+        def split_priv(tail):
+            priv = (tail[0], tail[1]) if sa_body else None
+            return tail[n_priv:], priv
 
         def body(x, g, recon, res, *rest):
             nbrs = rest[:nnbr]
             adds = rest[nnbr:nnbr + n_adds]
-            dgate, ddiag, alpha = rest[nnbr + n_adds:]
-            h, wire, nrecon, nres = produce(x, g, recon, res, alpha)
-            mix, new_nbrs = mix_one(wire, nbrs, adds, dgate)
+            dgate, ddiag, alpha = rest[nnbr + n_adds:nnbr + n_adds + 3]
+            tail, priv = split_priv(rest[nnbr + n_adds + 3:])
+            h, wire, nrecon, nres = produce(x, g, recon, res, alpha, *tail)
+            mix, new_nbrs = mix_one(wire, nbrs, adds, dgate, priv,
+                                    PAD_STREAM)
             out = (ddiag * h + mix, nrecon, nres) + new_nbrs
             return out + (wire if pipelined else ())
 
@@ -2106,37 +2447,55 @@ class ShardedFusedEngine(_FusedBase):
             nbrs_t = rest[nnbr:2 * nnbr]
             adds_x = rest[2 * nnbr:2 * nnbr + n_adds]
             adds_t = rest[2 * nnbr + n_adds:2 * nnbr + 2 * n_adds]
-            dgate, ddiag, alpha = rest[2 * nnbr + 2 * n_adds:]
+            k = 2 * nnbr + 2 * n_adds
+            dgate, ddiag, alpha = rest[k:k + 3]
+            tail, priv = split_priv(rest[k + 3:])
             (h, t_half, wire_x, nrx, nsx, wire_t, nrt, nst) = produce_gt(
-                x, t, g, gp, rx, sx, rt, st, alpha
+                x, t, g, gp, rx, sx, rt, st, alpha, *tail
             )
-            mix_x, new_x = mix_one(wire_x, nbrs_x, adds_x, dgate)
-            mix_t, new_t = mix_one(wire_t, nbrs_t, adds_t, dgate)
+            mix_x, new_x = mix_one(wire_x, nbrs_x, adds_x, dgate, priv,
+                                   PAD_STREAM)
+            mix_t, new_t = mix_one(wire_t, nbrs_t, adds_t, dgate, priv,
+                                   t_stream)
             out = ((ddiag * h + mix_x, ddiag * t_half + mix_t,
                     nrx, nsx, nrt, nst) + new_x + new_t)
             return out + ((wire_x + wire_t) if pipelined else ())
 
         sm_dsgd = _shard_map(
             body, mesh=self.mesh,
-            in_specs=(spec,) * (4 + nnbr + n_adds) + (spec, spec, P()),
+            in_specs=(spec,) * (4 + nnbr + n_adds) + (spec, spec, P())
+            + priv_specs + (spec,) * n_noise,
             out_specs=(spec,) * (3 + nnbr + n_wire),
         )
         sm_dsgt = _shard_map(
             body_gt, mesh=self.mesh,
             in_specs=(spec,) * (8 + 2 * nnbr + 2 * n_adds)
-            + (spec, spec, P()),
+            + (spec, spec, P()) + priv_specs + (spec,) * (2 * n_noise),
             out_specs=(spec,) * (6 + 2 * nnbr + 2 * n_wire),
         )
 
         ingest = None
         if pipelined:
-            def ingest_body(*wire):
-                return tuple(self._recv_dqs(tuple(wire)))
+            def make_ingest(stream_base: int):
+                def ingest_body(*args):
+                    if sa:
+                        wire = tuple(args[:n_wire])
+                        priv = tuple(args[n_wire:])
+                    else:
+                        wire, priv = tuple(args), None
+                    return tuple(self._recv_dqs(
+                        wire, priv=priv, stream_base=stream_base
+                    ))
 
-            sm_ingest = _shard_map(
-                ingest_body, mesh=self.mesh,
-                in_specs=(spec,) * n_wire, out_specs=(spec,) * n_dirs,
-            )
+                return _shard_map(
+                    ingest_body, mesh=self.mesh,
+                    in_specs=(spec,) * n_wire
+                    + ((P(None), P()) if sa else ()),
+                    out_specs=(spec,) * n_dirs,
+                )
+
+            sm_ingest = make_ingest(PAD_STREAM)
+            sm_ingest_t = make_ingest(t_stream)
 
             def ingest(state: FLState):
                 if state.comm is None or wire_keys[0] not in state.comm:
@@ -2145,14 +2504,18 @@ class ShardedFusedEngine(_FusedBase):
                         "engine=...) with the pipelined engine (in-flight "
                         "wire buffers)"
                     )
+                priv = (
+                    (state.comm["priv_key"], state.comm["topo_round"])
+                    if sa else ()
+                )
                 # the collective consumes the OLDEST ring slot only --
                 # k in-flight payloads never multiply the operand bytes
                 stale = {"dqs": sm_ingest(
-                    *self._ring_slot0(state.comm, wire_keys)
+                    *self._ring_slot0(state.comm, wire_keys), *priv
                 )}
                 if cfg.algorithm == "dsgt":
-                    stale["dqs_t"] = sm_ingest(
-                        *self._ring_slot0(state.comm, wire_keys_t)
+                    stale["dqs_t"] = sm_ingest_t(
+                        *self._ring_slot0(state.comm, wire_keys_t), *priv
                     )
                 return stale
 
@@ -2170,13 +2533,20 @@ class ShardedFusedEngine(_FusedBase):
                 state.comm
             )
             adds = tuple(stale["dqs"]) if pipelined else ()
+            priv = (
+                (state.comm["priv_key"], state.comm["topo_round"])
+                if sa_body else ()
+            )
+            noises = (
+                (self._dp_noise_full(state.comm, cfg.n_nodes),) if dp else ()
+            )
 
             if cfg.algorithm == "dsgd":
                 outs = sm_dsgd(
                     state.params, grads, state.comm["recon"],
                     state.comm["residual"],
                     *[state.comm[k] for k in nbr_keys],
-                    *adds, dgate, ddiag, alpha32,
+                    *adds, dgate, ddiag, alpha32, *priv, *noises,
                 )
                 mixed, nrecon, nres = outs[:3]
                 comm = {"recon": nrecon, "residual": nres, **topo_comm}
@@ -2188,13 +2558,16 @@ class ShardedFusedEngine(_FusedBase):
                 new_state = state._replace(step=step, params=mixed, comm=comm)
             else:
                 adds_t = tuple(stale["dqs_t"]) if pipelined else ()
+                if dp:
+                    noises += (self._dp_noise_full(state.comm, cfg.n_nodes,
+                                                   tracker=True),)
                 outs = sm_dsgt(
                     state.params, state.tracker, grads, state.prev_grad,
                     state.comm["recon"], state.comm["residual"],
                     state.comm["recon_t"], state.comm["residual_t"],
                     *[state.comm[k] for k in nbr_keys],
                     *[state.comm[k] for k in nbr_keys_t],
-                    *adds, *adds_t, dgate, ddiag, alpha32,
+                    *adds, *adds_t, dgate, ddiag, alpha32, *priv, *noises,
                 )
                 (mx, mt, nrx, nsx, nrt, nst) = outs[:6]
                 comm = {"recon": nrx, "residual": nsx,
@@ -2245,6 +2618,8 @@ class ShardedFusedEngine(_FusedBase):
         wire_keys_t = self._wire_key_names("_t") if pipelined else ()
         n_wire = len(wire_keys)
         n_stale = n_wire if pipelined else 0
+        dp = self._dp
+        n_noise = 1 if dp else 0
 
         def gather_dq(wire):
             """ONE all-gather per wire buffer -> every node's dense dq."""
@@ -2265,8 +2640,11 @@ class ShardedFusedEngine(_FusedBase):
         def body(x, g, recon, res, *rest):
             nbrs = rest[:nnbr]
             stale_wire = rest[nnbr:nnbr + n_stale]
-            w_row, ddiag, alpha = rest[nnbr + n_stale:]
-            h, wire, nrecon, nres = produce(x, g, recon, res, alpha)
+            k = nnbr + n_stale
+            w_row, ddiag, alpha = rest[k:k + 3]
+            noises = rest[k + 3:]
+            h, wire, nrecon, nres = produce(x, g, recon, res, alpha,
+                                            *noises)
             mix, new_nbr = mix_one(wire, stale_wire, nbrs[0] if dc else None,
                                    w_row)
             out = (ddiag * h + mix, nrecon, nres) + new_nbr
@@ -2277,9 +2655,11 @@ class ShardedFusedEngine(_FusedBase):
             nbrs_t = rest[nnbr:2 * nnbr]
             stale_x = rest[2 * nnbr:2 * nnbr + n_stale]
             stale_t = rest[2 * nnbr + n_stale:2 * nnbr + 2 * n_stale]
-            w_row, ddiag, alpha = rest[2 * nnbr + 2 * n_stale:]
+            k = 2 * nnbr + 2 * n_stale
+            w_row, ddiag, alpha = rest[k:k + 3]
+            noises = rest[k + 3:]
             (h, t_half, wire_x, nrx, nsx, wire_t, nrt, nst) = produce_gt(
-                x, t, g, gp, rx, sx, rt, st, alpha
+                x, t, g, gp, rx, sx, rt, st, alpha, *noises
             )
             mix_x, new_x = mix_one(wire_x, stale_x,
                                    nbrs_x[0] if dc else None, w_row)
@@ -2292,13 +2672,14 @@ class ShardedFusedEngine(_FusedBase):
         sm_dsgd = _shard_map(
             body, mesh=self.mesh,
             in_specs=(spec,) * 4 + (spec3,) * nnbr + (spec,) * n_stale
-            + (spec, spec, P()),
+            + (spec, spec, P()) + (spec,) * n_noise,
             out_specs=(spec,) * 3 + (spec3,) * nnbr + (spec,) * n_wire,
         )
         sm_dsgt = _shard_map(
             body_gt, mesh=self.mesh,
             in_specs=(spec,) * 8 + (spec3,) * 2 * nnbr
-            + (spec,) * 2 * n_stale + (spec, spec, P()),
+            + (spec,) * 2 * n_stale + (spec, spec, P())
+            + (spec,) * (2 * n_noise),
             out_specs=(spec,) * 6 + (spec3,) * 2 * nnbr
             + (spec,) * 2 * n_wire,
         )
@@ -2321,13 +2702,16 @@ class ShardedFusedEngine(_FusedBase):
             adds = (
                 self._ring_slot0(state.comm, wire_keys) if pipelined else ()
             )
+            noises = (
+                (self._dp_noise_full(state.comm, cfg.n_nodes),) if dp else ()
+            )
 
             if cfg.algorithm == "dsgd":
                 outs = sm_dsgd(
                     state.params, grads, state.comm["recon"],
                     state.comm["residual"],
                     *[state.comm[k] for k in nbr_keys],
-                    *adds, w_row, ddiag, alpha32,
+                    *adds, w_row, ddiag, alpha32, *noises,
                 )
                 mixed, nrecon, nres = outs[:3]
                 comm = {"recon": nrecon, "residual": nres, **topo_comm}
@@ -2341,13 +2725,16 @@ class ShardedFusedEngine(_FusedBase):
                     self._ring_slot0(state.comm, wire_keys_t)
                     if pipelined else ()
                 )
+                if dp:
+                    noises += (self._dp_noise_full(state.comm, cfg.n_nodes,
+                                                   tracker=True),)
                 outs = sm_dsgt(
                     state.params, state.tracker, grads, state.prev_grad,
                     state.comm["recon"], state.comm["residual"],
                     state.comm["recon_t"], state.comm["residual_t"],
                     *[state.comm[k] for k in nbr_keys],
                     *[state.comm[k] for k in nbr_keys_t],
-                    *adds, *adds_t, w_row, ddiag, alpha32,
+                    *adds, *adds_t, w_row, ddiag, alpha32, *noises,
                 )
                 (mx, mt, nrx, nsx, nrt, nst) = outs[:6]
                 comm = {"recon": nrx, "residual": nsx,
@@ -2391,22 +2778,36 @@ class ShardedFusedEngine(_FusedBase):
         # WITHOUT it, recon_j' = dq_j alone, so the term is rebuilt from
         # this round's wire and mix_recon stays zero (replace, don't sum).
         dc = self.difference_coding
+        # Privacy operands ride the SAME shard_map call: DP noise rows
+        # shard like every (n, t) buffer; the pad key/round replicate.
+        dp, sa = self._dp, self._sa_wire
+        n_noise = 1 if dp else 0
+        priv_specs = (P(None), P()) if sa else ()
+        t_stream = PAD_STREAM + TRACKER_STREAM_OFFSET
 
-        def body(x, g, recon, res, mix_recon, alpha, w_diag, w_off):
-            h, wire, nrecon, nres = produce(x, g, recon, res, alpha)
-            mix_add = self._wire_mix(wire, w_off)
+        def split_extra(extra, wires):
+            noises = extra[:n_noise * wires]
+            priv = tuple(extra[n_noise * wires:]) or None
+            return noises, priv
+
+        def body(x, g, recon, res, mix_recon, alpha, w_diag, w_off, *extra):
+            noises, priv = split_extra(extra, 1)
+            h, wire, nrecon, nres = produce(x, g, recon, res, alpha, *noises)
+            mix_add = self._wire_mix(wire, w_off, priv=priv)
             new_mix = mix_recon + mix_add if dc else mix_add
             mixed = self._self_weight(w_diag) * h + new_mix
             return mixed, nrecon, nres, new_mix
 
         def body_gt(x, t, g, gp, rx, sx, mrx, rt, st, mrt, alpha, w_diag,
-                    w_off):
+                    w_off, *extra):
+            noises, priv = split_extra(extra, 2)
             (h, t_half, wire_x, nrx, nsx, wire_t, nrt, nst) = produce_gt(
-                x, t, g, gp, rx, sx, rt, st, alpha
+                x, t, g, gp, rx, sx, rt, st, alpha, *noises
             )
             w_self = self._self_weight(w_diag)
-            mix_x = self._wire_mix(wire_x, w_off)
-            mix_t = self._wire_mix(wire_t, w_off)
+            mix_x = self._wire_mix(wire_x, w_off, priv=priv)
+            mix_t = self._wire_mix(wire_t, w_off, priv=priv,
+                                   stream_base=t_stream)
             new_mrx = mrx + mix_x if dc else mix_x
             new_mrt = mrt + mix_t if dc else mix_t
             mixed_x = w_self * h + new_mrx
@@ -2416,14 +2817,27 @@ class ShardedFusedEngine(_FusedBase):
         rep = P(None, None)
         sm_dsgd = _shard_map(
             body, mesh=self.mesh,
-            in_specs=(spec,) * 5 + (P(), P(None), rep),
+            in_specs=(spec,) * 5 + (P(), P(None), rep)
+            + (spec,) * n_noise + priv_specs,
             out_specs=(spec,) * 4,
         )
         sm_dsgt = _shard_map(
             body_gt, mesh=self.mesh,
-            in_specs=(spec,) * 10 + (P(), P(None), rep),
+            in_specs=(spec,) * 10 + (P(), P(None), rep)
+            + (spec,) * (2 * n_noise) + priv_specs,
             out_specs=(spec,) * 8,
         )
+
+        def priv_operands(comm, wires):
+            ops = ()
+            if dp:
+                ops += (self._dp_noise_full(comm, cfg.n_nodes),)
+                if wires == 2:
+                    ops += (self._dp_noise_full(comm, cfg.n_nodes,
+                                                tracker=True),)
+            if sa:
+                ops += (comm["priv_key"], comm["topo_round"])
+            return ops
 
         def comm_step(state: FLState, batch: PyTree):
             if state.comm is None:
@@ -2435,17 +2849,18 @@ class ShardedFusedEngine(_FusedBase):
             losses, grads = eval_grads(state.params, batch)
             grads = grads.astype(jnp.float32)
             alpha32 = jnp.asarray(alpha, jnp.float32)
+            priv_comm = self._priv_comm(state.comm)
 
             if cfg.algorithm == "dsgd":
                 mixed, nrecon, nres, new_mix = sm_dsgd(
                     state.params, grads, state.comm["recon"],
                     state.comm["residual"], state.comm["mix_recon"],
-                    alpha32, w_diag, w_off,
+                    alpha32, w_diag, w_off, *priv_operands(state.comm, 1),
                 )
                 new_state = state._replace(
                     step=step, params=mixed,
                     comm={"recon": nrecon, "residual": nres,
-                          "mix_recon": new_mix},
+                          "mix_recon": new_mix, **priv_comm},
                 )
             else:
                 (mx, mt, nrx, nsx, nmrx, nrt, nst, nmrt) = sm_dsgt(
@@ -2453,13 +2868,13 @@ class ShardedFusedEngine(_FusedBase):
                     state.comm["recon"], state.comm["residual"],
                     state.comm["mix_recon"], state.comm["recon_t"],
                     state.comm["residual_t"], state.comm["mix_recon_t"],
-                    alpha32, w_diag, w_off,
+                    alpha32, w_diag, w_off, *priv_operands(state.comm, 2),
                 )
                 new_state = FLState(
                     step=step, params=mx, tracker=mt, prev_grad=grads,
                     comm={"recon": nrx, "residual": nsx, "mix_recon": nmrx,
                           "recon_t": nrt, "residual_t": nst,
-                          "mix_recon_t": nmrt},
+                          "mix_recon_t": nmrt, **priv_comm},
                 )
 
             return new_state, self._metrics(
@@ -2508,15 +2923,33 @@ class ShardedFusedEngine(_FusedBase):
         dc = self.difference_coding
         wire_keys = self._wire_key_names("")
         wire_keys_t = self._wire_key_names("_t")
+        dp, sa = self._dp, self._sa_wire
+        n_noise = 1 if dp else 0
 
-        def ingest_body(*args):
-            wire, w_off = args[:-1], args[-1]
-            return self._wire_mix(tuple(wire), w_off)
+        # The masked transport lives entirely inside ingest (the comm
+        # bodies carry no collective): mask -> ppermute -> unmask with
+        # the CURRENT round counter on both ends -- pads never need to
+        # match the payload's production round, only the two transport
+        # endpoints, which share the replicated (key, r) operands.
+        def make_ingest(stream_base: int):
+            def ingest_body(*args):
+                if sa:
+                    wire, w_off = args[:nw], args[nw]
+                    priv = tuple(args[nw + 1:])
+                else:
+                    wire, w_off, priv = args[:-1], args[-1], None
+                return self._wire_mix(tuple(wire), w_off, priv=priv,
+                                      stream_base=stream_base)
 
-        sm_ingest = _shard_map(
-            ingest_body, mesh=self.mesh,
-            in_specs=(spec,) * nw + (rep,), out_specs=spec,
-        )
+            return _shard_map(
+                ingest_body, mesh=self.mesh,
+                in_specs=(spec,) * nw + (rep,)
+                + ((P(None), P()) if sa else ()),
+                out_specs=spec,
+            )
+
+        sm_ingest = make_ingest(PAD_STREAM)
+        sm_ingest_t = make_ingest(PAD_STREAM + TRACKER_STREAM_OFFSET)
 
         def ingest(state: FLState):
             if state.comm is None or wire_keys[0] not in state.comm:
@@ -2524,29 +2957,35 @@ class ShardedFusedEngine(_FusedBase):
                     "pipelined rounds need init_fl_state(..., engine=...) "
                     "with the pipelined engine (in-flight wire buffers)"
                 )
+            priv = (
+                (state.comm["priv_key"], state.comm["topo_round"])
+                if sa else ()
+            )
             # the collective consumes the OLDEST ring slot only -- depth-k
             # staleness never multiplies the operand bytes per round
             stale = {"mix": sm_ingest(
-                *self._ring_slot0(state.comm, wire_keys), w_off
+                *self._ring_slot0(state.comm, wire_keys), w_off, *priv
             )}
             if cfg.algorithm == "dsgt":
-                stale["mix_t"] = sm_ingest(
-                    *self._ring_slot0(state.comm, wire_keys_t), w_off
+                stale["mix_t"] = sm_ingest_t(
+                    *self._ring_slot0(state.comm, wire_keys_t), w_off, *priv
                 )
             return stale
 
         # The comm bodies carry NO collective: the wire payload produced
         # here is stored in comm and ingested at the top of the next round.
-        def body(x, g, recon, res, mix_recon, mix_add, alpha, w_diag):
-            h, wire, nrecon, nres = produce(x, g, recon, res, alpha)
+        def body(x, g, recon, res, mix_recon, mix_add, alpha, w_diag,
+                 *noises):
+            h, wire, nrecon, nres = produce(x, g, recon, res, alpha,
+                                            *noises)
             stale_mix = mix_recon + mix_add if dc else mix_add
             mixed = self._self_weight(w_diag) * h + stale_mix
             return (mixed, nrecon, nres, stale_mix) + wire
 
         def body_gt(x, t, g, gp, rx, sx, mrx, rt, st, mrt, add_x, add_t,
-                    alpha, w_diag):
+                    alpha, w_diag, *noises):
             (h, t_half, wire_x, nrx, nsx, wire_t, nrt, nst) = produce_gt(
-                x, t, g, gp, rx, sx, rt, st, alpha
+                x, t, g, gp, rx, sx, rt, st, alpha, *noises
             )
             w_self = self._self_weight(w_diag)
             stale_x = mrx + add_x if dc else add_x
@@ -2558,12 +2997,12 @@ class ShardedFusedEngine(_FusedBase):
 
         sm_dsgd = _shard_map(
             body, mesh=self.mesh,
-            in_specs=(spec,) * 6 + (P(), P(None)),
+            in_specs=(spec,) * 6 + (P(), P(None)) + (spec,) * n_noise,
             out_specs=(spec,) * (4 + nw),
         )
         sm_dsgt = _shard_map(
             body_gt, mesh=self.mesh,
-            in_specs=(spec,) * 12 + (P(), P(None)),
+            in_specs=(spec,) * 12 + (P(), P(None)) + (spec,) * (2 * n_noise),
             out_specs=(spec,) * (8 + 2 * nw),
         )
 
@@ -2573,30 +3012,37 @@ class ShardedFusedEngine(_FusedBase):
             losses, grads = eval_grads(state.params, batch)
             grads = grads.astype(jnp.float32)
             alpha32 = jnp.asarray(alpha, jnp.float32)
+            priv_comm = self._priv_comm(state.comm)
+            noises = (
+                (self._dp_noise_full(state.comm, cfg.n_nodes),) if dp else ()
+            )
 
             if cfg.algorithm == "dsgd":
                 outs = sm_dsgd(
                     state.params, grads, state.comm["recon"],
                     state.comm["residual"], state.comm["mix_recon"],
-                    stale["mix"], alpha32, w_diag,
+                    stale["mix"], alpha32, w_diag, *noises,
                 )
                 mixed, nrecon, nres, new_mix = outs[:4]
                 comm = {"recon": nrecon, "residual": nres,
-                        "mix_recon": new_mix}
+                        "mix_recon": new_mix, **priv_comm}
                 self._push_wire(state.comm, comm, wire_keys, outs[4:])
                 new_state = state._replace(step=step, params=mixed, comm=comm)
             else:
+                if dp:
+                    noises += (self._dp_noise_full(state.comm, cfg.n_nodes,
+                                                   tracker=True),)
                 outs = sm_dsgt(
                     state.params, state.tracker, grads, state.prev_grad,
                     state.comm["recon"], state.comm["residual"],
                     state.comm["mix_recon"], state.comm["recon_t"],
                     state.comm["residual_t"], state.comm["mix_recon_t"],
-                    stale["mix"], stale["mix_t"], alpha32, w_diag,
+                    stale["mix"], stale["mix_t"], alpha32, w_diag, *noises,
                 )
                 (mx, mt, nrx, nsx, nmrx, nrt, nst, nmrt) = outs[:8]
                 comm = {"recon": nrx, "residual": nsx, "mix_recon": nmrx,
                         "recon_t": nrt, "residual_t": nst,
-                        "mix_recon_t": nmrt}
+                        "mix_recon_t": nmrt, **priv_comm}
                 self._push_wire(state.comm, comm, wire_keys, outs[8:8 + nw])
                 self._push_wire(state.comm, comm, wire_keys_t, outs[8 + nw:])
                 new_state = FLState(
@@ -2624,7 +3070,7 @@ class ShardedFusedEngine(_FusedBase):
                   error_feedback: bool = True, difference_coding: bool = True,
                   self_weight=None, compact=None, round_schedule=None,
                   storage_dtype=None, topology_program=None,
-                  node_program=None, **_ignored):
+                  node_program=None, privacy=None, **_ignored):
         _reject_wire_dtype(wire_dtype)
         _reject_storage_dtype(storage_dtype, cls.name)
         layout = pack_layout(stacked_sds, pad_to=scale_chunk)
@@ -2634,4 +3080,4 @@ class ShardedFusedEngine(_FusedBase):
                    difference_coding=difference_coding, compact=compact,
                    round_schedule=round_schedule,
                    topology_program=topology_program,
-                   node_program=node_program)
+                   node_program=node_program, privacy=privacy)

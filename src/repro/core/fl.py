@@ -105,7 +105,11 @@ class FLState(NamedTuple):
     ``nbr_recon_{d}`` twins under a dynamic topology program). A dynamic
     :class:`~repro.core.dynamics.TopologyProgram` additionally carries its
     round counter and base RNG key here (``topo_round``, ``topo_key``), so
-    checkpointed restores replay the identical graph sequence."""
+    checkpointed restores replay the identical graph sequence. An active
+    :class:`~repro.core.privacy.PrivacySpec` rides the same counter
+    discipline: ``priv_key`` (the spec's base key) plus ``topo_round``
+    (reused as the pad/noise round counter even under a static topology),
+    so restored runs regenerate the identical mask and noise streams."""
 
     step: jnp.ndarray  # () int32, global iteration r (counts local steps too)
     params: PyTree  # each leaf (nodes, ...)

@@ -36,6 +36,45 @@ def _interpret() -> bool:
     return jax.default_backend() != "tpu"
 
 
+def _dp_substitute(h, base, res, dp_clip, dp_noise):
+    """Residual substitution: fold the DP clip + noise epilogue into the
+    UNCHANGED Pallas kernels.
+
+    The kernels compute their wire payload as ``(h - base) + res``. For
+    DP we want them to quantize ``wire = cs * payload + noise`` instead
+    (per-node L2 clip scale ``cs``, pre-scaled Gaussian ``noise`` --
+    bitwise the same formula as ``ref._dp_wire``). Substituting
+    ``res_sub = res + (wire - payload)`` makes the kernel's payload equal
+    ``wire`` (to 1 ulp of float association), so its q / scales / recon
+    outputs are the DP wire's -- ONE pallas_call per round is preserved
+    and the kernel bodies never learn about privacy. The kernel's EF
+    residual is then ``wire - dq``; adding the returned ``correction =
+    payload - wire`` restores the true residual ``payload - dq``, i.e.
+    error feedback absorbs clip + noise + quantization together.
+
+    Requires error feedback: without it the kernel's payload is
+    ``h - base`` with no residual term to substitute through, and the
+    perturbation would accumulate as an uncorrected walk.
+    """
+    payload = (h - base) + res
+    nrm = jnp.sqrt(jnp.sum(payload * payload, axis=1, keepdims=True))
+    cs = jnp.minimum(
+        1.0, jnp.asarray(dp_clip, jnp.float32)
+        / jnp.maximum(nrm, jnp.float32(1e-12))
+    )
+    wire = cs * payload + dp_noise
+    return res + (wire - payload), payload - wire
+
+
+def _require_ef_for_dp(error_feedback: bool) -> None:
+    if not error_feedback:
+        raise ValueError(
+            "dp needs error_feedback=True: the residual is what absorbs "
+            "the clip + noise perturbation (otherwise the wire walk "
+            "diverges from the parameters)"
+        )
+
+
 @functools.partial(
     jax.jit,
     static_argnames=("scale_chunk", "error_feedback", "difference_coding",
@@ -158,6 +197,8 @@ def fused_round(
     difference_coding: bool = True,
     topk: int | None = None,
     stale_mix: bool = False,
+    dp_clip: float | None = None,
+    dp_noise: jnp.ndarray | None = None,
 ) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray, jnp.ndarray]:
     """DSGD round megakernel: ``h = x - alpha * g`` fused ahead of
     :func:`gossip_mix` in ONE Pallas pass -- one kernel call is a whole
@@ -166,12 +207,24 @@ def fused_round(
     ``g`` is the flat gradient buffer (same (n, t) layout as x, packed by
     ``core.packing.pack_like``); ``alpha`` the scalar step size. Remaining
     operands, outputs, EF, ``topk`` and ``stale_mix`` semantics exactly
-    as :func:`gossip_mix` applied to h.
+    as :func:`gossip_mix` applied to h. ``dp_clip``/``dp_noise`` turn on
+    the differential-privacy wire epilogue via residual substitution
+    (:func:`_dp_substitute`) -- still ONE pallas_call.
     """
-    return _fused_round(
-        x, g, recon, res, w_off, w_self, alpha, scale_chunk, error_feedback,
-        difference_coding, topk, stale_mix, _interpret(),
+    if dp_noise is None:
+        return _fused_round(
+            x, g, recon, res, w_off, w_self, alpha, scale_chunk,
+            error_feedback, difference_coding, topk, stale_mix, _interpret(),
+        )
+    _require_ef_for_dp(error_feedback)
+    h = x - alpha * g
+    base = recon if difference_coding else jnp.zeros_like(recon)
+    res_sub, corr = _dp_substitute(h, base, res, dp_clip, dp_noise)
+    mixed, new_recon, new_res, scales = _fused_round(
+        x, g, recon, res_sub, w_off, w_self, alpha, scale_chunk,
+        error_feedback, difference_coding, topk, stale_mix, _interpret(),
     )
+    return mixed, new_recon, new_res + corr, scales
 
 
 @functools.partial(
@@ -220,6 +273,9 @@ def fused_round_gt(
     difference_coding: bool = True,
     topk: int | None = None,
     stale_mix: bool = False,
+    dp_clip: float | None = None,
+    dp_noise: jnp.ndarray | None = None,
+    dp_noise_t: jnp.ndarray | None = None,
 ) -> Tuple[jnp.ndarray, ...]:
     """DSGT round megakernel: tracker arithmetic ``t_half = t + g - g_prev``,
     parameter update ``h = x - alpha * t_half``, and the quantize-mix-EF
@@ -231,12 +287,30 @@ def fused_round_gt(
     scales_x, scales_t)``; store ``g`` as the next round's ``g_prev``. See
     ``ref.fused_round_gt_ref`` for the exact update equations;
     ``stale_mix`` mixes both wires against their input recons.
+    ``dp_clip``/``dp_noise``/``dp_noise_t`` turn on the DP epilogue on
+    both wires via residual substitution -- still ONE pallas_call.
     """
-    return _fused_round_gt(
-        x, t, g, g_prev, recon_x, res_x, recon_t, res_t, w_off, w_self, alpha,
-        scale_chunk, error_feedback, difference_coding, topk, stale_mix,
-        _interpret(),
+    if dp_noise is None:
+        return _fused_round_gt(
+            x, t, g, g_prev, recon_x, res_x, recon_t, res_t, w_off, w_self,
+            alpha, scale_chunk, error_feedback, difference_coding, topk,
+            stale_mix, _interpret(),
+        )
+    _require_ef_for_dp(error_feedback)
+    t_half = t + g - g_prev
+    h = x - alpha * t_half
+    base_x = recon_x if difference_coding else jnp.zeros_like(recon_x)
+    base_t = recon_t if difference_coding else jnp.zeros_like(recon_t)
+    res_x_sub, corr_x = _dp_substitute(h, base_x, res_x, dp_clip, dp_noise)
+    res_t_sub, corr_t = _dp_substitute(
+        t_half, base_t, res_t, dp_clip, dp_noise_t
     )
+    mx, mt, nrx, nsx, nrt, nst, scx, sct = _fused_round_gt(
+        x, t, g, g_prev, recon_x, res_x_sub, recon_t, res_t_sub, w_off,
+        w_self, alpha, scale_chunk, error_feedback, difference_coding, topk,
+        stale_mix, _interpret(),
+    )
+    return mx, mt, nrx, nsx + corr_x, nrt, nst + corr_t, scx, sct
 
 
 @functools.partial(
@@ -263,16 +337,29 @@ def wire_stage(
     error_feedback: bool = True,
     difference_coding: bool = True,
     topk: int | None = None,
+    dp_clip: float | None = None,
+    dp_noise: jnp.ndarray | None = None,
 ) -> Tuple[jnp.ndarray, ...]:
     """DSGD wire stage of the sharded fused round (pre-collective half):
     local update + difference coding + (top-k) int8 quantize + EF in ONE
-    Pallas pass on this shard's rows. Returns (h, q int8, scales,
+    Pallas pass on this shard's rows, with the optional DP clip+noise
+    epilogue via residual substitution. Returns (h, q int8, scales,
     new_recon, new_res); see ``core.engine.ShardedFusedEngine`` for the
     post-wire mix."""
-    return _wire_stage(
-        x, g, recon, res, alpha, scale_chunk, error_feedback,
+    if dp_noise is None:
+        return _wire_stage(
+            x, g, recon, res, alpha, scale_chunk, error_feedback,
+            difference_coding, topk, _interpret(),
+        )
+    _require_ef_for_dp(error_feedback)
+    h = x - alpha * g
+    base = recon if difference_coding else jnp.zeros_like(recon)
+    res_sub, corr = _dp_substitute(h, base, res, dp_clip, dp_noise)
+    h_out, q, scales, new_recon, new_res = _wire_stage(
+        x, g, recon, res_sub, alpha, scale_chunk, error_feedback,
         difference_coding, topk, _interpret(),
     )
+    return h_out, q, scales, new_recon, new_res + corr
 
 
 @functools.partial(
@@ -304,15 +391,35 @@ def wire_stage_gt(
     error_feedback: bool = True,
     difference_coding: bool = True,
     topk: int | None = None,
+    dp_clip: float | None = None,
+    dp_noise: jnp.ndarray | None = None,
+    dp_noise_t: jnp.ndarray | None = None,
 ) -> Tuple[jnp.ndarray, ...]:
     """DSGT wire stage of the sharded fused round: tracker arithmetic +
-    parameter update + both wires' quantize-EF in ONE Pallas pass.
+    parameter update + both wires' quantize-EF in ONE Pallas pass, with
+    the optional DP epilogue on both wires via residual substitution.
     Returns (h, t_half, q_x, scales_x, new_recon_x, new_res_x, q_t,
     scales_t, new_recon_t, new_res_t)."""
-    return _wire_stage_gt(
-        x, t, g, g_prev, recon_x, res_x, recon_t, res_t, alpha, scale_chunk,
-        error_feedback, difference_coding, topk, _interpret(),
+    if dp_noise is None:
+        return _wire_stage_gt(
+            x, t, g, g_prev, recon_x, res_x, recon_t, res_t, alpha,
+            scale_chunk, error_feedback, difference_coding, topk,
+            _interpret(),
+        )
+    _require_ef_for_dp(error_feedback)
+    t_half = t + g - g_prev
+    h = x - alpha * t_half
+    base_x = recon_x if difference_coding else jnp.zeros_like(recon_x)
+    base_t = recon_t if difference_coding else jnp.zeros_like(recon_t)
+    res_x_sub, corr_x = _dp_substitute(h, base_x, res_x, dp_clip, dp_noise)
+    res_t_sub, corr_t = _dp_substitute(
+        t_half, base_t, res_t, dp_clip, dp_noise_t
     )
+    (h_out, th, qx, scx, nrx, nsx, qt, sct, nrt, nst) = _wire_stage_gt(
+        x, t, g, g_prev, recon_x, res_x_sub, recon_t, res_t_sub, alpha,
+        scale_chunk, error_feedback, difference_coding, topk, _interpret(),
+    )
+    return h_out, th, qx, scx, nrx, nsx + corr_x, qt, sct, nrt, nst + corr_t
 
 
 @functools.partial(
@@ -339,17 +446,31 @@ def wire_stage_compact(
     error_feedback: bool = True,
     difference_coding: bool = True,
     topk: int | None = None,
+    dp_clip: float | None = None,
+    dp_noise: jnp.ndarray | None = None,
 ) -> Tuple[jnp.ndarray, ...]:
     """DSGD wire stage with the compact-gather epilogue (the truly sparse
     top-k wire): local update + difference coding + EXACT-k selection +
-    int8 quantize + EF in ONE Pallas pass. Returns (h, q int8
+    int8 quantize + EF in ONE Pallas pass, with the optional DP epilogue
+    via residual substitution (selection runs on the NOISED wire -- the
+    sparsity pattern itself is privatized). Returns (h, q int8
     (n, n_chunks*k), pos int16/int32, scales, new_recon, new_res); only
     (q, pos, scales) cross the collective and
     ``ref.scatter_compact_dq`` rebuilds the dense dq on the receiver."""
-    return _wire_stage_compact(
-        x, g, recon, res, alpha, scale_chunk, error_feedback,
+    if dp_noise is None:
+        return _wire_stage_compact(
+            x, g, recon, res, alpha, scale_chunk, error_feedback,
+            difference_coding, topk, _interpret(),
+        )
+    _require_ef_for_dp(error_feedback)
+    h = x - alpha * g
+    base = recon if difference_coding else jnp.zeros_like(recon)
+    res_sub, corr = _dp_substitute(h, base, res, dp_clip, dp_noise)
+    h_out, q, pos, scales, new_recon, new_res = _wire_stage_compact(
+        x, g, recon, res_sub, alpha, scale_chunk, error_feedback,
         difference_coding, topk, _interpret(),
     )
+    return h_out, q, pos, scales, new_recon, new_res + corr
 
 
 @functools.partial(
@@ -381,12 +502,33 @@ def wire_stage_gt_compact(
     error_feedback: bool = True,
     difference_coding: bool = True,
     topk: int | None = None,
+    dp_clip: float | None = None,
+    dp_noise: jnp.ndarray | None = None,
+    dp_noise_t: jnp.ndarray | None = None,
 ) -> Tuple[jnp.ndarray, ...]:
     """DSGT wire stage with the compact-gather epilogue on BOTH wires, in
-    ONE Pallas pass. Returns (h, t_half, q_x, pos_x, scales_x,
-    new_recon_x, new_res_x, q_t, pos_t, scales_t, new_recon_t,
-    new_res_t)."""
-    return _wire_stage_gt_compact(
-        x, t, g, g_prev, recon_x, res_x, recon_t, res_t, alpha, scale_chunk,
-        error_feedback, difference_coding, topk, _interpret(),
+    ONE Pallas pass, with the optional DP epilogue via residual
+    substitution. Returns (h, t_half, q_x, pos_x, scales_x, new_recon_x,
+    new_res_x, q_t, pos_t, scales_t, new_recon_t, new_res_t)."""
+    if dp_noise is None:
+        return _wire_stage_gt_compact(
+            x, t, g, g_prev, recon_x, res_x, recon_t, res_t, alpha,
+            scale_chunk, error_feedback, difference_coding, topk,
+            _interpret(),
+        )
+    _require_ef_for_dp(error_feedback)
+    t_half = t + g - g_prev
+    h = x - alpha * t_half
+    base_x = recon_x if difference_coding else jnp.zeros_like(recon_x)
+    base_t = recon_t if difference_coding else jnp.zeros_like(recon_t)
+    res_x_sub, corr_x = _dp_substitute(h, base_x, res_x, dp_clip, dp_noise)
+    res_t_sub, corr_t = _dp_substitute(
+        t_half, base_t, res_t, dp_clip, dp_noise_t
     )
+    (h_out, th, qx, px, scx, nrx, nsx,
+     qt, pt, sct, nrt, nst) = _wire_stage_gt_compact(
+        x, t, g, g_prev, recon_x, res_x_sub, recon_t, res_t_sub, alpha,
+        scale_chunk, error_feedback, difference_coding, topk, _interpret(),
+    )
+    return (h_out, th, qx, px, scx, nrx, nsx + corr_x,
+            qt, pt, sct, nrt, nst + corr_t)

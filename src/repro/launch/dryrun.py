@@ -70,7 +70,8 @@ def build_train_lowering(arch: str, shape_name: str, mesh, q: int, algorithm: st
                          scale_chunk: int = 512, topk=None,
                          fl_schedule: str = "sequential",
                          fl_topology_program: Optional[str] = None,
-                         fl_node_program: Optional[str] = None):
+                         fl_node_program: Optional[str] = None,
+                         fl_privacy: Optional[str] = None):
     """Lower one FL round (Q local steps + gossip) for the given mesh.
 
     ``fl_engine`` names a registered GossipEngine (the registry in
@@ -111,7 +112,11 @@ def build_train_lowering(arch: str, shape_name: str, mesh, q: int, algorithm: st
     and payload gates are traced operands, so slow/faulty nodes change
     nothing about the lowering. ``fl_schedule`` also accepts depth-k
     specs ("bounded_staleness:k=3"): the comm state grows a k-slot wire
-    ring but the collective still moves ONE slot per round.
+    ring but the collective still moves ONE slot per round. ``fl_privacy``
+    adds the wire's privacy epilogue the same way (``repro.core.privacy``;
+    e.g. "secure_agg+dp:sigma=0.5,clip=1.0"): pads and noise are generated
+    from comm-state counters inside the round, so the lowering keeps the
+    identical collective count and operand bytes as the plaintext wire.
     """
     import dataclasses as _dc
 
@@ -142,6 +147,7 @@ def build_train_lowering(arch: str, shape_name: str, mesh, q: int, algorithm: st
         topk=topk, round_schedule=fl_schedule,
         topology_program=fl_topology_program,
         node_program=fl_node_program,
+        privacy=fl_privacy,
     )
     round_fn = make_fl_round(
         bundle.loss_fn, None, inv_sqrt(0.02), fl_cfg, engine=engine
@@ -295,6 +301,7 @@ def run_pair(
     fl_schedule: str = "sequential",
     fl_topology_program: Optional[str] = None,
     fl_node_program: Optional[str] = None,
+    fl_privacy: Optional[str] = None,
 ) -> Dict[str, Any]:
     """Lower + compile one pair; return the dry-run record."""
     mesh = make_production_mesh(multi_pod=(mesh_kind == "multi"))
@@ -314,6 +321,7 @@ def run_pair(
                 pad_heads, fl_engine, topk=topk, fl_schedule=fl_schedule,
                 fl_topology_program=fl_topology_program,
                 fl_node_program=fl_node_program,
+                fl_privacy=fl_privacy,
             )
             lowered = jitted.lower(*args)
         elif shape.kind == "prefill":
@@ -350,6 +358,7 @@ def run_pair(
         "fl_node_program": (
             fl_node_program if shape.kind == "train" else None
         ),
+        "fl_privacy": fl_privacy if shape.kind == "train" else None,
         "topk": topk if shape.kind == "train" else None,
         "wire_dtype": wire_dtype,
         "pod_gossip_every": pod_gossip_every,
@@ -421,6 +430,13 @@ def main() -> None:
                          "'stragglers:frac=0.25,rate=0.5' -- compute and "
                          "payload gates are traced operands of the one "
                          "compiled round")
+    ap.add_argument("--fl-privacy", default=None,
+                    help="wire privacy epilogue (repro.core.privacy); "
+                         "'+'-separated spec e.g. "
+                         "'secure_agg+dp:sigma=0.5,clip=1.0' -- pads and "
+                         "noise ride comm-state counters, so the lowering "
+                         "keeps the plaintext wire's collective count and "
+                         "operand bytes")
     ap.add_argument("--pad-heads", type=int, default=0,
                     help="pad q heads to a multiple of this (16 = TP degree)")
     ap.add_argument("--out", default=None, help="directory for the JSON record")
@@ -433,6 +449,7 @@ def main() -> None:
         topk=args.topk, fl_schedule=args.fl_schedule,
         fl_topology_program=args.fl_topology_program,
         fl_node_program=args.fl_node_program,
+        fl_privacy=args.fl_privacy,
     )
     print(json.dumps(rec, indent=2))
     if args.out:
@@ -450,6 +467,8 @@ def main() -> None:
             suffix += "_" + args.fl_topology_program.split(":")[0]
         if args.fl_node_program:
             suffix += "_" + args.fl_node_program.split(":")[0]
+        if args.fl_privacy:
+            suffix += "_" + args.fl_privacy.split(":")[0].replace("+", "-")
         if args.pad_heads:
             suffix += f"_hpad{args.pad_heads}"
         if args.wire_dtype:

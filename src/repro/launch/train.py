@@ -84,6 +84,16 @@ def main() -> None:
                          "'stragglers:frac=0.25,rate=0.5' gates local-step "
                          "budgets and payload delivery per round; metrics "
                          "gain payload_fraction / compute_fraction")
+    ap.add_argument("--fl-privacy", default=None,
+                    help="wire privacy epilogue (PrivacySpec): "
+                         "'+'-separated tokens, e.g. 'secure_agg' "
+                         "(pairwise antisymmetric masks -- no single "
+                         "neighbor payload readable, cancels exactly "
+                         "under the symmetric mix), "
+                         "'dp:sigma=0.5,clip=1.0' (per-node clip + "
+                         "Gaussian noise riding the EF residual; metrics "
+                         "gain dp_epsilon), or both joined with '+' -- "
+                         "fused engines; tree rejects")
     ap.add_argument("--fl-robust-alpha", action="store_true",
                     help="shrink the step-size schedule by the "
                          "staleness/churn controller "
@@ -140,6 +150,7 @@ def main() -> None:
         node_program=args.fl_node_program,
         staleness_depth=args.fl_staleness_depth,
         robust_alpha=args.fl_robust_alpha,
+        privacy=args.fl_privacy,
     )
     hist = result.history
     first, last = hist.rows()[0], hist.last()
@@ -151,6 +162,7 @@ def main() -> None:
                 "fl_schedule": result.engine.round_schedule.spec(),
                 "fl_topology_program": args.fl_topology_program,
                 "fl_node_program": args.fl_node_program,
+                "fl_privacy": result.engine.privacy.spec(),
                 "algorithm": args.algorithm,
                 "q": args.q,
                 "rounds": args.rounds,
@@ -158,6 +170,7 @@ def main() -> None:
                 "loss_first": first["loss"],
                 "loss_last": last["loss"],
                 "consensus_err_last": last["consensus_err"],
+                "dp_epsilon": last.get("dp_epsilon"),
                 "wall_s": round(time.time() - t0, 1),
             },
             indent=2,

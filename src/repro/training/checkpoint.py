@@ -86,6 +86,13 @@ def save_fl_state(path: str, state: FLState, extra: Optional[dict] = None,
         node_prog = getattr(engine, "node_program", None)
         if node_prog is not None:
             manifest["node_program"] = node_prog.spec()
+        # and the privacy spec: priv_key + the pad/noise round counter
+        # regenerate the identical mask and noise streams only under the
+        # SAME spec, and a restored run's epsilon accounting is only
+        # truthful if sigma/clip/delta match what actually trained
+        privacy = getattr(engine, "privacy", None)
+        if privacy is not None:
+            manifest["privacy"] = privacy.spec()
     if state.comm is not None:
         manifest["comm_keys"] = sorted(state.comm)
     if extra:
@@ -160,6 +167,30 @@ def load_fl_state(path: str, template: FLState,
                     "counters only replay the identical graph sequence "
                     "under the same program -- rebuild the engine with "
                     f"topology_program={saved_program!r}"
+                )
+    saved_privacy = manifest.get("privacy")
+    if saved_privacy is not None:
+        from repro.core.privacy import parse_privacy
+
+        try:
+            parse_privacy(saved_privacy)
+        except ValueError as e:
+            raise ValueError(
+                f"checkpoint was written under privacy spec "
+                f"{saved_privacy!r}, which cannot be rebuilt: {e}"
+            ) from None
+        if engine is not None and saved_privacy != "none":
+            engine_privacy = getattr(engine, "privacy", None)
+            if (engine_privacy is not None
+                    and engine_privacy.spec() != saved_privacy):
+                raise ValueError(
+                    f"checkpoint was written under privacy spec "
+                    f"{saved_privacy!r} but the restore engine runs "
+                    f"{engine_privacy.spec()!r}; priv_key and the round "
+                    "counter only regenerate the identical mask/noise "
+                    "streams -- and the epsilon accounting is only "
+                    "truthful -- under the same spec; rebuild the engine "
+                    f"with privacy={saved_privacy!r}"
                 )
     saved_node = manifest.get("node_program")
     if saved_node is not None:

@@ -167,6 +167,7 @@ def train_decentralized(
     node_program: Optional[str] = None,
     staleness_depth: Optional[int] = None,
     robust_alpha: bool = False,
+    privacy: Optional[str] = None,
 ) -> TrainResult:
     """Train for ``rounds`` communication rounds.
 
@@ -218,6 +219,13 @@ def train_decentralized(
     ``robust_alpha_scale(expected_uptime, k)`` -- the staleness/churn
     controller keeping the effective alpha/spectral-gap ratio of the
     fault-free tuning.
+
+    ``privacy`` selects the wire's privacy epilogue (the FIFTH round
+    axis, ``repro.core.privacy``): a spec string like
+    ``"secure_agg+dp:sigma=0.5,clip=1.0"`` -- pairwise antisymmetric
+    masks that cancel under the symmetric mix (no single neighbor
+    payload is readable) and/or per-node clip + Gaussian noise riding
+    the EF residual, with the ``dp_epsilon`` moments bound as a metric.
     """
     w = mixing_matrix(run.topology, run.n_nodes)
     check_assumption1(w)
@@ -242,7 +250,8 @@ def train_decentralized(
                  "storage_dtype": storage_dtype,
                  "topk_schedule": topk_schedule,
                  "topology_program": topology_program,
-                 "node_program": node_program}
+                 "node_program": node_program,
+                 "privacy": privacy}
         set_knobs = sorted(k for k, v in knobs.items() if v is not None)
         if set_knobs:
             raise ValueError(
@@ -262,6 +271,7 @@ def train_decentralized(
             scale_chunk=512 if scale_chunk is None else scale_chunk,
             round_schedule=round_schedule, storage_dtype=storage_dtype,
             topology_program=topology_program, node_program=node_program,
+            privacy=privacy,
         )
         engine, params0 = build(w, stacked, topk=topk, **kw)
     schedule = make_schedule(run)
@@ -313,7 +323,8 @@ def train_decentralized(
             "alpha": float(m["alpha"]),
             "wall_s": time.time() - t0,
         }
-        for k in ("edge_fraction", "payload_fraction", "compute_fraction"):
+        for k in ("edge_fraction", "payload_fraction", "compute_fraction",
+                  "dp_epsilon"):
             if k in m:
                 row[k] = float(m[k])
         if adaptive is not None:

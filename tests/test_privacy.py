@@ -1,0 +1,718 @@
+"""Property tests of the privacy wire (the fifth round axis).
+
+Three layers, mirroring the design:
+
+* **pad algebra** (``core.privacy``, eager): mask -> unmask is the exact
+  bit-level identity for every wire dtype; the pads are antisymmetric
+  (``m_ij = -m_ji mod 2^w``) so they cancel in any symmetric sum -- on
+  EVERY realized edge of random per-round topologies (edge failure,
+  node churn), which is the cancellation the masked mix leans on; an
+  intercepted single-edge payload is statistically unreadable (full
+  byte-range support, ~uniform, ~zero correlation with the plaintext).
+* **engines** (fused, eager): DP noise rides the EF residual -- consensus
+  still contracts on the hospital graph, the ``ef_residual_rms`` signal
+  stays bounded and steady enough that ``AdaptiveTopK`` does not flap;
+  the ``dp_epsilon`` metric equals the analytic moments bound; restore
+  refuses mismatched privacy specs and unknown comm keys.
+* **sharded wire** (subprocess, slow): masked rounds are BIT-IDENTICAL
+  to unmasked rounds across algorithm x schedule depth x wire encoding
+  x topology program, with the identical collective count and operand
+  shapes in the jaxpr (zero wire overhead), and the dense all-gather W
+  build refuses secure_agg loudly.
+"""
+
+import os
+import subprocess
+import sys
+import textwrap
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+try:  # hypothesis WIDENS the property search; the rest must run bare
+    from hypothesis import given, settings, strategies as st
+
+    HAVE_HYPOTHESIS = True
+except ImportError:  # pragma: no cover - CI installs hypothesis
+    HAVE_HYPOTHESIS = False
+
+from repro.core import (
+    FLConfig,
+    FusedEngine,
+    get_engine,
+    init_fl_state,
+    make_fl_round,
+    mixing_matrix,
+)
+from repro.core.privacy import (
+    NONE,
+    PrivacySpec,
+    analytic_epsilon,
+    dp_noise,
+    epsilon_traced,
+    mask_wire,
+    pad_bits,
+    pair_index,
+    parse_privacy,
+    rdp_epsilon,
+    resolve_privacy,
+)
+from repro.core.schedules import constant
+from repro.training.checkpoint import load_fl_state, save_fl_state
+from repro.training.trainer import AdaptiveTopK
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+# ---------------------------------------------------------------------------
+# spec grammar
+
+
+@pytest.mark.parametrize("spec", [
+    "none",
+    "secure_agg",
+    "secure_agg:seed=7",
+    "dp:sigma=0.5,clip=1.0",
+    "dp:sigma=0.5,clip=1.0,delta=1e-6",
+    "dp:sigma=0.5,clip=1.0,seed=3",
+    "secure_agg+dp:sigma=0.25,clip=2.0",
+])
+def test_spec_roundtrip(spec):
+    p = parse_privacy(spec)
+    assert parse_privacy(p.spec()) == p
+
+
+@pytest.mark.parametrize("spec", [
+    "bogus",
+    "secure_agg:p=2",
+    "dp:clip=1.0",                      # sigma missing
+    "dp:sigma=0.5",                     # clip missing (sensitivity!)
+    "dp:sigma=-1,clip=1.0",
+    "dp:sigma=0.5,clip=1.0,delta=2",
+    "dp:sigma=0.5,clip=1.0,rho=3",
+])
+def test_spec_validation_errors(spec):
+    with pytest.raises(ValueError):
+        parse_privacy(spec)
+
+
+def test_resolve_privacy():
+    assert resolve_privacy(None) is NONE
+    p = PrivacySpec(secure_agg=True)
+    assert resolve_privacy(p) is p
+    assert resolve_privacy("secure_agg") == p
+    with pytest.raises(TypeError):
+        resolve_privacy(3)
+    assert not NONE.active and not NONE.needs_rng
+    assert parse_privacy("dp:sigma=0.5,clip=1.0").dp
+
+
+# ---------------------------------------------------------------------------
+# pad algebra (satellite: masks cancel for random payloads / topologies)
+
+
+_WIRE_DTYPES = (jnp.int8, jnp.int16, jnp.int32, jnp.float32, jnp.uint8)
+
+
+def _random_wire(rng, rows, width):
+    """One buffer per maskable wire dtype (q / pos / scales / bitmap)."""
+    return tuple(
+        jnp.asarray(
+            rng.integers(-100, 100, size=(rows, width))
+            if jnp.dtype(dt).kind != "f"
+            else rng.normal(size=(rows, width)),
+            dt,
+        )
+        for dt in _WIRE_DTYPES
+    )
+
+
+def _as_uint(arr):
+    a = np.asarray(arr)
+    if a.dtype.kind == "f":
+        a = a.view(np.uint32)
+    elif a.dtype.kind == "i":
+        a = a.view(a.dtype.str.replace("i", "u"))
+    return a
+
+
+def _check_mask_roundtrip(seed, r, rows, width):
+    rng = np.random.default_rng(seed)
+    key = PrivacySpec(secure_agg=True, seed=seed).init_key()
+    wire = _random_wire(rng, rows, width)
+    pair = jnp.asarray(rng.integers(0, 400, size=rows), jnp.int32)
+    lt = jnp.asarray(rng.integers(0, 2, size=rows).astype(bool))
+    masked = mask_wire(wire, key, r, pair, lt)
+    # the payload actually changed (the pad is not degenerate)
+    for m, x in zip(masked, wire):
+        assert not np.array_equal(np.asarray(m), np.asarray(x))
+    # mask -> unmask is the exact bit-level identity
+    back = mask_wire(masked, key, r, pair, lt, unmask=True)
+    for b, x in zip(back, wire):
+        assert np.array_equal(np.asarray(b), np.asarray(x)), x.dtype
+    # antisymmetry: the reverse-direction pad is the exact inverse, so
+    # masking once per direction composes to the identity (m_ij = -m_ji)
+    both = mask_wire(masked, key, r, pair, ~lt)
+    for b, x in zip(both, wire):
+        assert np.array_equal(np.asarray(b), np.asarray(x)), x.dtype
+
+
+if HAVE_HYPOTHESIS:
+
+    @settings(max_examples=15, deadline=None)
+    @given(
+        seed=st.integers(0, 1000),
+        r=st.integers(0, 10_000),
+        rows=st.integers(1, 9),
+        width=st.sampled_from([1, 7, 32]),
+    )
+    def test_mask_unmask_identity_and_antisymmetry(seed, r, rows, width):
+        _check_mask_roundtrip(seed, r, rows, width)
+else:  # pragma: no cover - CI installs hypothesis
+
+    @pytest.mark.parametrize("seed,r,rows,width",
+                             [(0, 0, 1, 1), (7, 3, 5, 32), (23, 997, 9, 7)])
+    def test_mask_unmask_identity_and_antisymmetry(seed, r, rows, width):
+        _check_mask_roundtrip(seed, r, rows, width)
+
+
+def test_pads_cancel_in_symmetric_sums():
+    """``m_ij + m_ji == x_ij + x_ji (mod 2^w)``: the two directions of an
+    edge carry exactly opposite pads, so ANY symmetric aggregate of the
+    masked payloads equals the plaintext aggregate -- the invariant the
+    symmetric-W mix inherits."""
+    rng = np.random.default_rng(1)
+    key = PrivacySpec(secure_agg=True, seed=1).init_key()
+    rows, width = 6, 24
+    pair = jnp.asarray(rng.integers(0, 400, size=rows), jnp.int32)
+    for dt in (jnp.int8, jnp.int16, jnp.float32):
+        x_ij = _random_wire(rng, rows, width)[0].astype(dt)
+        x_ji = _random_wire(rng, rows, width)[1].astype(dt)
+        m_ij = mask_wire((x_ij,), key, 5, pair, True)[0]
+        m_ji = mask_wire((x_ji,), key, 5, pair, False)[0]
+        lhs = _as_uint(m_ij) + _as_uint(m_ji)
+        rhs = _as_uint(x_ij) + _as_uint(x_ji)
+        np.testing.assert_array_equal(lhs, rhs)
+
+
+def test_pads_vary_by_round_pair_and_stream():
+    key = PrivacySpec(secure_agg=True, seed=0).init_key()
+    idx = jnp.arange(64, dtype=jnp.uint32)
+    base = np.asarray(pad_bits(key, 3, jnp.int32(17), idx, 21))
+    assert not np.array_equal(base, np.asarray(pad_bits(key, 4, jnp.int32(17), idx, 21)))
+    assert not np.array_equal(base, np.asarray(pad_bits(key, 3, jnp.int32(18), idx, 21)))
+    assert not np.array_equal(base, np.asarray(pad_bits(key, 3, jnp.int32(17), idx, 22)))
+    other = PrivacySpec(secure_agg=True, seed=1).init_key()
+    assert not np.array_equal(base, np.asarray(pad_bits(other, 3, jnp.int32(17), idx, 21)))
+
+
+def _check_masks_cancel_on_realized_graph(topo, tprog, seed):
+    """On EVERY realized directed edge of the per-round gated graph, the
+    pads derived from ``pair_index`` + ``sender < receiver`` cancel; a
+    dropped edge drops BOTH directions (W_r stays symmetric, asserted in
+    tests/test_fl_invariants.py), so no orphaned half-pad can survive."""
+    n = 20 if topo == "hospital20" else 16
+    w = mixing_matrix(topo, n)
+    eng, flat = FusedEngine.simulated(
+        w, {"x": jnp.zeros((n, 8), jnp.float32)}, scale_chunk=8,
+        topology_program=tprog.format(s=seed),
+    )
+    cfg = FLConfig(algorithm="dsgd", q=1, n_nodes=n)
+    comm = dict(init_fl_state(cfg, flat, engine=eng).comm)
+    key = PrivacySpec(secure_agg=True, seed=seed).init_key()
+    rng = np.random.default_rng(seed)
+    for r in range(3):
+        w_off_r, _, new_comm, _ = eng._round_gates(comm)
+        i_idx, j_idx = np.nonzero(np.asarray(w_off_r) > 1e-9)
+        upper = i_idx < j_idx
+        i_idx, j_idx = i_idx[upper], j_idx[upper]
+        assert len(i_idx) > 0  # the gated graph never fully disconnects
+        pair = pair_index(jnp.asarray(i_idx), jnp.asarray(j_idx), n)
+        x_ij = jnp.asarray(
+            rng.integers(-100, 100, size=(len(i_idx), 16)), jnp.int8)
+        x_ji = jnp.asarray(
+            rng.integers(-100, 100, size=(len(i_idx), 16)), jnp.int8)
+        m_ij = mask_wire((x_ij,), key, r, pair, True)[0]
+        m_ji = mask_wire((x_ji,), key, r, pair, False)[0]
+        np.testing.assert_array_equal(
+            _as_uint(m_ij) + _as_uint(m_ji), _as_uint(x_ij) + _as_uint(x_ji))
+        np.testing.assert_array_equal(
+            np.asarray(mask_wire((m_ij,), key, r, pair, True, unmask=True)[0]),
+            np.asarray(x_ij))
+        comm.update(new_comm)
+
+
+_PRIV_TPROGS = ["static", "edge_failure:p=0.3,seed={s}",
+                "node_churn:p_down=0.25,mean_downtime=3,seed={s}"]
+
+
+if HAVE_HYPOTHESIS:
+
+    @settings(max_examples=10, deadline=None)
+    @given(
+        topo=st.sampled_from(["ring", "torus", "hospital20"]),
+        tprog=st.sampled_from(_PRIV_TPROGS),
+        seed=st.integers(0, 50),
+    )
+    def test_masks_cancel_on_realized_topologies(topo, tprog, seed):
+        _check_masks_cancel_on_realized_graph(topo, tprog, seed)
+else:  # pragma: no cover - CI installs hypothesis
+
+    @pytest.mark.parametrize("topo", ["ring", "torus", "hospital20"])
+    @pytest.mark.parametrize("tprog", _PRIV_TPROGS[1:])
+    def test_masks_cancel_on_realized_topologies(topo, tprog):
+        _check_masks_cancel_on_realized_graph(topo, tprog, seed=5)
+
+
+def test_intercepted_payload_is_unreadable():
+    """A single intercepted edge payload carries ~no information about
+    the plaintext: a narrow int8 distribution (the EF residual regime)
+    is spread over the full byte range, ~uniformly, with ~zero
+    correlation -- the distribution shifts by the full mask range."""
+    rng = np.random.default_rng(2)
+    rows, width = 16, 4096
+    plain = jnp.asarray(rng.integers(-2, 3, size=(rows, width)), jnp.int8)
+    key = PrivacySpec(secure_agg=True, seed=2).init_key()
+    pair = jnp.asarray(rng.integers(0, 400, size=rows), jnp.int32)
+    lt = jnp.asarray(rng.integers(0, 2, size=rows).astype(bool))
+    masked = np.asarray(mask_wire((plain,), key, 9, pair, lt)[0])
+    assert len(np.unique(np.asarray(plain))) <= 5
+    bytes_ = masked.view(np.uint8).ravel()
+    # full support: every one of the 256 byte values occurs
+    counts = np.bincount(bytes_, minlength=256)
+    assert (counts > 0).sum() == 256
+    # ~uniform: each bin within +-50% of the expected count (65536/256
+    # = 256/bin; binomial 3-sigma is ~6%, so 50% is an 8-sigma bound)
+    assert counts.min() > 128 and counts.max() < 384
+    # ~zero linear correlation with the plaintext
+    corr = np.corrcoef(np.asarray(plain).ravel().astype(np.float64),
+                       masked.ravel().astype(np.float64))[0, 1]
+    assert abs(corr) < 0.05
+
+
+def test_dp_noise_partition_invariant():
+    """The sharded per-row draw equals the fused whole-matrix draw
+    bitwise (global element counter), and the draw is calibrated."""
+    key = PrivacySpec(dp_sigma=0.5, dp_clip=1.0, seed=3).init_key()
+    full = np.asarray(dp_noise(key, 7, jnp.arange(8), 512, 2.0))
+    part = np.asarray(dp_noise(key, 7, jnp.arange(4, 8), 512, 2.0))
+    np.testing.assert_array_equal(full[4:], part)
+    big = np.asarray(dp_noise(key, 7, jnp.arange(16), 4096, 2.0))
+    assert abs(big.mean()) < 0.05
+    assert abs(big.std() / 2.0 - 1.0) < 0.05
+    # a fresh round is a fresh draw
+    assert not np.array_equal(full, np.asarray(
+        dp_noise(key, 8, jnp.arange(8), 512, 2.0)))
+
+
+# ---------------------------------------------------------------------------
+# (epsilon, delta) accounting
+
+
+def _check_accountant(sigma, steps, delta):
+    grid = rdp_epsilon(sigma, steps, delta)
+    oracle = analytic_epsilon(sigma, steps, delta)
+    # the grid minimum upper-bounds the continuous optimum, tightly
+    assert oracle <= grid <= oracle * 1.02
+    traced = float(epsilon_traced(sigma, jnp.int32(steps), delta))
+    assert traced == pytest.approx(oracle, rel=1e-3)
+
+
+if HAVE_HYPOTHESIS:
+
+    @settings(max_examples=25, deadline=None)
+    @given(
+        sigma=st.floats(0.05, 20.0),
+        steps=st.integers(1, 10_000),
+        delta=st.sampled_from([1e-7, 1e-5, 1e-3]),
+    )
+    def test_accountant_matches_analytic_oracle(sigma, steps, delta):
+        _check_accountant(sigma, steps, delta)
+else:  # pragma: no cover - CI installs hypothesis
+
+    @pytest.mark.parametrize("sigma,steps,delta", [
+        (0.25, 4, 1e-5), (0.5, 100, 1e-5), (2.0, 1, 1e-7),
+        (8.0, 10_000, 1e-3),
+    ])
+    def test_accountant_matches_analytic_oracle(sigma, steps, delta):
+        _check_accountant(sigma, steps, delta)
+
+
+def test_accountant_edge_cases_and_monotonicity():
+    assert rdp_epsilon(0.0, 5, 1e-5) == float("inf")
+    assert rdp_epsilon(0.5, 0, 1e-5) == 0.0
+    assert analytic_epsilon(0.5, 0, 1e-5) == 0.0
+    assert rdp_epsilon(0.5, 8, 1e-5) > rdp_epsilon(0.5, 4, 1e-5)
+    assert rdp_epsilon(1.0, 4, 1e-5) < rdp_epsilon(0.5, 4, 1e-5)
+    assert rdp_epsilon(0.5, 4, 1e-7) > rdp_epsilon(0.5, 4, 1e-5)
+
+
+# ---------------------------------------------------------------------------
+# engines (eager fused paths)
+
+
+def quad_loss(params, batch):
+    return 0.5 * jnp.sum((params["x"] - batch["b"]) ** 2)
+
+
+def _dp_run(privacy, algorithm="dsgd", rounds=40, topk=None, n=20, d=16,
+            seed=0, alpha=0.05, init_scale=4.0):
+    rng = np.random.default_rng(seed)
+    w = mixing_matrix("hospital20", n)
+    params = {"x": jnp.asarray(
+        init_scale * rng.normal(size=(n, d)), jnp.float32)}
+    b = jnp.asarray(rng.normal(size=(n, d)), jnp.float32)
+    eng, flat = FusedEngine.simulated(
+        w, params, scale_chunk=8, topk=topk, privacy=privacy)
+    cfg = FLConfig(algorithm=algorithm, q=1, n_nodes=n)
+    rf = jax.jit(make_fl_round(quad_loss, None, constant(alpha), cfg,
+                               engine=eng))
+    state = init_fl_state(cfg, flat, engine=eng)
+    batches = {"b": b[None]}
+    hist = []
+    for _ in range(rounds):
+        state, m = rf(state, batches)
+        hist.append({k: float(v) for k, v in m.items()})
+    return eng, state, hist
+
+
+def test_dp_noise_absorbed_by_error_feedback():
+    """Satellite: with dp_sigma > 0 the EF residual absorbs clip + noise
+    like it absorbs quantization error -- consensus error still
+    CONTRACTS on hospital20 and the residual stays bounded."""
+    eng, state, hist = _dp_run("dp:sigma=0.25,clip=1.0")
+    errs = [h["consensus_err"] for h in hist]
+    rms = [h["ef_residual_rms"] for h in hist]
+    assert all(np.isfinite(errs)) and all(np.isfinite(rms))
+    # consensus contracts from the scattered init to a small noise floor
+    assert errs[-1] < 0.3 * errs[0]
+    # the EF residual neither blows up nor drifts: bounded, steady tail
+    assert max(rms) < 50.0
+    assert np.mean(rms[-10:]) < 3.0 * np.mean(rms[5:15]) + 1e-6
+    # dp_epsilon is surfaced every round and grows with composition
+    eps = [h["dp_epsilon"] for h in hist]
+    assert all(np.diff(eps) > 0)
+
+
+def test_dp_epsilon_metric_matches_accountant():
+    _, _, hist = _dp_run("dp:sigma=0.5,clip=1.0", rounds=4)
+    assert hist[-1]["dp_epsilon"] == pytest.approx(
+        analytic_epsilon(0.5, 4, 1e-5), rel=1e-5)
+    # the DSGT round releases TWO noised wires per step
+    _, _, hist_t = _dp_run("dp:sigma=0.5,clip=1.0", algorithm="dsgt",
+                           rounds=2)
+    assert hist_t[-1]["dp_epsilon"] == pytest.approx(
+        analytic_epsilon(0.5, 4, 1e-5), rel=1e-5)
+
+
+def test_adaptive_topk_does_not_flap_under_dp():
+    """Regression (satellite): ``ef_residual_rms`` remains the adaptive-k
+    signal under DP -- the noise floor it settles to is steady enough
+    that the hysteresis band holds one regime instead of duty-cycling."""
+    _, _, hist = _dp_run("dp:sigma=0.25,clip=1.0", topk=2, rounds=40)
+    rms = [h["ef_residual_rms"] for h in hist]
+    warm = np.mean(rms[:10])
+    assert warm > 0  # top-k + dp defers real mass
+    ctl = AdaptiveTopK((2, 8, warm * 1.5, warm * 0.5), scale_chunk=8)
+    for v in rms[10:]:
+        ctl.pick(lambda: None, lambda: None)
+        ctl.update(v)
+    assert ctl.switches <= 2, (ctl.switches, rms)
+    # the dp noise floor is steady, not wild (what makes the band hold)
+    tail = np.asarray(rms[10:])
+    assert tail.std() < 0.75 * tail.mean()
+
+
+def test_fused_secure_agg_is_vacuous_noop():
+    """The single-host fused engine has no per-edge transport: it accepts
+    secure_agg but runs BIT-IDENTICAL to the plain build (and carries no
+    privacy counters in comm -- nothing consumes them)."""
+    _, st_plain, hist_plain = _dp_run(None, rounds=3)
+    eng, st_mask, hist_mask = _dp_run("secure_agg", rounds=3)
+    assert eng.privacy.secure_agg
+    assert np.array_equal(np.asarray(st_plain.params),
+                          np.asarray(st_mask.params))
+    assert "priv_key" not in (st_mask.comm or {})
+    assert hist_plain[-1] == hist_mask[-1]
+
+
+def test_engine_gating():
+    """Tree rejects any active privacy; flat takes secure_agg as a no-op
+    but refuses dp; fused refuses dp without the EF epilogue."""
+    n, d = 8, 4
+    w = mixing_matrix("ring", n)
+    tree_params = {"x": jnp.zeros((n, d), jnp.float32)}
+    with pytest.raises(ValueError, match="privacy spec"):
+        get_engine("tree").simulated(w, tree_params, privacy="secure_agg")
+    with pytest.raises(ValueError, match="privacy spec"):
+        get_engine("tree").simulated(w, tree_params,
+                                     privacy="dp:sigma=0.5,clip=1.0")
+    flat_eng, _ = get_engine("flat").simulated(
+        w, tree_params, privacy="secure_agg")
+    assert flat_eng.privacy.secure_agg
+    with pytest.raises(ValueError, match="error-feedback"):
+        get_engine("flat").simulated(w, tree_params,
+                                     privacy="dp:sigma=0.5,clip=1.0")
+    with pytest.raises(ValueError, match="error_feedback"):
+        FusedEngine.simulated(w, tree_params, scale_chunk=4,
+                              error_feedback=False,
+                              privacy="dp:sigma=0.5,clip=1.0")
+
+
+# ---------------------------------------------------------------------------
+# checkpoint contract
+
+
+def test_restore_comm_rejects_unknown_keys():
+    """Satellite fix: a restored comm dict carrying keys the engine does
+    not know is an explicit error with a migration hint, never a silent
+    drop."""
+    n = 8
+    w = mixing_matrix("ring", n)
+    eng, flat = FusedEngine.simulated(
+        w, {"x": jnp.zeros((n, 8), jnp.float32)}, scale_chunk=8,
+        privacy="dp:sigma=0.5,clip=1.0")
+    cfg = FLConfig(algorithm="dsgd", q=1, n_nodes=n)
+    comm = dict(init_fl_state(cfg, flat, engine=eng).comm)
+    assert eng.restore_comm(dict(comm)) == comm  # known keys pass through
+    bad = dict(comm, wire_fancy_new=np.zeros(3, np.float32))
+    with pytest.raises(ValueError) as ei:
+        eng.restore_comm(bad)
+    msg = str(ei.value)
+    assert "wire_fancy_new" in msg
+    assert "rebuild the engine" in msg  # the migration hint
+
+
+def test_checkpoint_records_and_refuses_privacy_spec(tmp_path):
+    n, d = 8, 8
+    rng = np.random.default_rng(0)
+    w = mixing_matrix("ring", n)
+    params = {"x": jnp.asarray(rng.normal(size=(n, d)), jnp.float32)}
+    b = jnp.asarray(rng.normal(size=(n, d)), jnp.float32)
+    spec = "dp:sigma=0.5,clip=1.0"
+    eng, flat = FusedEngine.simulated(w, params, scale_chunk=8, privacy=spec)
+    cfg = FLConfig(algorithm="dsgd", q=1, n_nodes=n)
+    rf = jax.jit(make_fl_round(quad_loss, None, constant(0.05), cfg,
+                               engine=eng))
+    state = init_fl_state(cfg, flat, engine=eng)
+    state, _ = rf(state, {"b": b[None]})
+    path = str(tmp_path / "ckpt")
+    save_fl_state(path, state, engine=eng)
+    import json
+    with open(os.path.join(path, "manifest.json")) as f:
+        assert json.load(f)["privacy"] == spec
+    # same-spec restore round-trips exactly (priv counters included)
+    restored = load_fl_state(
+        path, init_fl_state(cfg, flat, engine=eng), engine=eng)
+    assert int(restored.step) == int(state.step)
+    np.testing.assert_array_equal(np.asarray(restored.comm["priv_key"]),
+                                  np.asarray(state.comm["priv_key"]))
+    # a mismatched spec is refused: the streams and the accounting are
+    # only truthful under the sigma/clip/delta that actually trained
+    eng2, _ = FusedEngine.simulated(w, params, scale_chunk=8,
+                                    privacy="dp:sigma=1.0,clip=1.0")
+    with pytest.raises(ValueError, match="privacy spec"):
+        load_fl_state(path, init_fl_state(cfg, flat, engine=eng2),
+                      engine=eng2)
+
+
+# ---------------------------------------------------------------------------
+# sharded wire (subprocess: 8 forced host devices)
+
+
+def _run(script: str, timeout: int = 900) -> str:
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(REPO, "src")
+    proc = subprocess.run(
+        [sys.executable, "-c", script], env=env, capture_output=True,
+        text=True, timeout=timeout,
+    )
+    assert proc.returncode == 0, proc.stderr[-4000:]
+    return proc.stdout
+
+
+_SHARDED_PRELUDE = textwrap.dedent(
+    """
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    import jax, jax.numpy as jnp, numpy as np
+    from jax.sharding import NamedSharding, PartitionSpec as P
+    from repro.core import (FLConfig, FusedEngine, ShardedFusedEngine,
+                            init_fl_state, make_fl_round, mixing_matrix,
+                            pack)
+    from repro.core.schedules import inv_sqrt
+    from repro.launch.mesh import make_test_mesh, node_axes, n_fl_nodes
+
+    mesh = make_test_mesh((2, 2, 2))
+    naxes = node_axes(mesh); n = n_fl_nodes(mesh)
+    rng = np.random.default_rng(0)
+    q = 2
+
+    def loss(p, batch):
+        return jnp.sum((p["w"] - batch["t"]) ** 2) + jnp.sum(p["b"] ** 2)
+
+    params = {"w": jnp.asarray(rng.normal(size=(n, 4, 5)), jnp.float32),
+              "b": jnp.asarray(rng.normal(size=(n, 3)), jnp.float32)}
+    batches = {"t": jnp.asarray(rng.normal(size=(q, n, 4, 5)), jnp.float32)}
+    sched = inv_sqrt(0.05)
+
+    def run(privacy, algorithm, schedule, topk, tprog, chunk=16, rounds=4,
+            jaxpr=False):
+        cfg = FLConfig(algorithm=algorithm, q=q, n_nodes=n)
+        flat, _ = pack(params, pad_to=chunk)
+        sh = ShardedFusedEngine.from_mesh(
+            mesh, naxes, params, scale_chunk=chunk, topk=topk,
+            impl="pallas", round_schedule=schedule,
+            topology_program=tprog, privacy=privacy)
+        if privacy is not None:  # the knob must not be silently dropped
+            assert sh.privacy.spec() != "none", privacy
+        with mesh:
+            rf = jax.jit(make_fl_round(loss, None, sched, cfg, engine=sh))
+            st = init_fl_state(
+                cfg, jax.device_put(flat, NamedSharding(mesh, P(naxes, None))),
+                engine=sh)
+            jx = jax.make_jaxpr(rf)(st, batches) if jaxpr else None
+            m = {}
+            for _ in range(rounds):
+                st, m = rf(st, batches)
+        return st, m, jx
+
+    def ppermutes(jx):
+        found = []
+        def walk(jaxpr):
+            for eqn in jaxpr.eqns:
+                if eqn.primitive.name == "ppermute":
+                    found.append(tuple(str(v.aval) for v in eqn.invars))
+                for p in eqn.params.values():
+                    cands = p if isinstance(p, (list, tuple)) else (p,)
+                    for cand in cands:
+                        inner = getattr(cand, "jaxpr", cand)
+                        if hasattr(inner, "eqns"):
+                            walk(inner)
+        walk(jx.jaxpr)
+        return found
+    """
+)
+
+
+_BIT_IDENTITY_SCRIPT = _SHARDED_PRELUDE + textwrap.dedent(
+    """
+    # axis-covering matrix: algorithm x staleness depth x wire encoding
+    # (dense int8 / bitmap top-k / compact top-k) x topology program
+    CHURN = "edge_failure:p=0.3,seed=3"
+    combos = [
+        ("dsgd", "sequential",            16, None, None),
+        ("dsgt", "sequential",            16, 4,    CHURN),
+        ("dsgd", "bounded_staleness:k=2", 16, 4,    None),
+        ("dsgt", "bounded_staleness:k=1", 16, None, CHURN),
+        ("dsgd", "bounded_staleness:k=4", 16, None, CHURN),
+        ("dsgt", "bounded_staleness:k=4", 16, 4,    None),
+        ("dsgd", "sequential",            64, 2,    CHURN),
+    ]
+    for algorithm, schedule, chunk, topk, tprog in combos:
+        st_p, m_p, _ = run(None, algorithm, schedule, topk, tprog,
+                           chunk=chunk)
+        st_m, m_m, _ = run("secure_agg", algorithm, schedule, topk, tprog,
+                           chunk=chunk)
+        tag = (algorithm, schedule, chunk, topk, tprog)
+        assert "priv_key" in st_m.comm, tag
+        assert np.array_equal(np.asarray(st_p.params),
+                              np.asarray(st_m.params)), tag
+        if st_p.tracker is not None:
+            assert np.array_equal(np.asarray(st_p.tracker),
+                                  np.asarray(st_m.tracker)), tag
+        assert float(m_p["wire_bytes"]) == float(m_m["wire_bytes"]), tag
+        print("bit-identical:", tag)
+    print("SHARDED-MASKED-BIT-IDENTICAL-OK")
+    """
+)
+
+
+_OVERHEAD_AND_DP_SCRIPT = _SHARDED_PRELUDE + textwrap.dedent(
+    """
+    # 1. zero wire overhead: masked and unmasked rounds lower to the SAME
+    #    collective count with the SAME operand shapes (pads are folded
+    #    into the existing int8/scale payloads, never shipped)
+    for combo in (("dsgd", "sequential", None, None),
+                  ("dsgt", "bounded_staleness:k=2", 4,
+                   "edge_failure:p=0.3,seed=3")):
+        algorithm, schedule, topk, tprog = combo
+        _, _, jx_p = run(None, algorithm, schedule, topk, tprog,
+                         rounds=1, jaxpr=True)
+        _, _, jx_m = run("secure_agg", algorithm, schedule, topk, tprog,
+                         rounds=1, jaxpr=True)
+        p_plain, p_mask = ppermutes(jx_p), ppermutes(jx_m)
+        assert len(p_plain) > 0, combo  # the walker actually found them
+        assert len(p_plain) == len(p_mask), (combo, len(p_plain), len(p_mask))
+        assert sorted(p_plain) == sorted(p_mask), combo
+        print("jaxpr parity:", combo, len(p_plain), "ppermutes")
+
+    # 2. the dense all-gather W build has no pairwise transport to pad:
+    #    secure_agg is refused loudly at build time
+    w_er = mixing_matrix("erdos_renyi", n, p=0.7, seed=1)
+    try:
+        ShardedFusedEngine.from_mesh(
+            mesh, naxes, params, scale_chunk=16, impl="pallas", w=w_er,
+            privacy="secure_agg")
+        raise SystemExit("dense-W secure_agg was not rejected")
+    except ValueError as e:
+        assert "secure_agg" in str(e)
+        print("dense-W rejection ok")
+
+    # 3. sharded DP: runs, accounts, and matches the fused oracle (the
+    #    noise draw is partition-invariant, so the rows agree bitwise
+    #    and the trajectories to 1e-5 like the plain wire)
+    from repro.core.privacy import analytic_epsilon
+    spec = "dp:sigma=0.5,clip=1.0"
+    st_s, m_s, _ = run(spec, "dsgd", "sequential", None, None, rounds=3)
+    assert np.isfinite(np.asarray(st_s.params)).all()
+    assert float(m_s["dp_epsilon"]) == float(
+        jnp.float32(analytic_epsilon(0.5, 3, 1e-5))), m_s["dp_epsilon"]
+
+    chunk = 16
+    flat, layout = pack(params, pad_to=chunk)
+    sh = ShardedFusedEngine.from_mesh(
+        mesh, naxes, params, scale_chunk=chunk, impl="pallas", privacy=spec)
+    fe = FusedEngine(sh.dense_equivalent(), layout, scale_chunk=chunk,
+                     privacy=spec)
+    cfg = FLConfig(algorithm="dsgd", q=q, n_nodes=n)
+    rf_f = jax.jit(make_fl_round(loss, None, sched, cfg, engine=fe))
+    st_f = init_fl_state(cfg, flat, engine=fe)
+    with mesh:
+        rf_s = jax.jit(make_fl_round(loss, None, sched, cfg, engine=sh))
+        st_sh = init_fl_state(
+            cfg, jax.device_put(flat, NamedSharding(mesh, P(naxes, None))),
+            engine=sh)
+        for _ in range(3):
+            st_f, m_f = rf_f(st_f, batches)
+            st_sh, m_sh = rf_s(st_sh, batches)
+    err = float(jnp.abs(st_f.params - st_sh.params).max())
+    assert err < 1e-5, err
+    assert float(m_f["dp_epsilon"]) == float(m_sh["dp_epsilon"])
+    print("sharded dp matches fused oracle, err", err)
+
+    # 4. secure_agg composes with dp at zero cost: pads are an exact
+    #    no-op on top of the noised wire (same seed -> same noise)
+    st_d, _, _ = run("dp:sigma=0.5,clip=1.0", "dsgt",
+                     "bounded_staleness:k=2", 4, None, rounds=3)
+    st_b, _, _ = run("secure_agg+dp:sigma=0.5,clip=1.0", "dsgt",
+                     "bounded_staleness:k=2", 4, None, rounds=3)
+    assert np.array_equal(np.asarray(st_d.params), np.asarray(st_b.params))
+    assert np.array_equal(np.asarray(st_d.tracker), np.asarray(st_b.tracker))
+    print("SHARDED-PRIVACY-OVERHEAD-DP-OK")
+    """
+)
+
+
+@pytest.mark.slow
+def test_sharded_masked_rounds_bit_identical():
+    out = _run(_BIT_IDENTITY_SCRIPT)
+    assert "SHARDED-MASKED-BIT-IDENTICAL-OK" in out
+
+
+@pytest.mark.slow
+def test_sharded_privacy_overhead_rejection_and_dp():
+    out = _run(_OVERHEAD_AND_DP_SCRIPT)
+    assert "SHARDED-PRIVACY-OVERHEAD-DP-OK" in out
