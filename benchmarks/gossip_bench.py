@@ -43,7 +43,16 @@ pytree, where most leaves are small: norms, biases, per-head slices):
   * node program:       the fault-injection gate's price (per-node
                         uptime hash + masked scan iterations vs the
                         homogeneous lockstep round, one compilation
-                        both sides).
+                        both sides);
+  * fused bf16:         full fused rounds with bf16 round STATE
+                        (storage_dtype) vs fp32 -- the int8 wire and
+                        fp32 EF state are untouched, so the guarded
+                        wire columns are equal by construction;
+  * two-axis round:     the sharded_fused round on a real
+                        (gossip_node, model_shard) host-device mesh,
+                        one child process per (nodes, shards) cell
+                        (benchmarks/two_axis.py): guarded per-shard
+                        wire bytes + step time vs nodes x shards.
 
 ``tools/bench_guard.py`` diffs a fresh JSON against the committed
 baselines (BENCH_gossip.json full, benchmarks/BENCH_gossip_smoke.json
@@ -810,6 +819,61 @@ def bench_bf16_storage(tree, w) -> Dict:
     }
 
 
+def bench_fused_bf16_round(tree, w, algorithm: str = "dsgt", q: int = 4) -> Dict:
+    """bf16 STORAGE through the full fused round (params/tracker/prev_grad
+    kept bf16; the wire stays int8 and the EF recon/residual state stays
+    fp32): fp32 vs bf16 storage_dtype on FusedEngine, full rounds in the
+    scan harness. The kernel body runs fp32 on both sides -- the casts
+    sit at the storage boundary -- so the wire-byte column is IDENTICAL
+    and guarded; the buffer-byte columns are the halved-HBM story
+    (equivalence at relaxed tolerance in tests/test_schedule.py)."""
+    n = w.shape[0]
+    cfg = FLConfig(algorithm=algorithm, q=q, n_nodes=n)
+    sched = constant(0.01)
+
+    def loss_fn(params, batch):
+        sq = 0.0
+        for leaf in jax.tree_util.tree_leaves(params):
+            sq = sq + jnp.sum((leaf.astype(jnp.float32) - batch["t"]) ** 2) / leaf.size
+        return sq
+
+    batches = {"t": jnp.zeros((q, n), jnp.float32)}
+
+    def make(storage):
+        eng, f0 = FusedEngine.simulated(w, tree, scale_chunk=SCALE_CHUNK,
+                                        impl="jnp", storage_dtype=storage)
+        rf = make_fl_round(loss_fn, None, sched, cfg, engine=eng)
+        return eng, rf, init_fl_state(cfg, f0, engine=eng)
+
+    eng32, rf32, st32 = make(None)
+    eng16, rf16, st16 = make(jnp.bfloat16)
+    us = time_interleaved({
+        "fp32": (lambda st: rf32(st, batches)[0], st32),
+        "bf16": (lambda st: rf16(st, batches)[0], st16),
+    }, rounds=min(20, ROUNDS), trials=min(7, TRIALS))
+    t = eng32.layout.total
+    state_bufs = 3 if algorithm == "dsgt" else 1  # params (+tracker+prev_grad)
+    return {
+        "name": f"fused_bf16_storage_{algorithm}",
+        "n_nodes": n,
+        "total_params": t,
+        "scale_chunk": SCALE_CHUNK,
+        "q": q,
+        "us_fp32": us["fp32"],
+        "us_bf16": us["bf16"],
+        "state_bytes_fp32": 4 * state_bufs * n * t,
+        "state_bytes_bf16": 2 * state_bufs * n * t,
+        "wire_bytes_per_round": eng16.wire_bytes(cfg),
+        "wire_bytes_per_round_fp32": eng32.wire_bytes(cfg),
+        "note": "storage_dtype='bfloat16' on the fused engine: the stored "
+                "round state halves while the int8 wire and the fp32 EF "
+                "recon/residual are untouched -- the two guarded "
+                "wire_bytes columns are equal by construction. CPU wall "
+                "time includes the boundary casts the TPU MXU does for "
+                "free.",
+    }
+
+
 def main() -> List[Dict]:
     global ROUNDS, TRIALS
     ap = argparse.ArgumentParser(description=__doc__)
@@ -855,6 +919,9 @@ def main() -> List[Dict]:
         bench_staleness_depth(tree, w, "dsgt", q=4),
         bench_compact_wire(tree, w, topk=4 if args.smoke else None),
         bench_bf16_storage(tree, w),
+        # bf16 storage through the FULL fused round (wire stays int8;
+        # the guarded wire columns are equal fp32 vs bf16)
+        bench_fused_bf16_round(tree, w, "dsgt"),
         # dynamic topology: the traced per-round-W mechanism's price
         # (quality-vs-downtime lives in experiments/churn_ehr.json)
         bench_churn(tree, w),
@@ -862,6 +929,16 @@ def main() -> List[Dict]:
         # (quality-vs-faults lives in experiments/straggler_ehr.json)
         bench_node_program(tree, w),
     ]
+    # two-axis (gossip_node, model_shard) rounds: one child process per
+    # (nodes, shards) cell -- XLA locks this process's device count, so
+    # the mesh cells cannot run in-process (benchmarks/two_axis.py)
+    import os
+    import sys
+
+    sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
+    from benchmarks.two_axis import two_axis_row
+
+    rows.append(two_axis_row(smoke=args.smoke))
     for r in rows:
         extras = {k: v for k, v in r.items() if isinstance(v, float)}
         print(f"  {r['name']:22s} " + "  ".join(f"{k}={v:10.1f}" for k, v in extras.items()))

@@ -89,7 +89,7 @@ def roofline_row(rec: Dict) -> Optional[Dict]:
         "memory": "cut HBM traffic: fused (flash) attention, chunked loss, bf16 activations",
         "collective": "cut wire bytes: larger Q, bf16 gossip wire, hierarchical pod gossip",
     }
-    return {
+    row = {
         "arch": rec["arch"],
         "shape": rec["shape"],
         "status": "ok",
@@ -107,6 +107,17 @@ def roofline_row(rec: Dict) -> Optional[Dict]:
         "memory_temp_bytes": rec["memory"]["temp_bytes"],
         "memory_arg_bytes": rec["memory"]["argument_bytes"],
     }
+    two = rec.get("two_axis")
+    if two:
+        # two-axis (gossip_node, model_shard) records: the per-shard wire
+        # column prices one shard's gossip collective against its slice
+        # of ICI -- per-shard bytes x shards == the whole node's wire
+        row["model_shards"] = two["model_shards"]
+        row["wire_bytes_per_shard_per_round"] = two[
+            "wire_bytes_per_shard_per_round"]
+        row["t_wire_per_shard_s"] = (
+            two["wire_bytes_per_shard_per_round"] / ICI_BW)
+    return row
 
 
 def format_table(rows: List[Dict]) -> str:
@@ -132,7 +143,11 @@ def main() -> None:
     ap.add_argument("--mesh", default="single")
     ap.add_argument("--json", action="store_true")
     args = ap.parse_args()
-    rows = [roofline_row(r) for r in load_records(args.mesh)]
+    recs = load_records(args.mesh)
+    # two-axis (gossip_node, model_shard) dry-run variants, when present
+    # (launch/dryrun.py --fl-shard-model): rows gain per-shard wire columns
+    recs += load_records(args.mesh, suffix="_sharded_fused_shardmodel_q2")
+    rows = [roofline_row(r) for r in recs]
     rows = [r for r in rows if r]
     if args.json:
         print(json.dumps(rows, indent=2))

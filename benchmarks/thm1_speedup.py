@@ -9,6 +9,12 @@ We train DSGT (Q=1) on a synthetic non-IID least-squares problem with
 IDENTICAL total data but N in {4, 8, 16} nodes (ring topology), fixed T,
 and report the time-averaged stationarity measure. The claim holds if the
 measure shrinks ~linearly as N grows.
+
+``--two-axis`` adds the wall-clock companion table: measured step time
+vs node-count x shard-count on the two-axis (gossip_node, model_shard)
+host-device mesh (one subprocess per cell -- see benchmarks/two_axis.py),
+showing how the round time trades when devices move from the node axis
+to the model axis at a fixed device budget.
 """
 
 from __future__ import annotations
@@ -60,6 +66,28 @@ def run_one(n_nodes: int, t_steps: int, seed: int = 0, c: float = 0.05) -> float
     return measure / t_steps
 
 
+def two_axis_table(smoke: bool = False) -> Dict:
+    """Step time vs (nodes, shards) at a fixed 8-device budget."""
+    import os
+    import sys
+
+    sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
+    from benchmarks.two_axis import CELLS, run_cell
+
+    kw = (dict(total=1024, chunk=64, topk=8, rounds=5, trials=3) if smoke
+          else dict(total=8192, chunk=256, topk=32, rounds=20, trials=5))
+    print("\nTwo-axis round time vs node-count x shard-count "
+          f"(DSGT, total={kw['total']}, 8 host devices)")
+    out = {}
+    for nodes, shards in CELLS:
+        rec = run_cell(nodes, shards, algorithm="dsgt", **kw)
+        out[f"n{nodes}_s{shards}"] = rec
+        print(f"  N={nodes:2d} x S={shards:2d}: {rec['us_per_round']:9.1f} "
+              f"us/round, {rec['wire_bytes_per_shard']:.0f} wire B/shard "
+              f"({rec['wire_bytes_per_round']:.0f} B/round)")
+    return out
+
+
 def main(t_steps: int = 400, seeds: int = 3) -> Dict:
     print("Theorem 1: time-averaged stationarity+consensus vs N (DSGT, Q=1)")
     out = {}
@@ -74,6 +102,19 @@ def main(t_steps: int = 400, seeds: int = 3) -> Dict:
 
 
 if __name__ == "__main__":
-    res = main()
+    import argparse
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--t-steps", type=int, default=400)
+    ap.add_argument("--seeds", type=int, default=3)
+    ap.add_argument("--two-axis", action="store_true",
+                    help="also time full rounds vs node-count x shard-count "
+                         "on the (gossip_node, model_shard) mesh")
+    ap.add_argument("--smoke", action="store_true",
+                    help="shrink the --two-axis cells to seconds-scale")
+    args = ap.parse_args()
+    res = main(args.t_steps, args.seeds)
+    if args.two_axis:
+        res["two_axis"] = two_axis_table(smoke=args.smoke)
     with open("experiments/thm1_results.json", "w") as f:
         json.dump(res, f)

@@ -66,6 +66,7 @@ from repro.core.heterogeneity import (
     NodeProgram,
     PayloadDropProgram,
     SlowNodesProgram,
+    SlowUplinkProgram,
     StragglerProgram,
     compose_node_gate,
     get_node_program,
@@ -101,6 +102,7 @@ from repro.core.packing import (
     FlatLayout,
     compact_pos_dtype,
     flat_wire_bytes,
+    flat_wire_bytes_per_shard,
     pack,
     pack_like,
     unpack,
@@ -129,6 +131,7 @@ __all__ = [
     "quantize_int8",
     "FlatLayout",
     "flat_wire_bytes",
+    "flat_wire_bytes_per_shard",
     "pack",
     "pack_like",
     "unpack",
@@ -167,6 +170,7 @@ __all__ = [
     "HomogeneousProgram",
     "StragglerProgram",
     "SlowNodesProgram",
+    "SlowUplinkProgram",
     "PayloadDropProgram",
     "compose_node_gate",
     "register_node_program",

@@ -119,6 +119,7 @@ from repro.core.packing import (
     compact_index_bytes,
     compact_pos_dtype,
     flat_wire_bytes,
+    flat_wire_bytes_per_shard,
     pack,
     pack_layout,
     pack_like,
@@ -618,6 +619,14 @@ class GossipEngine(abc.ABC):
         effective local steps as MASKED iterations of the one compiled
         scan."""
         prog = self.node_program
+        if getattr(prog, "heterogeneous_wire_k", False) and not getattr(
+            self, "supports_wire_k", False
+        ):
+            raise ValueError(
+                f"node program {prog.spec()!r} modulates per-node wire k, "
+                f"which the {self.name!r} engine does not support -- use "
+                "engine='sharded_fused' (top-k wire with an EF residual)"
+            )
         if not prog.heterogeneous_compute or cfg.q <= 1:
             return None
 
@@ -1188,13 +1197,16 @@ def _reject_dp(privacy, name: str, reason: str) -> PrivacySpec:
 def _reject_storage_dtype(storage_dtype, name: str) -> None:
     if storage_dtype is not None and jnp.dtype(storage_dtype) != jnp.float32:
         raise ValueError(
-            f"storage_dtype is a flat-engine knob (bf16 flat buffer with "
-            f"fp32 mix accumulation); the {name!r} engine "
-            + ("has no flat buffer" if name == "tree"
-               else "keeps its buffer and int8 wire state in fp32 (the EF "
-                    "residual must not be rounded)")
-            + " -- use 'flat'"
+            f"storage_dtype is a flat-buffer knob (bf16 buffer with fp32 "
+            f"mix accumulation); the {name!r} engine has no flat buffer "
+            "-- use 'flat', 'fused', or 'sharded_fused'"
         )
+
+
+#: storage dtypes the FUSED engines accept: the params/tracker buffer may
+#: be stored narrow (halving its HBM traffic), but the EF recon/residual
+#: wire state stays fp32 regardless -- the residual must not be rounded.
+_FUSED_STORAGE_DTYPES = ("float32", "bfloat16")
 
 
 def _split_w_np(w: np.ndarray, n: int):
@@ -1236,9 +1248,16 @@ class _FusedBase(GossipEngine):
                 f"layout.total {layout.total} not a multiple of scale_chunk "
                 f"{scale_chunk}; pack with pad_to={scale_chunk}"
             )
-        if jnp.dtype(layout.storage_dtype) != jnp.float32:
-            _reject_storage_dtype(layout.storage_dtype, self.name)
+        if jnp.dtype(layout.storage_dtype).name not in _FUSED_STORAGE_DTYPES:
+            raise ValueError(
+                f"the {self.name!r} engine stores the flat buffer in "
+                f"{_FUSED_STORAGE_DTYPES} only (got "
+                f"{jnp.dtype(layout.storage_dtype).name!r}); the wire math "
+                "and the EF recon/residual state run fp32 either way"
+            )
         self.layout = layout
+        #: params/tracker storage dtype; wire math always accumulates fp32
+        self._store = jnp.dtype(layout.storage_dtype)
         self.scale_chunk = scale_chunk
         self.topk = topk
         self.error_feedback = error_feedback
@@ -1390,6 +1409,20 @@ class _FusedBase(GossipEngine):
         """Wire bytes one node ships to ONE neighbor per wire per round."""
         return flat_wire_bytes(self.layout, 1, self.scale_chunk, self.topk)
 
+    # -- narrow-storage helpers --------------------------------------------
+    #
+    # storage_dtype='bfloat16' stores the params/tracker buffer narrow;
+    # every wire-stage input upcasts to fp32 at the kernel boundary
+    # (_f32) and every mixed output is stored back narrow (_st), so the
+    # int8 wire, the EF recon/residual, and the mix accumulation are
+    # bit-for-bit the fp32 computation of the ROUNDED buffer.
+
+    def _f32(self, x: jnp.ndarray) -> jnp.ndarray:
+        return x if x.dtype == jnp.float32 else x.astype(jnp.float32)
+
+    def _st(self, x: jnp.ndarray) -> jnp.ndarray:
+        return x if x.dtype == self._store else x.astype(self._store)
+
     def _residual_rms(self, comm: Dict[str, jnp.ndarray]) -> jnp.ndarray:
         """RMS of the parameter-wire EF residual -- the adaptive-k signal
         (``topk_schedule``): a large residual means the wire is dropping
@@ -1519,12 +1552,12 @@ class FusedEngine(_FusedBase):
 
             if cfg.algorithm == "dsgd":
                 mixed, recon, res, _ = fused_round(
-                    state.params, grads, state.comm["recon"],
+                    self._f32(state.params), grads, state.comm["recon"],
                     state.comm["residual"], w_off_r, w_self_r, alpha,
                     **kw, **dpkw,
                 )
                 new_state = state._replace(
-                    step=step, params=mixed,
+                    step=step, params=self._st(mixed),
                     comm={"recon": recon, "residual": res, **topo_comm},
                 )
             else:
@@ -1533,13 +1566,15 @@ class FusedEngine(_FusedBase):
                         state.comm, n, tracker=True
                     )
                 mx, mt, nrx, nsx, nrt, nst, _, _ = fused_round_gt(
-                    state.params, state.tracker, grads, state.prev_grad,
+                    self._f32(state.params), self._f32(state.tracker),
+                    grads, self._f32(state.prev_grad),
                     state.comm["recon"], state.comm["residual"],
                     state.comm["recon_t"], state.comm["residual_t"],
                     w_off_r, w_self_r, alpha, **kw, **dpkw,
                 )
                 new_state = FLState(
-                    step=step, params=mx, tracker=mt, prev_grad=grads,
+                    step=step, params=self._st(mx), tracker=self._st(mt),
+                    prev_grad=self._st(grads),
                     comm={"recon": nrx, "residual": nsx,
                           "recon_t": nrt, "residual_t": nst, **topo_comm},
                 )
@@ -1630,11 +1665,11 @@ class FusedEngine(_FusedBase):
             c = state.comm
             if cfg.algorithm == "dsgd":
                 h, q, sc, nrecon, nres = wire_stage(
-                    state.params, grads, c["recon"], c["residual"],
-                    alpha32, **kw, **dpkw,
+                    self._f32(state.params), grads, c["recon"],
+                    c["residual"], alpha32, **kw, **dpkw,
                 )
                 mix = stale_recon(c["recon"], c["wire_q"], c["wire_scales"])
-                mixed = w_off_r @ mix + w_self_r[:, None] * h
+                mixed = self._st(w_off_r @ mix + w_self_r[:, None] * h)
                 nwq, nwsc = push(c["wire_q"], c["wire_scales"], q, sc)
                 new_state = state._replace(
                     step=step, params=mixed,
@@ -1648,7 +1683,8 @@ class FusedEngine(_FusedBase):
                     )
                 (h, t_half, qx, scx, nrx, nsx, qt, sct, nrt, nst) = (
                     wire_stage_gt(
-                        state.params, state.tracker, grads, state.prev_grad,
+                        self._f32(state.params), self._f32(state.tracker),
+                        grads, self._f32(state.prev_grad),
                         c["recon"], c["residual"], c["recon_t"],
                         c["residual_t"], alpha32, **kw, **dpkw,
                     )
@@ -1657,15 +1693,17 @@ class FusedEngine(_FusedBase):
                 mix_t = stale_recon(
                     c["recon_t"], c["wire_q_t"], c["wire_scales_t"]
                 )
-                mixed_x = w_off_r @ mix_x + w_self_r[:, None] * h
-                mixed_t = w_off_r @ mix_t + w_self_r[:, None] * t_half
+                mixed_x = self._st(w_off_r @ mix_x + w_self_r[:, None] * h)
+                mixed_t = self._st(
+                    w_off_r @ mix_t + w_self_r[:, None] * t_half
+                )
                 nwq, nwsc = push(c["wire_q"], c["wire_scales"], qx, scx)
                 nwqt, nwsct = push(
                     c["wire_q_t"], c["wire_scales_t"], qt, sct
                 )
                 new_state = FLState(
                     step=step, params=mixed_x, tracker=mixed_t,
-                    prev_grad=grads,
+                    prev_grad=self._st(grads),
                     comm={"recon": nrx, "residual": nsx,
                           "recon_t": nrt, "residual_t": nst,
                           "wire_q": nwq, "wire_scales": nwsc,
@@ -1708,8 +1746,8 @@ class FusedEngine(_FusedBase):
                   topology_program=None, node_program=None, privacy=None,
                   **_ignored):
         _reject_wire_dtype(wire_dtype)
-        _reject_storage_dtype(storage_dtype, cls.name)
-        flat, layout = pack(stacked_params, pad_to=scale_chunk)
+        flat, layout = pack(stacked_params, pad_to=scale_chunk,
+                            buffer_dtype=storage_dtype or jnp.float32)
         return cls(w, layout, scale_chunk=scale_chunk, topk=topk, impl=impl,
                    error_feedback=error_feedback,
                    difference_coding=difference_coding,
@@ -1730,12 +1768,12 @@ class FusedEngine(_FusedBase):
         to ``axes_subset`` for hierarchical gossip). ``impl`` defaults to
         the jnp oracle, which GSPMD partitions in lowering-only dry runs."""
         _reject_wire_dtype(wire_dtype)
-        _reject_storage_dtype(storage_dtype, cls.name)
         w = mesh_gossip_dense_equivalent(
             {a: mesh.shape[a] for a in node_axes}, self_weight=self_weight,
             axes_subset=axes_subset,
         )
-        layout = pack_layout(stacked_sds, pad_to=scale_chunk)
+        layout = pack_layout(stacked_sds, pad_to=scale_chunk,
+                             storage_dtype=storage_dtype or jnp.float32)
         return cls(w, layout, scale_chunk=scale_chunk, topk=topk, impl=impl,
                    error_feedback=error_feedback,
                    difference_coding=difference_coding,
@@ -1784,12 +1822,46 @@ class ShardedFusedEngine(_FusedBase):
 
     name = "sharded_fused"
     needs_mesh = True
+    supports_wire_k = True
 
     def __init__(self, mesh: Mesh, node_axes: Sequence[str],
                  layout: FlatLayout, *, w: Optional[np.ndarray] = None,
                  self_weight: Optional[float] = None, axes_subset=None,
-                 compact: Optional[bool] = None, **kw):
+                 compact: Optional[bool] = None,
+                 model_axis: Optional[str] = None, **kw):
+        # Two-axis (gossip_node x model_shard) rounds: with model_axis
+        # set, each node's flat buffer row is column-tiled across that
+        # mesh axis -- every shard_map body runs per (node, shard) tile,
+        # the wire stage is one Pallas call per tile, and the gossip
+        # collectives stay on the NODE axes only (the model axis never
+        # appears in a ppermute/all_gather), so the per-shard operand
+        # bytes are exactly flat_wire_bytes / shards.
+        if model_axis is not None:
+            if model_axis not in mesh.axis_names:
+                raise ValueError(
+                    f"model_axis {model_axis!r} not in mesh axes "
+                    f"{tuple(mesh.axis_names)}"
+                )
+            if model_axis in tuple(node_axes):
+                raise ValueError(
+                    f"model_axis {model_axis!r} is also a gossip node "
+                    "axis; the two-axis round shards parameter columns "
+                    "over a DIFFERENT axis than the one enumerating nodes"
+                )
+        self.model_axis = model_axis
+        self.model_shards = (
+            int(mesh.shape[model_axis]) if model_axis is not None else 1
+        )
+        if layout.shards != self.model_shards:
+            layout = layout.with_shards(self.model_shards)
         super().__init__(layout, **kw)
+        if self.layout.shard_width % self.scale_chunk:
+            raise ValueError(
+                f"per-shard width {self.layout.shard_width} not a multiple "
+                f"of scale_chunk {self.scale_chunk}; pack with "
+                f"pad_to={self.scale_chunk} and shards={self.model_shards} "
+                "so every shard tile holds whole quantization chunks"
+            )
         # The compact wire is only the wire when it is actually SMALLER
         # than dense int8 (k values + k positions + scale <= chunk +
         # scale). `compact=None` auto-enables it exactly in that regime,
@@ -1889,6 +1961,25 @@ class ShardedFusedEngine(_FusedBase):
                 "every node, so pairwise pads cannot conceal it -- drop "
                 "w= (use the mesh torus W) or drop the secure_agg token"
             )
+        if getattr(self.node_program, "heterogeneous_wire_k", False):
+            if self.topk is None:
+                raise ValueError(
+                    f"node program {self.node_program.spec()!r} modulates "
+                    "per-node wire k; build the engine with topk= so there "
+                    "is a k to modulate"
+                )
+            if not self.error_feedback:
+                raise ValueError(
+                    "per-node wire k rides the EF residual (entries a slow "
+                    "uplink truncates re-ship later); build with "
+                    "error_feedback=True"
+                )
+            if self._dp:
+                raise ValueError(
+                    "per-node wire k truncates the noised payload AFTER "
+                    "clipping, which breaks the DP calibration; drop the "
+                    "dp token or the wire-k program"
+                )
 
     def _compact_is_economic(self) -> bool:
         """True when the compact (values + cheapest index encoding +
@@ -2051,26 +2142,84 @@ class ShardedFusedEngine(_FusedBase):
             wires * _degrees(self.dense_equivalent()).sum() * self._edge_bytes()
         )
 
+    def _edge_bytes_per_shard(self) -> int:
+        """One neighbor payload's cost per (node, shard) tile -- the
+        1/shards column slice of :meth:`_edge_bytes`, priced by the same
+        boundary (``packing.flat_wire_bytes_per_shard``)."""
+        return flat_wire_bytes_per_shard(
+            self.layout, 1, self.scale_chunk,
+            self.topk if self.compact_wire else None,
+        )
+
+    def wire_bytes_per_shard(self, cfg: FLConfig) -> float:
+        """Collective operand bytes per round per model shard: on the
+        two-axis mesh every ppermute/all_gather moves one (node, shard)
+        column tile, so this is exactly ``wire_bytes / model_shards``
+        (jaxpr-asserted in tests/test_two_axis.py)."""
+        wires = 2 if cfg.algorithm == "dsgt" else 1
+        return float(
+            wires * _degrees(self.dense_equivalent()).sum()
+            * self._edge_bytes_per_shard()
+        )
+
     def _dq_full(self, wire: Tuple[jnp.ndarray, ...]) -> jnp.ndarray:
-        """Dense dequant of one wire's payload buffers (any row count:
-        per-shard rows inside shard_map, or the full (n, .) buffers at
-        restore time)."""
+        """Dense dequant of one wire's payload buffers, at any row AND
+        column count: per-(node, shard) tiles inside shard_map, or the
+        full (n, .) buffers at restore time -- the dense width is always
+        recovered from the scales buffer (chunks per row never straddle
+        a shard boundary)."""
         if self.compact_wire:
+            t = wire[-1].shape[-1] * self.scale_chunk
             if self.wire_encoding == "bitmap":
                 from repro.kernels.gossip.ref import scatter_bitmap_dq
 
                 vals, bits, scales = wire
                 return scatter_bitmap_dq(
-                    vals, bits, scales, self.scale_chunk, self.layout.total
+                    vals, bits, scales, self.scale_chunk, t
                 )
             from repro.kernels.gossip.ref import scatter_compact_dq
 
             q, pos, scales = wire
             return scatter_compact_dq(
-                q, pos, scales, self.scale_chunk, self.layout.total
+                q, pos, scales, self.scale_chunk, t
             )
         q, scales = wire
         return _dequant(q, scales, self.scale_chunk)
+
+    # -- engine-owned partition specs --------------------------------------
+
+    def params_spec(self) -> P:
+        """The flat (n, total) buffer's partition spec on this mesh:
+        rows over the gossip node axes, columns over the model axis
+        (replicated when the engine was built without one)."""
+        return P(self.node_axes, self.model_axis)
+
+    def comm_state_specs(self, cfg: FLConfig) -> Dict[str, P]:
+        """Partition specs for every comm buffer, matching
+        :meth:`comm_state_sds` key for key: node-major buffers shard
+        rows over the node axes and their LAST (width) dim over the
+        model axis whenever the width tiles evenly (wire and recon
+        buffers do; per-node gates and counters replicate their trailing
+        dims). Consumers (``launch/dryrun.py``, the train drivers) take
+        these instead of re-deriving placement by rank."""
+        sds = self.comm_state_sds(cfg) or {}
+        out: Dict[str, P] = {}
+        s = self.model_shards
+        for key, v in sds.items():
+            shape = v.shape
+            if len(shape) >= 2 and shape[0] == cfg.n_nodes:
+                last = (
+                    self.model_axis
+                    if self.model_axis is not None
+                    and shape[-1] % s == 0 and shape[-1] >= s
+                    else None
+                )
+                out[key] = P(
+                    self.node_axes, *((None,) * (len(shape) - 2)), last
+                )
+            else:
+                out[key] = P()
+        return out
 
     def restore_comm(
         self, comm: Dict[str, jnp.ndarray]
@@ -2194,7 +2343,9 @@ class ShardedFusedEngine(_FusedBase):
         ``priv``: the traced ``(priv_key, round)`` pair when secure_agg
         masks the transport (see :meth:`_transport`)."""
         rows = wire[0].shape[0]
-        t = self.layout.total
+        # local dense width: total/shards inside a two-axis shard_map
+        # body, the full total on a node-only mesh or at restore time
+        t = wire[-1].shape[-1] * self.scale_chunk
         if self.dirs is not None:
             acc = jnp.zeros((rows, t), jnp.float32)
             for d, (_axis, _shift, weight) in enumerate(self.dirs):
@@ -2299,38 +2450,111 @@ class ShardedFusedEngine(_FusedBase):
                 def encode(q, pos, sc):
                     return q, pos, sc
 
-            def produce(x, g, recon, res, alpha, noise=None):
+            def produce(x, g, recon, res, alpha, noise=None, kvec=None):
                 h, q, pos, sc, nrecon, nres = wire_stage_compact(
                     x, g, recon, res, alpha, **kw, **dpkw(noise)
                 )
+                if kvec is not None:
+                    q, ddq = self._hetero_truncate(q, sc, kvec, pos=pos)
+                    nrecon, nres = nrecon - ddq, nres + ddq
                 return h, encode(q, pos, sc), nrecon, nres
 
             def produce_gt(x, t, g, gp, rx, sx, rt, st, alpha,
-                           noise=None, noise_t=None):
+                           noise=None, noise_t=None, kvec=None):
                 (h, th, qx, px, scx, nrx, nsx,
                  qt, pt, sct, nrt, nst) = wire_stage_gt_compact(
                     x, t, g, gp, rx, sx, rt, st, alpha, **kw,
                     **dpkw(noise, noise_t)
                 )
+                if kvec is not None:
+                    qx, ddx = self._hetero_truncate(qx, scx, kvec, pos=px)
+                    nrx, nsx = nrx - ddx, nsx + ddx
+                    qt, ddt = self._hetero_truncate(qt, sct, kvec, pos=pt)
+                    nrt, nst = nrt - ddt, nst + ddt
                 return (h, th, encode(qx, px, scx), nrx, nsx,
                         encode(qt, pt, sct), nrt, nst)
         else:
-            def produce(x, g, recon, res, alpha, noise=None):
+            def produce(x, g, recon, res, alpha, noise=None, kvec=None):
                 h, q, sc, nrecon, nres = wire_stage(
                     x, g, recon, res, alpha, **kw, **dpkw(noise)
                 )
+                if kvec is not None:
+                    q, ddq = self._hetero_truncate(q, sc, kvec)
+                    nrecon, nres = nrecon - ddq, nres + ddq
                 return h, (q, sc), nrecon, nres
 
             def produce_gt(x, t, g, gp, rx, sx, rt, st, alpha,
-                           noise=None, noise_t=None):
+                           noise=None, noise_t=None, kvec=None):
                 (h, th, qx, scx, nrx, nsx,
                  qt, sct, nrt, nst) = wire_stage_gt(
                     x, t, g, gp, rx, sx, rt, st, alpha, **kw,
                     **dpkw(noise, noise_t)
                 )
+                if kvec is not None:
+                    qx, ddx = self._hetero_truncate(qx, scx, kvec)
+                    nrx, nsx = nrx - ddx, nsx + ddx
+                    qt, ddt = self._hetero_truncate(qt, sct, kvec)
+                    nrt, nst = nrt - ddt, nst + ddt
                 return h, th, (qx, scx), nrx, nsx, (qt, sct), nrt, nst
 
         return produce, produce_gt
+
+    # -- heterogeneous wire k ----------------------------------------------
+
+    def _hetero_truncate(self, q, scales, kvec, pos=None):
+        """Zero all but each node's k_i largest-|q| wire entries per
+        chunk (ties broken by position -- deterministic), returning the
+        truncated values and the dense dequant of what was DROPPED so
+        the caller can move it from the shipped reconstruction back into
+        the EF residual. Runs on the kernel's (values, positions) output
+        BEFORE any bitmap re-encode, inside the shard_map body: k_i is a
+        traced operand, every buffer shape stays static (jit cache 1)."""
+        width = self.topk if pos is not None else self.scale_chunk
+        rows = q.shape[0]
+        qc = q.reshape(rows, -1, width)
+        mag = jnp.abs(qc.astype(jnp.int32))
+        rank = jnp.argsort(jnp.argsort(-mag, axis=-1), axis=-1)
+        keep = rank < kvec.reshape(rows, 1, 1)
+        kept = jnp.where(keep, qc, jnp.int8(0)).reshape(q.shape)
+        dropped = jnp.where(keep, jnp.int8(0), qc).reshape(q.shape)
+        if pos is not None:
+            from repro.kernels.gossip.ref import scatter_compact_dq
+
+            ddq = scatter_compact_dq(
+                dropped, pos, scales, self.scale_chunk,
+                scales.shape[-1] * self.scale_chunk,
+            )
+        else:
+            ddq = _dequant(dropped, scales, self.scale_chunk)
+        return kept, ddq
+
+    def _wire_k_vec(self, comm: Dict[str, jnp.ndarray]) -> jnp.ndarray:
+        """This round's per-node wire k: the node program's fraction
+        gate clipped to [1, topk] integers -- a traced (n, 1) operand of
+        the one compiled round (nodes speeding up or slowing down never
+        recompile)."""
+        frac = self.node_program.wire_k_gate(
+            comm["topo_round"], comm["node_key"]
+        )
+        k = jnp.clip(jnp.round(frac * jnp.float32(self.topk)), 1, self.topk)
+        return k.astype(jnp.int32).reshape(self.n_nodes, 1)
+
+    def _wire_k_bytes(self, kvec: jnp.ndarray, wires: int) -> jnp.ndarray:
+        """Traced per-node wire-byte accounting under heterogeneous k:
+        ``flat_wire_bytes``'s per-chunk boundary with the traced k_i in
+        place of the static topk -- what each node's egress WOULD cost
+        on a k_i-sized wire (the physical buffers stay topk-wide; jit
+        shapes are static). Summed over nodes x degree x wires."""
+        chunk = self.scale_chunk
+        n_chunks = self.layout.total // chunk
+        k = kvec.reshape(-1).astype(jnp.float32)
+        idx = k * jnp.dtype(compact_pos_dtype(chunk)).itemsize
+        bb = bitmap_bytes_per_chunk(chunk)
+        if bb is not None:
+            idx = jnp.minimum(idx, jnp.float32(bb))
+        per_chunk = jnp.minimum(k + idx + 4.0, jnp.float32(chunk + 4))
+        deg = jnp.asarray(_degrees(self.dense_equivalent()), jnp.float32)
+        return jnp.float32(wires) * jnp.sum(deg * n_chunks * per_chunk)
 
     def _self_weight(self, w_diag):
         if self.dirs is not None:
@@ -2400,8 +2624,13 @@ class ShardedFusedEngine(_FusedBase):
             )
         produce, produce_gt = self._make_produce()
         egress = self.wire_bytes(cfg)
-        spec = P(self.node_axes, None)
+        # buffers whose width is (a fixed fraction of) layout.total tile
+        # over the model axis; per-node gates/counters do not
+        spec = P(self.node_axes, self.model_axis)
+        nspec = P(self.node_axes, None)
         n_dirs = len(self.dirs)
+        wk = bool(getattr(self.node_program, "heterogeneous_wire_k", False))
+        n_wk = 1 if wk else 0
         nbr_keys = self._nbr_key_names("")
         nbr_keys_t = self._nbr_key_names("_t")
         nnbr = len(nbr_keys)
@@ -2434,9 +2663,13 @@ class ShardedFusedEngine(_FusedBase):
         def body(x, g, recon, res, *rest):
             nbrs = rest[:nnbr]
             adds = rest[nnbr:nnbr + n_adds]
-            dgate, ddiag, alpha = rest[nnbr + n_adds:nnbr + n_adds + 3]
-            tail, priv = split_priv(rest[nnbr + n_adds + 3:])
-            h, wire, nrecon, nres = produce(x, g, recon, res, alpha, *tail)
+            k0 = nnbr + n_adds
+            dgate, ddiag = rest[k0:k0 + 2]
+            kvec = rest[k0 + 2] if wk else None
+            alpha = rest[k0 + 2 + n_wk]
+            tail, priv = split_priv(rest[k0 + 3 + n_wk:])
+            h, wire, nrecon, nres = produce(x, g, recon, res, alpha, *tail,
+                                            kvec=kvec)
             mix, new_nbrs = mix_one(wire, nbrs, adds, dgate, priv,
                                     PAD_STREAM)
             out = (ddiag * h + mix, nrecon, nres) + new_nbrs
@@ -2448,10 +2681,12 @@ class ShardedFusedEngine(_FusedBase):
             adds_x = rest[2 * nnbr:2 * nnbr + n_adds]
             adds_t = rest[2 * nnbr + n_adds:2 * nnbr + 2 * n_adds]
             k = 2 * nnbr + 2 * n_adds
-            dgate, ddiag, alpha = rest[k:k + 3]
-            tail, priv = split_priv(rest[k + 3:])
+            dgate, ddiag = rest[k:k + 2]
+            kvec = rest[k + 2] if wk else None
+            alpha = rest[k + 2 + n_wk]
+            tail, priv = split_priv(rest[k + 3 + n_wk:])
             (h, t_half, wire_x, nrx, nsx, wire_t, nrt, nst) = produce_gt(
-                x, t, g, gp, rx, sx, rt, st, alpha, *tail
+                x, t, g, gp, rx, sx, rt, st, alpha, *tail, kvec=kvec
             )
             mix_x, new_x = mix_one(wire_x, nbrs_x, adds_x, dgate, priv,
                                    PAD_STREAM)
@@ -2463,14 +2698,16 @@ class ShardedFusedEngine(_FusedBase):
 
         sm_dsgd = _shard_map(
             body, mesh=self.mesh,
-            in_specs=(spec,) * (4 + nnbr + n_adds) + (spec, spec, P())
+            in_specs=(spec,) * (4 + nnbr + n_adds) + (nspec, nspec)
+            + (nspec,) * n_wk + (P(),)
             + priv_specs + (spec,) * n_noise,
             out_specs=(spec,) * (3 + nnbr + n_wire),
         )
         sm_dsgt = _shard_map(
             body_gt, mesh=self.mesh,
             in_specs=(spec,) * (8 + 2 * nnbr + 2 * n_adds)
-            + (spec, spec, P()) + priv_specs + (spec,) * (2 * n_noise),
+            + (nspec, nspec) + (nspec,) * n_wk + (P(),)
+            + priv_specs + (spec,) * (2 * n_noise),
             out_specs=(spec,) * (6 + 2 * nnbr + 2 * n_wire),
         )
 
@@ -2532,6 +2769,7 @@ class ShardedFusedEngine(_FusedBase):
             dgate, ddiag, topo_comm, gate_metrics = self._dir_gates(
                 state.comm
             )
+            kops = (self._wire_k_vec(state.comm),) if wk else ()
             adds = tuple(stale["dqs"]) if pipelined else ()
             priv = (
                 (state.comm["priv_key"], state.comm["topo_round"])
@@ -2543,10 +2781,10 @@ class ShardedFusedEngine(_FusedBase):
 
             if cfg.algorithm == "dsgd":
                 outs = sm_dsgd(
-                    state.params, grads, state.comm["recon"],
+                    self._f32(state.params), grads, state.comm["recon"],
                     state.comm["residual"],
                     *[state.comm[k] for k in nbr_keys],
-                    *adds, dgate, ddiag, alpha32, *priv, *noises,
+                    *adds, dgate, ddiag, *kops, alpha32, *priv, *noises,
                 )
                 mixed, nrecon, nres = outs[:3]
                 comm = {"recon": nrecon, "residual": nres, **topo_comm}
@@ -2555,19 +2793,23 @@ class ShardedFusedEngine(_FusedBase):
                 self._push_wire(
                     state.comm, comm, wire_keys, outs[3 + nnbr:]
                 )
-                new_state = state._replace(step=step, params=mixed, comm=comm)
+                new_state = state._replace(
+                    step=step, params=self._st(mixed), comm=comm
+                )
             else:
                 adds_t = tuple(stale["dqs_t"]) if pipelined else ()
                 if dp:
                     noises += (self._dp_noise_full(state.comm, cfg.n_nodes,
                                                    tracker=True),)
                 outs = sm_dsgt(
-                    state.params, state.tracker, grads, state.prev_grad,
+                    self._f32(state.params), self._f32(state.tracker),
+                    grads, self._f32(state.prev_grad),
                     state.comm["recon"], state.comm["residual"],
                     state.comm["recon_t"], state.comm["residual_t"],
                     *[state.comm[k] for k in nbr_keys],
                     *[state.comm[k] for k in nbr_keys_t],
-                    *adds, *adds_t, dgate, ddiag, alpha32, *priv, *noises,
+                    *adds, *adds_t, dgate, ddiag, *kops, alpha32,
+                    *priv, *noises,
                 )
                 (mx, mt, nrx, nsx, nrt, nst) = outs[:6]
                 comm = {"recon": nrx, "residual": nsx,
@@ -2580,14 +2822,18 @@ class ShardedFusedEngine(_FusedBase):
                     outs[6 + 2 * nnbr:],
                 )
                 new_state = FLState(
-                    step=step, params=mx, tracker=mt, prev_grad=grads,
-                    comm=comm,
+                    step=step, params=self._st(mx), tracker=self._st(mt),
+                    prev_grad=self._st(grads), comm=comm,
                 )
 
             metrics = self._metrics(
                 cfg, losses, grads, alpha, new_state, egress
             )
             metrics.update(gate_metrics)
+            if wk:
+                metrics["wire_bytes_effective"] = self._wire_k_bytes(
+                    kops[0], wires=2 if cfg.algorithm == "dsgt" else 1
+                )
             return new_state, metrics
 
         return ingest, comm_step
@@ -2607,8 +2853,11 @@ class ShardedFusedEngine(_FusedBase):
         this round's payload onto the ring."""
         produce, produce_gt = self._make_produce()
         egress = self.wire_bytes(cfg)
-        spec = P(self.node_axes, None)
-        spec3 = P(self.node_axes, None, None)
+        spec = P(self.node_axes, self.model_axis)
+        nspec = P(self.node_axes, None)
+        spec3 = P(self.node_axes, None, self.model_axis)
+        wk = bool(getattr(self.node_program, "heterogeneous_wire_k", False))
+        n_wk = 1 if wk else 0
         dc = self.difference_coding
         n = self.n_nodes
         nbr_keys = self._nbr_key_names("")
@@ -2641,10 +2890,12 @@ class ShardedFusedEngine(_FusedBase):
             nbrs = rest[:nnbr]
             stale_wire = rest[nnbr:nnbr + n_stale]
             k = nnbr + n_stale
-            w_row, ddiag, alpha = rest[k:k + 3]
-            noises = rest[k + 3:]
+            w_row, ddiag = rest[k:k + 2]
+            kvec = rest[k + 2] if wk else None
+            alpha = rest[k + 2 + n_wk]
+            noises = rest[k + 3 + n_wk:]
             h, wire, nrecon, nres = produce(x, g, recon, res, alpha,
-                                            *noises)
+                                            *noises, kvec=kvec)
             mix, new_nbr = mix_one(wire, stale_wire, nbrs[0] if dc else None,
                                    w_row)
             out = (ddiag * h + mix, nrecon, nres) + new_nbr
@@ -2656,10 +2907,12 @@ class ShardedFusedEngine(_FusedBase):
             stale_x = rest[2 * nnbr:2 * nnbr + n_stale]
             stale_t = rest[2 * nnbr + n_stale:2 * nnbr + 2 * n_stale]
             k = 2 * nnbr + 2 * n_stale
-            w_row, ddiag, alpha = rest[k:k + 3]
-            noises = rest[k + 3:]
+            w_row, ddiag = rest[k:k + 2]
+            kvec = rest[k + 2] if wk else None
+            alpha = rest[k + 2 + n_wk]
+            noises = rest[k + 3 + n_wk:]
             (h, t_half, wire_x, nrx, nsx, wire_t, nrt, nst) = produce_gt(
-                x, t, g, gp, rx, sx, rt, st, alpha, *noises
+                x, t, g, gp, rx, sx, rt, st, alpha, *noises, kvec=kvec
             )
             mix_x, new_x = mix_one(wire_x, stale_x,
                                    nbrs_x[0] if dc else None, w_row)
@@ -2672,13 +2925,15 @@ class ShardedFusedEngine(_FusedBase):
         sm_dsgd = _shard_map(
             body, mesh=self.mesh,
             in_specs=(spec,) * 4 + (spec3,) * nnbr + (spec,) * n_stale
-            + (spec, spec, P()) + (spec,) * n_noise,
+            + (nspec, nspec) + (nspec,) * n_wk + (P(),)
+            + (spec,) * n_noise,
             out_specs=(spec,) * 3 + (spec3,) * nnbr + (spec,) * n_wire,
         )
         sm_dsgt = _shard_map(
             body_gt, mesh=self.mesh,
             in_specs=(spec,) * 8 + (spec3,) * 2 * nnbr
-            + (spec,) * 2 * n_stale + (spec, spec, P())
+            + (spec,) * 2 * n_stale + (nspec, nspec)
+            + (nspec,) * n_wk + (P(),)
             + (spec,) * (2 * n_noise),
             out_specs=(spec,) * 6 + (spec3,) * 2 * nnbr
             + (spec,) * 2 * n_wire,
@@ -2699,6 +2954,7 @@ class ShardedFusedEngine(_FusedBase):
             )
             w_row = jnp.asarray(w_off_r, jnp.float32)
             ddiag = jnp.asarray(w_diag_r, jnp.float32).reshape(n, 1)
+            kops = (self._wire_k_vec(state.comm),) if wk else ()
             adds = (
                 self._ring_slot0(state.comm, wire_keys) if pipelined else ()
             )
@@ -2708,10 +2964,10 @@ class ShardedFusedEngine(_FusedBase):
 
             if cfg.algorithm == "dsgd":
                 outs = sm_dsgd(
-                    state.params, grads, state.comm["recon"],
+                    self._f32(state.params), grads, state.comm["recon"],
                     state.comm["residual"],
                     *[state.comm[k] for k in nbr_keys],
-                    *adds, w_row, ddiag, alpha32, *noises,
+                    *adds, w_row, ddiag, *kops, alpha32, *noises,
                 )
                 mixed, nrecon, nres = outs[:3]
                 comm = {"recon": nrecon, "residual": nres, **topo_comm}
@@ -2719,7 +2975,9 @@ class ShardedFusedEngine(_FusedBase):
                 self._push_wire(
                     state.comm, comm, wire_keys, outs[3 + nnbr:]
                 )
-                new_state = state._replace(step=step, params=mixed, comm=comm)
+                new_state = state._replace(
+                    step=step, params=self._st(mixed), comm=comm
+                )
             else:
                 adds_t = (
                     self._ring_slot0(state.comm, wire_keys_t)
@@ -2729,12 +2987,13 @@ class ShardedFusedEngine(_FusedBase):
                     noises += (self._dp_noise_full(state.comm, cfg.n_nodes,
                                                    tracker=True),)
                 outs = sm_dsgt(
-                    state.params, state.tracker, grads, state.prev_grad,
+                    self._f32(state.params), self._f32(state.tracker),
+                    grads, self._f32(state.prev_grad),
                     state.comm["recon"], state.comm["residual"],
                     state.comm["recon_t"], state.comm["residual_t"],
                     *[state.comm[k] for k in nbr_keys],
                     *[state.comm[k] for k in nbr_keys_t],
-                    *adds, *adds_t, w_row, ddiag, alpha32, *noises,
+                    *adds, *adds_t, w_row, ddiag, *kops, alpha32, *noises,
                 )
                 (mx, mt, nrx, nsx, nrt, nst) = outs[:6]
                 comm = {"recon": nrx, "residual": nsx,
@@ -2747,14 +3006,18 @@ class ShardedFusedEngine(_FusedBase):
                     outs[6 + 2 * nnbr:],
                 )
                 new_state = FLState(
-                    step=step, params=mx, tracker=mt, prev_grad=grads,
-                    comm=comm,
+                    step=step, params=self._st(mx), tracker=self._st(mt),
+                    prev_grad=self._st(grads), comm=comm,
                 )
 
             metrics = self._metrics(
                 cfg, losses, grads, alpha, new_state, egress
             )
             metrics.update(gate_metrics)
+            if wk:
+                metrics["wire_bytes_effective"] = self._wire_k_bytes(
+                    kops[0], wires=2 if cfg.algorithm == "dsgt" else 1
+                )
             return new_state, metrics
 
         return None, comm_step
@@ -2771,7 +3034,7 @@ class ShardedFusedEngine(_FusedBase):
         w_diag, w_off = self._round_constants(cfg)
         produce, produce_gt = self._make_produce()
         egress = self.wire_bytes(cfg)
-        spec = P(self.node_axes, None)
+        spec = P(self.node_axes, self.model_axis)
 
         # With difference coding, recon_j' = recon_j + dq_j, so the
         # neighbor-mix term accumulates: mix_recon' = mix_recon + S W dq.
@@ -2853,25 +3116,27 @@ class ShardedFusedEngine(_FusedBase):
 
             if cfg.algorithm == "dsgd":
                 mixed, nrecon, nres, new_mix = sm_dsgd(
-                    state.params, grads, state.comm["recon"],
+                    self._f32(state.params), grads, state.comm["recon"],
                     state.comm["residual"], state.comm["mix_recon"],
                     alpha32, w_diag, w_off, *priv_operands(state.comm, 1),
                 )
                 new_state = state._replace(
-                    step=step, params=mixed,
+                    step=step, params=self._st(mixed),
                     comm={"recon": nrecon, "residual": nres,
                           "mix_recon": new_mix, **priv_comm},
                 )
             else:
                 (mx, mt, nrx, nsx, nmrx, nrt, nst, nmrt) = sm_dsgt(
-                    state.params, state.tracker, grads, state.prev_grad,
+                    self._f32(state.params), self._f32(state.tracker),
+                    grads, self._f32(state.prev_grad),
                     state.comm["recon"], state.comm["residual"],
                     state.comm["mix_recon"], state.comm["recon_t"],
                     state.comm["residual_t"], state.comm["mix_recon_t"],
                     alpha32, w_diag, w_off, *priv_operands(state.comm, 2),
                 )
                 new_state = FLState(
-                    step=step, params=mx, tracker=mt, prev_grad=grads,
+                    step=step, params=self._st(mx), tracker=self._st(mt),
+                    prev_grad=self._st(grads),
                     comm={"recon": nrx, "residual": nsx, "mix_recon": nmrx,
                           "recon_t": nrt, "residual_t": nst,
                           "mix_recon_t": nmrt, **priv_comm},
@@ -2917,7 +3182,7 @@ class ShardedFusedEngine(_FusedBase):
         w_diag, w_off = self._round_constants(cfg)
         produce, produce_gt = self._make_produce()
         egress = self.wire_bytes(cfg)
-        spec = P(self.node_axes, None)
+        spec = P(self.node_axes, self.model_axis)
         rep = P(None, None)
         nw = 3 if self.compact_wire else 2
         dc = self.difference_coding
@@ -3019,7 +3284,7 @@ class ShardedFusedEngine(_FusedBase):
 
             if cfg.algorithm == "dsgd":
                 outs = sm_dsgd(
-                    state.params, grads, state.comm["recon"],
+                    self._f32(state.params), grads, state.comm["recon"],
                     state.comm["residual"], state.comm["mix_recon"],
                     stale["mix"], alpha32, w_diag, *noises,
                 )
@@ -3027,13 +3292,16 @@ class ShardedFusedEngine(_FusedBase):
                 comm = {"recon": nrecon, "residual": nres,
                         "mix_recon": new_mix, **priv_comm}
                 self._push_wire(state.comm, comm, wire_keys, outs[4:])
-                new_state = state._replace(step=step, params=mixed, comm=comm)
+                new_state = state._replace(
+                    step=step, params=self._st(mixed), comm=comm
+                )
             else:
                 if dp:
                     noises += (self._dp_noise_full(state.comm, cfg.n_nodes,
                                                    tracker=True),)
                 outs = sm_dsgt(
-                    state.params, state.tracker, grads, state.prev_grad,
+                    self._f32(state.params), self._f32(state.tracker),
+                    grads, self._f32(state.prev_grad),
                     state.comm["recon"], state.comm["residual"],
                     state.comm["mix_recon"], state.comm["recon_t"],
                     state.comm["residual_t"], state.comm["mix_recon_t"],
@@ -3046,8 +3314,8 @@ class ShardedFusedEngine(_FusedBase):
                 self._push_wire(state.comm, comm, wire_keys, outs[8:8 + nw])
                 self._push_wire(state.comm, comm, wire_keys_t, outs[8 + nw:])
                 new_state = FLState(
-                    step=step, params=mx, tracker=mt, prev_grad=grads,
-                    comm=comm,
+                    step=step, params=self._st(mx), tracker=self._st(mt),
+                    prev_grad=self._st(grads), comm=comm,
                 )
 
             return new_state, self._metrics(
@@ -3070,12 +3338,17 @@ class ShardedFusedEngine(_FusedBase):
                   error_feedback: bool = True, difference_coding: bool = True,
                   self_weight=None, compact=None, round_schedule=None,
                   storage_dtype=None, topology_program=None,
-                  node_program=None, privacy=None, **_ignored):
+                  node_program=None, privacy=None, model_axis=None,
+                  **_ignored):
         _reject_wire_dtype(wire_dtype)
-        _reject_storage_dtype(storage_dtype, cls.name)
-        layout = pack_layout(stacked_sds, pad_to=scale_chunk)
+        shards = int(mesh.shape[model_axis]) if model_axis is not None else 1
+        layout = pack_layout(
+            stacked_sds, pad_to=scale_chunk,
+            storage_dtype=storage_dtype or jnp.float32, shards=shards,
+        )
         return cls(mesh, node_axes, layout, w=w, axes_subset=axes_subset,
-                   self_weight=self_weight, scale_chunk=scale_chunk,
+                   self_weight=self_weight, model_axis=model_axis,
+                   scale_chunk=scale_chunk,
                    topk=topk, impl=impl, error_feedback=error_feedback,
                    difference_coding=difference_coding, compact=compact,
                    round_schedule=round_schedule,

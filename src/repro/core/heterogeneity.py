@@ -120,6 +120,10 @@ class NodeProgram(abc.ABC):
     #: False when every node always runs all q-1 local steps -- lets the
     #: round builder skip the masked scan entirely (payload-only faults)
     heterogeneous_compute: ClassVar[bool] = True
+    #: True when :meth:`wire_k_gate` actually modulates per-node top-k
+    #: (slow uplink -> sparser wire); engines without a per-node k knob
+    #: refuse such programs at build time (sharded_fused supports it)
+    heterogeneous_wire_k: ClassVar[bool] = False
 
     def __init__(self, seed: int = 0):
         self.seed = int(seed)
@@ -175,6 +179,16 @@ class NodeProgram(abc.ABC):
     ) -> jnp.ndarray:
         """Traced ``(n,)`` fp32 {0,1}: 1 where the node's payload lands
         this round. All-ones by default."""
+        self._require_bound()
+        return jnp.ones((self._n,), jnp.float32)
+
+    def wire_k_gate(
+        self, r: jnp.ndarray, base_key: jnp.ndarray
+    ) -> jnp.ndarray:
+        """Traced ``(n,)`` fp32 fraction of the engine's base top-k each
+        node ships this round (engines clip ``round(frac * topk)`` to
+        ``[1, topk]``). All-ones by default; only read when
+        ``heterogeneous_wire_k`` is True."""
         self._require_bound()
         return jnp.ones((self._n,), jnp.float32)
 
@@ -396,6 +410,55 @@ class SlowNodesProgram(NodeProgram):
 
     def params(self) -> Dict[str, Any]:
         return {"frac": self.frac, "rate": self.rate, "seed": self.seed}
+
+
+@register_node_program
+class SlowUplinkProgram(NodeProgram):
+    """Persistent COMMUNICATION heterogeneity: a fixed random subset of
+    ``ceil(frac * n)`` nodes (drawn once from the seed at bind, like
+    :class:`SlowNodesProgram`) sits behind a slow uplink and ships only
+    ``round(k_scale * topk)`` wire entries per chunk every round --
+    compute and payload arrival are unaffected, only the wire SPARSITY
+    drops. Engines with a per-node k knob (``sharded_fused``) truncate
+    the kernel's top-k payload to the program's traced k_i and roll the
+    dropped entries back into the EF residual, so a slow node's updates
+    arrive late-but-intact rather than lost; the per-node wire-byte
+    accounting rides the round metrics (``wire_bytes_effective``)."""
+
+    name = "slow_uplink"
+    heterogeneous_compute = False
+    heterogeneous_wire_k = True
+
+    def __init__(self, frac: float = 0.25, k_scale: float = 0.25,
+                 seed: int = 0):
+        super().__init__(seed=seed)
+        self.frac = float(frac)
+        self.k_scale = float(k_scale)
+        if not (0.0 <= self.frac <= 1.0):
+            raise ValueError(f"slow fraction frac={frac} not in [0, 1]")
+        if not (0.0 < self.k_scale <= 1.0):
+            raise ValueError(
+                f"uplink k scale k_scale={k_scale} not in (0, 1]"
+            )
+        self._slow_mask: np.ndarray | None = None
+
+    def _bind_aux(self) -> None:
+        rng = np.random.default_rng(self.seed)
+        k = int(math.ceil(self.frac * self._n))
+        mask = np.zeros((self._n,), np.float32)
+        mask[rng.permutation(self._n)[:k]] = 1.0
+        self._slow_mask = mask
+
+    def wire_k_gate(self, r, base_key):
+        self._require_bound()
+        slow = jnp.asarray(self._slow_mask)
+        return jnp.where(
+            slow > 0.5, jnp.float32(self.k_scale), jnp.float32(1.0)
+        )
+
+    def params(self) -> Dict[str, Any]:
+        return {"frac": self.frac, "k_scale": self.k_scale,
+                "seed": self.seed}
 
 
 @register_node_program

@@ -39,6 +39,7 @@ __all__ = [
     "pack_like",
     "unpack",
     "flat_wire_bytes",
+    "flat_wire_bytes_per_shard",
     "compact_pos_dtype",
     "compact_index_bytes",
     "bitmap_bytes_per_chunk",
@@ -100,6 +101,23 @@ class FlatLayout:
     #: only in the mix accumulator). Not necessarily lossless for wider
     #: leaf dtypes.
     storage_dtype: str = "float32"
+    #: how many equal column tiles the buffer splits into on a two-axis
+    #: ``(gossip_node, model_shard)`` mesh: shard s owns columns
+    #: ``[s * shard_width, (s + 1) * shard_width)``. ``total`` is padded
+    #: so every shard is a whole number of kernel chunks (pack with
+    #: ``pad_to=scale_chunk, shards=S``); the default 1 is the
+    #: single-axis layout every pre-two-axis engine uses.
+    shards: int = 1
+
+    def __post_init__(self):
+        if self.shards < 1:
+            raise ValueError(f"shards={self.shards} must be >= 1")
+        if self.total % self.shards:
+            raise ValueError(
+                f"layout.total {self.total} not divisible by "
+                f"shards={self.shards}; pack with pad_to and shards "
+                "together so each shard is a whole tile"
+            )
 
     @property
     def used(self) -> int:
@@ -109,24 +127,40 @@ class FlatLayout:
     def n_leaves(self) -> int:
         return len(self.leaves)
 
+    @property
+    def shard_width(self) -> int:
+        """Columns each model shard owns (``total / shards``)."""
+        return self.total // self.shards
+
+    def with_shards(self, shards: int) -> "FlatLayout":
+        """The same layout re-tiled over ``shards`` model shards (the
+        padded ``total`` must already divide evenly -- pack with
+        ``shards=`` to get the right padding up front)."""
+        return dataclasses.replace(self, shards=int(shards))
+
 
 def _layout(treedef, leaf_list, n_nodes: int, pad_to: int,
-            storage_dtype) -> FlatLayout:
+            storage_dtype, shards: int = 1) -> FlatLayout:
     specs = []
     off = 0
     for leaf in leaf_list:
         shape = tuple(leaf.shape[1:])
         specs.append(LeafSpec(off, shape, jnp.dtype(leaf.dtype).name))
         off += specs[-1].size
-    total = off if pad_to <= 1 else ((off + pad_to - 1) // pad_to) * pad_to
+    # each model shard must itself tile into whole pad_to (scale_chunk)
+    # blocks, so the effective rounding unit is pad_to * shards
+    unit = max(pad_to, 1) * max(int(shards), 1)
+    total = off if unit <= 1 else ((off + unit - 1) // unit) * unit
     return FlatLayout(treedef, tuple(specs), n_nodes, total,
-                      jnp.dtype(storage_dtype).name)
+                      jnp.dtype(storage_dtype).name, max(int(shards), 1))
 
 
 def pack_layout(tree: PyTree, pad_to: int = 1,
-                storage_dtype=jnp.float32) -> FlatLayout:
+                storage_dtype=jnp.float32, shards: int = 1) -> FlatLayout:
     """Compute the layout without materializing the buffer (works on
-    ShapeDtypeStructs too -- used by lowering-only dry runs)."""
+    ShapeDtypeStructs too -- used by lowering-only dry runs).
+    ``shards > 1`` pads ``total`` to a multiple of ``pad_to * shards``
+    so every model shard is a whole number of kernel chunks."""
     leaf_list, treedef = jax.tree_util.tree_flatten(tree)
     if not leaf_list:
         raise ValueError("cannot pack an empty pytree")
@@ -136,11 +170,11 @@ def pack_layout(tree: PyTree, pad_to: int = 1,
             raise ValueError(
                 f"leaf shape {leaf.shape} is not node-stacked for n={n_nodes}"
             )
-    return _layout(treedef, leaf_list, n_nodes, pad_to, storage_dtype)
+    return _layout(treedef, leaf_list, n_nodes, pad_to, storage_dtype, shards)
 
 
 def pack(
-    tree: PyTree, pad_to: int = 1, buffer_dtype=jnp.float32
+    tree: PyTree, pad_to: int = 1, buffer_dtype=jnp.float32, shards: int = 1
 ) -> Tuple[jnp.ndarray, FlatLayout]:
     """Pack a node-stacked pytree into one ``(nodes, total)`` buffer.
 
@@ -155,7 +189,8 @@ def pack(
     Returns:
       (flat, layout) with ``flat.shape == (nodes, layout.total)``.
     """
-    layout = pack_layout(tree, pad_to, storage_dtype=buffer_dtype)
+    layout = pack_layout(tree, pad_to, storage_dtype=buffer_dtype,
+                         shards=shards)
     leaf_list = jax.tree_util.tree_leaves(tree)
     n = layout.n_nodes
     cols = [l.reshape(n, -1).astype(buffer_dtype) for l in leaf_list]
@@ -253,6 +288,34 @@ def flat_wire_bytes(
     n_scales = 1 if scale_chunk <= 0 else -(-layout.total // scale_chunk)
     if topk is None or scale_chunk <= 0 or topk >= scale_chunk:
         return degree * (layout.total + 4 * n_scales)
+    index_bytes = compact_index_bytes(scale_chunk, topk)
+    per_chunk = min(topk + index_bytes + 4, scale_chunk + 4)
+    return degree * (n_scales * per_chunk)
+
+
+def flat_wire_bytes_per_shard(
+    layout: FlatLayout, degree: int, scale_chunk: int = 0,
+    topk: int | None = None,
+) -> int:
+    """Per-(node, shard) egress bytes per round on a two-axis mesh: each
+    model shard ships its own chunk-aligned slice of the wire, so the
+    per-shard bytes are exactly ``flat_wire_bytes / shards`` -- the
+    identity the sharded engine's per-tile collective operands realize
+    (and the jaxpr assertions in tests/test_two_axis.py check). Requires
+    the shard-aligned padding :func:`pack_layout` with ``shards=``
+    guarantees (``total % (scale_chunk * shards) == 0``)."""
+    s = layout.shards
+    if s <= 1:
+        return flat_wire_bytes(layout, degree, scale_chunk, topk)
+    if scale_chunk > 0 and layout.shard_width % scale_chunk:
+        raise ValueError(
+            f"shard width {layout.shard_width} not a multiple of "
+            f"scale_chunk {scale_chunk}; pack with pad_to={scale_chunk}, "
+            f"shards={s}"
+        )
+    n_scales = 1 if scale_chunk <= 0 else layout.shard_width // scale_chunk
+    if topk is None or scale_chunk <= 0 or topk >= scale_chunk:
+        return degree * (layout.shard_width + 4 * n_scales)
     index_bytes = compact_index_bytes(scale_chunk, topk)
     per_chunk = min(topk + index_bytes + 4, scale_chunk + 4)
     return degree * (n_scales * per_chunk)

@@ -47,7 +47,13 @@ from repro.core.engine import engine_names, get_engine, schedule_names  # noqa: 
 from repro.core.fl import FLConfig, FLState, make_fl_round  # noqa: E402
 from repro.core.schedules import inv_sqrt  # noqa: E402
 from repro.launch.hlo_analysis import analyze_hlo  # noqa: E402
-from repro.launch.mesh import HW, make_production_mesh, n_fl_nodes, node_axes  # noqa: E402
+from repro.launch.mesh import (  # noqa: E402
+    HW,
+    make_production_mesh,
+    model_axis,
+    n_fl_nodes,
+    node_axes,
+)
 from repro.models import build_model  # noqa: E402
 from repro.models.sharding import model_param_specs, node_stack_specs  # noqa: E402
 
@@ -71,7 +77,8 @@ def build_train_lowering(arch: str, shape_name: str, mesh, q: int, algorithm: st
                          fl_schedule: str = "sequential",
                          fl_topology_program: Optional[str] = None,
                          fl_node_program: Optional[str] = None,
-                         fl_privacy: Optional[str] = None):
+                         fl_privacy: Optional[str] = None,
+                         fl_shard_model: bool = False):
     """Lower one FL round (Q local steps + gossip) for the given mesh.
 
     ``fl_engine`` names a registered GossipEngine (the registry in
@@ -141,13 +148,29 @@ def build_train_lowering(arch: str, shape_name: str, mesh, q: int, algorithm: st
     # ((k-1) * data_only + full) / k (EXPERIMENTS.md §Perf).
     hier = pod_gossip_every > 1 and "pod" in naxes
 
+    extra = {}
+    if fl_shard_model:
+        # the two-axis (gossip_node, model_shard) round: each node's flat
+        # buffer tiles over the model axis; gossip stays node-axis-only
+        if fl_engine != "sharded_fused":
+            raise ValueError(
+                "--fl-shard-model needs the sharded_fused engine (the "
+                f"two-axis wire is its contract); got fl_engine={fl_engine!r}"
+            )
+        maxis = model_axis(mesh)
+        if maxis is None:
+            raise ValueError(
+                "--fl-shard-model needs a mesh with a 'model' axis; "
+                f"this mesh has {mesh.axis_names!r}"
+            )
+        extra["model_axis"] = maxis
     engine = engine_cls.from_mesh(
         mesh, naxes, stacked_sds, specs=pspecs, wire_dtype=wire_dtype,
         axes_subset=("data",) if hier else None, scale_chunk=scale_chunk,
         topk=topk, round_schedule=fl_schedule,
         topology_program=fl_topology_program,
         node_program=fl_node_program,
-        privacy=fl_privacy,
+        privacy=fl_privacy, **extra,
     )
     round_fn = make_fl_round(
         bundle.loss_fn, None, inv_sqrt(0.02), fl_cfg, engine=engine
@@ -161,22 +184,29 @@ def build_train_lowering(arch: str, shape_name: str, mesh, q: int, algorithm: st
             (nodes, engine.layout.total),
             jnp.dtype(engine.layout.storage_dtype),
         )
-        buf_specs = P(tuple(naxes), None)
+        # the engine owns its partition spec: the two-axis sharded engine
+        # tiles the flat buffer's columns over the model axis
+        buf_specs = (engine.params_spec() if hasattr(engine, "params_spec")
+                     else P(tuple(naxes), None))
     # comm buffers from the engine's own contract (shapes/dtypes differ
     # per schedule and wire: in-flight int8 payloads, positions, scales).
     # Node-stacked (rank >= 2) buffers shard over the LEADING node axes
     # only -- depth-k rings are (n, k, width) and the dense-W neighbor
     # replica is (n, n, t), both sharded by receiver row; the topology
-    # program's scalar counters (topo_round, topo_key) replicate.
+    # program's scalar counters (topo_round, topo_key) replicate. Engines
+    # exposing comm_state_specs (the two-axis sharded engine) decide for
+    # themselves which trailing axes tile over the model axis.
     comm_sds = engine.comm_state_sds(fl_cfg)
-    comm_specs = (
-        None if comm_sds is None
-        else {
+    if comm_sds is None:
+        comm_specs = None
+    elif hasattr(engine, "comm_state_specs"):
+        comm_specs = engine.comm_state_specs(fl_cfg)
+    else:
+        comm_specs = {
             k: (P(tuple(naxes), *(None,) * (len(s.shape) - 1))
                 if len(s.shape) >= 2 else P())
             for k, s in comm_sds.items()
         }
-    )
     if algorithm == "dsgt":
         state_sds = FLState(int_sds, buf_sds, buf_sds, buf_sds, comm_sds)
         state_specs = FLState(P(), buf_specs, buf_specs, buf_specs, comm_specs)
@@ -199,7 +229,9 @@ def build_train_lowering(arch: str, shape_name: str, mesh, q: int, algorithm: st
     jitted = jax.jit(
         round_fn, in_shardings=(shardings(state_specs), shardings(batch_specs))
     )
-    return jitted, (state_sds, batch_sds), cfg
+    aux = {"engine": engine, "round_fn": round_fn, "fl_cfg": fl_cfg,
+           "mesh": mesh}
+    return jitted, (state_sds, batch_sds), cfg, aux
 
 
 def _serve_param_shardings(mesh, params_sds):
@@ -285,6 +317,83 @@ def build_decode_lowering(arch: str, shape_name: str, mesh):
     return jitted, (params_sds, tok_sds, cache_sds), cfg
 
 
+def _walk_jaxpr(jaxpr, name, found):
+    for eqn in jaxpr.eqns:
+        if eqn.primitive.name == name:
+            found.append(eqn)
+        for v in eqn.params.values():
+            subs = v if isinstance(v, (list, tuple)) else [v]
+            for sub in subs:
+                if hasattr(sub, "jaxpr"):
+                    _walk_jaxpr(sub.jaxpr, name, found)
+                elif hasattr(sub, "eqns"):
+                    _walk_jaxpr(sub, name, found)
+    return found
+
+
+def two_axis_record(engine, round_fn, state_sds, batch_sds, fl_cfg) -> Dict[str, Any]:
+    """Jaxpr proof obligations for the two-axis (node, shard) round:
+
+      * ONE pallas_call per (node, shard) wire-stage tile -- the shard_map
+        body traces once with per-device-tile (local) shapes, so one
+        pallas_call eqn IS one kernel launch per tile;
+      * every gossip collective (ppermute / all_gather) binds node axes
+        ONLY -- nothing moves over the model axis;
+      * the collective operands of one wire direction are EXACTLY the
+        per-shard compact encoding: flat_wire_bytes_per_shard bytes.
+
+    Returns the record fields; raises AssertionError when the lowering
+    breaks the contract (a bug, not an environment problem)."""
+    from repro.core.packing import flat_wire_bytes_per_shard
+
+    jx = jax.make_jaxpr(round_fn)(state_sds, batch_sds)
+    pallas = _walk_jaxpr(jx.jaxpr, "pallas_call", [])
+    assert len(pallas) == 1, (
+        f"two-axis round must stay ONE wire-stage kernel per (node, shard) "
+        f"tile; found {len(pallas)} pallas_call eqns"
+    )
+    node_axes_set = set(engine.node_axes)
+    coll = (_walk_jaxpr(jx.jaxpr, "ppermute", [])
+            + _walk_jaxpr(jx.jaxpr, "all_gather", []))
+    axes_seen = set()
+    for eqn in coll:
+        ax = eqn.params.get("axis_name")
+        for a in (ax if isinstance(ax, (list, tuple)) else (ax,)):
+            axes_seen.add(a)
+    assert axes_seen and axes_seen <= node_axes_set, (
+        f"gossip collectives must bind node axes only; saw {axes_seen!r} "
+        f"vs node axes {node_axes_set!r}"
+    )
+    # one wire direction = one group of per-buffer ppermutes (compact
+    # bitmap wire: values + bitmap + scales = 3; dense int8 wire: q +
+    # scales = 2). Inside shard_map the jaxpr's shapes are LOCAL
+    # per-device tiles: one node row x one model shard.
+    pp = _walk_jaxpr(jx.jaxpr, "ppermute", [])
+    n_buffers = 3 if engine.compact_wire else 2
+    per_shard = None
+    if pp:
+        one_dir = pp[:n_buffers]
+        moved = sum(int(np.prod(e.invars[0].aval.shape))
+                    * e.invars[0].aval.dtype.itemsize for e in one_dir)
+        per_shard = flat_wire_bytes_per_shard(
+            engine.layout, 1, engine.scale_chunk,
+            engine.topk if engine.compact_wire else None)
+        assert moved == per_shard, (
+            f"per-shard collective operand bytes {moved} != "
+            f"flat_wire_bytes_per_shard {per_shard}"
+        )
+    return {
+        "model_axis": engine.model_axis,
+        "model_shards": int(engine.model_shards),
+        "shard_width": int(engine.layout.shard_width),
+        "pallas_calls": len(pallas),
+        "collective_axes": sorted(axes_seen),
+        "wire_bytes_per_shard_one_edge": per_shard,
+        "wire_bytes_per_shard_per_round": float(
+            engine.wire_bytes_per_shard(fl_cfg)),
+    }
+
+
 def run_pair(
     arch: str,
     shape_name: str,
@@ -302,6 +411,7 @@ def run_pair(
     fl_topology_program: Optional[str] = None,
     fl_node_program: Optional[str] = None,
     fl_privacy: Optional[str] = None,
+    fl_shard_model: bool = False,
 ) -> Dict[str, Any]:
     """Lower + compile one pair; return the dry-run record."""
     mesh = make_production_mesh(multi_pod=(mesh_kind == "multi"))
@@ -314,14 +424,15 @@ def run_pair(
         }
     wd = jnp.dtype(wire_dtype) if wire_dtype else None
     t0 = time.time()
+    aux = None
     with mesh:
         if shape.kind == "train":
-            jitted, args, cfg = build_train_lowering(
+            jitted, args, cfg, aux = build_train_lowering(
                 arch, shape_name, mesh, q, algorithm, wd, pod_gossip_every, impl,
                 pad_heads, fl_engine, topk=topk, fl_schedule=fl_schedule,
                 fl_topology_program=fl_topology_program,
                 fl_node_program=fl_node_program,
-                fl_privacy=fl_privacy,
+                fl_privacy=fl_privacy, fl_shard_model=fl_shard_model,
             )
             lowered = jitted.lower(*args)
         elif shape.kind == "prefill":
@@ -387,6 +498,11 @@ def run_pair(
         "lower_s": round(t_lower, 2),
         "compile_s": round(t_compile, 2),
     }
+    if fl_shard_model and aux is not None:
+        with mesh:
+            record["two_axis"] = two_axis_record(
+                aux["engine"], aux["round_fn"], args[0], args[1],
+                aux["fl_cfg"])
     return record
 
 
@@ -437,6 +553,13 @@ def main() -> None:
                          "noise ride comm-state counters, so the lowering "
                          "keeps the plaintext wire's collective count and "
                          "operand bytes")
+    ap.add_argument("--fl-shard-model", action="store_true",
+                    help="two-axis (gossip_node, model_shard) round: each "
+                         "node's flat parameter buffer tiles over the mesh's "
+                         "'model' axis; the wire stage runs one Pallas pass "
+                         "per (node, shard) tile and the gossip collective "
+                         "stays node-axis-only (sharded_fused engine only; "
+                         "jaxpr-asserted, recorded under 'two_axis')")
     ap.add_argument("--pad-heads", type=int, default=0,
                     help="pad q heads to a multiple of this (16 = TP degree)")
     ap.add_argument("--out", default=None, help="directory for the JSON record")
@@ -450,6 +573,7 @@ def main() -> None:
         fl_topology_program=args.fl_topology_program,
         fl_node_program=args.fl_node_program,
         fl_privacy=args.fl_privacy,
+        fl_shard_model=args.fl_shard_model,
     )
     print(json.dumps(rec, indent=2))
     if args.out:
@@ -461,6 +585,8 @@ def main() -> None:
             suffix += f"_{args.fl_engine}"
         if args.topk:
             suffix += f"_topk{args.topk}"
+        if args.fl_shard_model:
+            suffix += "_shardmodel"
         if args.fl_schedule != "sequential":
             suffix += "_" + args.fl_schedule.replace(":", "-").replace("=", "")
         if args.fl_topology_program:

@@ -29,8 +29,11 @@ except ImportError:  # jax 0.4.x: meshes are Auto-typed implicitly
 
 __all__ = [
     "make_production_mesh",
+    "make_test_mesh",
     "node_axes",
+    "model_axis",
     "n_fl_nodes",
+    "n_model_shards",
     "HW",
 ]
 
@@ -63,8 +66,22 @@ def node_axes(mesh: Mesh) -> Tuple[str, ...]:
     return tuple(a for a in mesh.axis_names if a != "model")
 
 
+def model_axis(mesh: Mesh):
+    """The tensor/FSDP shard axis name, or None on node-only meshes.
+    Engines that accept ``model_axis=`` shard each node's flat parameter
+    buffer across it (the two-axis ``(gossip_node, model_shard)`` round:
+    gossip collectives stay on the node axes; the model axis only tiles
+    the columns)."""
+    return "model" if "model" in mesh.axis_names else None
+
+
 def n_fl_nodes(mesh: Mesh) -> int:
     n = 1
     for a in node_axes(mesh):
         n *= mesh.shape[a]
     return n
+
+
+def n_model_shards(mesh: Mesh) -> int:
+    """Size of the 'model' axis (1 when the mesh has none)."""
+    return int(mesh.shape["model"]) if "model" in mesh.axis_names else 1

@@ -93,6 +93,22 @@ def save_fl_state(path: str, state: FLState, extra: Optional[dict] = None,
         privacy = getattr(engine, "privacy", None)
         if privacy is not None:
             manifest["privacy"] = privacy.spec()
+        # and the mesh: a two-axis (gossip_node, model_shard) engine pads
+        # the flat layout per shard, so buffers written under one shard
+        # count are not byte-compatible with another -- record the full
+        # mesh geometry so restore can refuse with a migration hint
+        mesh = getattr(engine, "mesh", None)
+        if mesh is not None:
+            layout = getattr(engine, "layout", None)
+            manifest["mesh"] = {
+                "axis_names": [str(a) for a in mesh.axis_names],
+                "shape": [int(mesh.shape[a]) for a in mesh.axis_names],
+                "node_axes": [str(a) for a in
+                              (getattr(engine, "node_axes", ()) or ())],
+                "model_axis": getattr(engine, "model_axis", None),
+                "model_shards": int(getattr(engine, "model_shards", 1)),
+                "layout_shards": int(getattr(layout, "shards", 1)),
+            }
     if state.comm is not None:
         manifest["comm_keys"] = sorted(state.comm)
     if extra:
@@ -213,6 +229,24 @@ def load_fl_state(path: str, template: FLState,
                     "program -- rebuild the engine with "
                     f"node_program={saved_node!r}"
                 )
+    saved_mesh = manifest.get("mesh")
+    if saved_mesh is not None and engine is not None:
+        eng_shards = int(getattr(engine, "model_shards", 1))
+        ckpt_shards = int(saved_mesh.get("model_shards", 1))
+        if eng_shards != ckpt_shards:
+            raise ValueError(
+                f"checkpoint was written on a mesh with "
+                f"model_shards={ckpt_shards} (axes "
+                f"{saved_mesh.get('axis_names')!r}, shape "
+                f"{saved_mesh.get('shape')!r}, model_axis="
+                f"{saved_mesh.get('model_axis')!r}) but the restore engine "
+                f"runs model_shards={eng_shards}; the flat layout is padded "
+                "per shard, so the saved buffers are not byte-compatible -- "
+                "rebuild the engine on a mesh whose model axis has "
+                f"{ckpt_shards} devices, or migrate the checkpoint by "
+                "unpacking params with the saved layout and repacking with "
+                f"pack(..., shards={eng_shards}) before resuming"
+            )
     data = np.load(os.path.join(path, "state.npz"))
     saved_comm_keys = set(manifest.get("comm_keys") or ())
     if not saved_comm_keys:  # legacy manifest: derive from the npz contents

@@ -166,6 +166,45 @@ def test_node_churn_isolates_whole_nodes():
     assert seen_isolated
 
 
+def test_node_churn_correlated_recovery():
+    """switch_groups: down nodes behind one failed switch share a single
+    recovery coin, so a whole rack comes back in the same round -- and
+    the grouped chain still replays bit-exactly from a checkpointed
+    state via the stateless gate."""
+    w = mixing_matrix("hospital20", 20)
+    n, groups = 20, 4
+    prog = parse_program(
+        f"node_churn:p_down=0.5,mean_downtime=4,seed=3,"
+        f"switch_groups={groups}").bind(w)
+    assert prog.params()["switch_groups"] == groups
+    # the default omits the knob, so pre-existing checkpoint specs
+    # round-trip unchanged
+    assert "switch_groups" not in parse_program("node_churn").params()
+
+    key = jnp.asarray(prog.init_key())
+    group = np.arange(n) * groups // n
+    state = {k: jnp.asarray(v) for k, v in prog.init_state().items()}
+    correlated = False
+    for r in range(40):
+        up = np.asarray(state["topo_up"])
+        _, state = prog.gate_state(jnp.int32(r), key, state)
+        new_up = np.asarray(state["topo_up"])
+        recovered = (up < 0.5) & (new_up > 0.5)
+        stayed = (up < 0.5) & (new_up < 0.5)
+        for g in range(groups):
+            m = group == g
+            # one coin per rack: no rack splits into recovered + stayed
+            assert not (recovered[m].any() and stayed[m].any()), r
+            correlated = correlated or int(recovered[m].sum()) > 1
+        if r in (5, 23, 39):
+            # mid-outage replay: the stateless gate re-derives the same
+            # chain state from round 0 (the checkpoint-restore oracle)
+            np.testing.assert_array_equal(
+                np.asarray(prog.gate(jnp.int32(r + 1), key)),
+                np.outer(new_up, new_up))
+    assert correlated
+
+
 def test_round_robin_union_is_base_graph():
     w = mixing_matrix("hospital20", 20)
     g = 3

@@ -75,7 +75,8 @@ def _problem(n, q, seed=0):
 
 def test_node_program_registry_and_specs():
     assert node_program_names() == (
-        "homogeneous", "payload_drop", "slow_nodes", "stragglers",
+        "homogeneous", "payload_drop", "slow_nodes", "slow_uplink",
+        "stragglers",
     )
     assert resolve_node_program(None).is_static
     assert resolve_node_program("homogeneous").is_static

@@ -344,13 +344,45 @@ def test_flat_engine_bf16_storage_matches_fp32():
     np.testing.assert_allclose(a16, a32, atol=5e-2, rtol=5e-2)
 
 
-def test_fused_engines_reject_bf16_storage():
+def test_tree_engine_rejects_bf16_storage():
     w = mixing_matrix("ring", 4)
     _, params, _ = _problem(4, 1)
-    for name in ("fused", "tree"):
-        with pytest.raises(ValueError, match="storage_dtype"):
-            get_engine(name).simulated(w, params,
-                                       storage_dtype=jnp.bfloat16)
+    with pytest.raises(ValueError, match="storage_dtype"):
+        get_engine("tree").simulated(w, params, storage_dtype=jnp.bfloat16)
+
+
+def test_fused_engine_bf16_storage_matches_fp32():
+    """bf16 params/tracker storage on the FUSED engine: the wire stage
+    upcasts at the kernel boundary and the mixed output downcasts back,
+    so the EF recon/residual state and the int8 wire stay fp32 while
+    every (n, total) param buffer halves its HBM bytes. Drift vs the
+    fp32 build stays at bf16 rounding scale over a few rounds."""
+    n, q = 8, 2
+    w = mixing_matrix("ring", n)
+    loss, params, batches = _problem(n, q, seed=7)
+    sched = constant(0.05)
+    for algorithm in ("dsgd", "dsgt"):
+        cfg = FLConfig(algorithm=algorithm, q=q, n_nodes=n)
+        eng32, p32 = get_engine("fused").simulated(
+            w, params, scale_chunk=8, impl="jnp")
+        eng16, p16 = get_engine("fused").simulated(
+            w, params, scale_chunk=8, impl="jnp",
+            storage_dtype=jnp.bfloat16)
+        assert p16.dtype == jnp.bfloat16
+        assert eng16.layout.storage_dtype == "bfloat16"
+        rf32 = jax.jit(make_fl_round(loss, None, sched, cfg, engine=eng32))
+        rf16 = jax.jit(make_fl_round(loss, None, sched, cfg, engine=eng16))
+        st32 = init_fl_state(cfg, p32, engine=eng32)
+        st16 = init_fl_state(cfg, p16, engine=eng16)
+        for _ in range(3):
+            st32, _ = rf32(st32, batches)
+            st16, _ = rf16(st16, batches)
+        assert st16.params.dtype == jnp.bfloat16  # storage never widens
+        # EF state stays fp32 regardless of the storage dtype
+        assert st16.comm["recon"].dtype == jnp.float32
+        a32 = np.asarray(st32.params, np.float32)
+        a16 = np.asarray(st16.params.astype(jnp.float32))
+        np.testing.assert_allclose(a16, a32, atol=5e-2, rtol=5e-2)
 
 
 # ---------------------------------------------------------------------------

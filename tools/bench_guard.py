@@ -35,7 +35,7 @@ import json
 import sys
 
 SHAPE_KEYS = ("n_nodes", "total_params", "n_leaves", "scale_chunk", "topk",
-              "q", "degree")
+              "q", "degree", "model_shards")
 
 
 def _is_wire_field(key: str) -> bool:
