@@ -1,0 +1,337 @@
+"""Request-replay load generator for the consensus serving path.
+
+Replays a deterministic stream of decode requests through a
+``ServeEngine`` while a publisher thread keeps landing fresh consensus
+snapshots (the hot-swap path), and measures the serving-side metrics as
+first-class columns:
+
+* ``tokens_per_s``            -- generated-token throughput;
+* ``us_p50_request`` / ``us_p99_request`` -- request latency tail;
+* ``us_swap_pause_mean/max``  -- decode-loop pause per hot swap (the
+  atomic slot promotion, staged OFF the decode thread);
+* ``staleness_mean/max``      -- rounds the ACTIVE weights lag the
+  training frontier at each request completion.
+
+It also times the training->serving handoff itself:
+``snapshot_restore`` rows compare the mmap zero-copy snapshot load
+(``repro.training.snapshot.load_snapshot``) against the pytree
+checkpoint restore (``repro.training.checkpoint.load_fl_state``) on the
+SAME consensus payload -- ``speedup_snapshot_load`` is the guarded
+ratio, and the default (non-smoke) run adds the tinyllama-1.1b-sized
+buffer row the acceptance criterion pins (>= 5x).
+
+Guard semantics (tools/bench_guard.py): ``*_bytes`` columns are
+deterministic and gated; ``speedup_*`` ratios are gated with latency
+tolerance; absolute ``us_*``, throughput, and staleness columns are
+reported, never gated.
+
+  PYTHONPATH=src python benchmarks/serve_load.py --smoke --out experiments/serve_ehr.json
+  PYTHONPATH=src python benchmarks/serve_load.py --out experiments/serve_ehr.json
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import shutil
+import sys
+import tempfile
+import threading
+import time
+from typing import Callable, Dict, List, Optional
+
+import numpy as np
+
+sys.path.insert(0, os.path.join(
+    os.path.dirname(os.path.dirname(os.path.abspath(__file__))), "src"))
+
+import jax  # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+
+from repro.configs import get_config  # noqa: E402
+from repro.core.fl import FLState  # noqa: E402
+from repro.core.packing import pack  # noqa: E402
+from repro.models import build_model  # noqa: E402
+from repro.serving.engine import ServeEngine  # noqa: E402
+from repro.training.checkpoint import load_fl_state, save_fl_state  # noqa: E402
+from repro.training.snapshot import (  # noqa: E402
+    latest_round,
+    load_snapshot,
+    write_snapshot,
+)
+
+__all__ = ["make_requests", "replay", "restore_comparison"]
+
+
+def make_requests(n_requests: int, batch: int, prompt_len: int,
+                  vocab: int, seed: int = 0) -> List[np.ndarray]:
+    """Deterministic request stream: ``n_requests`` prompt batches of
+    shape (batch, P) with P jittered in [prompt_len//2, prompt_len]."""
+    rng = np.random.default_rng(seed)
+    reqs = []
+    for _ in range(n_requests):
+        p = int(rng.integers(max(1, prompt_len // 2), prompt_len + 1))
+        reqs.append(rng.integers(0, vocab, (batch, p)).astype(np.int32))
+    return reqs
+
+
+def replay(engine: ServeEngine, requests: List[np.ndarray],
+           new_tokens: int,
+           frontier_fn: Optional[Callable[[], int]] = None,
+           refresh_fn: Optional[Callable[[], None]] = None) -> Dict:
+    """Replay ``requests`` through ``engine.generate`` and aggregate the
+    serving metrics. ``frontier_fn`` reports the live training frontier
+    (for the staleness series); ``refresh_fn``, when given, runs between
+    requests (e.g. poll the snapshot dir and ``publish_snapshot``).
+
+    Shared by this benchmark (synthetic publisher) and
+    ``examples/serve_consensus.py`` (real decentralized training
+    publishing concurrently), so both report the SAME columns.
+    """
+    swap_base = len(engine.swap_pauses)
+    lat_s: List[float] = []
+    staleness: List[int] = []
+    gen_tokens = 0
+    t_start = time.perf_counter()
+    for prompts in requests:
+        if refresh_fn is not None:
+            refresh_fn()
+        t0 = time.perf_counter()
+        out = engine.generate(prompts, max_new_tokens=new_tokens,
+                              temperature=0.0)
+        lat_s.append(time.perf_counter() - t0)
+        gen_tokens += prompts.shape[0] * new_tokens
+        if frontier_fn is not None:
+            s = engine.staleness(frontier_fn())
+            if s is not None:
+                staleness.append(s)
+    wall = time.perf_counter() - t_start
+    pauses = engine.swap_pauses[swap_base:]
+    lat_us = np.asarray(lat_s) * 1e6
+    row = {
+        "n_requests": len(requests),
+        "new_tokens": int(new_tokens),
+        "gen_tokens": int(gen_tokens),
+        "tokens_per_s": float(gen_tokens / wall),
+        "us_mean_request": float(lat_us.mean()),
+        "us_p50_request": float(np.percentile(lat_us, 50)),
+        "us_p99_request": float(np.percentile(lat_us, 99)),
+        "n_swaps": len(pauses),
+        "us_swap_pause_mean": float(np.mean(pauses) * 1e6) if pauses else 0.0,
+        "us_swap_pause_max": float(np.max(pauses) * 1e6) if pauses else 0.0,
+    }
+    if staleness:
+        row["staleness_mean"] = float(np.mean(staleness))
+        row["staleness_max"] = int(np.max(staleness))
+    return row
+
+
+def _serve_replay_row(smoke: bool, seed: int = 0) -> Dict:
+    """Serve the tinyllama smoke consensus under load while a publisher
+    thread trains a synthetic frontier and lands snapshots mid-replay."""
+    arch = "tinyllama-1.1b"
+    cfg = get_config(arch, smoke=True)
+    bundle = build_model(cfg)
+    params = bundle.init_fn(jax.random.key(seed))
+    n_nodes = 4
+    stacked = jax.tree_util.tree_map(
+        lambda x: jnp.stack([x * (1.0 + 0.01 * i) for i in range(n_nodes)]),
+        params)
+    flat, layout = pack(stacked, pad_to=512)
+
+    batch = 2
+    n_requests = 6 if smoke else 24
+    prompt_len = 8
+    new_tokens = 8 if smoke else 16
+    publish_every = 2  # requests between published training rounds
+
+    snap_dir = tempfile.mkdtemp(prefix="serve_load_snap_")
+    write_snapshot(snap_dir, flat, layout, round_frontier=1)
+    tmpl = jax.tree_util.tree_map(
+        lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), params)
+    engine = ServeEngine.from_snapshot(
+        bundle, load_snapshot(snap_dir, template=tmpl),
+        max_seq=64, batch=batch)
+
+    frontier = {"round": 1}
+    stop = threading.Event()
+
+    def publisher():
+        # synthetic trainer: advance the frontier steadily, publish a
+        # perturbed consensus every few "rounds" through the REAL
+        # snapshot files (write -> LATEST -> mmap load happens on the
+        # serving side via refresh)
+        rnd = 1
+        while not stop.is_set():
+            time.sleep(0.05)
+            rnd += 1
+            frontier["round"] = rnd
+            if rnd % publish_every == 0:
+                write_snapshot(
+                    snap_dir,
+                    flat * (1.0 + 0.001 * rnd), layout, round_frontier=rnd)
+
+    def refresh():
+        newest = latest_round(snap_dir)
+        if newest is not None and newest != engine.snapshot_round:
+            engine.publish_snapshot(
+                load_snapshot(snap_dir, newest, template=tmpl))
+
+    requests = make_requests(n_requests, batch, prompt_len,
+                             cfg.vocab_size, seed=seed)
+    # warm the jit caches outside the timed window
+    engine.generate(requests[0], max_new_tokens=2, temperature=0.0)
+
+    th = threading.Thread(target=publisher, daemon=True)
+    th.start()
+    try:
+        row = replay(engine, requests, new_tokens,
+                     frontier_fn=lambda: frontier["round"],
+                     refresh_fn=refresh)
+    finally:
+        stop.set()
+        th.join(timeout=5)
+        shutil.rmtree(snap_dir, ignore_errors=True)
+    row.update({
+        "name": f"serve_replay__{arch}_smoke",
+        "total_params": int(cfg.param_count()),
+        "n_nodes": n_nodes,
+        "batch": batch,
+        "prompt_len": prompt_len,
+        "rounds_published": int(frontier["round"]),
+    })
+    return row
+
+
+def restore_comparison(name: str, total_params: int, n_leaves: int = 8,
+                       n_nodes: int = 1, seed: int = 0,
+                       repeats: int = 5) -> Dict:
+    """Time mmap snapshot load vs pytree checkpoint restore of the SAME
+    consensus payload (``total_params`` fp32 weights in ``n_leaves``
+    equal leaves), medians over ``repeats``.
+
+    The checkpoint side is the repo's real resume path
+    (``save_fl_state``/``load_fl_state``: compressed npz + per-leaf
+    astype + unflatten); the snapshot side is
+    ``load_snapshot`` (header parse + ``np.memmap`` + per-leaf views --
+    bytes fault in lazily). ``us_snapshot_load_touched`` additionally
+    forces a full read of the mapped blob, for reading honesty.
+    """
+    rng = np.random.default_rng(seed)
+    per = total_params // n_leaves
+    params = {
+        f"layer{i:02d}": np.stack([
+            rng.standard_normal(per, dtype=np.float32)
+            for _ in range(n_nodes)])
+        for i in range(n_leaves)
+    }
+    flat, layout = pack(params, pad_to=512)
+    flat = np.asarray(flat)
+
+    work = tempfile.mkdtemp(prefix="serve_load_restore_")
+    try:
+        snap_dir = os.path.join(work, "snap")
+        ckpt_dir = os.path.join(work, "ckpt")
+        write_snapshot(snap_dir, flat, layout, round_frontier=1)
+        consensus = jax.tree_util.tree_map(
+            lambda x: x.mean(axis=0, keepdims=True), params)
+        state = FLState(step=np.int32(0), params=consensus, tracker=None,
+                        prev_grad=None, comm=None)
+        save_fl_state(ckpt_dir, state)
+
+        t_snap, t_touch, t_ckpt = [], [], []
+        for _ in range(repeats):
+            t0 = time.perf_counter()
+            snap = load_snapshot(snap_dir)
+            t_snap.append(time.perf_counter() - t0)
+            t0 = time.perf_counter()
+            float(np.add.reduce(snap.flat, dtype=np.float64))  # fault all
+            t_touch.append(time.perf_counter() - t0)
+            t0 = time.perf_counter()
+            load_fl_state(ckpt_dir, state)
+            t_ckpt.append(time.perf_counter() - t0)
+        us_snap = float(np.median(t_snap) * 1e6)
+        us_touch = float(np.median(t_touch) * 1e6)
+        us_ckpt = float(np.median(t_ckpt) * 1e6)
+        snap_bytes = os.path.getsize(
+            os.path.join(snap_dir, snap.header["blob"]))
+        ckpt_bytes = os.path.getsize(os.path.join(ckpt_dir, "state.npz"))
+    finally:
+        shutil.rmtree(work, ignore_errors=True)
+    return {
+        "name": name,
+        "total_params": int(layout.total),
+        "n_leaves": n_leaves,
+        "n_nodes": n_nodes,
+        "snapshot_bytes": int(snap_bytes),
+        "checkpoint_bytes": int(ckpt_bytes),
+        "us_snapshot_load": us_snap,
+        "us_snapshot_load_touched": us_touch,
+        "us_checkpoint_restore": us_ckpt,
+        "speedup_snapshot_load": us_ckpt / us_snap,
+    }
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI sizes: smoke model replay + small restore "
+                         "row (skips the tinyllama-1.1b-sized buffer)")
+    ap.add_argument("--out", default="experiments/serve_ehr.json")
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+
+    rows: List[Dict] = []
+    print("serving replay under load (hot-swap publisher running)...")
+    rows.append(_serve_replay_row(smoke=args.smoke, seed=args.seed))
+    r = rows[-1]
+    print(f"  {r['name']}: {r['tokens_per_s']:.1f} tok/s, "
+          f"p50={r['us_p50_request']/1e3:.1f}ms "
+          f"p99={r['us_p99_request']/1e3:.1f}ms, "
+          f"{r['n_swaps']} swaps (pause mean "
+          f"{r['us_swap_pause_mean']:.1f}us), "
+          f"staleness mean={r.get('staleness_mean', 0):.1f} "
+          f"max={r.get('staleness_max', 0)}")
+
+    print("restore comparison (smoke-sized consensus buffer)...")
+    smoke_total = int(get_config("tinyllama-1.1b", smoke=True).param_count())
+    rows.append(restore_comparison("snapshot_restore__smoke",
+                                   smoke_total, seed=args.seed))
+    r = rows[-1]
+    print(f"  {r['name']}: mmap {r['us_snapshot_load']:.0f}us vs npz "
+          f"restore {r['us_checkpoint_restore']:.0f}us -> "
+          f"{r['speedup_snapshot_load']:.1f}x")
+
+    if not args.smoke:
+        full_total = int(get_config("tinyllama-1.1b",
+                                    smoke=False).param_count())
+        print(f"restore comparison (tinyllama-1.1b-sized buffer: "
+              f"{full_total/1e9:.2f}B params, "
+              f"{full_total*4/1e9:.1f} GB fp32)...")
+        rows.append(restore_comparison("snapshot_restore__tinyllama-1.1b",
+                                       full_total, seed=args.seed,
+                                       repeats=3))
+        r = rows[-1]
+        print(f"  {r['name']}: mmap {r['us_snapshot_load']:.0f}us vs npz "
+              f"restore {r['us_checkpoint_restore']/1e6:.1f}s -> "
+              f"{r['speedup_snapshot_load']:.0f}x")
+        if r["speedup_snapshot_load"] < 5.0:
+            print("  WARNING: below the 5x acceptance threshold")
+
+    record = {
+        "bench": "serve_consensus_load",
+        "device": jax.devices()[0].device_kind,
+        "backend": jax.default_backend(),
+        "smoke": bool(args.smoke),
+        "rows": rows,
+    }
+    os.makedirs(os.path.dirname(args.out) or ".", exist_ok=True)
+    with open(args.out, "w") as f:
+        json.dump(record, f, indent=2)
+    print(f"-> {args.out}")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

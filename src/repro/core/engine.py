@@ -2434,11 +2434,25 @@ class ShardedFusedEngine(_FusedBase):
             return out
 
         if self.compact_wire:
-            # The kernels emit explicit positions; the bitmap encoding is
-            # a cheap jnp re-encode INSIDE the shard_map body, before the
-            # collective -- so the pallas_call count is unchanged and the
-            # collective operands are the bitmap buffers.
-            if self.wire_encoding == "bitmap":
+            # Bitmap wire: on the Pallas path the re-encode (position
+            # argsort + bit-pack) is an IN-KERNEL epilogue -- the kernel
+            # emits (values, packed bitmap) directly, so nothing touches
+            # the explicit positions after the pallas_call. The jnp path
+            # (and heterogeneous wire-k, which truncates on explicit
+            # positions BEFORE encoding) keeps the post-kernel re-encode.
+            # Either way the collective operands are the bitmap buffers
+            # and the pallas_call count is unchanged.
+            wk = bool(getattr(self.node_program, "heterogeneous_wire_k",
+                              False))
+            kernel_bitmap = (self.wire_encoding == "bitmap"
+                             and self.impl == "pallas" and not wk)
+            if kernel_bitmap:
+                kw = dict(kw, bitmap=True)
+
+                def encode(q, pos, sc):
+                    # kernel already emitted (vals, bits)
+                    return q, pos, sc
+            elif self.wire_encoding == "bitmap":
                 from repro.kernels.gossip.ref import compact_to_bitmap
 
                 def encode(q, pos, sc):

@@ -53,7 +53,14 @@ Five kernels share that stage:
   scatter-accumulates them back to dense (``ref.scatter_compact_dq``)
   before the W contraction. The EF/recon updates still use the full
   dense dequant (computed in-tile -- dq never hits the wire), so masking
-  defers signal exactly as in the masked-dense path.
+  defers signal exactly as in the masked-dense path. With
+  ``bitmap=True`` the tile ALSO runs the bitmap re-encode epilogue
+  in-kernel (argsort the k survivors into ascending-position order +
+  bit-pack the presence bitmap, ``chunk/8`` uint8 per chunk) -- the
+  same math ``ref.compact_to_bitmap`` used to apply as jnp
+  post-processing outside the kernel, now fused into the same program
+  so the wire operands leave the kernel collective-ready (bit-identical
+  buffers, same single pallas_call).
 
 The quantize-mix kernels additionally take ``stale_mix`` (the PIPELINED
 round schedule): the W contraction runs against the INPUT ``recon`` --
@@ -164,6 +171,29 @@ def _quantize_ef_compact(x, recon, res, *, error_feedback, difference_coding,
     new_recon = base + dq
     new_res = payload - dq if error_feedback else res
     return q, pos, scale, new_recon, new_res
+
+
+def _bitmap_pack(q, pos, scale_chunk):
+    """In-tile bitmap re-encode of ONE compact (nodes, k) selection:
+    re-sort the k survivors into ascending-position order and bit-pack
+    the LSB-first presence bitmap (``scale_chunk // 8`` uint8 per chunk)
+    -- the same formula as ``ref.compact_to_bitmap`` applied per tile,
+    bit-identical, so the emitted buffers ARE the collective operands.
+    Positions within a chunk are distinct, so the argsort order is
+    unambiguous. Returns (vals (n, k) fp32 ints, bits (n, chunk//8)
+    uint8)."""
+    order = jnp.argsort(pos, axis=-1)
+    vals = jnp.take_along_axis(q, order, axis=-1)
+    n = pos.shape[0]
+    one_hot = jnp.zeros((n, scale_chunk), jnp.uint8)
+    r_i = jax.lax.broadcasted_iota(jnp.int32, pos.shape, 0)
+    one_hot = one_hot.at[r_i, pos].set(1)
+    weights = (jnp.uint8(1) << jnp.arange(8, dtype=jnp.uint8))
+    bits = jnp.sum(
+        one_hot.reshape(n, scale_chunk // 8, 8) * weights,
+        axis=-1, dtype=jnp.uint8,
+    )
+    return vals, bits
 
 
 def _quantize_mix(x, recon, res, woff, wself, *, error_feedback,
@@ -723,12 +753,14 @@ def _wire_stage_compact_kernel(
     difference_coding,
     topk,
     pos_dtype,
+    bitmap=False,
 ):
     # The compact-gather epilogue: the tile still computes the DENSE dq for
     # its own recon/EF updates, but what it emits for the wire is exactly
     # (k int8 values, k in-chunk positions, 1 fp32 scale) per chunk -- the
     # bytes flat_wire_bytes accounts are the bytes that cross the
-    # collective.
+    # collective. With ``bitmap`` the index side leaves as the packed
+    # presence bitmap instead (pos_ref is then the bits ref).
     h = x_ref[...] - alpha_ref[0, 0] * g_ref[...]
     q, pos, scale, nrecon, nres = _quantize_ef_compact(
         h,
@@ -739,8 +771,13 @@ def _wire_stage_compact_kernel(
         topk=topk,
     )
     h_ref[...] = h
-    q_ref[...] = q.astype(jnp.int8)
-    pos_ref[...] = pos.astype(pos_dtype)
+    if bitmap:
+        vals, bits = _bitmap_pack(q, pos, x_ref.shape[-1])
+        q_ref[...] = vals.astype(jnp.int8)
+        pos_ref[...] = bits
+    else:
+        q_ref[...] = q.astype(jnp.int8)
+        pos_ref[...] = pos.astype(pos_dtype)
     scale_ref[...] = scale
     nrecon_ref[...] = nrecon
     nres_ref[...] = nres
@@ -773,9 +810,11 @@ def _wire_stage_gt_compact_kernel(
     difference_coding,
     topk,
     pos_dtype,
+    bitmap=False,
 ):
     # DSGT compact wire stage: tracker arithmetic + parameter update + BOTH
-    # wires' compact-gather quantize-EF in one program.
+    # wires' compact-gather quantize-EF in one program (both index sides
+    # leave as packed bitmaps when ``bitmap``).
     t_half = t_ref[...] + g_ref[...] - gp_ref[...]
     h = x_ref[...] - alpha_ref[0, 0] * t_half
     qt, pt, sct, nrt, nst = _quantize_ef_compact(
@@ -790,13 +829,22 @@ def _wire_stage_gt_compact_kernel(
     )
     h_ref[...] = h
     th_ref[...] = t_half
-    qx_ref[...] = qx.astype(jnp.int8)
-    px_ref[...] = px.astype(pos_dtype)
+    if bitmap:
+        chunk = x_ref.shape[-1]
+        vx, bx = _bitmap_pack(qx, px, chunk)
+        vt, bt = _bitmap_pack(qt, pt, chunk)
+        qx_ref[...] = vx.astype(jnp.int8)
+        px_ref[...] = bx
+        qt_ref[...] = vt.astype(jnp.int8)
+        pt_ref[...] = bt
+    else:
+        qx_ref[...] = qx.astype(jnp.int8)
+        px_ref[...] = px.astype(pos_dtype)
+        qt_ref[...] = qt.astype(jnp.int8)
+        pt_ref[...] = pt.astype(pos_dtype)
     scx_ref[...] = scx
     nrx_ref[...] = nrx
     nsx_ref[...] = nsx
-    qt_ref[...] = qt.astype(jnp.int8)
-    pt_ref[...] = pt.astype(pos_dtype)
     sct_ref[...] = sct
     nrt_ref[...] = nrt
     nst_ref[...] = nst
@@ -813,6 +861,7 @@ def wire_stage_compact_pallas(
     error_feedback: bool = True,
     difference_coding: bool = True,
     topk: int | None = None,
+    bitmap: bool = False,
     interpret: bool = False,
 ):
     """DSGD wire stage with the compact-gather epilogue: local update +
@@ -820,15 +869,33 @@ def wire_stage_compact_pallas(
     pass. Returns (h, q int8 (n, n_chunks*k), pos (n, n_chunks*k)
     int16/int32, scales (n, n_chunks), new_recon, new_res); the caller
     moves (q, pos, scales) over the wire and the receiver rebuilds the
-    dense dq by scatter-accumulate (``ref.scatter_compact_dq``)."""
+    dense dq by scatter-accumulate (``ref.scatter_compact_dq``).
+
+    ``bitmap=True`` runs the bitmap re-encode IN-KERNEL (byte-aligned
+    chunks only): the value buffer comes out in ascending-position order
+    and the index buffer is the packed LSB-first presence bitmap
+    (n, n_chunks * chunk // 8) uint8 -- bit-identical to
+    ``ref.compact_to_bitmap`` applied to the explicit-positions output,
+    decoded by ``ref.scatter_bitmap_dq``."""
     from repro.core.packing import compact_pos_dtype
 
     n, t = x.shape
     n_chunks = _check_chunk(t, scale_chunk)
     _check_compact(topk, scale_chunk)
+    if bitmap and scale_chunk % 8:
+        raise ValueError(
+            f"bitmap wire needs a byte-aligned chunk, got {scale_chunk}"
+        )
     tile, _, col, _, scalar = _specs(n, scale_chunk)
     kblock = pl.BlockSpec((n, topk), lambda c: (0, c))
     pos_dtype = compact_pos_dtype(scale_chunk)
+    if bitmap:
+        idx_width = scale_chunk // 8
+        idx_shape = jax.ShapeDtypeStruct((n, n_chunks * idx_width), jnp.uint8)
+    else:
+        idx_width = topk
+        idx_shape = jax.ShapeDtypeStruct((n, n_chunks * topk), pos_dtype)
+    idx_block = pl.BlockSpec((n, idx_width), lambda c: (0, c))
 
     kernel = functools.partial(
         _wire_stage_compact_kernel,
@@ -836,17 +903,18 @@ def wire_stage_compact_pallas(
         difference_coding=difference_coding,
         topk=topk,
         pos_dtype=pos_dtype,
+        bitmap=bitmap,
     )
     buf = jax.ShapeDtypeStruct((n, t), jnp.float32)
     return pl.pallas_call(
         kernel,
         grid=(n_chunks,),
         in_specs=[tile, tile, tile, tile, scalar],
-        out_specs=[tile, kblock, kblock, col, tile, tile],
+        out_specs=[tile, kblock, idx_block, col, tile, tile],
         out_shape=[
             buf,
             jax.ShapeDtypeStruct((n, n_chunks * topk), jnp.int8),
-            jax.ShapeDtypeStruct((n, n_chunks * topk), pos_dtype),
+            idx_shape,
             jax.ShapeDtypeStruct((n, n_chunks), jnp.float32),
             buf,
             buf,
@@ -870,19 +938,34 @@ def wire_stage_gt_compact_pallas(
     error_feedback: bool = True,
     difference_coding: bool = True,
     topk: int | None = None,
+    bitmap: bool = False,
     interpret: bool = False,
 ):
     """DSGT wire stage with the compact-gather epilogue on BOTH wires.
     Returns (h, t_half, q_x, pos_x, scales_x, new_recon_x, new_res_x,
-    q_t, pos_t, scales_t, new_recon_t, new_res_t)."""
+    q_t, pos_t, scales_t, new_recon_t, new_res_t). ``bitmap=True`` runs
+    the bitmap re-encode in-kernel on both wires (values in
+    ascending-position order, packed presence bitmaps in place of the
+    position buffers -- see :func:`wire_stage_compact_pallas`)."""
     from repro.core.packing import compact_pos_dtype
 
     n, tot = x.shape
     n_chunks = _check_chunk(tot, scale_chunk)
     _check_compact(topk, scale_chunk)
+    if bitmap and scale_chunk % 8:
+        raise ValueError(
+            f"bitmap wire needs a byte-aligned chunk, got {scale_chunk}"
+        )
     tile, _, col, _, scalar = _specs(n, scale_chunk)
     kblock = pl.BlockSpec((n, topk), lambda c: (0, c))
     pos_dtype = compact_pos_dtype(scale_chunk)
+    if bitmap:
+        idx_width = scale_chunk // 8
+        pb = jax.ShapeDtypeStruct((n, n_chunks * idx_width), jnp.uint8)
+    else:
+        idx_width = topk
+        pb = jax.ShapeDtypeStruct((n, n_chunks * topk), pos_dtype)
+    idx_block = pl.BlockSpec((n, idx_width), lambda c: (0, c))
 
     kernel = functools.partial(
         _wire_stage_gt_compact_kernel,
@@ -890,17 +973,17 @@ def wire_stage_gt_compact_pallas(
         difference_coding=difference_coding,
         topk=topk,
         pos_dtype=pos_dtype,
+        bitmap=bitmap,
     )
     buf = jax.ShapeDtypeStruct((n, tot), jnp.float32)
     qb = jax.ShapeDtypeStruct((n, n_chunks * topk), jnp.int8)
-    pb = jax.ShapeDtypeStruct((n, n_chunks * topk), pos_dtype)
     sc = jax.ShapeDtypeStruct((n, n_chunks), jnp.float32)
     return pl.pallas_call(
         kernel,
         grid=(n_chunks,),
         in_specs=[tile] * 8 + [scalar],
-        out_specs=[tile, tile, kblock, kblock, col, tile, tile,
-                   kblock, kblock, col, tile, tile],
+        out_specs=[tile, tile, kblock, idx_block, col, tile, tile,
+                   kblock, idx_block, col, tile, tile],
         out_shape=[buf, buf, qb, pb, sc, buf, buf, qb, pb, sc, buf, buf],
         interpret=interpret,
     )(x, t, g, g_prev, recon_x, res_x, recon_t, res_t,

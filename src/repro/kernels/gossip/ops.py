@@ -425,14 +425,14 @@ def wire_stage_gt(
 @functools.partial(
     jax.jit,
     static_argnames=("scale_chunk", "error_feedback", "difference_coding",
-                     "topk", "interpret"),
+                     "topk", "bitmap", "interpret"),
 )
 def _wire_stage_compact(x, g, recon, res, alpha, scale_chunk, error_feedback,
-                        difference_coding, topk, interpret):
+                        difference_coding, topk, bitmap, interpret):
     return wire_stage_compact_pallas(
         x, g, recon, res, alpha, scale_chunk=scale_chunk,
         error_feedback=error_feedback, difference_coding=difference_coding,
-        topk=topk, interpret=interpret,
+        topk=topk, bitmap=bitmap, interpret=interpret,
     )
 
 
@@ -446,6 +446,7 @@ def wire_stage_compact(
     error_feedback: bool = True,
     difference_coding: bool = True,
     topk: int | None = None,
+    bitmap: bool = False,
     dp_clip: float | None = None,
     dp_noise: jnp.ndarray | None = None,
 ) -> Tuple[jnp.ndarray, ...]:
@@ -456,11 +457,14 @@ def wire_stage_compact(
     sparsity pattern itself is privatized). Returns (h, q int8
     (n, n_chunks*k), pos int16/int32, scales, new_recon, new_res); only
     (q, pos, scales) cross the collective and
-    ``ref.scatter_compact_dq`` rebuilds the dense dq on the receiver."""
+    ``ref.scatter_compact_dq`` rebuilds the dense dq on the receiver.
+    ``bitmap=True`` folds the bitmap re-encode into the same kernel: the
+    index output is the packed presence bitmap (uint8, chunk/8 per
+    chunk), decoded by ``ref.scatter_bitmap_dq``."""
     if dp_noise is None:
         return _wire_stage_compact(
             x, g, recon, res, alpha, scale_chunk, error_feedback,
-            difference_coding, topk, _interpret(),
+            difference_coding, topk, bitmap, _interpret(),
         )
     _require_ef_for_dp(error_feedback)
     h = x - alpha * g
@@ -468,7 +472,7 @@ def wire_stage_compact(
     res_sub, corr = _dp_substitute(h, base, res, dp_clip, dp_noise)
     h_out, q, pos, scales, new_recon, new_res = _wire_stage_compact(
         x, g, recon, res_sub, alpha, scale_chunk, error_feedback,
-        difference_coding, topk, _interpret(),
+        difference_coding, topk, bitmap, _interpret(),
     )
     return h_out, q, pos, scales, new_recon, new_res + corr
 
@@ -476,15 +480,16 @@ def wire_stage_compact(
 @functools.partial(
     jax.jit,
     static_argnames=("scale_chunk", "error_feedback", "difference_coding",
-                     "topk", "interpret"),
+                     "topk", "bitmap", "interpret"),
 )
 def _wire_stage_gt_compact(x, t, g, g_prev, recon_x, res_x, recon_t, res_t,
                            alpha, scale_chunk, error_feedback,
-                           difference_coding, topk, interpret):
+                           difference_coding, topk, bitmap, interpret):
     return wire_stage_gt_compact_pallas(
         x, t, g, g_prev, recon_x, res_x, recon_t, res_t, alpha,
         scale_chunk=scale_chunk, error_feedback=error_feedback,
-        difference_coding=difference_coding, topk=topk, interpret=interpret,
+        difference_coding=difference_coding, topk=topk, bitmap=bitmap,
+        interpret=interpret,
     )
 
 
@@ -502,6 +507,7 @@ def wire_stage_gt_compact(
     error_feedback: bool = True,
     difference_coding: bool = True,
     topk: int | None = None,
+    bitmap: bool = False,
     dp_clip: float | None = None,
     dp_noise: jnp.ndarray | None = None,
     dp_noise_t: jnp.ndarray | None = None,
@@ -509,11 +515,13 @@ def wire_stage_gt_compact(
     """DSGT wire stage with the compact-gather epilogue on BOTH wires, in
     ONE Pallas pass, with the optional DP epilogue via residual
     substitution. Returns (h, t_half, q_x, pos_x, scales_x, new_recon_x,
-    new_res_x, q_t, pos_t, scales_t, new_recon_t, new_res_t)."""
+    new_res_x, q_t, pos_t, scales_t, new_recon_t, new_res_t).
+    ``bitmap=True`` folds the bitmap re-encode into the kernel on both
+    wires (index outputs become packed presence bitmaps)."""
     if dp_noise is None:
         return _wire_stage_gt_compact(
             x, t, g, g_prev, recon_x, res_x, recon_t, res_t, alpha,
-            scale_chunk, error_feedback, difference_coding, topk,
+            scale_chunk, error_feedback, difference_coding, topk, bitmap,
             _interpret(),
         )
     _require_ef_for_dp(error_feedback)
@@ -528,7 +536,8 @@ def wire_stage_gt_compact(
     (h_out, th, qx, px, scx, nrx, nsx,
      qt, pt, sct, nrt, nst) = _wire_stage_gt_compact(
         x, t, g, g_prev, recon_x, res_x_sub, recon_t, res_t_sub, alpha,
-        scale_chunk, error_feedback, difference_coding, topk, _interpret(),
+        scale_chunk, error_feedback, difference_coding, topk, bitmap,
+        _interpret(),
     )
     return (h_out, th, qx, px, scx, nrx, nsx + corr_x,
             qt, pt, sct, nrt, nst + corr_t)

@@ -4,7 +4,14 @@ XLA's ``compiled.cost_analysis()`` counts a ``while`` body ONCE, so any
 step built on ``lax.scan`` (layer stacks, Q local steps) under-reports
 FLOPs/bytes by the trip count, and collective bytes are not reported at
 all. This module parses the compiled HLO text into its computation graph
-and aggregates, multiplying loop bodies by their ``known_trip_count``:
+and aggregates, multiplying loop bodies by their ``known_trip_count``.
+When the annotation is absent (older XLA, or a ``while`` whose bound the
+trip-count pass did not stamp), the multiplier is recovered from the
+loop-condition computation itself: a ``lax.scan``/``fori_loop`` lowers
+to the canonical ``counter < N`` compare against an integer constant,
+and that ``N`` is the trip count (counters start at 0). Without this
+fallback, every un-annotated scanned body silently counted ONCE -- the
+exact under-reporting this module exists to fix:
 
   * ``flops``        -- 2*M*N*K per dot (shapes resolved through a
                         per-computation symbol table) + 1 flop/output
@@ -49,6 +56,8 @@ _CALLED = re.compile(r"(?:calls|body|to_apply)=%?([\w.\-]+)")
 _COND = re.compile(r"condition=%?([\w.\-]+)")
 _TRIP = re.compile(r'known_trip_count[\'"]?\s*:\s*\{\s*[\'"]n[\'"]\s*:\s*[\'"]?(\d+)')
 _OPERAND = re.compile(r"%([\w.\-]+)")
+_DIRECTION = re.compile(r"direction=(\w+)")
+_CONST_INT = re.compile(r"constant\((-?\d+)\)")
 
 
 def _shape_elems_bytes(dtype: str, dims: str) -> Tuple[int, int]:
@@ -236,10 +245,19 @@ class _Analyzer:
                 continue
             if op == "while":
                 body_m = _CALLED.search(instr.line)
-                trips = 1
+                cond_m = _COND.search(instr.line)
+                trips = None
                 tm = _TRIP.search(instr.line)
                 if tm:
                     trips = int(tm.group(1))
+                elif cond_m:
+                    # no known_trip_count annotation: recover the trip
+                    # count from the canonical `counter < N` condition,
+                    # else scanned bodies would count ONCE.
+                    trips = self._infer_trips(cond_m.group(1))
+                known = trips is not None
+                if trips is None:
+                    trips = 1
                 if body_m:
                     sub = self.cost(body_m.group(1))
                     flops += trips * sub.flops
@@ -248,10 +266,10 @@ class _Analyzer:
                     cross_bytes += trips * sub.cross_node_bytes
                     pod_bytes += trips * sub.cross_pod_bytes
                     _merge(coll, sub.collectives, trips)
-                cond_m = _COND.search(instr.line)
                 if cond_m:
                     sub = self.cost(cond_m.group(1))
-                    flops += trips * sub.flops
+                    # the condition runs once more than the body
+                    flops += ((trips + 1) if known else 1) * sub.flops
                 continue
             if op in ("call", "conditional", "async-start"):
                 cm = _CALLED.search(instr.line)
@@ -288,6 +306,39 @@ class _Analyzer:
         out = HloCosts(flops, traffic, coll_bytes, coll, cross_bytes, pod_bytes)
         self._memo[comp_name] = out
         return out
+
+    def _infer_trips(self, cond_name: str) -> Optional[int]:
+        """Trip count from a scan-style loop condition: ``counter < N``.
+
+        ``lax.scan`` / ``fori_loop`` lower to a while whose condition is
+        a single ``compare`` of a tuple-carried s32 counter (init 0,
+        step 1) against an integer constant bound, ``direction=LT`` (or
+        the mirrored constant-first ``GT``). Returns that bound, or
+        ``None`` when the condition is anything else (dynamic bound,
+        non-unit stride -- caller falls back to counting the body once).
+        """
+        comp = self.comps.get(cond_name)
+        if comp is None:
+            return None
+        by_name = {i.name: i for i in comp.instrs}
+        compares = [i for i in comp.instrs if i.opcode == "compare"]
+        if len(compares) != 1:
+            return None
+        cmp_i = compares[0]
+        dm = _DIRECTION.search(cmp_i.line)
+        if dm is None or dm.group(1) not in ("LT", "GT"):
+            return None
+        consts = []
+        for opn in cmp_i.operands:
+            src = by_name.get(opn)
+            if src is not None and src.opcode == "constant":
+                cm = _CONST_INT.search(src.line)
+                if cm:
+                    consts.append(int(cm.group(1)))
+        if len(consts) != 1:  # need exactly one constant side
+            return None
+        bound = consts[0]
+        return bound if bound > 0 else None
 
 
 def _io_bytes(instr: _Instr, symbols: Dict[str, List[Tuple[str, str]]]) -> float:

@@ -8,13 +8,27 @@ in one shot is the production path exercised by the dry-run).
 
 Decode supports greedy and temperature sampling; all steps are jitted once
 per (batch, cache) shape.
+
+Hot-swap: the engine holds a **double-buffered weight slot**. A training
+loop (or snapshot watcher) calls :meth:`ServeEngine.publish` from any
+thread to stage new consensus weights into the PENDING slot; the decode
+loop promotes pending -> active with one atomic reference swap at the
+next step boundary (:meth:`decode_step`), so a new snapshot lands
+without draining or corrupting in-flight decode batches -- the KV caches
+carry over untouched, and every step runs against exactly one weight
+set (never a torn mix). Staging (``jax.device_put``) happens in the
+PUBLISHER's thread; the decode loop only ever pays the reference swap,
+timed per swap in ``swap_pauses``. ``snapshot_round`` tracks the round
+frontier of the ACTIVE weights, so ``staleness(frontier)`` is the
+serving-side lag in training rounds.
 """
 
 from __future__ import annotations
 
 import dataclasses
 import functools
-from typing import Any, Dict, List, Optional
+import time
+from typing import Any, Dict, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -33,6 +47,9 @@ class GenerationResult:
     tokens: np.ndarray  # (B, prompt+generated)
     prompt_len: int
     steps: int
+    #: absolute step indices (0 = first prefill step) at whose BOUNDARY a
+    #: published weight set was swapped in during this call
+    swap_steps: Tuple[int, ...] = ()
 
 
 class ServeEngine:
@@ -43,6 +60,7 @@ class ServeEngine:
         max_seq: int,
         batch: int,
         sliding_override: bool = False,
+        snapshot_round: Optional[int] = None,
     ) -> None:
         self.bundle = bundle
         self.cfg: ModelConfig = bundle.cfg
@@ -53,6 +71,88 @@ class ServeEngine:
         self._step = jax.jit(
             functools.partial(bundle.decode_fn, sliding_override=sliding_override)
         )
+        #: round frontier of the ACTIVE weights (None = unknown/seed)
+        self.snapshot_round = snapshot_round
+        # pending slot: (params, round, keepalive) or None. Written by
+        # publisher threads, consumed by the decode loop; a single
+        # reference assignment either way, atomic under the GIL.
+        self._pending: Optional[Tuple[PyTree, Optional[int], Any]] = None
+        # keepalive for the active weights (e.g. the mmap-backed
+        # Snapshot whose views the params alias)
+        self._active_ref: Any = None
+        self.swap_count = 0
+        self.swap_pauses: List[float] = []  # seconds per completed swap
+
+    @classmethod
+    def from_snapshot(cls, bundle: ModelBundle, snapshot, max_seq: int,
+                      batch: int, sliding_override: bool = False,
+                      stage: bool = True) -> "ServeEngine":
+        """Serve straight from an mmap-loaded consensus snapshot
+        (``repro.training.snapshot.load_snapshot``). ``stage=True``
+        device-puts the views once up front (pages fault in lazily from
+        the blob); ``stage=False`` keeps the raw views."""
+        params = snapshot.params
+        if stage:
+            params = jax.device_put(params)
+        eng = cls(bundle, params, max_seq, batch,
+                  sliding_override=sliding_override,
+                  snapshot_round=snapshot.round_frontier)
+        eng._active_ref = snapshot
+        return eng
+
+    # ---------------------------------------------------------- hot swap
+
+    def publish(self, params: PyTree, snapshot_round: Optional[int] = None,
+                keepalive: Any = None, stage: bool = True) -> None:
+        """Stage new weights into the pending slot (any thread).
+
+        The decode loop promotes them at its next step boundary. With
+        ``stage=True`` the (possibly mmap-view) leaves are device-put
+        HERE, in the publisher's thread, so the decode loop's swap stays
+        a pure reference assignment. ``keepalive`` pins whatever owns
+        the leaves' memory (a Snapshot) for as long as they are active.
+        """
+        if stage:
+            params = jax.device_put(params)
+        self._pending = (params, snapshot_round, keepalive)
+
+    def publish_snapshot(self, snapshot, stage: bool = True) -> None:
+        """Publish an mmap-loaded consensus snapshot."""
+        self.publish(snapshot.params, snapshot.round_frontier,
+                     keepalive=snapshot, stage=stage)
+
+    def _maybe_swap(self) -> bool:
+        """Promote the pending weight slot, if any. Called by the decode
+        loop between steps; never blocks on the publisher."""
+        pend = self._pending
+        if pend is None:
+            return False
+        t0 = time.perf_counter()
+        params, rnd, keep = pend
+        self._pending = None
+        self.params = params
+        self.snapshot_round = rnd
+        self._active_ref = keep
+        pause = time.perf_counter() - t0
+        self.swap_pauses.append(pause)
+        self.swap_count += 1
+        return True
+
+    def staleness(self, frontier: int) -> Optional[int]:
+        """Rounds the ACTIVE weights lag the training frontier, or None
+        when the engine was built from raw params with no round."""
+        if self.snapshot_round is None:
+            return None
+        return int(frontier) - int(self.snapshot_round)
+
+    # ------------------------------------------------------------ decode
+
+    def decode_step(self, tokens: jnp.ndarray, caches: PyTree):
+        """One decode step at a swap boundary: promote any pending
+        weights, then step. Returns (logits, caches, swapped)."""
+        swapped = self._maybe_swap()
+        logits, caches = self._step(self.params, tokens, caches)
+        return logits, caches, swapped
 
     def new_caches(self) -> PyTree:
         return self.bundle.init_decode_state_fn(
@@ -91,18 +191,25 @@ class ServeEngine:
         toks = jnp.asarray(prompts, jnp.int32)
         out: List[np.ndarray] = [np.asarray(toks)]
         key = jax.random.key(seed)
+        swap_steps: List[int] = []
 
         # prefill by stepping the prompt through the decode path
         logits = None
         for t in range(p):
-            logits, caches = self._step(self.params, toks[:, t], caches)
+            logits, caches, swapped = self.decode_step(toks[:, t], caches)
+            if swapped:
+                swap_steps.append(t)
 
         cur = self._sample(logits, key, temperature)
         generated = [np.asarray(cur)[:, None]]
         for i in range(max_new_tokens - 1):
             key, sub = jax.random.split(key)
-            logits, caches = self._step(self.params, cur, caches)
+            logits, caches, swapped = self.decode_step(cur, caches)
+            if swapped:
+                swap_steps.append(p + i)
             cur = self._sample(logits, sub, temperature)
             generated.append(np.asarray(cur)[:, None])
         tokens = np.concatenate(out + generated, axis=1)
-        return GenerationResult(tokens=tokens, prompt_len=p, steps=p + max_new_tokens)
+        return GenerationResult(tokens=tokens, prompt_len=p,
+                                steps=p + max_new_tokens,
+                                swap_steps=tuple(swap_steps))

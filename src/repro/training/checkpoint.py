@@ -44,7 +44,63 @@ from repro.core.fl import FLState
 
 PyTree = Any
 
-__all__ = ["save_fl_state", "load_fl_state"]
+__all__ = ["save_fl_state", "load_fl_state", "engine_manifest"]
+
+
+def engine_manifest(engine: GossipEngine) -> dict:
+    """The five-axis round spec (engine x schedule x topology x node
+    program x privacy, plus mesh geometry) as a JSON-serializable dict.
+
+    One codepath feeds BOTH durable formats: checkpoint manifests
+    (``save_fl_state``) and consensus snapshot headers
+    (``repro.training.snapshot.write_snapshot``), so the recorded
+    round provenance can never drift between them.
+    """
+    manifest = {"engine": engine.name}
+    # the schedule is part of the comm-state contract: a PIPELINED
+    # checkpoint carries the in-flight wire_* payload buffers, and a
+    # restore must rebuild mix_recon against them (engine.restore_comm)
+    schedule = getattr(engine, "round_schedule", None)
+    if schedule is not None:
+        # spec(), not name: "bounded_staleness:k=3" carries a
+        # 3-deep wire ring a k=2 restore could not consume
+        manifest["round_schedule"] = schedule.spec()
+    # so is the topology program: the comm counters (topo_round /
+    # topo_key) only mean something under the SAME program -- the
+    # recorded spec lets a mid-churn restore rebuild the engine and
+    # replay the identical graph sequence
+    program = getattr(engine, "topology_program", None)
+    if program is not None:
+        manifest["topology_program"] = program.spec()
+    # and the node program: node_key (and any Markov fault state)
+    # replays the identical straggler/outage sequence only under it
+    node_prog = getattr(engine, "node_program", None)
+    if node_prog is not None:
+        manifest["node_program"] = node_prog.spec()
+    # and the privacy spec: priv_key + the pad/noise round counter
+    # regenerate the identical mask and noise streams only under the
+    # SAME spec, and a restored run's epsilon accounting is only
+    # truthful if sigma/clip/delta match what actually trained
+    privacy = getattr(engine, "privacy", None)
+    if privacy is not None:
+        manifest["privacy"] = privacy.spec()
+    # and the mesh: a two-axis (gossip_node, model_shard) engine pads
+    # the flat layout per shard, so buffers written under one shard
+    # count are not byte-compatible with another -- record the full
+    # mesh geometry so restore can refuse with a migration hint
+    mesh = getattr(engine, "mesh", None)
+    if mesh is not None:
+        layout = getattr(engine, "layout", None)
+        manifest["mesh"] = {
+            "axis_names": [str(a) for a in mesh.axis_names],
+            "shape": [int(mesh.shape[a]) for a in mesh.axis_names],
+            "node_axes": [str(a) for a in
+                          (getattr(engine, "node_axes", ()) or ())],
+            "model_axis": getattr(engine, "model_axis", None),
+            "model_shards": int(getattr(engine, "model_shards", 1)),
+            "layout_shards": int(getattr(layout, "shards", 1)),
+        }
+    return manifest
 
 
 def _flat_dict(tree: PyTree) -> dict:
@@ -65,50 +121,7 @@ def save_fl_state(path: str, state: FLState, extra: Optional[dict] = None,
         "has_comm": state.comm is not None,
     }
     if engine is not None:
-        manifest["engine"] = engine.name
-        # the schedule is part of the comm-state contract: a PIPELINED
-        # checkpoint carries the in-flight wire_* payload buffers, and a
-        # restore must rebuild mix_recon against them (engine.restore_comm)
-        schedule = getattr(engine, "round_schedule", None)
-        if schedule is not None:
-            # spec(), not name: "bounded_staleness:k=3" carries a
-            # 3-deep wire ring a k=2 restore could not consume
-            manifest["round_schedule"] = schedule.spec()
-        # so is the topology program: the comm counters (topo_round /
-        # topo_key) only mean something under the SAME program -- the
-        # recorded spec lets a mid-churn restore rebuild the engine and
-        # replay the identical graph sequence
-        program = getattr(engine, "topology_program", None)
-        if program is not None:
-            manifest["topology_program"] = program.spec()
-        # and the node program: node_key (and any Markov fault state)
-        # replays the identical straggler/outage sequence only under it
-        node_prog = getattr(engine, "node_program", None)
-        if node_prog is not None:
-            manifest["node_program"] = node_prog.spec()
-        # and the privacy spec: priv_key + the pad/noise round counter
-        # regenerate the identical mask and noise streams only under the
-        # SAME spec, and a restored run's epsilon accounting is only
-        # truthful if sigma/clip/delta match what actually trained
-        privacy = getattr(engine, "privacy", None)
-        if privacy is not None:
-            manifest["privacy"] = privacy.spec()
-        # and the mesh: a two-axis (gossip_node, model_shard) engine pads
-        # the flat layout per shard, so buffers written under one shard
-        # count are not byte-compatible with another -- record the full
-        # mesh geometry so restore can refuse with a migration hint
-        mesh = getattr(engine, "mesh", None)
-        if mesh is not None:
-            layout = getattr(engine, "layout", None)
-            manifest["mesh"] = {
-                "axis_names": [str(a) for a in mesh.axis_names],
-                "shape": [int(mesh.shape[a]) for a in mesh.axis_names],
-                "node_axes": [str(a) for a in
-                              (getattr(engine, "node_axes", ()) or ())],
-                "model_axis": getattr(engine, "model_axis", None),
-                "model_shards": int(getattr(engine, "model_shards", 1)),
-                "layout_shards": int(getattr(layout, "shards", 1)),
-            }
+        manifest.update(engine_manifest(engine))
     if state.comm is not None:
         manifest["comm_keys"] = sorted(state.comm)
     if extra:

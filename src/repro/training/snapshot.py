@@ -1,0 +1,287 @@
+"""Consensus snapshots: the training->serving fast path.
+
+A checkpoint (``checkpoint.py``) is for RESUMING training: it carries
+every node's parameters plus tracker/comm wire state, compressed, and
+restores through a pytree round trip. A **snapshot** is for SERVING: the
+consensus model (the node-axis mean of the flat ``(nodes, total)``
+buffer -- the iterate the paper deploys, not any single node) written as
+one aligned raw-bytes blob plus a JSON header, so a server can
+``mmap``-load it **zero-copy**:
+
+* the blob is the consensus row in ``layout.storage_dtype``, padded to
+  :data:`BLOB_ALIGN` bytes;
+* the header records the :class:`~repro.core.packing.FlatLayout`
+  geometry (per-leaf path/offset/shape/dtype, ``total``/``used``/
+  ``storage_dtype``), the five-axis round spec (engine x schedule x
+  topology x node program x privacy, same record a checkpoint manifest
+  carries -- see :func:`repro.training.checkpoint.engine_manifest`), and
+  a ``round_frontier`` counter (how many training rounds produced it);
+* :func:`load_snapshot` memory-maps the blob and slices each leaf as a
+  numpy VIEW (``blob[offset:offset+size].reshape(shape)``) -- no pytree
+  unflatten of materialized arrays, no host staging copy; bytes fault in
+  lazily as the server first touches them. Only a leaf whose dtype
+  differs from the storage dtype pays a convert.
+
+Publication protocol (safe under a concurrently-reading server):
+snapshot files are immutable once named -- the writer stages to a
+``.tmp`` name and ``os.replace``s into place (blob first, then header),
+then atomically rewrites ``LATEST`` to point at the new round. A reader
+that follows ``LATEST`` therefore never observes a torn snapshot, and an
+in-flight reader of round k keeps its mmap alive even after round k+1
+lands (POSIX keeps the inode until unmapped).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+import zlib
+from typing import Any, Optional
+
+import jax
+import numpy as np
+
+from repro.core.packing import FlatLayout, pack, pack_like
+
+PyTree = Any
+
+__all__ = [
+    "Snapshot",
+    "write_snapshot",
+    "load_snapshot",
+    "latest_round",
+    "snapshot_paths",
+]
+
+SNAPSHOT_MAGIC = "repro-consensus-snapshot"
+SNAPSHOT_VERSION = 1
+#: blob files are padded to this many bytes so mmap'd leaf views stay
+#: safely vector-loadable past the used tail
+BLOB_ALIGN = 64
+_LATEST = "LATEST"
+
+
+def snapshot_paths(dirpath: str, round_frontier: int) -> tuple:
+    """(blob, header) filenames for a given training round."""
+    stem = f"snapshot-{int(round_frontier):08d}"
+    return (os.path.join(dirpath, stem + ".bin"),
+            os.path.join(dirpath, stem + ".json"))
+
+
+def _atomic_write(path: str, data: bytes) -> None:
+    tmp = path + f".tmp.{os.getpid()}"
+    with open(tmp, "wb") as f:
+        f.write(data)
+        f.flush()
+        os.fsync(f.fileno())
+    os.replace(tmp, path)
+
+
+def _leaf_paths(layout: FlatLayout) -> list:
+    """Tree-path strings for each leaf, in ``layout.leaves`` order (the
+    ``tree_flatten`` order ``pack`` stored them in)."""
+    dummy = jax.tree_util.tree_unflatten(
+        layout.treedef, list(range(len(layout.leaves))))
+    pairs = jax.tree_util.tree_flatten_with_path(dummy)[0]
+    paths = [None] * len(layout.leaves)
+    for path, idx in pairs:
+        key = "/".join(str(getattr(p, "key", getattr(p, "idx", p)))
+                       for p in path)
+        paths[idx] = key
+    return paths
+
+
+def write_snapshot(dirpath: str, params: PyTree, layout: Optional[FlatLayout]
+                   = None, *, round_frontier: int, engine=None,
+                   step: Optional[int] = None,
+                   extra: Optional[dict] = None) -> str:
+    """Publish the consensus model as an mmap-able snapshot.
+
+    Args:
+      params: either the node-stacked flat ``(nodes, total)`` buffer
+        (requires ``layout``), an already-reduced ``(total,)`` consensus
+        row (requires ``layout``), or a node-stacked pytree (packed
+        through ``layout`` when given, else with a fresh layout).
+      layout: the :class:`FlatLayout` describing the buffer columns.
+      round_frontier: training rounds completed when this consensus was
+        taken -- the server's staleness metric is
+        ``frontier_now - header["round_frontier"]``.
+      engine: optional GossipEngine; records the five-axis round spec in
+        the header (same record as a checkpoint manifest).
+      step: optional optimizer step counter, recorded verbatim.
+      extra: optional JSON-serializable dict, recorded verbatim.
+
+    Returns the header path. The write is atomic: blob, then header,
+    then the ``LATEST`` pointer, each staged + ``os.replace``d.
+    """
+    if isinstance(params, (np.ndarray, jax.Array)):
+        if layout is None:
+            raise ValueError("writing from a flat buffer requires layout=")
+        flat = params
+    else:
+        if layout is None:
+            flat, layout = pack(params)
+        else:
+            flat = pack_like(params, layout)
+    if flat.ndim == 2:
+        # THE consensus reduction: one mean over the node axis of the
+        # flat buffer -- no per-leaf traversal
+        flat = flat.mean(axis=0)
+    if flat.shape != (layout.total,):
+        raise ValueError(
+            f"flat buffer {flat.shape} does not match layout total "
+            f"({layout.total},)")
+    consensus = np.asarray(jax.device_get(flat),
+                           dtype=np.dtype(layout.storage_dtype))
+    blob = consensus.tobytes()
+    if len(blob) % BLOB_ALIGN:
+        blob += b"\x00" * (BLOB_ALIGN - len(blob) % BLOB_ALIGN)
+
+    os.makedirs(dirpath, exist_ok=True)
+    blob_path, header_path = snapshot_paths(dirpath, round_frontier)
+    header = {
+        "magic": SNAPSHOT_MAGIC,
+        "version": SNAPSHOT_VERSION,
+        "round_frontier": int(round_frontier),
+        "blob": os.path.basename(blob_path),
+        "blob_bytes": len(blob),
+        "payload_bytes": consensus.nbytes,
+        "crc32": zlib.crc32(blob) & 0xFFFFFFFF,
+        "total": int(layout.total),
+        "used": int(layout.used),
+        "storage_dtype": str(layout.storage_dtype),
+        "source_n_nodes": int(layout.n_nodes),
+        "leaves": [
+            {"path": p, "offset": int(s.offset), "shape": list(s.shape),
+             "dtype": str(s.dtype)}
+            for p, s in zip(_leaf_paths(layout), layout.leaves)
+        ],
+    }
+    if step is not None:
+        header["step"] = int(step)
+    if extra:
+        header["extra"] = extra
+    if engine is not None:
+        from repro.training.checkpoint import engine_manifest
+
+        header["round_spec"] = engine_manifest(engine)
+    _atomic_write(blob_path, blob)
+    _atomic_write(header_path,
+                  json.dumps(header, indent=2).encode("utf-8"))
+    _atomic_write(os.path.join(dirpath, _LATEST),
+                  f"{int(round_frontier)}\n".encode("ascii"))
+    return header_path
+
+
+def latest_round(dirpath: str) -> Optional[int]:
+    """Round of the newest published snapshot, or None before the first
+    publish. Follows the atomically-replaced ``LATEST`` pointer, so a
+    concurrent writer can never make this return a torn snapshot."""
+    try:
+        with open(os.path.join(dirpath, _LATEST)) as f:
+            return int(f.read().strip())
+    except (FileNotFoundError, ValueError):
+        return None
+
+
+@dataclasses.dataclass(frozen=True)
+class Snapshot:
+    """An mmap-loaded consensus snapshot.
+
+    ``params`` leaves are numpy views into ``flat`` (itself a read-only
+    ``np.memmap``) whenever the leaf dtype equals the storage dtype --
+    zero-copy, lazily faulted. Keep the snapshot object alive as long as
+    the views are in use.
+    """
+
+    params: PyTree
+    flat: np.ndarray  # (total,) read-only memmap of the consensus row
+    round_frontier: int
+    header: dict
+    path: str  # header path
+
+    @property
+    def step(self) -> Optional[int]:
+        return self.header.get("step")
+
+
+def load_snapshot(dirpath: str, round_frontier: Optional[int] = None,
+                  template: Optional[PyTree] = None,
+                  verify: bool = False) -> Snapshot:
+    """mmap-load a snapshot zero-copy into its FlatLayout geometry.
+
+    Args:
+      dirpath: snapshot directory.
+      round_frontier: which round to load; default = ``LATEST``.
+      template: optional pytree (arrays or ShapeDtypeStructs) giving the
+        exact container structure to unflatten into; leaves are matched
+        by tree path and validated against the header's shapes/dtypes.
+        Without a template, containers restore as nested dicts keyed by
+        path component (sufficient for the models' dict param trees).
+      verify: recompute the blob crc32 (reads every byte -- defeats
+        laziness; leave False on the serving path).
+
+    Returns a :class:`Snapshot` whose ``params`` leaves are views into
+    the mapped blob (a leaf pays a copy only when its dtype differs from
+    the storage dtype).
+    """
+    if round_frontier is None:
+        round_frontier = latest_round(dirpath)
+        if round_frontier is None:
+            raise FileNotFoundError(f"no snapshot published in {dirpath!r}")
+    blob_path, header_path = snapshot_paths(dirpath, round_frontier)
+    with open(header_path) as f:
+        header = json.load(f)
+    if header.get("magic") != SNAPSHOT_MAGIC:
+        raise ValueError(f"{header_path!r} is not a consensus snapshot")
+    if header.get("version", 0) > SNAPSHOT_VERSION:
+        raise ValueError(
+            f"snapshot version {header['version']} is newer than this "
+            f"reader ({SNAPSHOT_VERSION})")
+    storage = np.dtype(header["storage_dtype"])
+    total = int(header["total"])
+    mm = np.memmap(blob_path, dtype=storage, mode="r",
+                   shape=(int(header["blob_bytes"]) // storage.itemsize,))
+    if verify:
+        crc = zlib.crc32(mm.tobytes()) & 0xFFFFFFFF
+        if crc != header["crc32"]:
+            raise ValueError(
+                f"snapshot {blob_path!r} failed crc32 verification")
+    flat = mm[:total]
+
+    leaves = {}
+    for spec in header["leaves"]:
+        size = int(np.prod(spec["shape"])) if spec["shape"] else 1
+        off = int(spec["offset"])
+        view = flat[off:off + size].reshape(tuple(spec["shape"]))
+        if np.dtype(spec["dtype"]) != storage:
+            view = view.astype(spec["dtype"])  # the only copying path
+        leaves[spec["path"]] = view
+
+    if template is not None:
+        pairs, treedef = jax.tree_util.tree_flatten_with_path(template)
+        ordered = []
+        for path, t in pairs:
+            key = "/".join(str(getattr(p, "key", getattr(p, "idx", p)))
+                           for p in path)
+            if key not in leaves:
+                raise KeyError(f"snapshot missing leaf {key!r}")
+            v = leaves[key]
+            tshape = tuple(t.shape)
+            if tshape != v.shape:
+                raise ValueError(
+                    f"{key}: snapshot shape {v.shape} != template {tshape}")
+            ordered.append(v)
+        params = jax.tree_util.tree_unflatten(treedef, ordered)
+    else:
+        params = {}
+        for key, v in leaves.items():
+            node = params
+            parts = key.split("/")
+            for p in parts[:-1]:
+                node = node.setdefault(p, {})
+            node[parts[-1]] = v
+    return Snapshot(params=params, flat=flat,
+                    round_frontier=int(header["round_frontier"]),
+                    header=header, path=header_path)

@@ -498,6 +498,66 @@ def test_bitmap_round_trip_property():
     check()
 
 
+def test_bitmap_in_kernel_epilogue_bit_identical_dsgd():
+    """``bitmap=True`` folds the re-encode (position argsort + bit-pack)
+    INTO the wire-stage tile: its (vals, bits) output must be
+    bit-identical to the explicit-positions kernel followed by the jnp
+    re-encode, every other output untouched, and the receive-side bitmap
+    decode must rebuild the exact explicit-positions payload."""
+    from repro.kernels.gossip import ops
+    from repro.kernels.gossip.ref import compact_to_bitmap, scatter_bitmap_dq, \
+        scatter_compact_dq
+
+    n, total, chunk, k = 4, 512, 64, 16
+    rng = np.random.default_rng(0)
+    mk = lambda s=1.0: jnp.asarray(rng.normal(size=(n, total)) * s,
+                                   jnp.float32)
+    x, g, res = mk(), mk(), mk(0.1)
+    recon = jnp.zeros((n, total), jnp.float32)
+    alpha = jnp.float32(0.05)
+    kw = dict(scale_chunk=chunk, topk=k)
+
+    a = ops.wire_stage_compact(x, g, recon, res, alpha, bitmap=True, **kw)
+    b = ops.wire_stage_compact(x, g, recon, res, alpha, **kw)
+    vals, bits = compact_to_bitmap(b[1], b[2], chunk, k)
+    assert a[1].dtype == jnp.int8 and a[2].dtype == jnp.uint8
+    assert a[2].shape == (n, total // 8)
+    np.testing.assert_array_equal(np.asarray(a[1]), np.asarray(vals))
+    np.testing.assert_array_equal(np.asarray(a[2]), np.asarray(bits))
+    for i in (0, 3, 4, 5):  # h, scales, new_recon, new_res: untouched
+        np.testing.assert_array_equal(np.asarray(a[i]), np.asarray(b[i]))
+    np.testing.assert_array_equal(
+        np.asarray(scatter_bitmap_dq(a[1], a[2], a[3], chunk, total)),
+        np.asarray(scatter_compact_dq(b[1], b[2], b[3], chunk, total)))
+
+
+def test_bitmap_in_kernel_epilogue_bit_identical_gt():
+    """The gradient-tracking twin: one pallas pass packs BOTH wires."""
+    from repro.kernels.gossip import ops
+    from repro.kernels.gossip.ref import compact_to_bitmap
+
+    n, total, chunk, k = 4, 512, 64, 16
+    rng = np.random.default_rng(1)
+    mk = lambda s=1.0: jnp.asarray(rng.normal(size=(n, total)) * s,
+                                   jnp.float32)
+    x, t, g, gp = mk(), mk(), mk(), mk()
+    sx, st_ = mk(0.1), mk(0.1)
+    rx = jnp.zeros((n, total), jnp.float32)
+    rt = jnp.zeros((n, total), jnp.float32)
+    alpha = jnp.float32(0.05)
+    kw = dict(scale_chunk=chunk, topk=k)
+
+    A = ops.wire_stage_gt_compact(x, t, g, gp, rx, sx, rt, st_, alpha,
+                                  bitmap=True, **kw)
+    B = ops.wire_stage_gt_compact(x, t, g, gp, rx, sx, rt, st_, alpha, **kw)
+    vx, bx = compact_to_bitmap(B[2], B[3], chunk, k)
+    vt, bt = compact_to_bitmap(B[7], B[8], chunk, k)
+    for got, want in ((A[2], vx), (A[3], bx), (A[7], vt), (A[8], bt)):
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+    for i in (0, 1, 4, 5, 6, 9, 10, 11):  # everything but the wires
+        np.testing.assert_array_equal(np.asarray(A[i]), np.asarray(B[i]))
+
+
 # ---------------------------------------------------------------------------
 # sharded: churn == fused oracle, zero extra collectives / compiles,
 # bitmap operand bytes, mid-churn pipelined restore (subprocess, 8 devices)
@@ -642,6 +702,32 @@ _SHARDED_SCRIPT = textwrap.dedent(
             moved = sum(int(np.prod(e.invars[0].aval.shape))
                         * e.invars[0].aval.dtype.itemsize for e in one_dir)
             assert moved == flat_wire_bytes(layout, 1, chunk, 4), moved
+
+    # 2b. the bitmap re-encode is an IN-KERNEL epilogue on the pallas
+    #     path: every sort in the round jaxpr lives INSIDE the single
+    #     pallas_call (the epilogue's position argsort); nothing outside
+    #     the kernel touches explicit positions
+    def walk_outside(jaxpr, name, found):
+        for eqn in jaxpr.eqns:
+            if eqn.primitive.name == "pallas_call":
+                continue
+            if eqn.primitive.name == name:
+                found.append(eqn)
+            for v in eqn.params.values():
+                subs = v if isinstance(v, (list, tuple)) else [v]
+                for sub in subs:
+                    if hasattr(sub, "jaxpr"):
+                        walk_outside(sub.jaxpr, name, found)
+                    elif hasattr(sub, "eqns"):
+                        walk_outside(sub, name, found)
+        return found
+
+    eng_b, jx_b = round_jaxpr(None, 4)
+    assert eng_b.wire_encoding == "bitmap"
+    outer = len(walk_outside(jx_b.jaxpr, "sort", []))
+    total_sorts = len(walk(jx_b.jaxpr, "sort", []))
+    assert outer == 0, f"{outer} post-kernel sorts: re-encode left the kernel"
+    assert total_sorts >= 1, "epilogue argsort missing from the kernel"
 
     # 3. mid-churn PIPELINED checkpoint restore: counters + in-flight
     #    wire + per-direction accumulators all land consistently; the

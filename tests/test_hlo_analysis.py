@@ -116,6 +116,64 @@ def test_collectives_exact_count_and_bytes():
     assert "COLL-OK" in proc.stdout
 
 
+def test_q4_round_hand_count_and_trip_inference():
+    """A Q=4 DSGD round vs an exact hand count of its matmul flops --
+    and the same HLO with every ``known_trip_count`` annotation stripped
+    must analyze IDENTICALLY (trip count recovered from the loop
+    condition's ``counter < N`` bound). Before that fallback existed,
+    an un-annotated scanned body silently counted once."""
+    import re
+
+    from repro.core.fl import FLConfig, init_fl_state, make_fl_round
+    from repro.core.mixing import make_dense_gossip
+    from repro.core.topology import metropolis_weights, ring_graph
+
+    n, din, dh, q, batch = 4, 32, 64, 4, 8
+    key = jax.random.key(0)
+    params = {
+        "w1": jax.random.normal(key, (n, din, dh), jnp.float32),
+        "w2": jax.random.normal(key, (n, dh, 2), jnp.float32),
+    }
+
+    def loss_fn(p, b):
+        x, y = b
+        h = jnp.tanh(x @ p["w1"])
+        return jnp.mean((h @ p["w2"] - y) ** 2)
+
+    gossip = make_dense_gossip(metropolis_weights(ring_graph(n)))
+    cfg = FLConfig(algorithm="dsgd", q=q, n_nodes=n)
+    state = init_fl_state(cfg, params)
+    round_fn = make_fl_round(
+        loss_fn, gossip, schedule=lambda s: jnp.float32(0.01), cfg=cfg)
+    batches = (jnp.zeros((q, n, batch, din)), jnp.zeros((q, n, batch, 2)))
+    text = _compile(round_fn, state, batches).as_text()
+
+    # hand count, per local step, all n nodes:
+    #   forward   x@w1 (2*n*B*dh*din) + h@w2 (2*n*B*2*dh)
+    #   backward  dlogits@w2^T (2*n*B*dh*2)   [dx of layer 2]
+    #             x^T@dh (2*n*din*dh*B)       [dw1]
+    #             h^T@dlogits (2*n*dh*2*B)    [dw2]
+    #   (no dx for layer 1: x is data, grads are wrt params only)
+    per_step = (2 * n * batch * dh * din + 2 * n * batch * 2 * dh
+                + 2 * n * batch * dh * 2 + 2 * n * din * dh * batch
+                + 2 * n * dh * 2 * batch)
+    # gossip mix: W (n,n) @ params (n, total); XLA concatenates the two
+    # leaves into one (n, din*dh + dh*2) operand
+    total = din * dh + dh * 2
+    hand_dots = q * per_step + 2 * n * n * total
+
+    a = analyze_hlo(text)
+    # analyzer = exact dot flops + a 1-flop/elem fusion estimate on top
+    assert a.flops >= hand_dots
+    assert a.flops <= hand_dots * 1.25
+
+    stripped = re.sub(r'"?known_trip_count"?\s*:\s*\{[^}]*\},?', "", text)
+    assert "known_trip_count" not in stripped
+    a_inferred = analyze_hlo(stripped)
+    assert a_inferred.flops == a.flops
+    assert a_inferred.traffic_bytes == a.traffic_bytes
+
+
 def test_traffic_includes_loop_body():
     def f_scan(x):
         def body(h, _):

@@ -1,0 +1,274 @@
+"""Consensus snapshot path: mmap round trip, hot-swap, staleness.
+
+The contracts under test (ISSUE 9 tentpole):
+* save -> mmap-load -> BITWISE-equal consensus params, through zero-copy
+  views (no materialized pytree copy for storage-dtype leaves);
+* hot-swap while a decode batch is in flight: outputs match a no-swap
+  oracle up to the swap boundary, the post-swap continuation matches an
+  oracle stepping the NEW weights from the boundary caches, and nothing
+  is dropped;
+* staleness metric == training frontier minus snapshot round, exactly.
+"""
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_config
+from repro.core.engine import get_engine
+from repro.core.packing import pack
+from repro.core.topology import metropolis_weights, ring_graph
+from repro.models import build_model
+from repro.serving.engine import ServeEngine
+from repro.training.checkpoint import engine_manifest
+from repro.training.snapshot import (
+    latest_round,
+    load_snapshot,
+    snapshot_paths,
+    write_snapshot,
+)
+
+
+@pytest.fixture(scope="module")
+def tiny():
+    cfg = get_config("tinyllama-1.1b", smoke=True)
+    bundle = build_model(cfg)
+    params = bundle.init_fn(jax.random.key(0))
+    return cfg, bundle, params
+
+
+def _stack(params, n, scale):
+    """Node-stack a single-model pytree with per-node perturbations."""
+    return jax.tree_util.tree_map(
+        lambda x: jnp.stack([x * (1.0 + scale * i) for i in range(n)]),
+        params)
+
+
+def test_snapshot_mmap_bitwise_roundtrip(tmp_path, tiny):
+    cfg, bundle, params = tiny
+    n = 4
+    stacked = _stack(params, n, 0.01)
+    flat, layout = pack(stacked, pad_to=512)
+    write_snapshot(str(tmp_path), flat, layout, round_frontier=5)
+
+    snap = load_snapshot(str(tmp_path), verify=True)
+    assert snap.round_frontier == 5
+    expect = jax.tree_util.tree_map(lambda x: np.asarray(x.mean(axis=0)),
+                                    stacked)
+    # the consensus reduction ran over the FLAT buffer; per-leaf mean of
+    # fp32 leaves is the same contiguous columns, bitwise
+    expect_flat = np.asarray(flat.mean(axis=0))
+    got, exp = jax.tree_util.tree_flatten(snap.params)[0], \
+        jax.tree_util.tree_flatten(expect)[0]
+    assert len(got) == len(exp)
+    for g, e in zip(got, exp):
+        assert g.dtype == e.dtype
+        np.testing.assert_array_equal(np.asarray(g), e)
+    np.testing.assert_array_equal(np.asarray(snap.flat), expect_flat)
+
+    # template-driven load restores the exact container structure
+    tmpl = jax.tree_util.tree_map(
+        lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), params)
+    snap_t = load_snapshot(str(tmp_path), template=tmpl)
+    assert (jax.tree_util.tree_structure(snap_t.params)
+            == jax.tree_util.tree_structure(params))
+
+
+def test_snapshot_views_are_zero_copy(tmp_path, tiny):
+    """fp32 leaves must be views into the mmap'd blob -- no staging
+    copy. (astype is reserved for dtype-mismatched leaves.)"""
+    cfg, bundle, params = tiny
+    stacked = _stack(params, 2, 0.1)
+    flat, layout = pack(stacked, pad_to=512)
+    write_snapshot(str(tmp_path), flat, layout, round_frontier=1)
+    snap = load_snapshot(str(tmp_path))
+    for leaf in jax.tree_util.tree_leaves(snap.params):
+        bases = []
+        b = leaf
+        while getattr(b, "base", None) is not None:
+            bases.append(b)
+            b = b.base
+        assert any(isinstance(x, np.memmap) for x in bases), (
+            f"leaf is a copy, not an mmap view: {type(leaf)}")
+
+
+def test_snapshot_header_round_spec_matches_checkpoint_manifest(tmp_path):
+    """The five-axis round spec in a snapshot header is the SAME record
+    a checkpoint manifest carries (one codepath: engine_manifest)."""
+    n = 4
+    key = jax.random.key(1)
+    params = {"w": jax.random.normal(key, (n, 96), jnp.float32)}
+    flat, layout = pack(params, pad_to=512)
+    w = metropolis_weights(ring_graph(n))
+    eng = get_engine("fused")(w, layout, impl="jnp")
+    write_snapshot(str(tmp_path), flat, layout, round_frontier=3, engine=eng)
+    snap = load_snapshot(str(tmp_path))
+    assert snap.header["round_spec"] == engine_manifest(eng)
+    assert snap.header["round_spec"]["engine"] == "fused"
+
+
+def test_snapshot_publish_is_versioned_and_atomic(tmp_path):
+    key = jax.random.key(2)
+    params = {"w": jax.random.normal(key, (2, 64), jnp.float32)}
+    flat, layout = pack(params)
+    write_snapshot(str(tmp_path), flat, layout, round_frontier=1)
+    write_snapshot(str(tmp_path), 2.0 * flat, layout, round_frontier=2)
+    assert latest_round(str(tmp_path)) == 2
+    # older rounds stay immutable and loadable after a newer publish
+    old = load_snapshot(str(tmp_path), round_frontier=1)
+    new = load_snapshot(str(tmp_path))
+    np.testing.assert_array_equal(2.0 * np.asarray(old.flat),
+                                  np.asarray(new.flat))
+    # no torn temp files left behind
+    import os
+
+    leftovers = [f for f in os.listdir(tmp_path) if ".tmp." in f]
+    assert leftovers == []
+
+
+def test_hot_swap_in_flight_matches_boundary_oracles(tiny):
+    """Publish new weights while a decode batch is in flight: the decode
+    output must equal the OLD-weights oracle up to the swap boundary and
+    the NEW-weights-from-boundary-caches oracle after it, with no steps
+    dropped and the caches carried across the swap untouched."""
+    cfg, bundle, params_a = tiny
+    params_b = jax.tree_util.tree_map(lambda x: x * 1.05, params_a)
+    b, p, n_steps, k_swap = 2, 4, 10, 6
+    rng = np.random.default_rng(3)
+    prompt = jnp.asarray(rng.integers(0, cfg.vocab_size, (b, p)), jnp.int32)
+
+    def greedy(logits):
+        masked = np.asarray(logits, np.float32)[:, :cfg.vocab_size]
+        return jnp.asarray(np.argmax(masked, -1), jnp.int32)
+
+    # ---- oracle A: no swap, params_a throughout
+    eng_a = ServeEngine(bundle, params_a, max_seq=64, batch=b)
+    caches = eng_a.new_caches()
+    logits = None
+    for t in range(p):
+        logits, caches, _ = eng_a.decode_step(prompt[:, t], caches)
+    oracle_a, cur = [], greedy(logits)
+    caches_at_boundary = None
+    for i in range(n_steps):
+        if i == k_swap:
+            caches_at_boundary = jax.tree_util.tree_map(
+                lambda x: x, caches)  # snapshot the boundary caches
+            cur_at_boundary = cur
+        oracle_a.append(np.asarray(cur))
+        logits, caches, _ = eng_a.decode_step(cur, caches)
+        cur = greedy(logits)
+
+    # ---- oracle B: params_b from the boundary caches onward
+    eng_b = ServeEngine(bundle, params_b, max_seq=64, batch=b)
+    oracle_b, caches, cur = [], caches_at_boundary, cur_at_boundary
+    for i in range(k_swap, n_steps):
+        oracle_b.append(np.asarray(cur))
+        logits, caches, _ = eng_b.decode_step(cur, caches)
+        cur = greedy(logits)
+
+    # ---- live run: swap lands at the k_swap boundary mid-batch
+    eng = ServeEngine(bundle, params_a, max_seq=64, batch=b,
+                      snapshot_round=1)
+    caches = eng.new_caches()
+    for t in range(p):
+        logits, caches, swapped = eng.decode_step(prompt[:, t], caches)
+        assert not swapped
+    live, cur = [], greedy(logits)
+    for i in range(n_steps):
+        if i == k_swap:
+            # published from "outside" between steps -- the engine must
+            # promote it at this boundary without touching the caches
+            eng.publish(params_b, snapshot_round=2)
+        live.append(np.asarray(cur))
+        logits, caches, swapped = eng.decode_step(cur, caches)
+        assert swapped == (i == k_swap)
+        cur = greedy(logits)
+
+    assert eng.swap_count == 1
+    assert eng.snapshot_round == 2
+    assert len(eng.swap_pauses) == 1
+    assert len(live) == n_steps, "steps were dropped across the swap"
+    # pre-boundary: identical to the no-swap oracle
+    for i in range(k_swap):
+        np.testing.assert_array_equal(live[i], oracle_a[i])
+    # the swap changed the trajectory (params_b differs enough)
+    # post-boundary: identical to new-weights-from-boundary oracle
+    for j, i in enumerate(range(k_swap, n_steps)):
+        np.testing.assert_array_equal(live[i], oracle_b[j])
+
+
+def test_generate_promotes_pending_at_step_boundary(tiny):
+    """generate() picks up a mid-flight publish at the next step
+    boundary and records it in swap_steps; the result keeps every
+    requested token."""
+    cfg, bundle, params_a = tiny
+    params_b = jax.tree_util.tree_map(lambda x: x * 0.95, params_a)
+    eng = ServeEngine(bundle, params_a, max_seq=64, batch=1)
+    prompts = np.ones((1, 3), np.int32)
+
+    orig = eng.decode_step
+    calls = {"n": 0}
+
+    def hooked(tokens, caches):
+        out = orig(tokens, caches)
+        calls["n"] += 1
+        if calls["n"] == 5:  # publish AFTER step index 4 completes
+            eng.publish(params_b, snapshot_round=9)
+        return out
+
+    eng.decode_step = hooked
+    out = eng.generate(prompts, max_new_tokens=8, temperature=0.0)
+    assert out.tokens.shape == (1, 3 + 8)
+    assert out.steps == 3 + 8
+    assert eng.swap_count == 1
+    assert out.swap_steps == (5,)
+    assert eng.snapshot_round == 9
+
+
+def test_staleness_is_exactly_frontier_minus_round(tmp_path, tiny):
+    cfg, bundle, params = tiny
+    stacked = _stack(params, 2, 0.01)
+    flat, layout = pack(stacked, pad_to=512)
+    write_snapshot(str(tmp_path), flat, layout, round_frontier=7)
+    snap = load_snapshot(str(tmp_path))
+
+    eng = ServeEngine.from_snapshot(bundle, snap, max_seq=32, batch=1)
+    assert eng.snapshot_round == 7
+    assert eng.staleness(7) == 0
+    assert eng.staleness(12) == 5
+
+    write_snapshot(str(tmp_path), flat, layout, round_frontier=9)
+    eng.publish_snapshot(load_snapshot(str(tmp_path)))
+    assert eng.staleness(12) == 5, "pending snapshot must not change " \
+        "staleness before the swap boundary"
+    eng._maybe_swap()
+    assert eng.staleness(12) == 3
+    assert eng.staleness(9) == 0
+
+    # raw-params engines have no round: staleness undefined, not 0
+    eng2 = ServeEngine(bundle, params, max_seq=32, batch=1)
+    assert eng2.staleness(5) is None
+
+
+def test_from_snapshot_serves_greedy(tmp_path, tiny):
+    """End-to-end: stacked params -> snapshot -> mmap -> ServeEngine
+    generates, and matches an engine built from the in-memory consensus."""
+    cfg, bundle, params = tiny
+    stacked = _stack(params, 4, 0.02)
+    flat, layout = pack(stacked, pad_to=512)
+    write_snapshot(str(tmp_path), flat, layout, round_frontier=11)
+    tmpl = jax.tree_util.tree_map(
+        lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), params)
+    snap = load_snapshot(str(tmp_path), template=tmpl)
+
+    eng = ServeEngine.from_snapshot(bundle, snap, max_seq=64, batch=2)
+    rng = np.random.default_rng(4)
+    prompts = rng.integers(0, cfg.vocab_size, (2, 6)).astype(np.int32)
+    out = eng.generate(prompts, max_new_tokens=5, temperature=0.0)
+
+    consensus = jax.tree_util.tree_map(lambda x: x.mean(axis=0), stacked)
+    ref = ServeEngine(bundle, consensus, max_seq=64, batch=2)
+    out_ref = ref.generate(prompts, max_new_tokens=5, temperature=0.0)
+    np.testing.assert_array_equal(out.tokens, out_ref.tokens)
