@@ -18,6 +18,10 @@ Public API:
                 noise in the wire-stage epilogue as the fifth round axis
                 (WHAT a neighbor can read), with (epsilon, delta) moments
                 accounting
+    scope     — FederationScope registry: partial-parameter federation as
+                the sixth round axis (WHICH columns gossip touches) —
+                shared-backbone gossip with per-node private heads
+                ('backbone' / 'ranges:' / 'layerwise:freq=')
     fl        — FLState + DSGD/DSGT/FD round builders + baselines
     schedules — alpha^r schedules (paper's 0.02/sqrt(r), Theorem 1 rate, ...)
 """
@@ -82,6 +86,18 @@ from repro.core.fl import (
     init_fl_state,
     make_fl_round,
 )
+from repro.core.scope import (
+    BackboneScope,
+    FederationScope,
+    FullScope,
+    LayerwiseScope,
+    RangesScope,
+    get_scope,
+    parse_scope,
+    register_scope,
+    resolve_scope,
+    scope_names,
+)
 from repro.core.privacy import (
     PrivacySpec,
     analytic_epsilon,
@@ -105,6 +121,7 @@ from repro.core.packing import (
     flat_wire_bytes_per_shard,
     pack,
     pack_like,
+    scoped_layout,
     unpack,
 )
 from repro.core.topology import (
@@ -134,6 +151,7 @@ __all__ = [
     "flat_wire_bytes_per_shard",
     "pack",
     "pack_like",
+    "scoped_layout",
     "unpack",
     "make_dense_flat_mix",
     "FLConfig",
@@ -181,6 +199,16 @@ __all__ = [
     "PrivacySpec",
     "parse_privacy",
     "resolve_privacy",
+    "FederationScope",
+    "FullScope",
+    "BackboneScope",
+    "RangesScope",
+    "LayerwiseScope",
+    "register_scope",
+    "get_scope",
+    "scope_names",
+    "parse_scope",
+    "resolve_scope",
     "rdp_epsilon",
     "analytic_epsilon",
     "compact_pos_dtype",

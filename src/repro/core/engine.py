@@ -123,6 +123,7 @@ from repro.core.packing import (
     pack,
     pack_layout,
     pack_like,
+    scoped_layout,
     unpack,
 )
 from repro.core.privacy import (
@@ -135,6 +136,12 @@ from repro.core.privacy import (
     mask_wire,
     pair_index,
     resolve_privacy,
+)
+from repro.core.scope import (
+    FULL as SCOPE_FULL,
+    FederationScope,
+    LayerwiseScope,
+    resolve_scope,
 )
 
 PyTree = Any
@@ -488,6 +495,14 @@ class GossipEngine(abc.ABC):
     #: override :attr:`_priv_rng`; the base engines carry the spec only
     #: so the checkpoint manifest can record/refuse it uniformly.
     privacy: PrivacySpec = PRIVACY_NONE
+    #: the engine's :class:`~repro.core.scope.FederationScope` -- the
+    #: SIXTH round axis (which bytes EXIST on the wire: the shared
+    #: sub-ranges of the flat buffer that gossip mixes; everything else
+    #: is a per-node private slice that stays bit-untouched). Engines
+    #: that realize it slice the wire stage to the shared columns; the
+    #: base engines carry the spec only so the checkpoint manifest can
+    #: record/refuse it uniformly.
+    scope: FederationScope = SCOPE_FULL
 
     # -- dynamic-round contract (topology + node programs) -----------------
 
@@ -515,6 +530,14 @@ class GossipEngine(abc.ABC):
         Base engines never do; the fused engines override."""
         return False
 
+    @property
+    def _scope_round(self) -> bool:
+        """True when the scope gates per-round behaviour on the round
+        counter (``layerwise:freq=``) -- the engine then carries the
+        shared ``topo_round`` counter in ``FLState.comm`` even under a
+        static topology, so restores replay the identical gate phase."""
+        return self.scope.needs_round
+
     def _topo_keys(self) -> Tuple[str, ...]:
         """Comm keys the dynamic programs contribute: the shared round
         counter (round index the NEXT comm step will mix under), the
@@ -523,7 +546,7 @@ class GossipEngine(abc.ABC):
         checkpointed, so a mid-churn / mid-outage / mid-noise restore
         replays the identical round sequence."""
         keys: Tuple[str, ...] = ()
-        if self.dynamic_round or self._priv_rng:
+        if self.dynamic_round or self._priv_rng or self._scope_round:
             keys += ("topo_round",)
         if self.dynamic_topology:
             keys += ("topo_key",) + self.topology_program.state_keys()
@@ -601,15 +624,15 @@ class GossipEngine(abc.ABC):
         return w_off_r, w_diag_r, new_comm, metrics
 
     def _priv_comm(self, comm: Dict[str, jnp.ndarray]) -> Dict[str, jnp.ndarray]:
-        """The advanced privacy counter entries for STATIC rounds (a
-        dynamic round advances ``topo_round`` in :meth:`_round_gates`,
+        """The advanced privacy/scope counter entries for STATIC rounds
+        (a dynamic round advances ``topo_round`` in :meth:`_round_gates`,
         which also passes ``priv_key`` through)."""
-        if not self._priv_rng or self.dynamic_round:
+        if self.dynamic_round or not (self._priv_rng or self._scope_round):
             return {}
-        return {
-            "topo_round": comm["topo_round"] + 1,
-            "priv_key": comm["priv_key"],
-        }
+        out: Dict[str, jnp.ndarray] = {"topo_round": comm["topo_round"] + 1}
+        if self._priv_rng:
+            out["priv_key"] = comm["priv_key"]
+        return out
 
     def make_step_mask(self, cfg: FLConfig):
         """The heterogeneous-compute hook for ``_assemble_round``: None
@@ -940,8 +963,9 @@ class TreeEngine(GossipEngine):
     def simulated(cls, w: np.ndarray, stacked_params: PyTree, *,
                   wire_dtype=None, topk=None, round_schedule=None,
                   storage_dtype=None, topology_program=None,
-                  node_program=None, privacy=None, **_ignored):
+                  node_program=None, privacy=None, scope=None, **_ignored):
         """Single-host build: dense-W backend; state stays the input tree."""
+        _reject_scope(scope, cls.name)
         _reject_topk(topk, cls.name)
         _require_sequential(round_schedule, cls.name)
         _reject_storage_dtype(storage_dtype, cls.name)
@@ -965,7 +989,8 @@ class TreeEngine(GossipEngine):
                   *, specs=None, wire_dtype=None, axes_subset=None,
                   topk=None, round_schedule=None, storage_dtype=None,
                   topology_program=None, node_program=None, privacy=None,
-                  **_ignored):
+                  scope=None, **_ignored):
+        _reject_scope(scope, cls.name)
         _reject_topk(topk, cls.name)
         _require_sequential(round_schedule, cls.name)
         _reject_storage_dtype(storage_dtype, cls.name)
@@ -1073,7 +1098,8 @@ class FlatEngine(GossipEngine):
                   scale_chunk: int = 1, wire_dtype=None, topk=None,
                   round_schedule=None, storage_dtype=None,
                   topology_program=None, node_program=None, privacy=None,
-                  **_ignored):
+                  scope=None, **_ignored):
+        _reject_scope(scope, cls.name)
         _reject_topk(topk, cls.name)
         _require_sequential(round_schedule, cls.name)
         prog = resolve_program(topology_program).bind(w)
@@ -1088,7 +1114,8 @@ class FlatEngine(GossipEngine):
                   *, wire_dtype=None, axes_subset=None, scale_chunk: int = 512,
                   topk=None, round_schedule=None, storage_dtype=None,
                   topology_program=None, node_program=None, privacy=None,
-                  **_ignored):
+                  scope=None, **_ignored):
+        _reject_scope(scope, cls.name)
         _reject_topk(topk, cls.name)
         _require_sequential(round_schedule, cls.name)
         _reject_privacy(
@@ -1180,6 +1207,21 @@ def _reject_privacy(privacy, name: str, reason: str) -> PrivacySpec:
     return p
 
 
+def _reject_scope(scope, name: str) -> FederationScope:
+    """Resolve a federation-scope spec and refuse non-full scopes on
+    engines whose wire cannot slice the buffer (returns the resolved
+    FULL scope otherwise, same discipline as the other axis rejects)."""
+    s = resolve_scope(scope)
+    if not s.is_full:
+        raise ValueError(
+            f"federation scope {s.spec()!r}: the {name!r} engine ships "
+            "the whole state through a baked exact-wire backend (no "
+            "column slicing) -- use the 'fused' engine, or "
+            "'sharded_fused' for sub-range scopes on the mesh wire"
+        )
+    return s
+
+
 def _reject_dp(privacy, name: str, reason: str) -> PrivacySpec:
     """Resolve a privacy spec, allowing ``secure_agg`` (a no-op where
     no per-edge payload ever exists to read) but refusing DP on engines
@@ -1236,7 +1278,7 @@ class _FusedBase(GossipEngine):
                  topk: Optional[int] = None, error_feedback: bool = True,
                  difference_coding: bool = True, impl: str = "pallas",
                  round_schedule=None, topology_program=None,
-                 node_program=None, privacy=None):
+                 node_program=None, privacy=None, scope=None):
         if impl not in ("pallas", "jnp"):
             raise ValueError(f"unknown impl {impl!r}")
         if scale_chunk < 1:
@@ -1273,6 +1315,143 @@ class _FusedBase(GossipEngine):
                 "wire-stage epilogue); build the engine with "
                 "error_feedback=True or drop the dp token"
             )
+        self.scope = resolve_scope(scope)
+        # -- scoped geometry: which COLUMNS of the flat buffer the wire
+        # sees. A sub-range scope (backbone / ranges) gathers the shared
+        # columns into a contiguous chunk-aligned wire buffer, runs the
+        # UNMODIFIED wire kernels on it, and scatters the mixed result
+        # back around the untouched private columns -- so recon /
+        # residual / collectives / wire bytes all shrink to the shared
+        # slice. The layerwise scope keeps the full wire (bytes
+        # unchanged, recon stays consistent) and gates only the
+        # head-column MIX on the traced round counter.
+        self._scoped = not self.scope.is_full and not self.scope.needs_round
+        self._gate_mask = None
+        if self._scoped:
+            shared = self.scope.shared_ranges(layout)
+            self._wire_layout, self._local_ranges = scoped_layout(
+                layout, shared, scale_chunk
+            )
+            self._local_shared = sum(b - a for a, b in self._local_ranges)
+            self._local_padded = self._wire_layout.shard_width
+        else:
+            self._wire_layout = layout
+            self._local_ranges = ((0, layout.shard_width),)
+            self._local_shared = self._local_padded = layout.shard_width
+            if isinstance(self.scope, LayerwiseScope):
+                gate = np.zeros((1, layout.total), np.bool_)
+                for a, b in self.scope.gate_ranges(layout):
+                    gate[:, a:b] = True
+                self._gate_mask = jnp.asarray(gate)
+
+    # -- scope hooks --------------------------------------------------------
+
+    @property
+    def wire_layout(self) -> FlatLayout:
+        """The layout the WIRE operates at: ``layout`` itself for the
+        full / layerwise scopes, the gathered shared-slice layout for
+        sub-range scopes. Comm-state widths, wire-byte accounting, and
+        DP noise all derive from this, so a scoped wire shrinks every
+        one of them proportionally."""
+        return self._wire_layout
+
+    def _scope_shards(self, width: int) -> int:
+        """How many shard tiles a buffer of trailing ``width`` spans.
+
+        The scoped ranges are PER-SHARD (``scoped_layout`` guarantees
+        uniformity); a full-width row (the fused dense path) repeats
+        them across every shard, a per-tile row (the shard_map body)
+        carries exactly one copy. Width disambiguates: with shards > 1
+        the tile width ``shard_width`` differs from ``total``."""
+        return 1 if width == self.layout.shard_width else self.layout.shards
+
+    def _gather_cols(self, x: jnp.ndarray) -> jnp.ndarray:
+        """Gather the SHARED columns of a buffer row-block (full-width
+        or one shard tile) into the contiguous wire buffer, repeating
+        the per-shard ranges across shards and zero-padding each
+        shard's slice to the chunk multiple (padding behaves exactly
+        like the layout's structural tail padding -- zero forever, zero
+        wire mass)."""
+        if not self._scoped:
+            return x
+        sw = self.layout.shard_width
+        pad = self._local_padded - self._local_shared
+        segs = []
+        for s in range(self._scope_shards(x.shape[-1])):
+            base = s * sw
+            segs.extend(
+                jax.lax.slice_in_dim(x, base + a, base + b, axis=-1)
+                for a, b in self._local_ranges
+            )
+            if pad:
+                segs.append(jnp.zeros(x.shape[:-1] + (pad,), x.dtype))
+        return jnp.concatenate(segs, axis=-1)
+
+    def _scatter_cols(self, local_full: jnp.ndarray,
+                      mixed_scoped: jnp.ndarray) -> jnp.ndarray:
+        """Interleave the mixed SHARED columns back into the locally
+        updated full-width row-block: private columns come bit-untouched
+        from ``local_full``, shared columns from the wire's mix (the
+        wire buffer's zero per-shard tail padding is dropped)."""
+        sw = self.layout.shard_width
+        segs = []
+        for s in range(self._scope_shards(local_full.shape[-1])):
+            base = s * sw
+            pos_full = base
+            pos_s = s * self._local_padded
+            for a, b in self._local_ranges:
+                if base + a > pos_full:
+                    segs.append(jax.lax.slice_in_dim(
+                        local_full, pos_full, base + a, axis=-1))
+                segs.append(jax.lax.slice_in_dim(
+                    mixed_scoped, pos_s, pos_s + (b - a), axis=-1))
+                pos_s += b - a
+                pos_full = base + b
+            if pos_full < base + sw:
+                segs.append(jax.lax.slice_in_dim(
+                    local_full, pos_full, base + sw, axis=-1))
+        return jnp.concatenate(segs, axis=-1)
+
+    def _scope_finish(self, mixed_s: jnp.ndarray, x: jnp.ndarray,
+                      g: jnp.ndarray, alpha, fire=None) -> jnp.ndarray:
+        """DSGD round epilogue under a scope: rebuild the full-width fp32
+        params from the kernel's mixed output. Sub-range scopes scatter
+        the (wire-width) mix around the private columns' plain local
+        update ``x - alpha g``; the layerwise scope SELECTS the local
+        update on the gated head columns when the round does not fire
+        (an exact where, so non-firing rounds leave the head bit-equal
+        to a never-gossiped trajectory). Full scope is the identity."""
+        if not self._scoped and fire is None:
+            return mixed_s
+        local = self._f32(x) - alpha * self._f32(g)
+        if self._scoped:
+            return self._scatter_cols(local, mixed_s)
+        return jnp.where(self._gate_mask & ~fire, local, mixed_s)
+
+    def _scope_finish_gt(self, mx_s: jnp.ndarray, mt_s: jnp.ndarray,
+                         x: jnp.ndarray, t: jnp.ndarray, g: jnp.ndarray,
+                         gp: jnp.ndarray, alpha, fire=None):
+        """DSGT twin of :meth:`_scope_finish`: the private columns'
+        tracker follows the unmixed recursion ``t + g - g_prev`` and the
+        params follow ``x - alpha * tracker`` -- identical to what the
+        kernel computes on those columns minus the W contraction."""
+        if not self._scoped and fire is None:
+            return mx_s, mt_s
+        th = self._f32(t) + self._f32(g) - self._f32(gp)
+        xl = self._f32(x) - alpha * th
+        if self._scoped:
+            return self._scatter_cols(xl, mx_s), self._scatter_cols(th, mt_s)
+        keep = self._gate_mask & ~fire
+        return jnp.where(keep, xl, mx_s), jnp.where(keep, th, mt_s)
+
+    def _scope_fire(self, comm: Dict[str, jnp.ndarray]):
+        """The layerwise scope's traced gate for THIS round (None when
+        the scope never gates) -- derived from the checkpointed round
+        counter, so one compiled round serves every phase of the
+        frequency."""
+        if not self._scope_round:
+            return None
+        return self.scope.fire(comm["topo_round"])
 
     # -- privacy hooks ------------------------------------------------------
 
@@ -1312,7 +1491,7 @@ class _FusedBase(GossipEngine):
         stream = NOISE_STREAM + (TRACKER_STREAM_OFFSET if tracker else 0)
         return dp_noise(
             comm["priv_key"], comm["topo_round"], jnp.arange(n),
-            self.layout.total, self._noise_scale(), stream=stream,
+            self.wire_layout.total, self._noise_scale(), stream=stream,
         )
 
     def _privacy_metrics(self, cfg: FLConfig, new_state: FLState):
@@ -1406,8 +1585,11 @@ class _FusedBase(GossipEngine):
         )
 
     def _edge_bytes(self) -> int:
-        """Wire bytes one node ships to ONE neighbor per wire per round."""
-        return flat_wire_bytes(self.layout, 1, self.scale_chunk, self.topk)
+        """Wire bytes one node ships to ONE neighbor per wire per round
+        (the SCOPED wire width -- a sub-range scope shrinks it)."""
+        return flat_wire_bytes(
+            self.wire_layout, 1, self.scale_chunk, self.topk
+        )
 
     # -- narrow-storage helpers --------------------------------------------
     #
@@ -1479,7 +1661,9 @@ class FusedEngine(_FusedBase):
     def comm_state_sds(
         self, cfg: FLConfig
     ) -> Optional[Dict[str, jax.ShapeDtypeStruct]]:
-        n, t = cfg.n_nodes, self.layout.total
+        # wire state (recon / residual / in-flight rings) lives at the
+        # SCOPED wire width: a sub-range scope shrinks every buffer
+        n, t = cfg.n_nodes, self.wire_layout.total
         rd = self._ring_depth()
         topo = self._topo_sds()
 
@@ -1549,12 +1733,20 @@ class FusedEngine(_FusedBase):
             dpkw = dict(self._dp_kwargs())
             if dp:
                 dpkw["dp_noise"] = self._dp_noise_full(state.comm, n)
+            # Scope: the kernel runs UNCHANGED on the gathered shared
+            # columns; private columns never enter it and are rebuilt by
+            # _scope_finish[_gt] from the plain local update.
+            fire = self._scope_fire(state.comm)
 
             if cfg.algorithm == "dsgd":
                 mixed, recon, res, _ = fused_round(
-                    self._f32(state.params), grads, state.comm["recon"],
+                    self._gather_cols(self._f32(state.params)),
+                    self._gather_cols(grads), state.comm["recon"],
                     state.comm["residual"], w_off_r, w_self_r, alpha,
                     **kw, **dpkw,
+                )
+                mixed = self._scope_finish(
+                    mixed, state.params, grads, alpha, fire
                 )
                 new_state = state._replace(
                     step=step, params=self._st(mixed),
@@ -1566,11 +1758,17 @@ class FusedEngine(_FusedBase):
                         state.comm, n, tracker=True
                     )
                 mx, mt, nrx, nsx, nrt, nst, _, _ = fused_round_gt(
-                    self._f32(state.params), self._f32(state.tracker),
-                    grads, self._f32(state.prev_grad),
+                    self._gather_cols(self._f32(state.params)),
+                    self._gather_cols(self._f32(state.tracker)),
+                    self._gather_cols(grads),
+                    self._gather_cols(self._f32(state.prev_grad)),
                     state.comm["recon"], state.comm["residual"],
                     state.comm["recon_t"], state.comm["residual_t"],
                     w_off_r, w_self_r, alpha, **kw, **dpkw,
+                )
+                mx, mt = self._scope_finish_gt(
+                    mx, mt, state.params, state.tracker, grads,
+                    state.prev_grad, alpha, fire,
                 )
                 new_state = FLState(
                     step=step, params=self._st(mx), tracker=self._st(mt),
@@ -1661,15 +1859,20 @@ class FusedEngine(_FusedBase):
             dpkw = dict(self._dp_kwargs())
             if dp:
                 dpkw["dp_noise"] = self._dp_noise_full(state.comm, n)
+            fire = self._scope_fire(state.comm)
 
             c = state.comm
             if cfg.algorithm == "dsgd":
                 h, q, sc, nrecon, nres = wire_stage(
-                    self._f32(state.params), grads, c["recon"],
+                    self._gather_cols(self._f32(state.params)),
+                    self._gather_cols(grads), c["recon"],
                     c["residual"], alpha32, **kw, **dpkw,
                 )
                 mix = stale_recon(c["recon"], c["wire_q"], c["wire_scales"])
-                mixed = self._st(w_off_r @ mix + w_self_r[:, None] * h)
+                mixed = self._st(self._scope_finish(
+                    w_off_r @ mix + w_self_r[:, None] * h,
+                    state.params, grads, alpha32, fire,
+                ))
                 nwq, nwsc = push(c["wire_q"], c["wire_scales"], q, sc)
                 new_state = state._replace(
                     step=step, params=mixed,
@@ -1683,8 +1886,10 @@ class FusedEngine(_FusedBase):
                     )
                 (h, t_half, qx, scx, nrx, nsx, qt, sct, nrt, nst) = (
                     wire_stage_gt(
-                        self._f32(state.params), self._f32(state.tracker),
-                        grads, self._f32(state.prev_grad),
+                        self._gather_cols(self._f32(state.params)),
+                        self._gather_cols(self._f32(state.tracker)),
+                        self._gather_cols(grads),
+                        self._gather_cols(self._f32(state.prev_grad)),
                         c["recon"], c["residual"], c["recon_t"],
                         c["residual_t"], alpha32, **kw, **dpkw,
                     )
@@ -1693,10 +1898,14 @@ class FusedEngine(_FusedBase):
                 mix_t = stale_recon(
                     c["recon_t"], c["wire_q_t"], c["wire_scales_t"]
                 )
-                mixed_x = self._st(w_off_r @ mix_x + w_self_r[:, None] * h)
-                mixed_t = self._st(
-                    w_off_r @ mix_t + w_self_r[:, None] * t_half
+                mixed_x, mixed_t = self._scope_finish_gt(
+                    w_off_r @ mix_x + w_self_r[:, None] * h,
+                    w_off_r @ mix_t + w_self_r[:, None] * t_half,
+                    state.params, state.tracker, grads, state.prev_grad,
+                    alpha32, fire,
                 )
+                mixed_x = self._st(mixed_x)
+                mixed_t = self._st(mixed_t)
                 nwq, nwsc = push(c["wire_q"], c["wire_scales"], qx, scx)
                 nwqt, nwsct = push(
                     c["wire_q_t"], c["wire_scales_t"], qt, sct
@@ -1744,7 +1953,7 @@ class FusedEngine(_FusedBase):
                   error_feedback: bool = True, difference_coding: bool = True,
                   wire_dtype=None, round_schedule=None, storage_dtype=None,
                   topology_program=None, node_program=None, privacy=None,
-                  **_ignored):
+                  scope=None, **_ignored):
         _reject_wire_dtype(wire_dtype)
         flat, layout = pack(stacked_params, pad_to=scale_chunk,
                             buffer_dtype=storage_dtype or jnp.float32)
@@ -1753,7 +1962,8 @@ class FusedEngine(_FusedBase):
                    difference_coding=difference_coding,
                    round_schedule=round_schedule,
                    topology_program=topology_program,
-                   node_program=node_program, privacy=privacy), flat
+                   node_program=node_program, privacy=privacy,
+                   scope=scope), flat
 
     @classmethod
     def from_mesh(cls, mesh: Mesh, node_axes: Sequence[str], stacked_sds,
@@ -1762,7 +1972,7 @@ class FusedEngine(_FusedBase):
                   difference_coding: bool = True, self_weight=None,
                   round_schedule=None, storage_dtype=None,
                   topology_program=None, node_program=None, privacy=None,
-                  **_ignored):
+                  scope=None, **_ignored):
         """Mesh build: W is the dense equivalent of the circulant torus the
         ppermute backend realizes over the node axes (directions restricted
         to ``axes_subset`` for hierarchical gossip). ``impl`` defaults to
@@ -1779,7 +1989,8 @@ class FusedEngine(_FusedBase):
                    difference_coding=difference_coding,
                    round_schedule=round_schedule,
                    topology_program=topology_program,
-                   node_program=node_program, privacy=privacy)
+                   node_program=node_program, privacy=privacy,
+                   scope=scope)
 
 
 @register_engine
@@ -1855,6 +2066,14 @@ class ShardedFusedEngine(_FusedBase):
         if layout.shards != self.model_shards:
             layout = layout.with_shards(self.model_shards)
         super().__init__(layout, **kw)
+        if isinstance(self.scope, LayerwiseScope):
+            raise ValueError(
+                f"federation scope {self.scope.spec()!r}: the layerwise "
+                "round-gated mix needs the dense in-kernel W contraction; "
+                "the sharded wire accumulates neighbor terms across "
+                "collectives -- use --fl-engine fused, or a static "
+                "sub-range scope ('backbone' / 'ranges:') here"
+            )
         if self.layout.shard_width % self.scale_chunk:
             raise ValueError(
                 f"per-shard width {self.layout.shard_width} not a multiple "
@@ -2060,7 +2279,9 @@ class ShardedFusedEngine(_FusedBase):
     def comm_state_sds(
         self, cfg: FLConfig
     ) -> Optional[Dict[str, jax.ShapeDtypeStruct]]:
-        n, t = cfg.n_nodes, self.layout.total
+        # every wire/EF/neighbor buffer lives at the SCOPED wire width
+        # (identical to layout.total under the full scope)
+        n, t = cfg.n_nodes, self.wire_layout.total
         n_chunks = t // self.scale_chunk
         pos_dtype = compact_pos_dtype(self.scale_chunk)
         topo = self._topo_sds()
@@ -2132,7 +2353,7 @@ class ShardedFusedEngine(_FusedBase):
         moves every column; ``compact=False`` is the equivalence baseline
         and the fallback for an uneconomic k)."""
         return flat_wire_bytes(
-            self.layout, 1, self.scale_chunk,
+            self.wire_layout, 1, self.scale_chunk,
             self.topk if self.compact_wire else None,
         )
 
@@ -2147,7 +2368,7 @@ class ShardedFusedEngine(_FusedBase):
         1/shards column slice of :meth:`_edge_bytes`, priced by the same
         boundary (``packing.flat_wire_bytes_per_shard``)."""
         return flat_wire_bytes_per_shard(
-            self.layout, 1, self.scale_chunk,
+            self.wire_layout, 1, self.scale_chunk,
             self.topk if self.compact_wire else None,
         )
 
@@ -2511,6 +2732,25 @@ class ShardedFusedEngine(_FusedBase):
                     nrt, nst = nrt - ddt, nst + ddt
                 return h, th, (qx, scx), nrx, nsx, (qt, sct), nrt, nst
 
+        if self._scoped:
+            # scoped wire: gather the SHARED columns of every per-tile
+            # buffer before the (unmodified) wire-stage kernel -- the
+            # whole produce path (quantize, top-k, EF, encodings) then
+            # runs at the wire width; the round bodies scatter the mixed
+            # result back around the untouched private columns.
+            produce_full, produce_gt_full = produce, produce_gt
+
+            def produce(x, g, *a, **k):
+                return produce_full(
+                    self._gather_cols(x), self._gather_cols(g), *a, **k
+                )
+
+            def produce_gt(x, t, g, gp, *a, **k):
+                return produce_gt_full(
+                    self._gather_cols(x), self._gather_cols(t),
+                    self._gather_cols(g), self._gather_cols(gp), *a, **k
+                )
+
         return produce, produce_gt
 
     # -- heterogeneous wire k ----------------------------------------------
@@ -2560,7 +2800,7 @@ class ShardedFusedEngine(_FusedBase):
         on a k_i-sized wire (the physical buffers stay topk-wide; jit
         shapes are static). Summed over nodes x degree x wires."""
         chunk = self.scale_chunk
-        n_chunks = self.layout.total // chunk
+        n_chunks = self.wire_layout.total // chunk
         k = kvec.reshape(-1).astype(jnp.float32)
         idx = k * jnp.dtype(compact_pos_dtype(chunk)).itemsize
         bb = bitmap_bytes_per_chunk(chunk)
@@ -2686,7 +2926,8 @@ class ShardedFusedEngine(_FusedBase):
                                             kvec=kvec)
             mix, new_nbrs = mix_one(wire, nbrs, adds, dgate, priv,
                                     PAD_STREAM)
-            out = (ddiag * h + mix, nrecon, nres) + new_nbrs
+            mixed = self._scope_finish(ddiag * h + mix, x, g, alpha)
+            out = (mixed, nrecon, nres) + new_nbrs
             return out + (wire if pipelined else ())
 
         def body_gt(x, t, g, gp, rx, sx, rt, st, *rest):
@@ -2706,8 +2947,11 @@ class ShardedFusedEngine(_FusedBase):
                                    PAD_STREAM)
             mix_t, new_t = mix_one(wire_t, nbrs_t, adds_t, dgate, priv,
                                    t_stream)
-            out = ((ddiag * h + mix_x, ddiag * t_half + mix_t,
-                    nrx, nsx, nrt, nst) + new_x + new_t)
+            mixed_x, mixed_t = self._scope_finish_gt(
+                ddiag * h + mix_x, ddiag * t_half + mix_t,
+                x, t, g, gp, alpha,
+            )
+            out = (mixed_x, mixed_t, nrx, nsx, nrt, nst) + new_x + new_t
             return out + ((wire_x + wire_t) if pipelined else ())
 
         sm_dsgd = _shard_map(
@@ -2912,7 +3156,8 @@ class ShardedFusedEngine(_FusedBase):
                                             *noises, kvec=kvec)
             mix, new_nbr = mix_one(wire, stale_wire, nbrs[0] if dc else None,
                                    w_row)
-            out = (ddiag * h + mix, nrecon, nres) + new_nbr
+            mixed = self._scope_finish(ddiag * h + mix, x, g, alpha)
+            out = (mixed, nrecon, nres) + new_nbr
             return out + (wire if pipelined else ())
 
         def body_gt(x, t, g, gp, rx, sx, rt, st, *rest):
@@ -2932,8 +3177,11 @@ class ShardedFusedEngine(_FusedBase):
                                    nbrs_x[0] if dc else None, w_row)
             mix_t, new_t = mix_one(wire_t, stale_t,
                                    nbrs_t[0] if dc else None, w_row)
-            out = ((ddiag * h + mix_x, ddiag * t_half + mix_t,
-                    nrx, nsx, nrt, nst) + new_x + new_t)
+            mixed_x, mixed_t = self._scope_finish_gt(
+                ddiag * h + mix_x, ddiag * t_half + mix_t,
+                x, t, g, gp, alpha,
+            )
+            out = (mixed_x, mixed_t, nrx, nsx, nrt, nst) + new_x + new_t
             return out + ((wire_x + wire_t) if pipelined else ())
 
         sm_dsgd = _shard_map(
@@ -3072,7 +3320,9 @@ class ShardedFusedEngine(_FusedBase):
             h, wire, nrecon, nres = produce(x, g, recon, res, alpha, *noises)
             mix_add = self._wire_mix(wire, w_off, priv=priv)
             new_mix = mix_recon + mix_add if dc else mix_add
-            mixed = self._self_weight(w_diag) * h + new_mix
+            mixed = self._scope_finish(
+                self._self_weight(w_diag) * h + new_mix, x, g, alpha
+            )
             return mixed, nrecon, nres, new_mix
 
         def body_gt(x, t, g, gp, rx, sx, mrx, rt, st, mrt, alpha, w_diag,
@@ -3087,8 +3337,10 @@ class ShardedFusedEngine(_FusedBase):
                                    stream_base=t_stream)
             new_mrx = mrx + mix_x if dc else mix_x
             new_mrt = mrt + mix_t if dc else mix_t
-            mixed_x = w_self * h + new_mrx
-            mixed_t = w_self * t_half + new_mrt
+            mixed_x, mixed_t = self._scope_finish_gt(
+                w_self * h + new_mrx, w_self * t_half + new_mrt,
+                x, t, g, gp, alpha,
+            )
             return mixed_x, mixed_t, nrx, nsx, new_mrx, nrt, nst, new_mrt
 
         rep = P(None, None)
@@ -3258,7 +3510,9 @@ class ShardedFusedEngine(_FusedBase):
             h, wire, nrecon, nres = produce(x, g, recon, res, alpha,
                                             *noises)
             stale_mix = mix_recon + mix_add if dc else mix_add
-            mixed = self._self_weight(w_diag) * h + stale_mix
+            mixed = self._scope_finish(
+                self._self_weight(w_diag) * h + stale_mix, x, g, alpha
+            )
             return (mixed, nrecon, nres, stale_mix) + wire
 
         def body_gt(x, t, g, gp, rx, sx, mrx, rt, st, mrt, add_x, add_t,
@@ -3269,8 +3523,10 @@ class ShardedFusedEngine(_FusedBase):
             w_self = self._self_weight(w_diag)
             stale_x = mrx + add_x if dc else add_x
             stale_t = mrt + add_t if dc else add_t
-            mixed_x = w_self * h + stale_x
-            mixed_t = w_self * t_half + stale_t
+            mixed_x, mixed_t = self._scope_finish_gt(
+                w_self * h + stale_x, w_self * t_half + stale_t,
+                x, t, g, gp, alpha,
+            )
             return ((mixed_x, mixed_t, nrx, nsx, stale_x, nrt, nst, stale_t)
                     + wire_x + wire_t)
 
@@ -3353,7 +3609,7 @@ class ShardedFusedEngine(_FusedBase):
                   self_weight=None, compact=None, round_schedule=None,
                   storage_dtype=None, topology_program=None,
                   node_program=None, privacy=None, model_axis=None,
-                  **_ignored):
+                  scope=None, **_ignored):
         _reject_wire_dtype(wire_dtype)
         shards = int(mesh.shape[model_axis]) if model_axis is not None else 1
         layout = pack_layout(
@@ -3367,4 +3623,5 @@ class ShardedFusedEngine(_FusedBase):
                    difference_coding=difference_coding, compact=compact,
                    round_schedule=round_schedule,
                    topology_program=topology_program,
-                   node_program=node_program, privacy=privacy)
+                   node_program=node_program, privacy=privacy,
+                   scope=scope)

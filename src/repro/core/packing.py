@@ -40,6 +40,7 @@ __all__ = [
     "unpack",
     "flat_wire_bytes",
     "flat_wire_bytes_per_shard",
+    "scoped_layout",
     "compact_pos_dtype",
     "compact_index_bytes",
     "bitmap_bytes_per_chunk",
@@ -291,6 +292,82 @@ def flat_wire_bytes(
     index_bytes = compact_index_bytes(scale_chunk, topk)
     per_chunk = min(topk + index_bytes + 4, scale_chunk + 4)
     return degree * (n_scales * per_chunk)
+
+
+def scoped_layout(
+    layout: FlatLayout, ranges, scale_chunk: int
+) -> Tuple[FlatLayout, Tuple[Tuple[int, int], ...]]:
+    """Accounting layout + shard-local column ranges for a SCOPED wire.
+
+    A :class:`~repro.core.scope.FederationScope` restricts gossip to the
+    merged, disjoint global column ``ranges`` of ``layout``. The fused
+    engines gather those columns into one contiguous scoped buffer (per
+    shard tile on a two-axis mesh), run the unchanged wire stage on it,
+    and scatter the mixed result back -- so the wire state (recon, EF
+    residual, in-flight rings), the quantization scales, the collective
+    operands, and the byte accounting all live at the SCOPED width.
+
+    Returns ``(wire_layout, local_ranges)``:
+
+    * ``local_ranges`` -- the ranges intersected with one shard tile, in
+      SHARD-LOCAL coordinates. They must come out IDENTICAL for every
+      shard (each shard's wire slice must be the same width and chunk
+      geometry -- the same reason ``with_shards`` pads per shard);
+      a scope whose ranges straddle shard tiles unevenly is refused with
+      the mismatching shards named.
+    * ``wire_layout`` -- a synthetic single-leaf :class:`FlatLayout`
+      whose ``total`` is the chunk-padded scoped width (x shards, shards
+      preserved) and whose ``used`` is the un-padded shared column count,
+      so :func:`flat_wire_bytes` / :func:`flat_wire_bytes_per_shard` on
+      it ARE the scoped wire accounting, byte-compatible with the
+      collective operands the scoped round lowers to.
+    """
+    ranges = tuple((int(a), int(b)) for a, b in ranges)
+    pos = 0
+    for a, b in ranges:
+        if not (pos <= a < b <= layout.total):
+            raise ValueError(
+                f"scoped ranges {ranges!r} must be sorted, disjoint, "
+                f"non-empty, within [0, {layout.total})"
+            )
+        pos = b
+    s = layout.shards
+    w = layout.shard_width
+    per_shard = []
+    for i in range(s):
+        lo, hi = i * w, (i + 1) * w
+        local = tuple(
+            (max(a, lo) - lo, min(b, hi) - lo)
+            for a, b in ranges if a < hi and b > lo
+        )
+        per_shard.append(local)
+    if any(local != per_shard[0] for local in per_shard):
+        widths = [sum(b - a for a, b in local) for local in per_shard]
+        raise ValueError(
+            f"scoped ranges are not uniform across the {s} model shards "
+            f"(per-shard shared widths {widths}); every shard tile must "
+            "carry the same scoped slice -- align the scope's ranges "
+            "with the shard tiles (shard_width="
+            f"{w}) or run single-axis"
+        )
+    local_ranges = per_shard[0]
+    shared_local = sum(b - a for a, b in local_ranges)
+    if shared_local == 0:
+        raise ValueError(
+            f"scoped ranges {ranges!r} share no columns; a scope must "
+            "leave something on the wire"
+        )
+    unit = max(int(scale_chunk), 1)
+    padded_local = ((shared_local + unit - 1) // unit) * unit
+    wire_layout = FlatLayout(
+        treedef=jax.tree_util.tree_structure(0),
+        leaves=(LeafSpec(0, (shared_local * s,), "float32"),),
+        n_nodes=layout.n_nodes,
+        total=padded_local * s,
+        storage_dtype=layout.storage_dtype,
+        shards=s,
+    )
+    return wire_layout, local_ranges
 
 
 def flat_wire_bytes_per_shard(

@@ -58,9 +58,32 @@ def generate_ehr_cohort(
     n_ad: int = N_AD,
     n_mci: int = N_MCI,
     heterogeneity: float = 1.5,
+    label_shift: float = 0.0,
+    minority_concentration: float = 0.0,
+    conditional_shift: float = 0.0,
 ) -> EHRDataset:
     """Build the cohort. ``heterogeneity`` scales the per-hospital
-    distribution shift (0 = IID across hospitals)."""
+    distribution shift (0 = IID across hospitals).
+
+    The three extra knobs harden the cohort for personalization-vs-
+    consensus experiments (all default 0, which reproduces the legacy
+    cohort BIT-IDENTICALLY -- their draws come from separate, gated RNG
+    streams):
+
+    * ``label_shift``: per-hospital AD-prevalence tilt. Each hospital
+      gets a tilt in [-1, 1]; AD mass is reweighted by
+      ``exp(label_shift * tilt)`` (MCI by the inverse), so hospitals
+      range from AD-poor to AD-rich while the cohort totals stay exact.
+    * ``minority_concentration``: concentrates the minority (AD) class
+      into few hospitals -- AD mass is further multiplied by a per-
+      hospital factor in [0.05, 1] raised to this power, so at 1-2 most
+      hospitals see only a handful of AD cases.
+    * ``conditional_shift``: per-hospital CLASS-CONDITIONAL drift -- the
+      AD cluster's mean moves along a hospital-specific direction
+      orthogonal to the global signal, so the Bayes-optimal classifier
+      genuinely differs per hospital (a shared head cannot be optimal
+      everywhere; a personalized head can).
+    """
     rng = np.random.default_rng(seed)
 
     # global class-separating structure
@@ -74,20 +97,48 @@ def generate_ehr_cohort(
         a = rng.normal(size=(n_features, n_features)) * 0.15
         mixes.append(np.eye(n_features) + a)
 
-    # allocate patients to hospitals (~500 each, Dirichlet jitter)
-    def alloc(total: int) -> np.ndarray:
+    # allocate patients to hospitals (~500 each, Dirichlet jitter);
+    # ``weight`` reweights a hospital's share AFTER the base Dirichlet
+    # draw, so the rng stream (and the default cohort) is unchanged
+    def alloc(total: int, weight=None) -> np.ndarray:
         p = rng.dirichlet(np.full(n_hospitals, 20.0))
+        if weight is not None:
+            p = p * weight
+            p = p / p.sum()
         counts = np.floor(p * total).astype(int)
         counts[: total - counts.sum()] += 1
         return counts
 
-    ad_counts, mci_counts = alloc(n_ad), alloc(n_mci)
+    ad_w = mci_w = None
+    if label_shift or minority_concentration:
+        rng_shift = np.random.default_rng((seed, 104729))
+        tilt = rng_shift.permutation(np.linspace(-1.0, 1.0, n_hospitals))
+        ad_w = np.exp(label_shift * tilt)
+        mci_w = np.exp(-label_shift * tilt)
+        if minority_concentration:
+            conc = rng_shift.permutation(
+                np.linspace(1.0, 0.05, n_hospitals))
+            ad_w = ad_w * conc ** minority_concentration
+    ad_counts = alloc(n_ad, ad_w)
+    mci_counts = alloc(n_mci, mci_w)
+
+    cond_dirs = None
+    if conditional_shift:
+        rng_cond = np.random.default_rng((seed, 1299709))
+        cond_dirs = rng_cond.normal(size=(n_hospitals, n_features))
+        # orthogonal to the global signal: the drift moves the AD
+        # cluster WITHOUT strengthening or weakening the shared
+        # separating direction
+        cond_dirs -= (cond_dirs @ w_true)[:, None] * w_true
+        cond_dirs /= np.linalg.norm(cond_dirs, axis=1, keepdims=True)
 
     feats, labs = [], []
     for h in range(n_hospitals):
         n_pos, n_neg = int(ad_counts[h]), int(mci_counts[h])
         z_pos = rng.normal(size=(n_pos, n_features)) + 1.2 * w_true
         z_neg = rng.normal(size=(n_neg, n_features)) - 0.3 * w_true
+        if cond_dirs is not None:
+            z_pos = z_pos + conditional_shift * cond_dirs[h]
         z = np.concatenate([z_pos, z_neg], axis=0)
         y = np.concatenate([np.ones(n_pos), np.zeros(n_neg)]).astype(np.int32)
         x = (z @ mixes[h].T + offsets[h]).astype(np.float32)

@@ -12,7 +12,7 @@ from typing import Dict, List, Tuple
 
 import numpy as np
 
-__all__ = ["dirichlet_partition", "label_shift_stats"]
+__all__ = ["dirichlet_partition", "label_shift_stats", "cohort_label_stats"]
 
 
 def dirichlet_partition(
@@ -51,3 +51,23 @@ def label_shift_stats(
         "tv_max": float(np.max(tvs)),
         "nodes": float(len(tvs)),
     }
+
+
+def cohort_label_stats(labels_per_node) -> Dict[str, float]:
+    """Label-shift diagnostics for a NATURALLY partitioned cohort (a
+    sequence of per-node label arrays, e.g. ``EHRDataset.labels``):
+    the TV-distance stats of :func:`label_shift_stats` plus the spread
+    of per-node positive-class prevalence -- the number the harder
+    cohort knobs (``label_shift`` / ``minority_concentration``) move."""
+    labels_per_node = [np.asarray(l) for l in labels_per_node]
+    y = np.concatenate(labels_per_node)
+    parts, off = [], 0
+    for l in labels_per_node:
+        parts.append(np.arange(off, off + len(l), dtype=np.int64))
+        off += len(l)
+    stats = label_shift_stats(y, parts)
+    prev = [float(l.mean()) if len(l) else 0.0 for l in labels_per_node]
+    stats["prevalence_min"] = float(min(prev))
+    stats["prevalence_max"] = float(max(prev))
+    stats["prevalence_mean"] = float(np.mean(prev))
+    return stats

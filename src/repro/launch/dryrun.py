@@ -78,6 +78,7 @@ def build_train_lowering(arch: str, shape_name: str, mesh, q: int, algorithm: st
                          fl_topology_program: Optional[str] = None,
                          fl_node_program: Optional[str] = None,
                          fl_privacy: Optional[str] = None,
+                         fl_scope: Optional[str] = None,
                          fl_shard_model: bool = False):
     """Lower one FL round (Q local steps + gossip) for the given mesh.
 
@@ -170,7 +171,7 @@ def build_train_lowering(arch: str, shape_name: str, mesh, q: int, algorithm: st
         topk=topk, round_schedule=fl_schedule,
         topology_program=fl_topology_program,
         node_program=fl_node_program,
-        privacy=fl_privacy, **extra,
+        privacy=fl_privacy, scope=fl_scope, **extra,
     )
     round_fn = make_fl_round(
         bundle.loss_fn, None, inv_sqrt(0.02), fl_cfg, engine=engine
@@ -375,8 +376,11 @@ def two_axis_record(engine, round_fn, state_sds, batch_sds, fl_cfg) -> Dict[str,
         one_dir = pp[:n_buffers]
         moved = sum(int(np.prod(e.invars[0].aval.shape))
                     * e.invars[0].aval.dtype.itemsize for e in one_dir)
+        # the wire moves the SCOPED layout: under a partial federation
+        # scope the collectives carry only the shared slice's columns
         per_shard = flat_wire_bytes_per_shard(
-            engine.layout, 1, engine.scale_chunk,
+            getattr(engine, "wire_layout", engine.layout), 1,
+            engine.scale_chunk,
             engine.topk if engine.compact_wire else None)
         assert moved == per_shard, (
             f"per-shard collective operand bytes {moved} != "
@@ -411,6 +415,7 @@ def run_pair(
     fl_topology_program: Optional[str] = None,
     fl_node_program: Optional[str] = None,
     fl_privacy: Optional[str] = None,
+    fl_scope: Optional[str] = None,
     fl_shard_model: bool = False,
 ) -> Dict[str, Any]:
     """Lower + compile one pair; return the dry-run record."""
@@ -432,7 +437,8 @@ def run_pair(
                 pad_heads, fl_engine, topk=topk, fl_schedule=fl_schedule,
                 fl_topology_program=fl_topology_program,
                 fl_node_program=fl_node_program,
-                fl_privacy=fl_privacy, fl_shard_model=fl_shard_model,
+                fl_privacy=fl_privacy, fl_scope=fl_scope,
+                fl_shard_model=fl_shard_model,
             )
             lowered = jitted.lower(*args)
         elif shape.kind == "prefill":
@@ -470,6 +476,7 @@ def run_pair(
             fl_node_program if shape.kind == "train" else None
         ),
         "fl_privacy": fl_privacy if shape.kind == "train" else None,
+        "fl_scope": fl_scope if shape.kind == "train" else None,
         "topk": topk if shape.kind == "train" else None,
         "wire_dtype": wire_dtype,
         "pod_gossip_every": pod_gossip_every,
@@ -553,6 +560,13 @@ def main() -> None:
                          "noise ride comm-state counters, so the lowering "
                          "keeps the plaintext wire's collective count and "
                          "operand bytes")
+    ap.add_argument("--fl-scope", default=None,
+                    help="federation scope (repro.core.scope): which "
+                         "flat-buffer columns gossip touches -- 'full', "
+                         "'backbone[:private=PAT]', 'ranges:a-b,...', "
+                         "'layerwise:freq=R' (fused only); partial scopes "
+                         "shrink every collective operand to the shared "
+                         "slice (asserted on the jaxpr)")
     ap.add_argument("--fl-shard-model", action="store_true",
                     help="two-axis (gossip_node, model_shard) round: each "
                          "node's flat parameter buffer tiles over the mesh's "
@@ -573,6 +587,7 @@ def main() -> None:
         fl_topology_program=args.fl_topology_program,
         fl_node_program=args.fl_node_program,
         fl_privacy=args.fl_privacy,
+        fl_scope=args.fl_scope,
         fl_shard_model=args.fl_shard_model,
     )
     print(json.dumps(rec, indent=2))
@@ -595,6 +610,8 @@ def main() -> None:
             suffix += "_" + args.fl_node_program.split(":")[0]
         if args.fl_privacy:
             suffix += "_" + args.fl_privacy.split(":")[0].replace("+", "-")
+        if args.fl_scope:
+            suffix += "_scope-" + args.fl_scope.split(":")[0]
         if args.pad_heads:
             suffix += f"_hpad{args.pad_heads}"
         if args.wire_dtype:

@@ -94,6 +94,17 @@ def main() -> None:
                          "Gaussian noise riding the EF residual; metrics "
                          "gain dp_epsilon), or both joined with '+' -- "
                          "fused engines; tree rejects")
+    ap.add_argument("--fl-scope", default=None,
+                    help="federation scope (FederationScope registry: "
+                         "which flat-buffer columns gossip touches): "
+                         "'full' (default), 'backbone' (share all but "
+                         "the classifier head -- per-node personalized "
+                         "heads stay bit-untouched, wire shrinks to the "
+                         "shared slice), 'backbone:private=PAT', "
+                         "'ranges:a-b,c-d', or 'layerwise:freq=R' (head "
+                         "joins the mix every R rounds; fused engine "
+                         "only) -- fused/sharded_fused; tree/flat "
+                         "reject")
     ap.add_argument("--fl-robust-alpha", action="store_true",
                     help="shrink the step-size schedule by the "
                          "staleness/churn controller "
@@ -151,6 +162,7 @@ def main() -> None:
         staleness_depth=args.fl_staleness_depth,
         robust_alpha=args.fl_robust_alpha,
         privacy=args.fl_privacy,
+        scope=args.fl_scope,
     )
     hist = result.history
     first, last = hist.rows()[0], hist.last()
@@ -163,6 +175,7 @@ def main() -> None:
                 "fl_topology_program": args.fl_topology_program,
                 "fl_node_program": args.fl_node_program,
                 "fl_privacy": result.engine.privacy.spec(),
+                "fl_scope": result.engine.scope.spec(),
                 "algorithm": args.algorithm,
                 "q": args.q,
                 "rounds": args.rounds,

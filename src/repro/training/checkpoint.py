@@ -48,8 +48,9 @@ __all__ = ["save_fl_state", "load_fl_state", "engine_manifest"]
 
 
 def engine_manifest(engine: GossipEngine) -> dict:
-    """The five-axis round spec (engine x schedule x topology x node
-    program x privacy, plus mesh geometry) as a JSON-serializable dict.
+    """The six-axis round spec (engine x schedule x topology x node
+    program x privacy x scope, plus mesh geometry) as a
+    JSON-serializable dict.
 
     One codepath feeds BOTH durable formats: checkpoint manifests
     (``save_fl_state``) and consensus snapshot headers
@@ -84,6 +85,13 @@ def engine_manifest(engine: GossipEngine) -> dict:
     privacy = getattr(engine, "privacy", None)
     if privacy is not None:
         manifest["privacy"] = privacy.spec()
+    # and the federation scope: the wire-state buffers are sized to the
+    # SCOPED wire width and the private columns carry per-node state
+    # gossip never touched -- a restore under a different scope would
+    # feed shared state into columns trained private (or vice versa)
+    scope = getattr(engine, "scope", None)
+    if scope is not None:
+        manifest["scope"] = scope.spec()
     # and the mesh: a two-axis (gossip_node, model_shard) engine pads
     # the flat layout per shard, so buffers written under one shard
     # count are not byte-compatible with another -- record the full
@@ -220,6 +228,30 @@ def load_fl_state(path: str, template: FLState,
                     "streams -- and the epsilon accounting is only "
                     "truthful -- under the same spec; rebuild the engine "
                     f"with privacy={saved_privacy!r}"
+                )
+    saved_scope = manifest.get("scope")
+    if saved_scope is not None:
+        from repro.core.scope import parse_scope
+
+        try:
+            parse_scope(saved_scope)
+        except ValueError as e:
+            raise ValueError(
+                f"checkpoint was written under federation scope "
+                f"{saved_scope!r}, which cannot be rebuilt: {e}"
+            ) from None
+        if engine is not None and saved_scope != "full":
+            engine_scope = getattr(engine, "scope", None)
+            if (engine_scope is not None
+                    and engine_scope.spec() != saved_scope):
+                raise ValueError(
+                    f"checkpoint was written under federation scope "
+                    f"{saved_scope!r} but the restore engine runs "
+                    f"{engine_scope.spec()!r}; the private columns carry "
+                    "per-node state gossip never touched and the wire "
+                    "buffers are sized to the scoped slice -- both only "
+                    "stay meaningful under the same scope; rebuild the "
+                    f"engine with scope={saved_scope!r}"
                 )
     saved_node = manifest.get("node_program")
     if saved_node is not None:

@@ -12,10 +12,15 @@ one aligned raw-bytes blob plus a JSON header, so a server can
   :data:`BLOB_ALIGN` bytes;
 * the header records the :class:`~repro.core.packing.FlatLayout`
   geometry (per-leaf path/offset/shape/dtype, ``total``/``used``/
-  ``storage_dtype``), the five-axis round spec (engine x schedule x
-  topology x node program x privacy, same record a checkpoint manifest
-  carries -- see :func:`repro.training.checkpoint.engine_manifest`), and
-  a ``round_frontier`` counter (how many training rounds produced it);
+  ``storage_dtype``), the six-axis round spec (engine x schedule x
+  topology x node program x privacy x scope, same record a checkpoint
+  manifest carries -- see
+  :func:`repro.training.checkpoint.engine_manifest`), and a
+  ``round_frontier`` counter (how many training rounds produced it);
+* under a partial federation scope the blob also carries each node's
+  private columns after the consensus row, so
+  ``load_snapshot(..., node=i)`` serves hospital ``i``'s personalized
+  model (consensus backbone + its own head);
 * :func:`load_snapshot` memory-maps the blob and slices each leaf as a
   numpy VIEW (``blob[offset:offset+size].reshape(shape)``) -- no pytree
   unflatten of materialized arrays, no host staging copy; bytes fault in
@@ -107,10 +112,20 @@ def write_snapshot(dirpath: str, params: PyTree, layout: Optional[FlatLayout]
       round_frontier: training rounds completed when this consensus was
         taken -- the server's staleness metric is
         ``frontier_now - header["round_frontier"]``.
-      engine: optional GossipEngine; records the five-axis round spec in
-        the header (same record as a checkpoint manifest).
+      engine: optional GossipEngine; records the six-axis round spec in
+        the header (same record as a checkpoint manifest), and supplies
+        the federation scope whose private columns get the per-node
+        block below.
       step: optional optimizer step counter, recorded verbatim.
       extra: optional JSON-serializable dict, recorded verbatim.
+
+    When the engine runs a partial federation scope ('backbone' /
+    'ranges:') and ``params`` is the node-stacked 2-D buffer, the blob
+    additionally carries every node's PRIVATE columns (captured before
+    the consensus mean -- gossip never mixed them, so the mean would
+    destroy exactly the personalized state) at an aligned offset after
+    the consensus row; ``load_snapshot(..., node=i)`` overlays them to
+    serve hospital ``i``'s personalized model.
 
     Returns the header path. The write is atomic: blob, then header,
     then the ``LATEST`` pointer, each staged + ``os.replace``d.
@@ -124,7 +139,21 @@ def write_snapshot(dirpath: str, params: PyTree, layout: Optional[FlatLayout]
             flat, layout = pack(params)
         else:
             flat = pack_like(params, layout)
+    scope = getattr(engine, "scope", None)
+    private_ranges = ()
+    if scope is not None and not scope.is_full:
+        private_ranges = tuple(scope.private_ranges(layout))
+    private_block = None
     if flat.ndim == 2:
+        if private_ranges:
+            # per-node private columns, captured BEFORE the consensus
+            # mean: gossip left them bit-untouched per hospital, and the
+            # node-axis mean is precisely the reduction that would lose
+            # that personalization
+            stacked = np.asarray(jax.device_get(flat),
+                                 dtype=np.dtype(layout.storage_dtype))
+            private_block = np.concatenate(
+                [stacked[:, a:b] for a, b in private_ranges], axis=1)
         # THE consensus reduction: one mean over the node axis of the
         # flat buffer -- no per-leaf traversal
         flat = flat.mean(axis=0)
@@ -137,6 +166,12 @@ def write_snapshot(dirpath: str, params: PyTree, layout: Optional[FlatLayout]
     blob = consensus.tobytes()
     if len(blob) % BLOB_ALIGN:
         blob += b"\x00" * (BLOB_ALIGN - len(blob) % BLOB_ALIGN)
+    private_offset = None
+    if private_block is not None:
+        private_offset = len(blob)
+        blob += private_block.tobytes()
+        if len(blob) % BLOB_ALIGN:
+            blob += b"\x00" * (BLOB_ALIGN - len(blob) % BLOB_ALIGN)
 
     os.makedirs(dirpath, exist_ok=True)
     blob_path, header_path = snapshot_paths(dirpath, round_frontier)
@@ -158,6 +193,14 @@ def write_snapshot(dirpath: str, params: PyTree, layout: Optional[FlatLayout]
             for p, s in zip(_leaf_paths(layout), layout.leaves)
         ],
     }
+    if private_block is not None:
+        header["scope"] = {
+            "spec": scope.spec(),
+            "private_ranges": [[int(a), int(b)] for a, b in private_ranges],
+            "private_offset_bytes": int(private_offset),
+            "private_bytes": int(private_block.nbytes),
+            "n_nodes": int(private_block.shape[0]),
+        }
     if step is not None:
         header["step"] = int(step)
     if extra:
@@ -208,7 +251,8 @@ class Snapshot:
 
 def load_snapshot(dirpath: str, round_frontier: Optional[int] = None,
                   template: Optional[PyTree] = None,
-                  verify: bool = False) -> Snapshot:
+                  verify: bool = False,
+                  node: Optional[int] = None) -> Snapshot:
     """mmap-load a snapshot zero-copy into its FlatLayout geometry.
 
     Args:
@@ -221,6 +265,13 @@ def load_snapshot(dirpath: str, round_frontier: Optional[int] = None,
         path component (sufficient for the models' dict param trees).
       verify: recompute the blob crc32 (reads every byte -- defeats
         laziness; leave False on the serving path).
+      node: serve hospital ``node``'s PERSONALIZED model: the consensus
+        backbone with that node's private columns overlaid from the
+        snapshot's per-node private block. Requires a snapshot written
+        from the node-stacked buffer under a partial federation scope;
+        raises ``ValueError`` otherwise. The overlay materializes one
+        writable ``(total,)`` copy -- the zero-copy mmap path is the
+        ``node=None`` consensus load.
 
     Returns a :class:`Snapshot` whose ``params`` leaves are views into
     the mapped blob (a leaf pays a copy only when its dtype differs from
@@ -249,6 +300,28 @@ def load_snapshot(dirpath: str, round_frontier: Optional[int] = None,
             raise ValueError(
                 f"snapshot {blob_path!r} failed crc32 verification")
     flat = mm[:total]
+    if node is not None:
+        sec = header.get("scope")
+        if sec is None:
+            raise ValueError(
+                f"snapshot {header_path!r} carries no per-node private "
+                "columns (written under scope 'full', or from an "
+                "already-reduced consensus row); node= needs a snapshot "
+                "written from the node-stacked buffer under a partial "
+                "federation scope")
+        n = int(sec["n_nodes"])
+        node = int(node)
+        if not 0 <= node < n:
+            raise ValueError(
+                f"node={node} out of range for a {n}-node snapshot")
+        off = int(sec["private_offset_bytes"]) // storage.itemsize
+        width = sum(b - a for a, b in sec["private_ranges"])
+        priv = mm[off:off + n * width].reshape(n, width)
+        flat = np.array(flat)  # writable: consensus + this node's head
+        pos = 0
+        for a, b in sec["private_ranges"]:
+            flat[a:b] = priv[node, pos:pos + (b - a)]
+            pos += b - a
 
     leaves = {}
     for spec in header["leaves"]:

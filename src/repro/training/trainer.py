@@ -168,6 +168,7 @@ def train_decentralized(
     staleness_depth: Optional[int] = None,
     robust_alpha: bool = False,
     privacy: Optional[str] = None,
+    scope: Optional[str] = None,
 ) -> TrainResult:
     """Train for ``rounds`` communication rounds.
 
@@ -226,6 +227,16 @@ def train_decentralized(
     masks that cancel under the symmetric mix (no single neighbor
     payload is readable) and/or per-node clip + Gaussian noise riding
     the EF residual, with the ``dp_epsilon`` moments bound as a metric.
+
+    ``scope`` selects the federation scope (the SIXTH round axis,
+    ``repro.core.scope``): which columns of the flat buffer gossip
+    touches at all. A spec string like ``"backbone"`` (share everything
+    but the classifier head -- each hospital keeps a personalized head
+    trained purely on local gradients, bit-untouched by the wire) /
+    ``"ranges:0-1376"`` / ``"layerwise:freq=4"`` (head columns join the
+    mix only every 4th round). Partial scopes shrink the wire
+    proportionally: every collective, top-k, EF residual and
+    quantization scale operates on the shared slice only.
     """
     w = mixing_matrix(run.topology, run.n_nodes)
     check_assumption1(w)
@@ -251,7 +262,8 @@ def train_decentralized(
                  "topk_schedule": topk_schedule,
                  "topology_program": topology_program,
                  "node_program": node_program,
-                 "privacy": privacy}
+                 "privacy": privacy,
+                 "scope": scope}
         set_knobs = sorted(k for k, v in knobs.items() if v is not None)
         if set_knobs:
             raise ValueError(
@@ -271,7 +283,7 @@ def train_decentralized(
             scale_chunk=512 if scale_chunk is None else scale_chunk,
             round_schedule=round_schedule, storage_dtype=storage_dtype,
             topology_program=topology_program, node_program=node_program,
-            privacy=privacy,
+            privacy=privacy, scope=scope,
         )
         engine, params0 = build(w, stacked, topk=topk, **kw)
     schedule = make_schedule(run)

@@ -1,0 +1,500 @@
+"""FederationScope (sixth round axis) suite.
+
+What is proven:
+
+* **grammar + registry** -- spec strings round-trip through
+  ``parse_scope`` (``full`` / ``backbone[:private=PAT]`` /
+  ``ranges:a-b,...`` / ``layerwise:freq=R``), unknown names and
+  malformed knobs raise, ``resolve_scope(None)`` is the FULL singleton;
+* **layout mapping** -- ``shared_ranges`` on a packed MLP layout merges
+  the non-private leaves' contiguous column ranges;
+  ``scoped_layout`` pads the shared slice to a scale-chunk multiple and
+  REFUSES ranges whose per-shard restriction differs across shards;
+* **the private-column property** (the axis's core invariant) -- under
+  a partial scope, gossip leaves the private columns BIT-identical to a
+  never-gossiped local trajectory: with a zero-gradient loss the
+  private columns of every node equal their distinct per-node inits
+  after rounds of mixing, across fused + sharded engines x sequential +
+  bounded-staleness schedules x secure_agg, dsgd and dsgt, while the
+  SHARED columns provably mix;
+* **layerwise gating** -- ``layerwise:freq=R`` ships the FULL wire but
+  keeps head columns bit-equal to local between firings; ``freq=1`` is
+  bitwise the full scope; the sharded engine rejects it at build time;
+* **wire accounting** -- ``wire_bytes`` obeys the exact linearity
+  identity ``wire_scoped * total_full == wire_full * total_scoped``,
+  and on the sharded jaxpr one gossip direction's ppermute operand
+  bytes == ``flat_wire_bytes_per_shard`` of the SCOPED wire layout, to
+  the byte;
+* **manifests** -- checkpoints record the scope and refuse a mismatched
+  restore; snapshots carry per-node private heads and
+  ``load_snapshot(..., node=i)`` overlays hospital i's head bit-exactly
+  (refusing unscoped snapshots and out-of-range nodes);
+* **engine contract** -- tree/flat engines reject partial scopes at
+  build time.
+"""
+
+import os
+import subprocess
+import sys
+import textwrap
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+sys.path.insert(0, os.path.join(REPO, "src"))
+
+from repro.core import (  # noqa: E402
+    FLConfig,
+    FusedEngine,
+    init_fl_state,
+    make_fl_round,
+    pack,
+    parse_scope,
+    resolve_scope,
+    scope_names,
+    scoped_layout,
+)
+from repro.core.scope import FULL, LayerwiseScope  # noqa: E402
+from repro.core.schedules import constant  # noqa: E402
+from repro.core.topology import mixing_matrix  # noqa: E402
+
+N = 4
+CHUNK = 16
+
+
+def _params(seed=0):
+    """Distinct per-node params: head (N,3) at cols [0,3), trunk (N,6,5)
+    at cols [3,33); pad_to=CHUNK pads the layout to 48."""
+    rng = np.random.default_rng(seed)
+    return {
+        "head": jnp.asarray(rng.normal(size=(N, 3)), jnp.float32),
+        "trunk": jnp.asarray(rng.normal(size=(N, 6, 5)), jnp.float32),
+    }
+
+
+def _zero_loss(p, batch):
+    return 0.0 * (jnp.sum(p["head"]) + jnp.sum(p["trunk"]))
+
+
+def _sq_loss(p, batch):
+    return jnp.sum((p["trunk"] - batch["t"]) ** 2) + jnp.sum(p["head"] ** 2)
+
+
+def _run_rounds(scope, algorithm="dsgd", schedule=None, privacy=None,
+                loss=_zero_loss, rounds=3, topk=None):
+    params = _params()
+    w = mixing_matrix("ring", N)
+    engine, flat0 = FusedEngine.simulated(
+        w, params, scale_chunk=CHUNK, impl="jnp", topk=topk,
+        round_schedule=schedule, privacy=privacy, scope=scope)
+    cfg = FLConfig(algorithm=algorithm, q=2, n_nodes=N)
+    rf = jax.jit(make_fl_round(loss, None, constant(0.05), cfg,
+                               engine=engine))
+    state = init_fl_state(cfg, flat0, engine=engine)
+    batches = {"t": jnp.zeros((2, N, 6, 5), jnp.float32)}
+    m = {}
+    for _ in range(rounds):
+        state, m = rf(state, batches)
+    return engine, np.asarray(flat0), state, m
+
+
+# ---------------------------------------------------------------- grammar
+
+
+def test_parse_spec_roundtrip_and_registry():
+    assert set(scope_names()) >= {"full", "backbone", "ranges", "layerwise"}
+    for spec in ("full", "backbone", "backbone:private=head",
+                 "ranges:0-3,16-32", "layerwise:freq=4",
+                 "layerwise:freq=2,head=fc1"):
+        s = parse_scope(spec)
+        assert parse_scope(s.spec()).spec() == s.spec(), spec
+    assert resolve_scope(None) is FULL
+    assert resolve_scope("full").is_full
+    assert not parse_scope("backbone").is_full
+    # the instance passthrough contract every axis shares
+    bb = parse_scope("backbone")
+    assert resolve_scope(bb) is bb
+    for bad in ("nope", "ranges:", "ranges:5-3", "ranges:1-2-3",
+                "layerwise:freq=0", "layerwise:freq=x",
+                "backbone:unknown=1"):
+        with pytest.raises(ValueError):
+            parse_scope(bad)
+
+
+def test_shared_private_ranges_on_layout():
+    _, layout = pack(_params(), pad_to=CHUNK)
+    assert layout.total == 48 and layout.used == 33
+    bb = parse_scope("backbone:private=head")
+    assert bb.shared_ranges(layout) == ((3, 33),)
+    # the complement picks up the private leaf AND the structural pad
+    assert bb.private_ranges(layout) == ((0, 3), (33, 48))
+    rs = parse_scope("ranges:0-16,32-48")
+    assert rs.shared_ranges(layout) == ((0, 16), (32, 48))
+    # a private pattern matching NO leaf or EVERY leaf is a spec error
+    with pytest.raises(ValueError):
+        parse_scope("backbone:private=nothing").shared_ranges(layout)
+    # a pattern matching EVERY leaf leaves nothing to share
+    _, lay1 = pack({"only": jnp.zeros((N, 5))}, pad_to=CHUNK)
+    with pytest.raises(ValueError, match="EVERY leaf"):
+        parse_scope("backbone:private=only").shared_ranges(lay1)
+    with pytest.raises(ValueError):
+        parse_scope("ranges:0-64").shared_ranges(layout)  # out of bounds
+
+
+def test_scoped_layout_math():
+    _, layout = pack(_params(), pad_to=CHUNK)
+    wire, local = scoped_layout(layout, ((3, 33),), CHUNK)
+    # 30 shared columns pad to two 16-chunks
+    assert wire.total == 32 and local == ((3, 33),)
+    assert wire.n_nodes == layout.n_nodes
+    for bad in ((), ((5, 3),), ((0, 8), (4, 12)), ((0, 64),)):
+        with pytest.raises(ValueError):
+            scoped_layout(layout, bad, CHUNK)
+    # two shards: a range living in one shard only is refused -- the
+    # per-shard wire must be uniform for the single compiled kernel
+    _, lay2 = pack(_params(), pad_to=CHUNK, shards=2)
+    assert lay2.total == 64 and lay2.shard_width == 32
+    with pytest.raises(ValueError, match="shard"):
+        scoped_layout(lay2, ((0, 8),), 8)
+    wire2, local2 = scoped_layout(lay2, ((0, 8), (32, 40)), 8)
+    assert wire2.total == 16 and wire2.shards == 2
+    assert local2 == ((0, 8),)
+
+
+# ------------------------------------------- the private-column property
+
+
+@pytest.mark.parametrize("algorithm", ["dsgd", "dsgt"])
+@pytest.mark.parametrize("schedule", [None, "bounded_staleness:k=2"])
+@pytest.mark.parametrize("privacy", [None, "secure_agg"])
+def test_private_columns_bit_identical(algorithm, schedule, privacy):
+    engine, flat0, state, _ = _run_rounds(
+        "backbone:private=head", algorithm=algorithm, schedule=schedule,
+        privacy=privacy)
+    got = np.asarray(state.params)
+    shared = engine.scope.shared_ranges(engine.layout)
+    private = engine.scope.private_ranges(engine.layout)
+    assert private and shared
+    for a, b in private:
+        assert np.array_equal(got[:, a:b], flat0[:, a:b]), (
+            algorithm, schedule, privacy, a, b)
+    # the shared columns DID mix (distinct inits contract toward mean)
+    changed = any(not np.array_equal(got[:, a:b], flat0[:, a:b])
+                  for a, b in shared)
+    assert changed, "shared columns never mixed -- scope gossiped nothing"
+    if algorithm == "dsgt":
+        # the tracker's private columns carry the pure local recursion
+        # t <- t + g - g_prev, which is identically zero under zero
+        # gradients -- any wire contamination would perturb it
+        tr = np.asarray(state.tracker)
+        for a, b in private:
+            assert np.array_equal(tr[:, a:b], np.zeros_like(tr[:, a:b]))
+
+
+def test_full_scope_bitwise_matches_default():
+    _, _, st_none, m_none = _run_rounds(None, loss=_sq_loss)
+    _, _, st_full, m_full = _run_rounds("full", loss=_sq_loss)
+    assert np.array_equal(np.asarray(st_none.params),
+                          np.asarray(st_full.params))
+    assert float(m_none["wire_bytes"]) == float(m_full["wire_bytes"])
+
+
+def test_scoped_wire_bytes_linearity():
+    cfg = FLConfig(algorithm="dsgd", q=2, n_nodes=N)
+    eng_f, _, _, m_f = _run_rounds(None, rounds=1)
+    eng_b, _, _, m_b = _run_rounds("backbone:private=head", rounds=1)
+    assert eng_b.wire_layout.total == 32 < eng_f.layout.total == 48
+    # flat_wire_bytes is LINEAR in the layout total, so the scoped wire
+    # obeys the shared-fraction x full-wire identity EXACTLY
+    assert (eng_b.wire_bytes(cfg) * eng_f.layout.total
+            == eng_f.wire_bytes(cfg) * eng_b.wire_layout.total)
+    assert float(m_b["wire_bytes"]) < float(m_f["wire_bytes"])
+    assert float(m_b["wire_bytes"]) == eng_b.wire_bytes(cfg)
+
+
+# ------------------------------------------------------ layerwise gating
+
+
+def test_layerwise_gate_between_firings():
+    # freq far beyond the horizon: the head NEVER fires, so its columns
+    # are bit-equal to the never-gossiped local trajectory (zero-grad:
+    # the inits)
+    engine, flat0, state, m = _run_rounds("layerwise:freq=1000,head=head")
+    got = np.asarray(state.params)
+    for a, b in engine.scope.gate_ranges(engine.layout):
+        assert np.array_equal(got[:, a:b], flat0[:, a:b])
+    # but the wire is the FULL wire -- the gate changes what the mix
+    # keeps, never what the collective moves
+    _, _, _, m_full = _run_rounds(None)
+    assert float(m["wire_bytes"]) == float(m_full["wire_bytes"])
+
+
+def test_layerwise_freq1_is_full():
+    _, _, st_f1, _ = _run_rounds("layerwise:freq=1,head=head",
+                                 loss=_sq_loss)
+    _, _, st_full, _ = _run_rounds(None, loss=_sq_loss)
+    assert np.array_equal(np.asarray(st_f1.params),
+                          np.asarray(st_full.params))
+
+
+def test_layerwise_fire_counts_completed_rounds():
+    s = LayerwiseScope(freq=3)
+    fires = [bool(s.fire(r)) for r in range(6)]
+    # topo_round counts COMPLETED rounds: the round being computed is
+    # topo_round+1, so firings land on rounds 3 and 6
+    assert fires == [False, False, True, False, False, True]
+
+
+# ------------------------------------------------------ engine contract
+
+
+def test_tree_flat_engines_reject_scope():
+    from repro.core import FlatEngine, TreeEngine
+
+    params = _params()
+    w = mixing_matrix("ring", N)
+    for cls in (TreeEngine, FlatEngine):
+        with pytest.raises(ValueError, match="scope"):
+            cls.simulated(w, params, scope="backbone:private=head")
+        # full passes through: the axis default is every engine's no-op
+        cls.simulated(w, params, scope="full")
+
+
+# ------------------------------------------------- manifests + snapshots
+
+
+def test_checkpoint_scope_mismatch_refused(tmp_path):
+    from repro.training.checkpoint import (
+        engine_manifest,
+        load_fl_state,
+        save_fl_state,
+    )
+
+    eng_b, _, state, _ = _run_rounds("backbone:private=head", rounds=1)
+    eng_f, _, _, _ = _run_rounds(None, rounds=1)
+    assert engine_manifest(eng_b)["scope"] == "backbone:private=head"
+    assert engine_manifest(eng_f)["scope"] == "full"
+    path = str(tmp_path / "ck")
+    save_fl_state(path, state, engine=eng_b)
+    back = load_fl_state(path, state, engine=eng_b)
+    assert np.array_equal(np.asarray(back.params), np.asarray(state.params))
+    with pytest.raises(ValueError, match="federation scope"):
+        load_fl_state(path, state, engine=eng_f)
+
+
+def test_snapshot_private_heads(tmp_path):
+    from repro.training.snapshot import load_snapshot, write_snapshot
+
+    eng, flat0, state, _ = _run_rounds("backbone:private=head", rounds=2)
+    flat = np.asarray(state.params)
+    d = str(tmp_path / "snaps")
+    write_snapshot(d, state.params, eng.layout, round_frontier=2, engine=eng)
+    snap = load_snapshot(d)
+    assert "scope" in snap.header
+    assert snap.header["scope"]["spec"] == "backbone:private=head"
+    cons = np.asarray(snap.flat)
+    assert np.allclose(cons, flat.mean(axis=0))
+    private = eng.scope.private_ranges(eng.layout)
+    for i in range(N):
+        pers = np.asarray(load_snapshot(d, node=i).flat)
+        for a, b in private:
+            # hospital i's private head, BIT-exact (zero-grad run: still
+            # the distinct per-node init)
+            assert np.array_equal(pers[a:b], flat[i, a:b])
+            assert np.array_equal(pers[a:b], flat0[i, a:b])
+        sa, sb = eng.scope.shared_ranges(eng.layout)[0]
+        assert np.array_equal(pers[sa:sb], cons[sa:sb])
+    with pytest.raises(ValueError, match="out of range"):
+        load_snapshot(d, node=N)
+    # an UNscoped snapshot has no private block to overlay
+    eng_f, _, state_f, _ = _run_rounds(None, rounds=1)
+    d2 = str(tmp_path / "snaps_full")
+    write_snapshot(d2, state_f.params, eng_f.layout, round_frontier=1,
+                   engine=eng_f)
+    with pytest.raises(ValueError, match="no per-node private"):
+        load_snapshot(d2, node=0)
+
+
+# ------------------------------------------- sharded engine (subprocess)
+
+
+def _run(script: str, timeout: int = 1200) -> str:
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(REPO, "src")
+    proc = subprocess.run(
+        [sys.executable, "-c", script], env=env, capture_output=True,
+        text=True, timeout=timeout,
+    )
+    assert proc.returncode == 0, proc.stderr[-4000:]
+    return proc.stdout
+
+
+_PRELUDE = textwrap.dedent(
+    """
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    import jax, jax.numpy as jnp, numpy as np
+    from jax.sharding import NamedSharding, PartitionSpec as P
+    from repro.core import (FLConfig, FusedEngine, ShardedFusedEngine,
+                            flat_wire_bytes_per_shard, init_fl_state,
+                            make_fl_round, pack)
+    from repro.core.schedules import constant
+    from repro.launch.mesh import make_test_mesh, node_axes, n_fl_nodes
+
+    rng = np.random.default_rng(0)
+    q, chunk = 2, 8
+    # w spans cols [3, 23); with shards=2 the total pads to 32 and the
+    # shard-uniform scope 'ranges:0-8,16-24' shares the first half of
+    # each shard, leaving [8,16) + [24,32) private
+    SCOPE = "ranges:0-8,16-24"
+
+    def mkparams(n):
+        return {"b": jnp.asarray(rng.normal(size=(n, 3)), jnp.float32),
+                "w": jnp.asarray(rng.normal(size=(n, 4, 5)), jnp.float32)}
+
+    def zero_loss(p, batch):
+        return 0.0 * (jnp.sum(p["w"]) + jnp.sum(p["b"]))
+
+    def sq_loss(p, batch):
+        return jnp.sum((p["w"] - batch["t"]) ** 2) + jnp.sum(p["b"] ** 2)
+    """
+)
+
+
+@pytest.mark.slow
+def test_sharded_scope_private_columns_and_oracle():
+    out = _run(_PRELUDE + textwrap.dedent(
+        """
+        def run(algorithm, schedule, privacy, loss, rounds=3):
+            mesh = make_test_mesh((4, 2))
+            na = node_axes(mesh); n = n_fl_nodes(mesh)
+            params = mkparams(n)
+            batches = {"t": jnp.asarray(rng.normal(size=(q, n, 4, 5)),
+                                        jnp.float32)}
+            sh = ShardedFusedEngine.from_mesh(
+                mesh, na, params, scale_chunk=chunk, topk=None, impl="jnp",
+                model_axis="model", round_schedule=schedule,
+                privacy=privacy, scope=SCOPE)
+            flat, layout = pack(params, pad_to=chunk, shards=2)
+            fe = FusedEngine(sh.dense_equivalent(), layout,
+                             scale_chunk=chunk, round_schedule=schedule,
+                             privacy=privacy, scope=SCOPE, impl="jnp")
+            cfg = FLConfig(algorithm=algorithm, q=q, n_nodes=n)
+            rf_f = jax.jit(make_fl_round(loss, None, constant(0.05), cfg,
+                                         engine=fe))
+            st_f = init_fl_state(cfg, flat, engine=fe)
+            with mesh:
+                rf_s = jax.jit(make_fl_round(loss, None, constant(0.05),
+                                             cfg, engine=sh))
+                st_s = init_fl_state(cfg, jax.device_put(
+                    flat, NamedSharding(mesh, sh.params_spec())),
+                    engine=sh)
+                for _ in range(rounds):
+                    st_f, m_f = rf_f(st_f, batches)
+                    st_s, m_s = rf_s(st_s, batches)
+            return sh, np.asarray(flat), st_f, st_s, m_f, m_s
+
+        # the private-column property on the SHARDED wire, across
+        # schedules x secure_agg x algorithms; fused twin == oracle
+        for algorithm in ("dsgd", "dsgt"):
+            for schedule in (None, "bounded_staleness:k=2"):
+                for privacy in (None, "secure_agg"):
+                    sh, flat0, st_f, st_s, m_f, m_s = run(
+                        algorithm, schedule, privacy, zero_loss)
+                    private = sh.scope.private_ranges(sh.layout)
+                    assert private == ((8, 16), (24, 32)), private
+                    for st in (st_f, st_s):
+                        got = np.asarray(st.params)
+                        for a, b in private:
+                            assert np.array_equal(got[:, a:b],
+                                                  flat0[:, a:b]), (
+                                algorithm, schedule, privacy, a, b)
+                        for a, b in sh.scope.shared_ranges(sh.layout):
+                            assert not np.array_equal(got[:, a:b],
+                                                      flat0[:, a:b])
+
+        # real-gradient oracle: sharded == fused dense twin at 1e-5
+        for algorithm in ("dsgd", "dsgt"):
+            sh, _, st_f, st_s, m_f, m_s = run(algorithm, None, None,
+                                              sq_loss)
+            err = float(jnp.abs(st_f.params - st_s.params).max())
+            assert err < 1e-5, (algorithm, err)
+            assert float(m_f["wire_bytes"]) == float(m_s["wire_bytes"])
+
+        # the round-gated layerwise scope needs the dense in-kernel W
+        # contraction -- the sharded engine refuses it at build time
+        mesh = make_test_mesh((4, 2))
+        na = node_axes(mesh); n = n_fl_nodes(mesh)
+        try:
+            ShardedFusedEngine.from_mesh(
+                mesh, na, mkparams(n), scale_chunk=chunk, impl="jnp",
+                model_axis="model", scope="layerwise:freq=4,head=b")
+            raise SystemExit("layerwise on sharded was not refused")
+        except ValueError as e:
+            assert "layerwise" in str(e), e
+        print("SHARDED-SCOPE-OK")
+        """
+    ))
+    assert "SHARDED-SCOPE-OK" in out
+
+
+@pytest.mark.slow
+def test_sharded_scope_jaxpr_operand_bytes():
+    out = _run(_PRELUDE + textwrap.dedent(
+        """
+        def walk(jaxpr, name, found):
+            for eqn in jaxpr.eqns:
+                if eqn.primitive.name == name:
+                    found.append(eqn)
+                for v in eqn.params.values():
+                    subs = v if isinstance(v, (list, tuple)) else [v]
+                    for sub in subs:
+                        if hasattr(sub, "jaxpr"):
+                            walk(sub.jaxpr, name, found)
+                        elif hasattr(sub, "eqns"):
+                            walk(sub, name, found)
+            return found
+
+        mesh = make_test_mesh((4, 2))
+        na = node_axes(mesh); n = n_fl_nodes(mesh)
+        params = mkparams(n)
+        batches = {"t": jnp.asarray(rng.normal(size=(q, n, 4, 5)),
+                                    jnp.float32)}
+        cfg = FLConfig(algorithm="dsgt", q=q, n_nodes=n)
+
+        for topk, n_buffers in ((4, 3), (None, 2)):
+            for scope in (None, SCOPE):
+                eng = ShardedFusedEngine.from_mesh(
+                    mesh, na, params, scale_chunk=chunk, topk=topk,
+                    impl="pallas", model_axis="model", scope=scope)
+                flat, _ = pack(params, pad_to=chunk, shards=2)
+                with mesh:
+                    rf = make_fl_round(sq_loss, None, constant(0.05), cfg,
+                                       engine=eng)
+                    st = init_fl_state(cfg, jax.device_put(
+                        flat, NamedSharding(mesh, eng.params_spec())),
+                        engine=eng)
+                    jx = jax.make_jaxpr(rf)(st, batches)
+                pp = walk(jx.jaxpr, "ppermute", [])
+                moved = sum(
+                    int(np.prod(e.invars[0].aval.shape))
+                    * e.invars[0].aval.dtype.itemsize
+                    for e in pp[:n_buffers])
+                # the collective moves the SCOPED wire layout -- the
+                # shared slice's bytes EXACTLY, never the private cols
+                expect = flat_wire_bytes_per_shard(
+                    eng.wire_layout, 1, eng.scale_chunk,
+                    eng.topk if eng.compact_wire else None)
+                assert moved == expect, (topk, scope, moved, expect)
+                if scope is not None:
+                    full = flat_wire_bytes_per_shard(
+                        eng.layout, 1, eng.scale_chunk,
+                        eng.topk if eng.compact_wire else None)
+                    assert expect < full, (expect, full)
+        print("JAXPR-SCOPE-OK")
+        """
+    ))
+    assert "JAXPR-SCOPE-OK" in out
